@@ -1,0 +1,197 @@
+"""AOT lowering: JAX → HLO **text** artifacts + manifest for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py for the reference wiring.
+
+Emitted under ``artifacts/``:
+
+  train_<model>.hlo.txt    (flat f32[P], batch...) → (loss f32[], grads f32[P])
+  eval_<model>.hlo.txt     (flat f32[P], batch...) → (loss f32[], metric f32[])
+  <model>.init.bin         initial flat params, little-endian f32
+  update_sgdm_<m>.hlo.txt  fused Nesterov step  (ablation path)
+  update_adam_<m>.hlo.txt  fused Adam step      (ablation path)
+  gossip_dense_n<N>.hlo.txt  one dense push-sum round over stacked states
+  manifest.json            shapes/dtypes/param counts for the Rust loader
+
+Python runs ONCE (``make artifacts``); the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fused_update, pushsum_mix
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_meta(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+def export_model(name: str, outdir: str, manifest: dict) -> int:
+    cfg, flat0, _, train_step, eval_step, batch_specs = M.make_flat(name)
+    p = int(flat0.shape[0])
+    flat_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    specs = [flat_spec, *batch_specs.values()]
+
+    for kind, fn in (("train", train_step), ("eval", eval_step)):
+        art = f"{kind}_{name}"
+        path = os.path.join(outdir, f"{art}.hlo.txt")
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][art] = {
+            "file": f"{art}.hlo.txt",
+            "kind": f"{kind}_step",
+            "model": name,
+            "param_count": p,
+            "inputs": [
+                {"name": "params", **_spec_meta(flat_spec)},
+                *[
+                    {"name": k, **_spec_meta(v)}
+                    for k, v in batch_specs.items()
+                ],
+            ],
+            "outputs": ["loss", "grads"] if kind == "train"
+            else ["loss", "metric"],
+        }
+        print(f"  wrote {art}.hlo.txt ({len(text)} chars)")
+
+    init_file = f"{name}.init.bin"
+    np.asarray(flat0, dtype="<f4").tofile(os.path.join(outdir, init_file))
+    manifest["models"][name] = {
+        "param_count": p,
+        "init": init_file,
+        "config": {
+            k: (list(v) if isinstance(v, tuple) else v)
+            for k, v in vars(cfg).items()
+        },
+    }
+    return p
+
+
+def export_updates(model_name: str, p: int, outdir: str, manifest: dict):
+    vec = jax.ShapeDtypeStruct((p,), jnp.float32)
+
+    sgdm = functools.partial(fused_update.sgdm_update,
+                             momentum=0.9, weight_decay=1e-4)
+    art = f"update_sgdm_{model_name}"
+    text = to_hlo_text(
+        jax.jit(sgdm).lower(vec, vec, vec,
+                            jax.ShapeDtypeStruct((1,), jnp.float32))
+    )
+    with open(os.path.join(outdir, f"{art}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"][art] = {
+        "file": f"{art}.hlo.txt", "kind": "update_sgdm", "param_count": p,
+        "inputs": [{"name": n, "shape": [p], "dtype": "float32"}
+                   for n in ("x", "u", "g")] +
+                  [{"name": "lr", "shape": [1], "dtype": "float32"}],
+        "outputs": ["x_new", "u_new"],
+    }
+    print(f"  wrote {art}.hlo.txt")
+
+    adam = functools.partial(fused_update.adam_update,
+                             beta1=0.9, beta2=0.98, eps=1e-9)
+    art = f"update_adam_{model_name}"
+    text = to_hlo_text(
+        jax.jit(adam).lower(vec, vec, vec, vec,
+                            jax.ShapeDtypeStruct((3,), jnp.float32))
+    )
+    with open(os.path.join(outdir, f"{art}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"][art] = {
+        "file": f"{art}.hlo.txt", "kind": "update_adam", "param_count": p,
+        "inputs": [{"name": n, "shape": [p], "dtype": "float32"}
+                   for n in ("x", "m", "v", "g")] +
+                  [{"name": "scalars", "shape": [3], "dtype": "float32"}],
+        "outputs": ["x_new", "m_new", "v_new"],
+    }
+    print(f"  wrote {art}.hlo.txt")
+
+
+def export_gossip(n: int, d: int, outdir: str, manifest: dict):
+    art = f"gossip_dense_n{n}"
+    fn = lambda p, x, w: pushsum_mix.gossip_round(p, x, w)  # noqa: E731
+    text = to_hlo_text(
+        jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        )
+    )
+    with open(os.path.join(outdir, f"{art}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"][art] = {
+        "file": f"{art}.hlo.txt", "kind": "gossip_dense", "n": n, "d": d,
+        "inputs": [
+            {"name": "p", "shape": [n, n], "dtype": "float32"},
+            {"name": "x", "shape": [n, d], "dtype": "float32"},
+            {"name": "w", "shape": [n], "dtype": "float32"},
+        ],
+        "outputs": ["x_new", "w_new", "z_new"],
+    }
+    print(f"  wrote {art}.hlo.txt")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output dir (or a path inside it)")
+    ap.add_argument("--models", nargs="*",
+                    default=["mlp_small", "lm_tiny", "lm_small",
+                             "lm_small_b16"])
+    ap.add_argument("--gossip-n", nargs="*", type=int, default=[16, 32])
+    ap.add_argument("--gossip-d", type=int, default=1024)
+    args = ap.parse_args()
+
+    outdir = args.out
+    if outdir.endswith(".hlo.txt"):  # Makefile passes the stamp file path
+        outdir = os.path.dirname(outdir)
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest: dict = {"artifacts": {}, "models": {}}
+    pcounts = {}
+    for name in args.models:
+        print(f"[aot] model {name}")
+        pcounts[name] = export_model(name, outdir, manifest)
+
+    # Fused-update ablation artifacts for the smallest model.
+    abl = "mlp_small" if "mlp_small" in pcounts else args.models[0]
+    print(f"[aot] fused updates for {abl}")
+    export_updates(abl, pcounts[abl], outdir, manifest)
+
+    for n in args.gossip_n:
+        print(f"[aot] gossip_dense n={n} d={args.gossip_d}")
+        export_gossip(n, args.gossip_d, outdir, manifest)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Stamp file the Makefile tracks.
+    with open(os.path.join(outdir, "model.hlo.txt"), "w") as f:
+        f.write("// stamp: see manifest.json for the real artifacts\n")
+    print(f"[aot] manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""L1: Pallas kernels for the compute hot-spots (see DESIGN.md
+§Hardware-Adaptation), plus differentiable wrappers.
+
+``pallas_call`` has no automatic reverse-mode rule, so the model-facing
+entry points here are ``jax.custom_vjp`` wrappers whose forward passes run
+the Pallas kernels and whose backward passes are themselves built from the
+same kernels where possible (matmul backward = two more blocked matmuls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as _attention_mod
+from . import fused_update  # noqa: F401  (re-export)
+from . import matmul as _matmul_mod
+from . import pushsum_mix  # noqa: F401  (re-export)
+from . import ref as _ref
+
+
+# --------------------------------------------------------------------------
+# Differentiable blocked matmul: dX = dO @ Yᵀ and dY = Xᵀ @ dO are blocked
+# Pallas matmuls as well, so fwd *and* bwd lower through the MXU-tiled path.
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def pmatmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return _matmul_mod.matmul(x, y)
+
+
+def _pmatmul_fwd(x, y):
+    return _matmul_mod.matmul(x, y), (x, y)
+
+
+def _pmatmul_bwd(res, g):
+    x, y = res
+    dx = _matmul_mod.matmul(g, y.T)
+    dy = _matmul_mod.matmul(x.T, g)
+    return dx, dy
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+# --------------------------------------------------------------------------
+# Differentiable blocked causal attention: forward is the flash-style Pallas
+# kernel; backward recomputes scores with jnp (exact math, checked against
+# jax.grad of the reference in pytest). Recompute-not-store is the
+# flash-attention memory tradeoff.
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def pattention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    return _attention_mod.attention(q, k, v, causal=True)
+
+
+def _pattention_fwd(q, k, v):
+    return _attention_mod.attention(q, k, v, causal=True), (q, k, v)
+
+
+def _pattention_bwd(res, g):
+    q, k, v = res
+    _, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)                       # [B, T, T]
+    dv = jnp.einsum("bqk,bqd->bkd", p, g)
+    dp = jnp.einsum("bqd,bkd->bqk", g, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = jnp.where(mask[None], ds, 0.0) * scale
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q)
+    return dq, dk, dv
+
+
+pattention.defvjp(_pattention_fwd, _pattention_bwd)
+
+ref = _ref
+matmul = _matmul_mod
+attention = _attention_mod

@@ -1,0 +1,116 @@
+"""Blocked causal self-attention Pallas kernel (flash-attention insight,
+TPU idiom).
+
+The paper's transformer workload spends its time in attention; on V100s
+that is a sequence of cuBLAS GEMMs plus a materialized T×T softmax. The
+flash-attention *insight* — never materialize the T×T score matrix in
+HBM — is expressed here the TPU way: one grid program per (batch·head,
+query-block), K/V streamed through VMEM in blocks along the key axis with
+a running (max, denominator, accumulator) triple, instead of warp-level
+reductions over shared memory.
+
+interpret=True throughout (see matmul.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                 *, bq: int, bk: int, n_kblocks: int, scale: float,
+                 causal: bool):
+    """Grid = (batch*heads, n_qblocks, n_kblocks); k axis is the reduction."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [bq, dh]
+    k = k_ref[0]  # [bk, dh]
+    v = v_ref[0]  # [bk, dh]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq,bk]
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                   # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)          # [bq, 1]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kblocks - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "causal", "interpret")
+)
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bq: int = 64,
+    bk: int = 64,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-head attention. q, k, v: f32[BH, T, Dh] → f32[BH, T, Dh].
+
+    BH is the flattened (batch × heads) axis; one grid program handles one
+    (BH, query-block) pair and streams key/value blocks through VMEM.
+    """
+    bh, t, dh = q.shape
+    while t % bq:
+        bq -= 1
+    while t % bk:
+        bk -= 1
+    n_kblocks = t // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(
+            _attn_kernel, bq=bq, bk=bk, n_kblocks=n_kblocks, scale=scale,
+            causal=causal,
+        ),
+        grid=(bh, t // bq, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(bq: int, bk: int, dh: int, dtype_bytes: int = 4) -> int:
+    """Per-step VMEM: q/o blocks, k/v blocks, acc + running stats."""
+    return dtype_bytes * (2 * bq * dh + 2 * bk * dh + bq * dh + 2 * bq)

@@ -1,0 +1,123 @@
+"""Fused optimizer-update Pallas kernels over the flat parameter vector.
+
+SGP applies the local optimizer step to the *biased* push-sum numerator
+``x`` using gradients evaluated at the de-biased ``z = x / w`` (Alg. 3 in
+the paper). A naive implementation makes 4–6 HBM round-trips over the
+P-element state per step; these kernels fuse the whole update into one
+pass, tiled in 1-D VMEM blocks — the TPU analogue of a fused CUDA
+elementwise kernel.
+
+Two variants, matching the paper's experiments:
+  * Nesterov momentum (ImageNet protocol, Goyal et al. 2017)
+  * Adam (machine-translation protocol, Vaswani et al. 2017)
+
+These are exported as standalone HLO artifacts and used by the Rust
+coordinator's *ablation* path (``optim_ablation`` bench compares against
+the pure-Rust hot loop).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(n, want)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _sgdm_kernel(x_ref, u_ref, g_ref, lr_ref, o_x_ref, o_u_ref,
+                 *, momentum: float, weight_decay: float):
+    """Nesterov momentum with decoupled-from-nothing L2 (Goyal protocol):
+    g' = g + wd*x ; u <- m*u + g' ; x <- x - lr*(m*u + g')."""
+    g = g_ref[...] + weight_decay * x_ref[...]
+    u_new = momentum * u_ref[...] + g
+    o_u_ref[...] = u_new
+    o_x_ref[...] = x_ref[...] - lr_ref[0] * (momentum * u_new + g)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("momentum", "weight_decay", "block", "interpret")
+)
+def sgdm_update(
+    x: jax.Array,
+    u: jax.Array,
+    g: jax.Array,
+    lr: jax.Array,
+    *,
+    momentum: float = 0.9,
+    weight_decay: float = 1e-4,
+    block: int = 4096,
+    interpret: bool = True,
+):
+    """Fused Nesterov step. x, u, g: f32[P]; lr: f32[1] → (x', u')."""
+    (p,) = x.shape
+    b = _pick_block(p, block)
+    grid = (p // b,)
+    spec = pl.BlockSpec((b,), lambda i: (i,))
+    lr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(
+            _sgdm_kernel, momentum=momentum, weight_decay=weight_decay
+        ),
+        grid=grid,
+        in_specs=[spec, spec, spec, lr_spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), x.dtype),
+            jax.ShapeDtypeStruct((p,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, u, g, lr)
+
+
+def _adam_kernel(x_ref, m_ref, v_ref, g_ref, sc_ref,
+                 o_x_ref, o_m_ref, o_v_ref,
+                 *, beta1: float, beta2: float, eps: float):
+    """Adam; sc = [lr, bias_c1, bias_c2] with bias_cK = 1 - betaK^t
+    precomputed by the caller (t is a runtime scalar)."""
+    g = g_ref[...]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    o_m_ref[...] = m_new
+    o_v_ref[...] = v_new
+    m_hat = m_new / sc_ref[1]
+    v_hat = v_new / sc_ref[2]
+    o_x_ref[...] = x_ref[...] - sc_ref[0] * m_hat / (jnp.sqrt(v_hat) + eps)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beta1", "beta2", "eps", "block", "interpret")
+)
+def adam_update(
+    x: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    scalars: jax.Array,
+    *,
+    beta1: float = 0.9,
+    beta2: float = 0.98,
+    eps: float = 1e-9,
+    block: int = 4096,
+    interpret: bool = True,
+):
+    """Fused Adam step. x/m/v/g: f32[P]; scalars: f32[3] = [lr, 1-b1^t, 1-b2^t]."""
+    (p,) = x.shape
+    b = _pick_block(p, block)
+    spec = pl.BlockSpec((b,), lambda i: (i,))
+    sc_spec = pl.BlockSpec((3,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps),
+        grid=(p // b,),
+        in_specs=[spec, spec, spec, spec, sc_spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((p,), x.dtype)] * 3,
+        interpret=interpret,
+    )(x, m, v, g, scalars)

@@ -1,0 +1,104 @@
+"""Blocked Pallas matmul — the L1 compute hot-spot shared by the model MLPs,
+attention projections, and the dense push-sum mixing kernel.
+
+TPU adaptation of the paper's GPU compute (see DESIGN.md §Hardware-
+Adaptation): instead of CUDA threadblocks staging tiles through shared
+memory, the ``BlockSpec`` index maps express the HBM→VMEM schedule and the
+inner ``jnp.dot`` targets the 128×128 MXU systolic array. The accumulator
+lives in a VMEM scratch buffer across the K-reduction grid axis.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime can run. Correctness is asserted against ``ref.py`` in pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# Default tile sizes: 128 matches the MXU systolic array edge; a
+# (128, 128) f32 tile is 64 KiB, so the working set (x-tile + y-tile +
+# accumulator) is ~192 KiB — far below the ~16 MiB per-core VMEM budget,
+# leaving room for double buffering by the pipeline.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += x[i,k] @ y[k,j]; flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``want`` (keeps grids exact)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BLOCK,
+    bk: int = DEFAULT_BLOCK,
+    bn: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ y`` via the blocked Pallas kernel.
+
+    x: f32[M, K], y: f32[K, N] → f32[M, N]. Block sizes are clamped to
+    divisors of the corresponding dims so the grid covers the operands
+    exactly (no masking needed on the hot path).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bk = _pick_block(k, bk)
+    bn = _pick_block(n, bn)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (x, y, out, acc)."""
+    return dtype_bytes * (bm * bk + bk * bn + 2 * bm * bn)
+
+
+def mxu_utilization(bm: int, bk: int, bn: int, edge: int = 128) -> float:
+    """Fraction of MXU lanes used by a (bm, bk)x(bk, bn) tile — 1.0 when
+    every tile dim is a multiple of the systolic-array edge."""
+    eff = lambda d: min(d, edge) / edge  # noqa: E731
+    return eff(bm) * eff(bn) * eff(bk)

@@ -1,0 +1,50 @@
+"""Dense push-sum mixing as a Pallas kernel: one gossip round for all n
+nodes at once.
+
+Stack the push-sum numerators into X ∈ R^{n×d} and the weights into
+w ∈ R^n; a gossip round is X' = P X, w' = P w with the column-stochastic
+mixing matrix P ∈ R^{n×n}. Expressing the round as a single MXU-tiled
+matmul (rather than n pointwise axpys) is the TPU-shaped formulation used
+by the averaging/consensus experiments (Fig. 2, Appendix A) where d is
+large and n modest.
+
+The weight vector is mixed in the same kernel by augmenting X with one
+extra column, so one HBM pass covers both (matches Alg. 1 lines 6–7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul
+
+
+def gossip_round(
+    p_mat: jax.Array, x: jax.Array, w: jax.Array, *, interpret: bool = True
+):
+    """One push-sum round. p_mat: f32[n,n], x: f32[n,d], w: f32[n].
+
+    Returns (x', w', z') where z' = x' / w' are the de-biased parameters.
+    """
+    n, d = x.shape
+    aug = jnp.concatenate([x, w[:, None]], axis=1)  # [n, d+1]
+    mixed = matmul.matmul(p_mat, aug, interpret=interpret)
+    x_new = mixed[:, :d]
+    w_new = mixed[:, d]
+    z_new = x_new / w_new[:, None]
+    return x_new, w_new, z_new
+
+
+def gossip_rounds(
+    p_mats: jax.Array, x: jax.Array, w: jax.Array, *, interpret: bool = True
+):
+    """Scan ``k`` gossip rounds. p_mats: f32[k,n,n]. Returns final (x,w,z)."""
+
+    def body(carry, p_k):
+        x_c, w_c = carry
+        x_n, w_n, _ = gossip_round(p_k, x_c, w_c, interpret=interpret)
+        return (x_n, w_n), None
+
+    (x_f, w_f), _ = jax.lax.scan(body, (x, w), p_mats)
+    return x_f, w_f, x_f / w_f[:, None]

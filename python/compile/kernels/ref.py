@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel. These are the correctness
+ground truth: pytest asserts kernel-vs-ref allclose, hypothesis sweeps
+shapes/dtypes. Nothing here is used on the hot path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """q,k,v: [BH, T, Dh] — reference softmax attention."""
+    _, t, dh = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / (dh ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def sgdm_update(x, u, g, lr, *, momentum=0.9, weight_decay=1e-4):
+    g = g + weight_decay * x
+    u_new = momentum * u + g
+    x_new = x - lr[0] * (momentum * u_new + g)
+    return x_new, u_new
+
+
+def adam_update(x, m, v, g, scalars, *, beta1=0.9, beta2=0.98, eps=1e-9):
+    lr, c1, c2 = scalars[0], scalars[1], scalars[2]
+    m_new = beta1 * m + (1 - beta1) * g
+    v_new = beta2 * v + (1 - beta2) * g * g
+    x_new = x - lr * (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+    return x_new, m_new, v_new
+
+
+def gossip_round(p_mat, x, w):
+    x_new = p_mat @ x
+    w_new = p_mat @ w
+    return x_new, w_new, x_new / w_new[:, None]

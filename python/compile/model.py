@@ -1,0 +1,260 @@
+"""L2: model forward/backward graphs over a **flat parameter vector**.
+
+Two model families, mirroring the paper's two workloads:
+
+* ``transformer`` — a causal transformer LM (the WMT'16 Transformer
+  analogue; validation NLL stands in for BLEU, see DESIGN.md §2). Attention
+  and all projections go through the L1 Pallas kernels (``pmatmul`` /
+  ``pattention``).
+* ``mlp`` — a ReLU MLP classifier (the ResNet-50/ImageNet analogue for the
+  many full-training sweeps in Tables 1–5). Matmuls via ``pmatmul``.
+
+**Flat-parameter convention.** Every exported graph takes the parameters as
+a single ``f32[P]`` vector and returns gradients as ``f32[P]``. The
+ravel/unravel happens *inside* the graph (via ``jax.flatten_util``), so the
+Rust coordinator's per-node state is just a ``Vec<f32>`` and the gossip /
+optimizer / collective machinery is completely model-agnostic.
+
+This module is build-time only: ``aot.py`` lowers the functions defined
+here to HLO text once; Python never runs on the training path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import kernels
+
+
+# ===========================================================================
+# Configs and presets
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 32
+    batch: int = 4
+    kind: str = "transformer"
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    in_dim: int = 32
+    hidden: Tuple[int, ...] = (128, 128)
+    classes: int = 10
+    batch: int = 32
+    kind: str = "mlp"
+
+
+PRESETS = {
+    # Integration-test scale: a few hundred µs per step on one CPU core.
+    "mlp_small": MlpConfig(),
+    "mlp_wide": MlpConfig(in_dim=64, hidden=(256, 256, 256), classes=16,
+                          batch=32),
+    # Rust-integration-test scale transformer.
+    "lm_tiny": TransformerConfig(vocab=128, d_model=32, n_layers=2,
+                                 n_heads=2, d_ff=64, seq_len=16, batch=2),
+    # End-to-end example scale (~1M params; the 100M-param/ResNet-50 scale of
+    # the paper is substituted down for the single-CPU-core testbed, see
+    # DESIGN.md §2 and EXPERIMENTS.md).
+    "lm_small": TransformerConfig(),
+    # Large-batch regime of Fig. 3 (same model, 4× the tokens per step —
+    # the paper's 25K- vs 400K-token contrast scaled down).
+    "lm_small_b16": TransformerConfig(batch=16),
+}
+
+
+# ===========================================================================
+# Transformer LM
+# ===========================================================================
+def init_transformer(cfg: TransformerConfig, seed: int = 0):
+    """He/Glorot-style init; returns a pytree of parameter arrays."""
+    k = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(k, 4 + 6 * cfg.n_layers))
+    d, dff = cfg.d_model, cfg.d_ff
+
+    def dense(key, fan_in, fan_out):
+        return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * (
+            fan_in ** -0.5
+        )
+
+    params = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab, d)) * 0.02,
+        "pos_emb": jax.random.normal(next(keys), (cfg.seq_len, d)) * 0.02,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "out": dense(next(keys), d, cfg.vocab),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wqkv": dense(next(keys), d, 3 * d),
+                "wo": dense(next(keys), d, d),
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "w1": dense(next(keys), d, dff),
+                "w2": dense(next(keys), dff, d),
+            }
+        )
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _dense(x, w):
+    """[B, T, Din] @ [Din, Dout] through the Pallas blocked matmul."""
+    b, t, din = x.shape
+    return kernels.pmatmul(x.reshape(b * t, din), w).reshape(b, t, -1)
+
+
+def transformer_logits(params, tokens, cfg: TransformerConfig):
+    """tokens: i32[B, T] → logits f32[B, T, V]."""
+    b, t = tokens.shape
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :t]
+    for lp in params["layers"]:
+        # --- attention block -------------------------------------------
+        a_in = _layer_norm(h, lp["ln1"]["g"], lp["ln1"]["b"])
+        qkv = _dense(a_in, lp["wqkv"])                     # [B, T, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(x):  # [B, T, D] → [B*H, T, Dh]
+            return (
+                x.reshape(b, t, cfg.n_heads, cfg.d_head)
+                .transpose(0, 2, 1, 3)
+                .reshape(b * cfg.n_heads, t, cfg.d_head)
+            )
+
+        att = kernels.pattention(heads(q), heads(k), heads(v))
+        att = (
+            att.reshape(b, cfg.n_heads, t, cfg.d_head)
+            .transpose(0, 2, 1, 3)
+            .reshape(b, t, cfg.d_model)
+        )
+        h = h + _dense(att, lp["wo"])
+        # --- MLP block --------------------------------------------------
+        m_in = _layer_norm(h, lp["ln2"]["g"], lp["ln2"]["b"])
+        h = h + _dense(jax.nn.gelu(_dense(m_in, lp["w1"])), lp["w2"])
+    h = _layer_norm(h, params["ln_f"]["g"], params["ln_f"]["b"])
+    return _dense(h, params["out"])
+
+
+def transformer_loss(params, tokens, cfg: TransformerConfig):
+    """tokens: i32[B, T+1]; next-token cross-entropy (mean nats/token)."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = transformer_logits(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+# ===========================================================================
+# MLP classifier
+# ===========================================================================
+def init_mlp(cfg: MlpConfig, seed: int = 0):
+    k = jax.random.PRNGKey(seed)
+    dims = (cfg.in_dim, *cfg.hidden, cfg.classes)
+    keys = jax.random.split(k, len(dims) - 1)
+    return {
+        "w": [
+            jax.random.normal(keys[i], (dims[i], dims[i + 1])) *
+            (2.0 / dims[i]) ** 0.5
+            for i in range(len(dims) - 1)
+        ],
+        "b": [jnp.zeros((dims[i + 1],)) for i in range(len(dims) - 1)],
+    }
+
+
+def mlp_logits(params, x):
+    h = x
+    n = len(params["w"])
+    for i in range(n):
+        h = kernels.pmatmul(h, params["w"][i]) + params["b"][i]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(params, x, y):
+    logits = mlp_logits(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+
+def mlp_loss_acc(params, x, y):
+    logits = mlp_logits(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == y).astype(jnp.float32).mean()
+    return loss, acc
+
+
+# ===========================================================================
+# Flat-parameter export surface
+# ===========================================================================
+def make_flat(name: str):
+    """Build the flat-parameter train/eval functions for a preset.
+
+    Returns (cfg, flat0, unravel, train_step, eval_step, batch_specs) where
+      train_step(flat, *batch) → (loss, grads f32[P])
+      eval_step(flat, *batch)  → (loss, metric)   [metric = acc or loss]
+    """
+    cfg = PRESETS[name]
+    if cfg.kind == "transformer":
+        params0 = init_transformer(cfg)
+        flat0, unravel = ravel_pytree(params0)
+
+        def train_step(flat, tokens):
+            loss, g = jax.value_and_grad(
+                lambda p: transformer_loss(p, tokens, cfg)
+            )(unravel(flat))
+            return loss, ravel_pytree(g)[0]
+
+        def eval_step(flat, tokens):
+            loss = transformer_loss(unravel(flat), tokens, cfg)
+            return loss, loss
+
+        batch_specs = {
+            "tokens": jax.ShapeDtypeStruct(
+                (cfg.batch, cfg.seq_len + 1), jnp.int32
+            )
+        }
+    else:
+        params0 = init_mlp(cfg)
+        flat0, unravel = ravel_pytree(params0)
+
+        def train_step(flat, x, y):
+            loss, g = jax.value_and_grad(
+                lambda p: mlp_loss(p, x, y)
+            )(unravel(flat))
+            return loss, ravel_pytree(g)[0]
+
+        def eval_step(flat, x, y):
+            return mlp_loss_acc(unravel(flat), x, y)
+
+        batch_specs = {
+            "x": jax.ShapeDtypeStruct((cfg.batch, cfg.in_dim), jnp.float32),
+            "y": jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+        }
+    return cfg, flat0, unravel, train_step, eval_step, batch_specs
+
+
+def param_count(name: str) -> int:
+    return int(make_flat(name)[1].shape[0])

@@ -1,0 +1,79 @@
+"""AOT export tests: manifest consistency and HLO-text emission."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_parseable_module():
+    fn = lambda x: (x * 2.0 + 1.0,)  # noqa: E731
+    text = aot.to_hlo_text(
+        jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    )
+    assert "HloModule" in text and "ENTRY" in text
+
+
+def test_export_model_tmpdir(tmp_path):
+    manifest = {"artifacts": {}, "models": {}}
+    p = aot.export_model("mlp_small", str(tmp_path), manifest)
+    assert p == M.param_count("mlp_small")
+    assert (tmp_path / "train_mlp_small.hlo.txt").exists()
+    assert (tmp_path / "eval_mlp_small.hlo.txt").exists()
+    init = np.fromfile(tmp_path / "mlp_small.init.bin", dtype="<f4")
+    assert init.shape == (p,)
+    meta = manifest["artifacts"]["train_mlp_small"]
+    assert meta["param_count"] == p
+    assert meta["inputs"][0]["shape"] == [p]
+
+
+def test_export_updates_tmpdir(tmp_path):
+    manifest = {"artifacts": {}, "models": {}}
+    aot.export_updates("unit", 64, str(tmp_path), manifest)
+    assert (tmp_path / "update_sgdm_unit.hlo.txt").exists()
+    assert (tmp_path / "update_adam_unit.hlo.txt").exists()
+    meta = manifest["artifacts"]["update_adam_unit"]
+    assert meta["param_count"] == 64
+    assert meta["outputs"] == ["x_new", "m_new", "v_new"]
+    assert meta["inputs"][-1]["shape"] == [3]
+
+
+def test_export_gossip_tmpdir(tmp_path):
+    manifest = {"artifacts": {}, "models": {}}
+    aot.export_gossip(4, 8, str(tmp_path), manifest)
+    text = (tmp_path / "gossip_dense_n4.hlo.txt").read_text()
+    assert "HloModule" in text
+    assert manifest["artifacts"]["gossip_dense_n4"]["n"] == 4
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+class TestBuiltArtifacts:
+    def test_manifest_matches_files(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            manifest = json.load(f)
+        for name, meta in manifest["artifacts"].items():
+            path = os.path.join(ART, meta["file"])
+            assert os.path.exists(path), name
+            with open(path) as fh:
+                head = fh.read(200)
+            assert "HloModule" in head, name
+
+    def test_init_bins_match_param_counts(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            manifest = json.load(f)
+        for name, meta in manifest["models"].items():
+            init = np.fromfile(
+                os.path.join(ART, meta["init"]), dtype="<f4"
+            )
+            assert init.shape == (meta["param_count"],), name
+            assert np.isfinite(init).all(), name

@@ -1,0 +1,306 @@
+"""Kernel vs ref allclose — the CORE correctness signal for L1.
+
+Hypothesis sweeps shapes/block sizes; every Pallas kernel is checked
+against its pure-jnp oracle in kernels/ref.py, and the custom-vjp wrappers
+are checked against jax.grad of the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import attention as attn_mod
+from compile.kernels import fused_update, matmul as mm_mod, pushsum_mix, ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ===========================================================================
+# Blocked matmul
+# ===========================================================================
+class TestMatmul:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_random_shapes(self, m, k, n, seed):
+        x, y = rand((m, k), seed), rand((k, n), seed + 1)
+        got = mm_mod.matmul(x, y)
+        np.testing.assert_allclose(got, ref.matmul(x, y), rtol=2e-5,
+                                   atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(
+        bm=st.sampled_from([8, 16, 32, 64, 128]),
+        bk=st.sampled_from([8, 16, 32, 64, 128]),
+        bn=st.sampled_from([8, 16, 32, 64, 128]),
+    )
+    def test_block_size_invariance(self, bm, bk, bn):
+        x, y = rand((64, 48), 7), rand((48, 80), 8)
+        got = mm_mod.matmul(x, y, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(got, ref.matmul(x, y), rtol=2e-5,
+                                   atol=2e-5)
+
+    def test_mxu_aligned_tile(self):
+        x, y = rand((256, 256), 1), rand((256, 256), 2)
+        got = mm_mod.matmul(x, y)
+        np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_identity(self):
+        x = rand((32, 32), 3)
+        np.testing.assert_allclose(
+            mm_mod.matmul(x, jnp.eye(32)), x, rtol=1e-6, atol=1e-6
+        )
+
+    def test_zero_operand(self):
+        x = rand((16, 24), 4)
+        got = mm_mod.matmul(x, jnp.zeros((24, 8)))
+        assert float(jnp.abs(got).max()) == 0.0
+
+    def test_vmem_budget_default_blocks(self):
+        # Default 128-tiles must fit well inside a 16 MiB VMEM core budget.
+        assert mm_mod.vmem_bytes(128, 128, 128) < 16 * 2**20 // 4
+
+    def test_mxu_utilization_full_on_aligned(self):
+        assert mm_mod.mxu_utilization(128, 128, 128) == 1.0
+        assert mm_mod.mxu_utilization(64, 128, 128) == 0.5
+
+    def test_pick_block_divides(self):
+        for dim in [1, 7, 96, 100, 128, 1000]:
+            b = mm_mod._pick_block(dim, 128)
+            assert dim % b == 0 and 1 <= b <= 128
+
+
+class TestPmatmulGrad:
+    def test_grad_matches_ref(self):
+        x, y = rand((24, 16), 11), rand((16, 20), 12)
+
+        f_ker = lambda x, y: (kernels.pmatmul(x, y) ** 2).sum()  # noqa: E731
+        f_ref = lambda x, y: (ref.matmul(x, y) ** 2).sum()  # noqa: E731
+        gx_k, gy_k = jax.grad(f_ker, argnums=(0, 1))(x, y)
+        gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+        np.testing.assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gy_k, gy_r, rtol=1e-4, atol=1e-4)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 1000))
+    def test_grad_random(self, seed):
+        x, y = rand((8, 12), seed), rand((12, 6), seed + 1)
+        g = jax.grad(lambda a: kernels.pmatmul(a, y).sum())(x)
+        np.testing.assert_allclose(
+            g, jnp.tile(y.sum(1), (8, 1)), rtol=1e-5, atol=1e-5
+        )
+
+
+# ===========================================================================
+# Blocked causal attention
+# ===========================================================================
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(
+        bh=st.integers(1, 6),
+        t=st.sampled_from([8, 16, 24, 32, 64]),
+        dh=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, bh, t, dh, seed):
+        q, k, v = (rand((bh, t, dh), seed + i) for i in range(3))
+        got = attn_mod.attention(q, k, v, causal=True)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @settings(**SETTINGS)
+    @given(bq=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16, 32]))
+    def test_block_size_invariance(self, bq, bk):
+        q, k, v = (rand((2, 32, 16), 40 + i) for i in range(3))
+        got = attn_mod.attention(q, k, v, bq=bq, bk=bk, causal=True)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_non_causal(self):
+        q, k, v = (rand((2, 16, 8), 50 + i) for i in range(3))
+        got = attn_mod.attention(q, k, v, causal=False)
+        want = ref.attention(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_causality(self):
+        """Output at position t must not depend on keys at positions > t."""
+        q, k, v = (rand((1, 16, 8), 60 + i) for i in range(3))
+        base = attn_mod.attention(q, k, v, causal=True)
+        k2 = k.at[:, 10:].set(999.0)
+        v2 = v.at[:, 10:].set(-999.0)
+        pert = attn_mod.attention(q, k2, v2, causal=True)
+        np.testing.assert_allclose(base[:, :10], pert[:, :10], rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_softmax_rows_bounded(self):
+        """Attention output is a convex combination of V rows."""
+        q, k = rand((1, 16, 8), 70), rand((1, 16, 8), 71)
+        v = jnp.ones((1, 16, 8))
+        got = attn_mod.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, jnp.ones_like(got), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_numerical_stability_large_logits(self):
+        q, k, v = (rand((1, 16, 8), 80 + i, scale=30.0) for i in range(3))
+        got = attn_mod.attention(q, k, v, causal=True)
+        assert bool(jnp.isfinite(got).all())
+
+    def test_grad_matches_ref(self):
+        q, k, v = (rand((2, 16, 8), 90 + i) for i in range(3))
+
+        f_ker = lambda q, k, v: (kernels.pattention(q, k, v) ** 2).sum()  # noqa: E731
+        f_ref = lambda q, k, v: (  # noqa: E731
+            ref.attention(q, k, v, causal=True) ** 2
+        ).sum()
+        gk = jax.grad(f_ker, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+# ===========================================================================
+# Fused optimizer updates
+# ===========================================================================
+class TestFusedUpdate:
+    @settings(**SETTINGS)
+    @given(
+        p=st.integers(1, 5000),
+        seed=st.integers(0, 2**16),
+        lr=st.floats(1e-4, 1.0),
+        mom=st.floats(0.0, 0.99),
+    )
+    def test_sgdm_matches_ref(self, p, seed, lr, mom):
+        x, u, g = (rand((p,), seed + i) for i in range(3))
+        lr_a = jnp.array([lr], jnp.float32)
+        got = fused_update.sgdm_update(x, u, g, lr_a, momentum=mom)
+        want = ref.sgdm_update(x, u, g, lr_a, momentum=mom)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(p=st.integers(1, 5000), seed=st.integers(0, 2**16),
+           t=st.integers(1, 10000))
+    def test_adam_matches_ref(self, p, seed, t):
+        x, m, v, g = (rand((p,), seed + i) for i in range(4))
+        v = jnp.abs(v)
+        sc = jnp.array([1e-3, 1 - 0.9**t, 1 - 0.98**t], jnp.float32)
+        got = fused_update.adam_update(x, m, v, g, sc)
+        want = ref.adam_update(x, m, v, g, sc)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+    def test_sgdm_zero_grad_zero_momentum_is_identity(self):
+        x = rand((100,), 1)
+        z = jnp.zeros(100)
+        x2, u2 = fused_update.sgdm_update(
+            x, z, z, jnp.array([0.1], jnp.float32),
+            momentum=0.9, weight_decay=0.0,
+        )
+        np.testing.assert_allclose(x2, x, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(u2, z, atol=1e-7)
+
+    def test_sgdm_plain_sgd_when_no_momentum(self):
+        x, g = rand((64,), 2), rand((64,), 3)
+        x2, _ = fused_update.sgdm_update(
+            x, jnp.zeros(64), g, jnp.array([0.5], jnp.float32),
+            momentum=0.0, weight_decay=0.0,
+        )
+        np.testing.assert_allclose(x2, x - 0.5 * g, rtol=1e-6, atol=1e-6)
+
+    def test_block_size_invariance(self):
+        x, u, g = (rand((1000,), 20 + i) for i in range(3))
+        lr = jnp.array([0.01], jnp.float32)
+        a = fused_update.sgdm_update(x, u, g, lr, block=100)
+        b = fused_update.sgdm_update(x, u, g, lr, block=4096)
+        for ai, bi in zip(a, b):
+            np.testing.assert_allclose(ai, bi, rtol=1e-6, atol=1e-6)
+
+
+# ===========================================================================
+# Dense push-sum mixing
+# ===========================================================================
+def column_stochastic(n, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.random((n, n)).astype(np.float32) + 0.1
+    return jnp.asarray(p / p.sum(0, keepdims=True))
+
+
+class TestPushsumMix:
+    @settings(**SETTINGS)
+    @given(n=st.integers(2, 24), d=st.integers(1, 64),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, d, seed):
+        p = column_stochastic(n, seed)
+        x = rand((n, d), seed + 1)
+        w = jnp.ones((n,))
+        got = pushsum_mix.gossip_round(p, x, w)
+        want = ref.gossip_round(p, x, w)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+    @settings(**SETTINGS)
+    @given(n=st.integers(2, 16), seed=st.integers(0, 2**16))
+    def test_mass_conservation(self, n, seed):
+        """Column-stochastic mixing preserves Σx and Σw exactly."""
+        p = column_stochastic(n, seed)
+        x = rand((n, 8), seed + 1)
+        w = jnp.ones((n,))
+        x2, w2, _ = pushsum_mix.gossip_round(p, x, w)
+        np.testing.assert_allclose(x2.sum(0), x.sum(0), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(float(w2.sum()), float(w.sum()),
+                                   rtol=1e-5)
+
+    def test_debias_recovers_average_dense(self):
+        """With P = (1/n)·11ᵀ one round yields the exact average at z."""
+        n, d = 8, 16
+        p = jnp.full((n, n), 1.0 / n)
+        x = rand((n, d), 5)
+        w = jnp.ones((n,))
+        _, _, z = pushsum_mix.gossip_round(p, x, w)
+        avg = x.mean(0)
+        for i in range(n):
+            np.testing.assert_allclose(z[i], avg, rtol=1e-4, atol=1e-5)
+
+    def test_rounds_converge_to_average(self):
+        """Repeated sparse gossip converges z → initial average (PushSum)."""
+        n, d, k = 8, 4, 40
+        rng = np.random.default_rng(0)
+        mats = []
+        for t in range(k):
+            p = np.zeros((n, n), np.float32)
+            for i in range(n):
+                j = (i + 2 ** (t % 3)) % n
+                p[i, i] = 0.5
+                p[j, i] = 0.5
+            mats.append(p)
+        x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+        w = jnp.ones((n,))
+        _, _, z = pushsum_mix.gossip_rounds(jnp.asarray(np.stack(mats)), x, w)
+        avg = x.mean(0)
+        for i in range(n):
+            np.testing.assert_allclose(z[i], avg, rtol=1e-3, atol=1e-3)
+
+    def test_weights_stay_positive(self):
+        n = 8
+        p = column_stochastic(n, 3)
+        w = jnp.ones((n,))
+        x = rand((n, 4), 4)
+        for _ in range(20):
+            x, w, _ = pushsum_mix.gossip_round(p, x, w)
+        assert float(w.min()) > 0.0

@@ -1,0 +1,160 @@
+"""L2 model tests: shapes, gradient correctness (finite differences),
+flat-parameter round-trip, and basic trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def tiny_lm_cfg():
+    return M.TransformerConfig(vocab=32, d_model=16, n_layers=1, n_heads=2,
+                               d_ff=32, seq_len=8, batch=2)
+
+
+class TestTransformer:
+    def test_logits_shape(self):
+        cfg = tiny_lm_cfg()
+        params = M.init_transformer(cfg)
+        toks = jnp.zeros((cfg.batch, cfg.seq_len), jnp.int32)
+        logits = M.transformer_logits(params, toks, cfg)
+        assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+
+    def test_loss_finite_and_near_uniform_at_init(self):
+        cfg = tiny_lm_cfg()
+        params = M.init_transformer(cfg)
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len + 1)),
+            jnp.int32,
+        )
+        loss = M.transformer_loss(params, toks, cfg)
+        assert bool(jnp.isfinite(loss))
+        # With 0.02-scale init the LM is near-uniform: loss ≈ log(vocab).
+        assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+    def test_causality_of_loss(self):
+        """Loss at step t only depends on tokens ≤ t."""
+        cfg = tiny_lm_cfg()
+        params = M.init_transformer(cfg)
+        rng = np.random.default_rng(1)
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab, (1, cfg.seq_len)), jnp.int32
+        )
+        l1 = M.transformer_logits(params, toks, cfg)
+        toks2 = toks.at[0, -1].set((int(toks[0, -1]) + 1) % cfg.vocab)
+        l2 = M.transformer_logits(params, toks2, cfg)
+        np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_grad_nonzero_every_leaf(self):
+        cfg = tiny_lm_cfg()
+        params = M.init_transformer(cfg)
+        rng = np.random.default_rng(2)
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len + 1)),
+            jnp.int32,
+        )
+        g = jax.grad(lambda p: M.transformer_loss(p, toks, cfg))(params)
+        leaves = jax.tree_util.tree_leaves(g)
+        assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+        nonzero = sum(float(jnp.abs(x).sum()) > 0 for x in leaves)
+        assert nonzero >= len(leaves) - 1  # pos_emb rows past T can be 0
+
+    def test_few_sgd_steps_reduce_loss(self):
+        cfg = tiny_lm_cfg()
+        params = M.init_transformer(cfg)
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab, (4, cfg.seq_len + 1)), jnp.int32
+        )
+        loss_fn = jax.jit(lambda p: M.transformer_loss(p, toks, cfg))
+        grad_fn = jax.jit(jax.grad(lambda p: M.transformer_loss(p, toks, cfg)))
+        l0 = float(loss_fn(params))
+        for _ in range(10):
+            g = grad_fn(params)
+            params = jax.tree.map(lambda p, gg: p - 0.5 * gg, params, g)
+        assert float(loss_fn(params)) < l0
+
+
+class TestMlp:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 1000))
+    def test_logits_shape(self, seed):
+        cfg = M.MlpConfig(in_dim=8, hidden=(16,), classes=4, batch=6)
+        params = M.init_mlp(cfg, seed)
+        x = jnp.zeros((6, 8))
+        assert M.mlp_logits(params, x).shape == (6, 4)
+
+    def test_grad_matches_finite_difference(self):
+        cfg = M.MlpConfig(in_dim=4, hidden=(8,), classes=3, batch=5)
+        params = M.init_mlp(cfg, 0)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((5, 4)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 3, 5), jnp.int32)
+
+        from jax.flatten_util import ravel_pytree
+
+        flat, unravel = ravel_pytree(params)
+        f = lambda fl: M.mlp_loss(unravel(fl), x, y)  # noqa: E731
+        g = jax.grad(f)(flat)
+        eps = 1e-3
+        rng2 = np.random.default_rng(1)
+        for idx in rng2.integers(0, flat.shape[0], 10):
+            e = jnp.zeros_like(flat).at[idx].set(eps)
+            fd = (float(f(flat + e)) - float(f(flat - e))) / (2 * eps)
+            assert abs(fd - float(g[idx])) < 5e-2, (idx, fd, float(g[idx]))
+
+    def test_loss_acc_consistency(self):
+        cfg = M.MlpConfig(in_dim=4, hidden=(8,), classes=3, batch=64)
+        params = M.init_mlp(cfg, 0)
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((64, 4)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 3, 64), jnp.int32)
+        loss, acc = M.mlp_loss_acc(params, x, y)
+        assert bool(jnp.isfinite(loss)) and 0.0 <= float(acc) <= 1.0
+
+
+class TestFlatSurface:
+    @pytest.mark.parametrize("name", ["mlp_small", "lm_tiny"])
+    def test_train_step_shapes(self, name):
+        cfg, flat0, _, train_step, eval_step, specs = M.make_flat(name)
+        p = flat0.shape[0]
+        batch = [
+            jnp.zeros(s.shape, s.dtype) for s in specs.values()
+        ]
+        loss, grads = train_step(flat0, *batch)
+        assert loss.shape == () and grads.shape == (p,)
+        l2, m2 = eval_step(flat0, *batch)
+        assert l2.shape == () and m2.shape == ()
+
+    def test_flat_roundtrip(self):
+        cfg, flat0, unravel, _, _, _ = M.make_flat("mlp_small")
+        from jax.flatten_util import ravel_pytree
+
+        again, _ = ravel_pytree(unravel(flat0))
+        np.testing.assert_array_equal(np.asarray(flat0), np.asarray(again))
+
+    def test_param_counts_positive_and_ordered(self):
+        assert M.param_count("lm_tiny") < M.param_count("lm_small")
+        assert M.param_count("mlp_small") > 0
+
+    def test_train_grad_matches_pytree_grad(self):
+        cfg, flat0, unravel, train_step, _, specs = M.make_flat("mlp_small")
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal(
+            tuple(specs["x"].shape)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, cfg.classes,
+                                     tuple(specs["y"].shape)), jnp.int32)
+        loss, gflat = train_step(flat0, x, y)
+        from jax.flatten_util import ravel_pytree
+
+        g_tree = jax.grad(lambda p: M.mlp_loss(p, x, y))(unravel(flat0))
+        g2, _ = ravel_pytree(g_tree)
+        np.testing.assert_allclose(np.asarray(gflat), np.asarray(g2),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,28 @@
+//! Appendix A regeneration: λ₂ of mixing-matrix products for the four
+//! peer-selection schemes at n = 32, plus spectral-tooling microbenches.
+
+use sgp::benchkit::{bench, black_box, section};
+use sgp::experiments;
+use sgp::topology::{spectral, Mat, Schedule, TopologyKind};
+
+fn main() {
+    // The paper-shaped table + CSV (results/appendix_a_lambda2.csv).
+    experiments::appendix_a().expect("appendix A");
+
+    section("spectral microbenches (n=32)");
+    let s = Schedule::new(TopologyKind::OnePeerExp, 32);
+    let mats: Vec<Mat> = (0..5u64).map(|k| s.mixing_matrix(k)).collect();
+    bench("spectral/mixing_matrix/n32", || {
+        black_box(s.mixing_matrix(3));
+    });
+    bench("spectral/product5/n32", || {
+        black_box(Mat::product(&mats));
+    });
+    let prod = Mat::product(&mats);
+    bench("spectral/lambda2/n32", || {
+        black_box(spectral::lambda2(&prod));
+    });
+    bench("spectral/singular_values/n32", || {
+        black_box(spectral::singular_values(&prod));
+    });
+}

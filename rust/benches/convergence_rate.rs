@@ -1,0 +1,87 @@
+//! Theorem-1 rate study: SGP on synthetic least squares at the paper's
+//! γ = √(n/K) operating point. Sweeps K (error should shrink ≈ 1/√K once
+//! the 1/√(nK) term dominates) and n, and prints the table recorded in
+//! EXPERIMENTS.md; plus a microbench of the pure-algorithm iteration.
+
+use sgp::benchkit::{bench, black_box, section};
+use sgp::gossip::PushSumEngine;
+use sgp::metrics::print_table;
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+fn run(n: usize, iters: u64, noise: f32, seed: u64) -> (f64, f64) {
+    let d = 16;
+    let mut rng = Pcg::new(seed);
+    let centers: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+    let mut opt = vec![0.0f64; d];
+    for c in &centers {
+        for (o, v) in opt.iter_mut().zip(c) {
+            *o += *v as f64 / n as f64;
+        }
+    }
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+    let mut eng = PushSumEngine::new(init, 0, false);
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let gamma = ((n as f64 / iters as f64).sqrt()).min(0.25) as f32;
+    for k in 0..iters {
+        for i in 0..n {
+            let z = eng.states[i].debiased();
+            for (j, x) in eng.states[i].x.iter_mut().enumerate() {
+                *x -= gamma * (z[j] - centers[i][j] + noise * rng.gaussian() as f32);
+            }
+        }
+        eng.step(k, &sched);
+    }
+    let mean = eng.mean_x();
+    let err = mean
+        .iter()
+        .zip(&opt)
+        .map(|(m, o)| {
+            let e = *m as f64 - o;
+            e * e
+        })
+        .sum::<f64>()
+        .sqrt();
+    (err, eng.consensus_distance().0)
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for n in [8usize, 16, 32] {
+        for iters in [250u64, 1000, 4000] {
+            let (err, cons) = run(n, iters, 0.3, 42);
+            rows.push(vec![
+                n.to_string(),
+                iters.to_string(),
+                format!("{:.4}", (n as f64 / iters as f64).sqrt().min(0.25)),
+                format!("{err:.4}"),
+                format!("{cons:.2e}"),
+            ]);
+        }
+    }
+    print_table(
+        "Theorem 1 rate check — SGP on least squares, γ = √(n/K)",
+        &["n", "K", "γ", "‖x̄−x*‖", "consensus"],
+        &rows,
+    );
+
+    section("pure-algorithm iteration microbench");
+    let n = 16;
+    let d = 1024;
+    let mut rng = Pcg::new(7);
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+    let mut eng = PushSumEngine::new(init, 0, false);
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let mut k = 0u64;
+    bench("sgp_iteration/quadratic/n16/d1024", || {
+        for i in 0..n {
+            let w = eng.states[i].w as f32;
+            for x in eng.states[i].x.iter_mut() {
+                *x -= 0.01 * (*x / w);
+            }
+        }
+        eng.step(k, &sched);
+        k += 1;
+        black_box(&eng.states[0].x[0]);
+    });
+}

@@ -1,0 +1,55 @@
+//! Fig. 1c/d regeneration + timing-recursion microbenches.
+//!
+//! Prints the simulated seconds/iteration grid (method × nodes × fabric)
+//! that reproduces the paper's scaling plots — AR-SGD degrades with n over
+//! 10 GbE while SGP stays flat; everything is compute-bound on InfiniBand
+//! — and measures the cost of the timing recursion itself.
+
+use sgp::benchkit::{bench, black_box, section};
+use sgp::experiments;
+use sgp::net::{CommPattern, ComputeModel, LinkModel, TimingSim};
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+fn main() {
+    // The paper-shaped table + CSV (results/fig1cd_timing.csv).
+    experiments::fig1_timing_csv().expect("fig1 timing");
+
+    section("timing-recursion microbench (n=32)");
+    let n = 32;
+    let compute = ComputeModel::resnet50_dgx1();
+    let mut rng = Pcg::new(1);
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+
+    let mut sim = TimingSim::new(n, LinkModel::ethernet_10g());
+    bench("timing/advance/allreduce/n32", || {
+        let comp = compute.sample_all(n, &mut rng);
+        black_box(sim.advance(&CommPattern::AllReduce { bytes: 100 << 20 }, &comp));
+    });
+
+    let mut sim = TimingSim::new(n, LinkModel::ethernet_10g());
+    let mut rng2 = Pcg::new(2);
+    bench("timing/advance/pushsum/n32", || {
+        let comp = compute.sample_all(n, &mut rng2);
+        black_box(sim.advance(
+            &CommPattern::PushSum { schedule: &sched, bytes: 100 << 20, tau: 1 },
+            &comp,
+        ));
+    });
+
+    section("300-iteration sweep (what one grid cell of Fig 1c costs)");
+    bench("timing/sweep300/sgp/n32", || {
+        black_box(sgp::net::average_iteration_time(
+            32,
+            LinkModel::ethernet_10g(),
+            &compute,
+            300,
+            7,
+            |_| sgp::net::OwnedCommPattern::PushSum {
+                schedule: Schedule::new(TopologyKind::OnePeerExp, 32),
+                bytes: 100 << 20,
+                tau: 0,
+            },
+        ));
+    });
+}

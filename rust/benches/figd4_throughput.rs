@@ -1,0 +1,28 @@
+//! Fig. D.4 regeneration: simulated training throughput (images/s) and
+//! scaling efficiency for SGP vs AR-SGD on both fabrics, plus collective
+//! cost-model microbenches.
+
+use sgp::benchkit::{bench, black_box, section};
+use sgp::collectives;
+use sgp::experiments;
+use sgp::net::LinkModel;
+
+fn main() {
+    // The paper-shaped table + CSV (results/figd4_throughput.csv).
+    experiments::figd4().expect("fig d4");
+
+    section("collective substrate microbenches");
+    let link = LinkModel::ethernet_10g();
+    bench("collectives/ring_time_model", || {
+        black_box(collectives::ring_allreduce_time(32, 100 << 20, &link));
+    });
+    let mut vs: Vec<Vec<f32>> = (0..16).map(|i| vec![i as f32; 22_026]).collect();
+    bench("collectives/allreduce_mean/22k/n16", || {
+        collectives::allreduce_mean(&mut vs);
+        black_box(&vs);
+    });
+    let vs2: Vec<Vec<f32>> = (0..16).map(|i| vec![i as f32; 923_904]).collect();
+    bench("collectives/mean_of/924k/n16", || {
+        black_box(collectives::mean_of(&vs2));
+    });
+}

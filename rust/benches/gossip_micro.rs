@@ -1,0 +1,61 @@
+//! Gossip hot-path microbenchmarks: one PushSum engine step at the two
+//! parameter scales the experiments use (MLP ≈ 22k params, transformer
+//! ≈ 924k params), plus the de-bias and consensus-statistics kernels.
+//! This is the L3 cost that must stay off the critical path relative to
+//! gradient compute (see EXPERIMENTS.md §Perf).
+
+use sgp::benchkit::{bench, black_box, section};
+use sgp::gossip::PushSumEngine;
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+fn engine(n: usize, dim: usize, delay: u64) -> PushSumEngine {
+    let mut rng = Pcg::new(1);
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+    PushSumEngine::new(init, delay, false)
+}
+
+fn main() {
+    section("gossip engine: one step (send+aggregate all nodes)");
+    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+        for n in [8usize, 16] {
+            let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+            let mut eng = engine(n, dim, 0);
+            let mut k = 0u64;
+            bench(&format!("pushsum_step/1peer/{tag}/n{n}"), || {
+                eng.step(k, &sched);
+                k += 1;
+            });
+        }
+    }
+
+    section("gossip engine: overlap (τ=1) and 2-peer variants, n=16");
+    let sched2 = Schedule::new(TopologyKind::TwoPeerExp, 16);
+    let mut eng = engine(16, 22_026, 0);
+    let mut k = 0u64;
+    bench("pushsum_step/2peer/mlp-22k/n16", || {
+        eng.step(k, &sched2);
+        k += 1;
+    });
+    let sched1 = Schedule::new(TopologyKind::OnePeerExp, 16);
+    let mut eng = engine(16, 22_026, 1);
+    let mut k = 0u64;
+    bench("pushsum_step/1peer-tau1/mlp-22k/n16", || {
+        eng.step(k, &sched1);
+        k += 1;
+    });
+
+    section("debias + statistics");
+    let eng = engine(16, 923_904, 0);
+    let mut out = vec![0.0f32; 923_904];
+    bench("debias_into/lm-924k", || {
+        eng.states[0].debias_into(&mut out);
+        black_box(&out);
+    });
+    bench("consensus_distance/lm-924k/n16", || {
+        black_box(eng.consensus_distance());
+    });
+    bench("total_mass/lm-924k/n16", || {
+        black_box(eng.total_mass());
+    });
+}

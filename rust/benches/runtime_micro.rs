@@ -1,0 +1,84 @@
+//! PJRT runtime microbenchmarks: the per-call cost of the train/eval/gossip
+//! artifacts — the L2 compute that dominates each simulated node's
+//! iteration, and the runtime overhead around it.
+
+use sgp::benchkit::{bench, bench_for, black_box, section};
+use sgp::data::Batch;
+use sgp::model;
+use sgp::rng::Pcg;
+use sgp::runtime::Runtime;
+use std::time::Duration;
+
+fn main() {
+    let dir = model::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(dir).expect("runtime");
+    let mut rng = Pcg::new(1);
+
+    section("train_step / eval_step latency per model");
+    for mname in ["mlp_small", "lm_tiny", "lm_small"] {
+        if rt.manifest.models.get(mname).is_none() {
+            continue;
+        }
+        let init = model::read_init(&rt.dir, &rt.manifest, mname).unwrap();
+        let kind = rt.manifest.model_cfg_str(mname, "kind").unwrap().to_string();
+        let b = rt.manifest.model_cfg_usize(mname, "batch").unwrap();
+        let batch = if kind == "transformer" {
+            let seq = rt.manifest.model_cfg_usize(mname, "seq_len").unwrap();
+            let vocab = rt.manifest.model_cfg_usize(mname, "vocab").unwrap();
+            Batch::Tokens {
+                t: (0..b * (seq + 1)).map(|_| rng.below(vocab) as i32).collect(),
+                b,
+                seq,
+            }
+        } else {
+            let in_dim = rt.manifest.model_cfg_usize(mname, "in_dim").unwrap();
+            let classes = rt.manifest.model_cfg_usize(mname, "classes").unwrap();
+            Batch::Classif {
+                x: rng.gaussian_vec(b * in_dim),
+                y: (0..b).map(|_| rng.below(classes) as i32).collect(),
+                b,
+                in_dim,
+            }
+        };
+        let _ = rt.train_step(mname, &init, &batch).unwrap(); // compile once
+        bench_for(
+            &format!("runtime/train_step/{mname}"),
+            Duration::from_secs(3),
+            || {
+                black_box(rt.train_step(mname, &init, &batch).unwrap());
+            },
+        );
+        let _ = rt.eval_step(mname, &init, &batch).unwrap();
+        bench_for(
+            &format!("runtime/eval_step/{mname}"),
+            Duration::from_secs(2),
+            || {
+                black_box(rt.eval_step(mname, &init, &batch).unwrap());
+            },
+        );
+    }
+
+    section("dense-gossip artifact (MXU-tiled Pallas matmul)");
+    for n in [16usize, 32] {
+        let name = format!("gossip_dense_n{n}");
+        if let Ok(meta) = rt.manifest.artifact(&name) {
+            let d = meta.d.unwrap();
+            let x = rng.gaussian_vec(n * d);
+            let w = vec![1.0f32; n];
+            let p: Vec<f32> = (0..n * n).map(|_| 1.0 / n as f32).collect();
+            let _ = rt.gossip_dense(n, &p, &x, &w).unwrap();
+            bench(&format!("runtime/gossip_dense/n{n}xd{d}"), || {
+                black_box(rt.gossip_dense(n, &p, &x, &w).unwrap());
+            });
+        }
+    }
+
+    section("executable cache hit");
+    bench("runtime/executable_cache_hit", || {
+        black_box(rt.executable("train_mlp_small").unwrap());
+    });
+}

@@ -1,0 +1,160 @@
+//! The distributed-training algorithms compared in the paper.
+//!
+//! * [`Algorithm::ArSgd`] — AllReduce parallel SGD (Goyal et al., 2017):
+//!   exact gradient averaging behind a global barrier.
+//! * [`Algorithm::Sgp`] — Stochastic Gradient Push (this paper, Alg. 1):
+//!   one local optimizer step interleaved with one PushSum gossip step
+//!   over a column-stochastic (possibly directed/time-varying) schedule.
+//! * [`Algorithm::Osgp`] — τ-Overlap SGP (Alg. 2): non-blocking sends,
+//!   messages consumed with ≤ τ iterations of staleness; `biased = true`
+//!   reproduces the Table-4 ablation that drops the push-sum weight.
+//! * [`Algorithm::DPsgd`] — Decentralized parallel SGD (Lian et al., 2017):
+//!   symmetric doubly-stochastic gossip (pairwise exchanges).
+//! * [`Algorithm::AdPsgd`] — Asynchronous D-PSGD (Lian et al., 2018):
+//!   event-driven pairwise averaging with stale gradients.
+//!
+//! Equivalences encoded here and checked in integration tests:
+//! SGP ≡ AR-SGD when the mixing matrix is (1/n)·11ᵀ and nodes start equal;
+//! SGP ≡ D-PSGD under a static symmetric doubly-stochastic schedule
+//! (the push-sum weights stay ≡ 1).
+
+use crate::topology::{HybridSchedule, Schedule, TopologyKind};
+
+#[derive(Clone, Debug)]
+pub enum Algorithm {
+    /// Exact averaging every iteration (the synchronous baseline).
+    ArSgd,
+    /// PushSum gossip over `schedule` (possibly hybrid, Table 3).
+    Sgp { schedule: HybridSchedule },
+    /// Overlap SGP with delay bound `tau` (≥1); `biased` drops the weight.
+    Osgp { schedule: HybridSchedule, tau: u64, biased: bool },
+    /// Symmetric gossip baseline.
+    DPsgd { schedule: Schedule },
+    /// Asynchronous gossip baseline (event-driven).
+    AdPsgd { schedule: Schedule },
+}
+
+impl Algorithm {
+    /// Paper-style display name.
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::ArSgd => "AR-SGD".into(),
+            Algorithm::Sgp { schedule } => {
+                let s = &schedule.phases[0].1;
+                if schedule.phases.len() > 1 {
+                    let s2 = &schedule.phases[1].1;
+                    format!("{}/{}-SGP", phase_tag(s.kind), phase_tag(s2.kind))
+                } else {
+                    format!("{}-SGP", phase_tag(s.kind))
+                }
+            }
+            Algorithm::Osgp { tau, biased, .. } => {
+                if *biased {
+                    format!("biased {tau}-OSGP")
+                } else {
+                    format!("{tau}-OSGP")
+                }
+            }
+            Algorithm::DPsgd { .. } => "D-PSGD".into(),
+            Algorithm::AdPsgd { .. } => "AD-PSGD".into(),
+        }
+    }
+
+    /// Convenience constructors for the standard experiment grid.
+    pub fn sgp_1peer(n: usize) -> Self {
+        Algorithm::Sgp {
+            schedule: HybridSchedule::single(Schedule::new(
+                TopologyKind::OnePeerExp,
+                n,
+            )),
+        }
+    }
+
+    pub fn sgp_2peer(n: usize) -> Self {
+        Algorithm::Sgp {
+            schedule: HybridSchedule::single(Schedule::new(
+                TopologyKind::TwoPeerExp,
+                n,
+            )),
+        }
+    }
+
+    pub fn osgp_1peer(n: usize, tau: u64) -> Self {
+        Algorithm::Osgp {
+            schedule: HybridSchedule::single(Schedule::new(
+                TopologyKind::OnePeerExp,
+                n,
+            )),
+            tau,
+            biased: false,
+        }
+    }
+
+    pub fn osgp_biased(n: usize, tau: u64) -> Self {
+        Algorithm::Osgp {
+            schedule: HybridSchedule::single(Schedule::new(
+                TopologyKind::OnePeerExp,
+                n,
+            )),
+            tau,
+            biased: true,
+        }
+    }
+
+    pub fn dpsgd(n: usize) -> Self {
+        Algorithm::DPsgd { schedule: Schedule::new(TopologyKind::BipartiteExp, n) }
+    }
+
+    pub fn adpsgd(n: usize) -> Self {
+        Algorithm::AdPsgd { schedule: Schedule::new(TopologyKind::BipartiteExp, n) }
+    }
+
+    /// Table 3 hybrids: dense (or 2-peer) first `switch_at` iterations,
+    /// then 1-peer SGP.
+    pub fn hybrid_ar_then_1p(n: usize, switch_at: u64) -> Self {
+        Algorithm::Sgp {
+            schedule: HybridSchedule::two_phase(
+                Schedule::new(TopologyKind::Complete, n),
+                switch_at,
+                Schedule::new(TopologyKind::OnePeerExp, n),
+            ),
+        }
+    }
+
+    pub fn hybrid_2p_then_1p(n: usize, switch_at: u64) -> Self {
+        Algorithm::Sgp {
+            schedule: HybridSchedule::two_phase(
+                Schedule::new(TopologyKind::TwoPeerExp, n),
+                switch_at,
+                Schedule::new(TopologyKind::OnePeerExp, n),
+            ),
+        }
+    }
+}
+
+fn phase_tag(kind: TopologyKind) -> &'static str {
+    match kind {
+        TopologyKind::OnePeerExp => "1P",
+        TopologyKind::TwoPeerExp => "2P",
+        TopologyKind::Complete => "AR",
+        _ => "X",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_paper_tables() {
+        assert_eq!(Algorithm::ArSgd.name(), "AR-SGD");
+        assert_eq!(Algorithm::sgp_1peer(8).name(), "1P-SGP");
+        assert_eq!(Algorithm::sgp_2peer(8).name(), "2P-SGP");
+        assert_eq!(Algorithm::osgp_1peer(8, 1).name(), "1-OSGP");
+        assert_eq!(Algorithm::osgp_biased(8, 1).name(), "biased 1-OSGP");
+        assert_eq!(Algorithm::dpsgd(8).name(), "D-PSGD");
+        assert_eq!(Algorithm::adpsgd(8).name(), "AD-PSGD");
+        assert_eq!(Algorithm::hybrid_ar_then_1p(8, 100).name(), "AR/1P-SGP");
+        assert_eq!(Algorithm::hybrid_2p_then_1p(8, 100).name(), "2P/1P-SGP");
+    }
+}

@@ -1,0 +1,89 @@
+//! Micro-benchmark harness (the offline build has no criterion): warmup +
+//! timed iterations, robust statistics, and a criterion-style report line.
+//! Used by every target under `rust/benches/` (all `harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters, min {}, max {})",
+            self.name,
+            format!("mean {}", fmt(self.mean)),
+            format!("med {}", fmt(self.median)),
+            format!("p95 {}", fmt(self.p95)),
+            self.iters,
+            fmt(self.min),
+            fmt(self.max),
+        );
+    }
+}
+
+pub fn fmt(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to fill ~`budget`.
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().max(Duration::from_nanos(50));
+    let target = (budget.as_nanos() / first.as_nanos().max(1)).clamp(5, 10_000) as u64;
+
+    let mut samples = Vec::with_capacity(target as usize);
+    for _ in 0..target {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: target,
+        mean: total / target as u32,
+        median: samples[samples.len() / 2],
+        p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    };
+    stats.report();
+    stats
+}
+
+/// Benchmark with a fixed default budget of 2 seconds.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench_for(name, Duration::from_secs(2), f)
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box is
+/// stable; thin alias so benches read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,132 @@
+//! Tiny argument parser (the offline build has no clap): subcommand +
+//! `--key value` / `--flag` options with typed getters and error messages.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not a number")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        // NOTE: a bare `--flag` followed by a non-option token is read as
+        // `--flag <value>` (option form); trailing flags are unambiguous.
+        let a = parse("train extra --model mlp_small --nodes 8 --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("mlp_small"));
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 8);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --exp=table1 --epochs=4.5");
+        assert_eq!(a.get("exp"), Some("table1"));
+        assert!((a.f64_or("epochs", 0.0).unwrap() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("nodes", 4).unwrap(), 4);
+        assert!(a.require("model").is_err());
+        let a = parse("x --nodes eight");
+        assert!(a.usize_or("nodes", 4).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench table1 --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["table1"]);
+        assert!(a.flag("fast"));
+    }
+}

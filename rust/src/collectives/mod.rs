@@ -1,0 +1,123 @@
+//! Exact-averaging collectives substrate: the AllReduce that the AR-SGD
+//! baseline (Goyal et al., 2017) synchronizes with, plus its α–β cost
+//! model. We implement the in-process *semantics* (exact averaging) and a
+//! faithful ring-AllReduce *timing* model; the paper's NCCL/Gloo stack is
+//! below the level the experiments depend on.
+
+use crate::net::LinkModel;
+
+/// Exactly average a set of flat vectors in place (the AllReduce result:
+/// every participant ends with the same mean vector).
+pub fn allreduce_mean(vs: &mut [Vec<f32>]) {
+    let n = vs.len();
+    assert!(n > 0);
+    let dim = vs[0].len();
+    let mut acc = vec![0.0f64; dim];
+    for v in vs.iter() {
+        assert_eq!(v.len(), dim);
+        for (a, b) in acc.iter_mut().zip(v) {
+            *a += *b as f64;
+        }
+    }
+    let inv = 1.0 / n as f64;
+    let mean: Vec<f32> = acc.iter().map(|a| (a * inv) as f32).collect();
+    for v in vs.iter_mut() {
+        v.copy_from_slice(&mean);
+    }
+}
+
+/// Weighted mean into a fresh vector (helper for hybrid schemes / eval).
+pub fn mean_of(vs: &[Vec<f32>]) -> Vec<f32> {
+    let n = vs.len();
+    let dim = vs[0].len();
+    let mut acc = vec![0.0f64; dim];
+    for v in vs {
+        for (a, b) in acc.iter_mut().zip(v) {
+            *a += *b as f64;
+        }
+    }
+    acc.iter().map(|a| (a / n as f64) as f32).collect()
+}
+
+/// Time for a bandwidth-optimal ring AllReduce of `bytes` over `n` nodes:
+/// 2(n−1) latency terms plus 2(n−1)/n bandwidth terms (reduce-scatter +
+/// all-gather). This is the standard α–β model (Thakur et al.).
+pub fn ring_allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    let chunk = bytes as f64 / n as f64;
+    steps as f64 * (link.alpha_s + chunk / link.beta_bps)
+}
+
+/// Time for a binary-tree AllReduce (reduce + broadcast): 2·log2(n) rounds
+/// of full-message sends — latency-better, bandwidth-worse than ring.
+pub fn tree_allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let rounds = 2.0 * (n as f64).log2().ceil();
+    rounds * (link.alpha_s + bytes as f64 / link.beta_bps)
+}
+
+/// The better of ring/tree for the message size — what a real collective
+/// library's algorithm picker does.
+pub fn allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
+    ring_allreduce_time(n, bytes, link).min(tree_allreduce_time(n, bytes, link))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkModel;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn allreduce_mean_makes_all_equal_to_mean() {
+        let mut rng = Pcg::new(1);
+        let mut vs: Vec<Vec<f32>> = (0..8).map(|_| rng.gaussian_vec(32)).collect();
+        let expect: Vec<f32> = (0..32)
+            .map(|j| vs.iter().map(|v| v[j]).sum::<f32>() / 8.0)
+            .collect();
+        allreduce_mean(&mut vs);
+        for v in &vs {
+            for (a, b) in v.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_time_bandwidth_term_saturates_with_n() {
+        // For large messages the ring bandwidth term approaches 2·M/β
+        // regardless of n — that's why AR stays flat on InfiniBand.
+        let link = LinkModel::infiniband_100g();
+        let t8 = ring_allreduce_time(8, 100 << 20, &link);
+        let t32 = ring_allreduce_time(32, 100 << 20, &link);
+        assert!((t32 - t8) / t8 < 0.35, "t8={t8} t32={t32}");
+    }
+
+    #[test]
+    fn ring_latency_term_grows_linearly() {
+        // For tiny messages the 2(n−1)·α term dominates.
+        let link = LinkModel::ethernet_10g();
+        let t4 = ring_allreduce_time(4, 8, &link);
+        let t32 = ring_allreduce_time(32, 8, &link);
+        assert!(t32 > 8.0 * t4 * 0.9);
+    }
+
+    #[test]
+    fn tree_beats_ring_for_small_messages_large_n() {
+        let link = LinkModel::ethernet_10g();
+        assert!(
+            tree_allreduce_time(64, 64, &link) < ring_allreduce_time(64, 64, &link)
+        );
+    }
+
+    #[test]
+    fn single_node_costs_nothing() {
+        let link = LinkModel::ethernet_10g();
+        assert_eq!(allreduce_time(1, 1 << 20, &link), 0.0);
+    }
+}

@@ -1,0 +1,725 @@
+//! Experiment drivers: one function per table/figure in the paper
+//! (DESIGN.md §3 maps each to its source). Every driver writes CSV series
+//! under `results/` and prints the paper-shaped table to stdout; the
+//! recorded outputs live in EXPERIMENTS.md.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::algorithms::Algorithm;
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::metrics::{self, print_table, RunResult};
+use crate::net::{self, ComputeModel, LinkModel, OwnedCommPattern};
+use crate::optim::LrSchedule;
+use crate::runtime::Runtime;
+use crate::topology::{spectral, Schedule, TopologyKind};
+
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Scale factor applied to epoch counts in `--fast` mode.
+fn epochs(full: f64, fast: bool) -> f64 {
+    if fast {
+        (full / 6.0).max(3.0)
+    } else {
+        full
+    }
+}
+
+fn run_one(rt: &Runtime, mut cfg: TrainConfig, algo: Algorithm) -> Result<RunResult> {
+    // Shortened (--fast) runs keep the *shape* of the Goyal protocol:
+    // rescale the default 30/60/80 milestones to the actual epoch count.
+    if cfg.epochs < 90.0 && cfg.lr.milestones == vec![30.0, 60.0, 80.0] {
+        let s = cfg.epochs / 90.0;
+        cfg.lr.milestones = vec![30.0 * s, 60.0 * s, 80.0 * s];
+    }
+    let label = format!("{} n={}", algo.name(), cfg.n_nodes);
+    eprintln!(
+        "[run] {label}: {} iters × {} nodes …",
+        cfg.total_iters(),
+        cfg.n_nodes
+    );
+    let t = Trainer::new(rt, cfg, algo)?;
+    let r = t.run()?;
+    eprintln!(
+        "[run] {label}: loss={:.4} val_metric={:.4} sim={:.1}s wall={:.1}s",
+        r.final_train_loss(),
+        r.final_val_metric,
+        r.sim_total_s,
+        r.wall_s
+    );
+    r.write_csv(&results_dir())?;
+    Ok(r)
+}
+
+fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+// ===========================================================================
+// Figure 1 (a–d) + Table 1: scaling & convergence, AR vs SGP vs D-PSGD
+// ===========================================================================
+pub fn fig1_table1(rt: &Runtime, fast: bool) -> Result<()> {
+    let model = "mlp_small";
+    let ns: &[usize] = if fast { &[4, 8] } else { &[4, 8, 16, 32] };
+    let mut rows = Vec::new();
+    for &n in ns {
+        let mk = |seed| {
+            let mut c = TrainConfig::imagenet_like(model, n, seed);
+            c.epochs = epochs(90.0, fast);
+            c
+        };
+        let runs = vec![
+            run_one(rt, mk(1), Algorithm::ArSgd)?,
+            run_one(rt, mk(1), Algorithm::dpsgd(n))?,
+            run_one(rt, mk(1), Algorithm::sgp_1peer(n))?,
+        ];
+        for r in &runs {
+            rows.push(vec![
+                r.label.split("_n").next().unwrap_or("?").to_string(),
+                n.to_string(),
+                pct(r.final_val_metric),
+                metrics::hours(r.sim_total_s),
+                format!("{:.3}s", r.avg_iter_time()),
+            ]);
+        }
+    }
+    print_table(
+        "Table 1 / Fig 1 — val accuracy & sim training time (10 GbE)",
+        &["method", "nodes", "val acc", "train time", "s/iter"],
+        &rows,
+    );
+    // Fig 1c/d: timing-only sweeps over both fabrics.
+    fig1_timing_csv()?;
+    Ok(())
+}
+
+/// Fig 1c/d + Fig D.4 substrate: avg time/iteration vs n on both fabrics.
+pub fn fig1_timing_csv() -> Result<()> {
+    let msg = 100 << 20; // ResNet-50-scale message
+    let compute = ComputeModel::resnet50_dgx1();
+    let mut csv = String::from("fabric,method,nodes,s_per_iter\n");
+    let mut rows = Vec::new();
+    for (fabric, link) in [
+        ("ethernet", LinkModel::ethernet_10g()),
+        ("infiniband", LinkModel::infiniband_100g()),
+    ] {
+        for n in [4usize, 8, 16, 32] {
+            let ar = net::average_iteration_time(n, link.clone(), &compute, 300, 7, |_| {
+                OwnedCommPattern::AllReduce { bytes: msg }
+            });
+            let sgp = net::average_iteration_time(n, link.clone(), &compute, 300, 7, |_| {
+                OwnedCommPattern::PushSum {
+                    schedule: Schedule::new(TopologyKind::OnePeerExp, n),
+                    bytes: msg,
+                    tau: 0,
+                }
+            });
+            let osgp =
+                net::average_iteration_time(n, link.clone(), &compute, 300, 7, |_| {
+                    OwnedCommPattern::PushSum {
+                        schedule: Schedule::new(TopologyKind::OnePeerExp, n),
+                        bytes: msg,
+                        tau: 1,
+                    }
+                });
+            let dpsgd =
+                net::average_iteration_time(n, link.clone(), &compute, 300, 7, |_| {
+                    OwnedCommPattern::Symmetric {
+                        schedule: Schedule::new(TopologyKind::BipartiteExp, n),
+                        bytes: msg,
+                        handshake: 2.0,
+                    }
+                });
+            for (m, v) in
+                [("AR-SGD", ar), ("SGP", sgp), ("1-OSGP", osgp), ("D-PSGD", dpsgd)]
+            {
+                csv.push_str(&format!("{fabric},{m},{n},{v:.4}\n"));
+                rows.push(vec![
+                    fabric.into(),
+                    m.into(),
+                    n.to_string(),
+                    format!("{v:.3}"),
+                ]);
+            }
+        }
+    }
+    std::fs::write(results_dir().join("fig1cd_timing.csv"), csv)?;
+    print_table(
+        "Fig 1c/d — simulated seconds/iteration (ResNet-50-scale messages)",
+        &["fabric", "method", "nodes", "s/iter"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Table 2: mean ± max-abs-dev over 5 seeds (InfiniBand)
+// ===========================================================================
+pub fn table2(rt: &Runtime, fast: bool) -> Result<()> {
+    let model = "mlp_small";
+    let seeds: &[u64] = if fast { &[1, 2, 3] } else { &[1, 2, 3, 4, 5] };
+    let ns: &[usize] = &[4, 16];
+    let mut rows = Vec::new();
+    for &n in ns {
+        for (algo_name, mk_algo) in [
+            ("AR-SGD", Box::new(|_n| Algorithm::ArSgd) as Box<dyn Fn(usize) -> Algorithm>),
+            ("SGP", Box::new(Algorithm::sgp_1peer)),
+        ] {
+            let mut accs = Vec::new();
+            let mut times = Vec::new();
+            for &seed in seeds {
+                let mut cfg = TrainConfig::imagenet_like(model, n, seed);
+                cfg.epochs = epochs(90.0, fast);
+                cfg.link = LinkModel::infiniband_100g();
+                cfg.eval_every_epochs = 0.0; // only final eval — faster
+                cfg.track_consensus = false;
+                let r = run_one(rt, cfg, mk_algo(n))?;
+                accs.push(r.final_val_metric);
+                times.push(r.sim_total_s / 3600.0);
+            }
+            let (am, ad) = metrics::mean_maxdev(&accs);
+            let (tm, td) = metrics::mean_maxdev(&times);
+            rows.push(vec![
+                algo_name.into(),
+                n.to_string(),
+                format!("{:.1} ± {:.1}%", 100.0 * am, 100.0 * ad),
+                format!("{tm:.2} ± {td:.2} h"),
+            ]);
+        }
+    }
+    print_table(
+        "Table 2 — mean ± max abs deviation over seeds (100 Gb IB)",
+        &["method", "nodes", "val acc", "train time"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Figure 2: parameter deviations, sparse vs dense topology (16 nodes)
+// ===========================================================================
+pub fn fig2(rt: &Runtime, fast: bool) -> Result<()> {
+    let model = "mlp_small";
+    let n = 16;
+    let mut rows = Vec::new();
+    for (tag, kind) in [
+        ("sparse-1peer", TopologyKind::OnePeerExp),
+        ("dense-complete", TopologyKind::Complete),
+    ] {
+        let mut cfg = TrainConfig::imagenet_like(model, n, 3);
+        cfg.epochs = epochs(90.0, fast);
+        cfg.eval_every_epochs = epochs(90.0, fast) / 18.0;
+        cfg.track_consensus = true;
+        let algo = Algorithm::Sgp {
+            schedule: crate::topology::HybridSchedule::single(Schedule::new(kind, n)),
+        };
+        let r = run_one(rt, cfg, algo)?;
+        let mut csv = String::from("epoch,lr,consensus_mean,consensus_min,consensus_max\n");
+        for e in &r.evals {
+            csv.push_str(&format!(
+                "{:.2},{:.6},{:.6e},{:.6e},{:.6e}\n",
+                e.epoch,
+                0.0,
+                e.consensus_mean,
+                e.consensus_min,
+                e.consensus_max
+            ));
+        }
+        std::fs::write(results_dir().join(format!("fig2_{tag}.csv")), csv)?;
+        for e in r.evals.iter().take(6) {
+            rows.push(vec![
+                tag.into(),
+                format!("{:.1}", e.epoch),
+                format!("{:.3e}", e.consensus_mean),
+            ]);
+        }
+        if let Some(e) = r.evals.last() {
+            rows.push(vec![
+                tag.into(),
+                format!("{:.1}", e.epoch),
+                format!("{:.3e}", e.consensus_mean),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 2 — mean ‖zᵢ − x̄‖ at epoch ends (16 nodes)",
+        &["topology", "epoch", "consensus dist"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Table 3: communication topology vs speed/accuracy (hybrids)
+// ===========================================================================
+pub fn table3(rt: &Runtime, fast: bool) -> Result<()> {
+    let model = "mlp_small";
+    let ns: &[usize] = if fast { &[16] } else { &[16, 32] };
+    let mut rows = Vec::new();
+    for &n in ns {
+        let mk = || {
+            let mut c = TrainConfig::imagenet_like(model, n, 5);
+            c.epochs = epochs(90.0, fast);
+            c.track_consensus = false;
+            c
+        };
+        let switch = (mk().total_iters() as f64 / 3.0).round() as u64; // epoch 30
+        let algos = vec![
+            Algorithm::ArSgd,
+            Algorithm::sgp_2peer(n),
+            Algorithm::sgp_1peer(n),
+            Algorithm::hybrid_ar_then_1p(n, switch),
+            Algorithm::hybrid_2p_then_1p(n, switch),
+        ];
+        for algo in algos {
+            let r = run_one(rt, mk(), algo)?;
+            rows.push(vec![
+                r.label.split("_n").next().unwrap_or("?").to_string(),
+                n.to_string(),
+                pct(r.final_val_metric),
+                metrics::hours(r.sim_total_s),
+            ]);
+        }
+    }
+    print_table(
+        "Table 3 — topology/hybrid speed-accuracy tradeoff (10 GbE)",
+        &["method", "nodes", "val acc", "train time"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Table 4: overlap + async comparison (16 nodes)
+// ===========================================================================
+pub fn table4(rt: &Runtime, fast: bool) -> Result<()> {
+    let model = "mlp_small";
+    let n = 16;
+    let mk = || {
+        let mut c = TrainConfig::imagenet_like(model, n, 7);
+        c.epochs = epochs(90.0, fast);
+        c.track_consensus = false;
+        c
+    };
+    let algos = vec![
+        Algorithm::ArSgd,
+        Algorithm::dpsgd(n),
+        Algorithm::adpsgd(n),
+        Algorithm::sgp_1peer(n),
+        Algorithm::osgp_biased(n, 1),
+        Algorithm::osgp_1peer(n, 1),
+    ];
+    let mut rows = Vec::new();
+    for algo in algos {
+        let mut cfg = mk();
+        if matches!(algo, Algorithm::AdPsgd { .. }) {
+            // Stale asynchronous gradients tolerate a lower peak LR than
+            // the synchronous linear-scaling rule on this small workload
+            // (Lian et al. 2018 note the same sensitivity).
+            cfg.lr.scale = cfg.lr.scale.min(8.0);
+        }
+        let r = run_one(rt, cfg, algo)?;
+        rows.push(vec![
+            r.label.split("_n").next().unwrap_or("?").to_string(),
+            format!("{:.4}", r.final_train_loss()),
+            pct(r.final_val_metric),
+            metrics::hours(r.sim_total_s),
+        ]);
+    }
+    print_table(
+        "Table 4 — overlap & async methods, 16 nodes (10 GbE)",
+        &["method", "train loss", "val acc", "train time"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Table 5: fixed runtime budget (32 nodes; 90 vs 270 epochs)
+// ===========================================================================
+pub fn table5(rt: &Runtime, fast: bool) -> Result<()> {
+    let model = "mlp_small";
+    let n = 32;
+    let e90 = epochs(90.0, fast);
+    let e270 = 3.0 * e90;
+    let mut rows = Vec::new();
+
+    // The linear-scaling rule destabilizes this small-batch substitute
+    // workload beyond ~8× (Goyal et al. note the same breakdown regime);
+    // cap the peak LR for the whole Table-5 grid so the 90- vs 270-epoch
+    // comparison isolates the runtime-budget effect the table is about.
+    let cap_lr = |cfg: &mut TrainConfig| cfg.lr.scale = cfg.lr.scale.min(8.0);
+
+    let mut cfg = TrainConfig::imagenet_like(model, n, 9);
+    cfg.epochs = e90;
+    cfg.track_consensus = false;
+    cap_lr(&mut cfg);
+    let r = run_one(rt, cfg, Algorithm::ArSgd)?;
+    rows.push(vec![
+        "AR-SGD".into(),
+        format!("{:.4}", r.final_train_loss()),
+        pct(r.final_val_metric),
+        format!("{} ({} ep)", metrics::hours(r.sim_total_s), e90),
+    ]);
+
+    for (name, algo) in [
+        ("AD-PSGD", Algorithm::adpsgd(n)),
+        ("SGP", Algorithm::sgp_1peer(n)),
+        ("1-OSGP", Algorithm::osgp_1peer(n, 1)),
+    ] {
+        let mut cfg = TrainConfig::imagenet_like(model, n, 9);
+        cfg.epochs = e270;
+        cfg.track_consensus = false;
+        // Stretched schedule: decay at 90/180/240 (Table 5 protocol).
+        cfg.lr = LrSchedule::goyal_270(n, 0.05);
+        if fast {
+            cfg.lr.milestones = vec![e270 / 3.0, 2.0 * e270 / 3.0, 8.0 * e270 / 9.0];
+        }
+        cap_lr(&mut cfg);
+        let r = run_one(rt, cfg, algo)?;
+        rows.push(vec![
+            name.into(),
+            format!("{:.4}", r.final_train_loss()),
+            pct(r.final_val_metric),
+            format!("{} ({} ep)", metrics::hours(r.sim_total_s), e270),
+        ]);
+    }
+    print_table(
+        "Table 5 — fixed runtime budget, 32 nodes (10 GbE)",
+        &["method", "train loss", "val acc", "train time"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Figure 3: NMT analogue — Adam-SGP vs AllReduce-Adam, small & large batch
+// ===========================================================================
+pub fn fig3(rt: &Runtime, fast: bool) -> Result<()> {
+    let n = 8;
+    let mut rows = Vec::new();
+    let regimes: Vec<(&str, &str)> = vec![
+        ("small-batch", "lm_small"),
+        ("large-batch", "lm_small_b16"),
+    ];
+    for (regime, model) in regimes {
+        if rt.manifest.models.get(model).is_none() {
+            eprintln!("[fig3] model {model} missing from artifacts; skipping");
+            continue;
+        }
+        for (name, algo) in
+            [("AR-Adam", Algorithm::ArSgd), ("SGP-Adam", Algorithm::sgp_1peer(n))]
+        {
+            let mut cfg = TrainConfig::nmt_like(model, n, 11);
+            cfg.epochs = 5.0;
+            cfg.steps_per_epoch = 20;
+            if model.ends_with("b16") {
+                // Large-batch regime: 4× the tokens per step ⇒ 4× compute
+                // per iteration at the same message size (Ott et al. 2018).
+                cfg.compute.base_s *= 4.0;
+            }
+            if fast {
+                cfg.epochs = 3.0;
+                cfg.steps_per_epoch = 10;
+            }
+            let r = run_one(rt, cfg, algo)?;
+            rows.push(vec![
+                regime.into(),
+                name.into(),
+                format!("{:.4}", r.final_val_loss),
+                format!("{:.4}", (r.final_val_loss).exp()),
+                metrics::hours(r.sim_total_s),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 3 — NMT analogue: validation NLL/perplexity (8 nodes, 10 GbE)",
+        &["regime", "method", "val NLL", "val ppl", "sim time"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Figure D.3: per-node error spread (4 and 32 nodes)
+// ===========================================================================
+pub fn figd3(rt: &Runtime, fast: bool) -> Result<()> {
+    let model = "mlp_small";
+    let mut rows = Vec::new();
+    for n in [4usize, 32] {
+        let mut cfg = TrainConfig::imagenet_like(model, n, 13);
+        cfg.epochs = epochs(90.0, fast);
+        cfg.track_consensus = true;
+        cfg.eval_every_epochs = cfg.epochs / 9.0;
+        let r = run_one(rt, cfg, Algorithm::sgp_1peer(n))?;
+        let mut csv =
+            String::from("epoch,node_min,node_mean,node_max,val_metric\n");
+        for e in &r.evals {
+            csv.push_str(&format!(
+                "{:.2},{:.6},{:.6},{:.6},{:.6}\n",
+                e.epoch, e.node_metric_min, e.node_metric_mean, e.node_metric_max,
+                e.val_metric
+            ));
+            rows.push(vec![
+                n.to_string(),
+                format!("{:.1}", e.epoch),
+                pct(e.node_metric_min),
+                pct(e.node_metric_mean),
+                pct(e.node_metric_max),
+            ]);
+        }
+        std::fs::write(results_dir().join(format!("figd3_n{n}.csv")), csv)?;
+    }
+    print_table(
+        "Fig D.3 — per-node validation accuracy spread (SGP)",
+        &["nodes", "epoch", "min", "mean", "max"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Figure D.4: throughput scaling & efficiency
+// ===========================================================================
+pub fn figd4() -> Result<()> {
+    let msg = 100 << 20;
+    let compute = ComputeModel::resnet50_dgx1();
+    let images_per_node_iter = 256.0; // paper's per-node batch
+    let mut rows = Vec::new();
+    let mut csv = String::from("fabric,method,nodes,images_per_s,efficiency\n");
+    for (fabric, link) in [
+        ("ethernet", LinkModel::ethernet_10g()),
+        ("infiniband", LinkModel::infiniband_100g()),
+    ] {
+        let mut base_sgp = 0.0;
+        let mut base_ar = 0.0;
+        for n in [4usize, 8, 16, 32] {
+            let sgp_t =
+                net::average_iteration_time(n, link.clone(), &compute, 300, 17, |_| {
+                    OwnedCommPattern::PushSum {
+                        schedule: Schedule::new(TopologyKind::OnePeerExp, n),
+                        bytes: msg,
+                        tau: 0,
+                    }
+                });
+            let ar_t =
+                net::average_iteration_time(n, link.clone(), &compute, 300, 17, |_| {
+                    OwnedCommPattern::AllReduce { bytes: msg }
+                });
+            let sgp_tp = n as f64 * images_per_node_iter / sgp_t;
+            let ar_tp = n as f64 * images_per_node_iter / ar_t;
+            if n == 4 {
+                base_sgp = sgp_tp / 4.0;
+                base_ar = ar_tp / 4.0;
+            }
+            let sgp_eff = sgp_tp / (base_sgp * n as f64);
+            let ar_eff = ar_tp / (base_ar * n as f64);
+            csv.push_str(&format!(
+                "{fabric},SGP,{n},{sgp_tp:.0},{sgp_eff:.3}\n{fabric},AR-SGD,{n},{ar_tp:.0},{ar_eff:.3}\n"
+            ));
+            rows.push(vec![
+                fabric.into(),
+                n.to_string(),
+                format!("{sgp_tp:.0}"),
+                pct(sgp_eff),
+                format!("{ar_tp:.0}"),
+                pct(ar_eff),
+            ]);
+        }
+    }
+    std::fs::write(results_dir().join("figd4_throughput.csv"), csv)?;
+    print_table(
+        "Fig D.4 — simulated throughput (images/s) and scaling efficiency",
+        &["fabric", "nodes", "SGP img/s", "SGP eff", "AR img/s", "AR eff"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Appendix A: decentralized averaging errors (λ₂ of mixing products)
+// ===========================================================================
+pub fn appendix_a() -> Result<()> {
+    let n = 32;
+    let window = 5; // ⌊log2(31)⌋ = 4; paper quotes 5 iterations for n=32
+    let mut rows = Vec::new();
+    let mut csv = String::from("scheme,window,lambda2\n");
+
+    let det = |kind| {
+        let s = Schedule::new(kind, n);
+        let mats: Vec<_> = (0..window as u64).map(|k| s.mixing_matrix(k)).collect();
+        spectral::lambda2_of_product(&mats)
+    };
+    let exp_cycle = det(TopologyKind::OnePeerExp);
+    let complete_cycle = det(TopologyKind::CompleteCycling);
+    let rand_exp = spectral::expected_lambda2(
+        &Schedule::with_seed(TopologyKind::RandomExp, n, 1),
+        window,
+        20,
+    );
+    let rand_any = spectral::expected_lambda2(
+        &Schedule::with_seed(TopologyKind::RandomAny, n, 1),
+        window,
+        20,
+    );
+    for (name, v, paper) in [
+        ("exp-graph cycling (det)", exp_cycle, "0"),
+        ("complete-graph cycling", complete_cycle, "≈0.6"),
+        ("random exp-graph peer", rand_exp, "≈0.4"),
+        ("random any peer", rand_any, "≈0.2"),
+    ] {
+        csv.push_str(&format!("{name},{window},{v:.4}\n"));
+        rows.push(vec![name.into(), format!("{v:.4}"), paper.into()]);
+    }
+    std::fs::write(results_dir().join("appendix_a_lambda2.csv"), csv)?;
+    print_table(
+        "Appendix A — λ₂ of 5-step mixing products, n = 32 (paper values right)",
+        &["scheme", "λ₂ (ours)", "paper"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Pure averaging demo over the PJRT dense-gossip artifact
+// ===========================================================================
+pub fn averaging(rt: &Runtime, n: usize, rounds: u64) -> Result<()> {
+    use crate::rng::Pcg;
+    let meta = rt.manifest.artifact(&format!("gossip_dense_n{n}"))?;
+    let d = meta.d.unwrap_or(1024);
+    let mut rng = Pcg::new(1);
+    let mut x: Vec<f32> = rng.gaussian_vec(n * d);
+    let mut w = vec![1.0f32; n];
+    let target: Vec<f64> = (0..d)
+        .map(|j| (0..n).map(|i| x[i * d + j] as f64).sum::<f64>() / n as f64)
+        .collect();
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let mut rows = Vec::new();
+    for k in 0..rounds {
+        let p = sched.mixing_matrix(k);
+        let pf: Vec<f32> =
+            (0..n * n).map(|idx| p.at(idx / n, idx % n) as f32).collect();
+        let (xn, wn, z) = rt.gossip_dense(n, &pf, &x, &w)?;
+        x = xn;
+        w = wn;
+        let err: f64 = (0..n)
+            .map(|i| {
+                (0..d)
+                    .map(|j| {
+                        let e = z[i * d + j] as f64 - target[j];
+                        e * e
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / n as f64;
+        rows.push(vec![(k + 1).to_string(), format!("{err:.3e}")]);
+    }
+    print_table(
+        &format!("PushSum averaging via Pallas dense-gossip artifact (n={n}, d={d})"),
+        &["rounds", "mean ‖zᵢ − ȳ‖"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Sanity check for Theorems 1–2 trends: SGP on a synthetic least-squares
+/// objective — mean gradient norm decays and consensus error vanishes.
+pub fn convergence_demo(n: usize, iters: u64) -> Result<()> {
+    use crate::gossip::PushSumEngine;
+    use crate::rng::Pcg;
+    let d = 32;
+    let mut rng = Pcg::new(5);
+    // Node-local quadratic f_i(x) = ½‖x − c_i‖², global optimum = mean c_i.
+    let centers: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+    let mut opt = vec![0.0f64; d];
+    for c in &centers {
+        for (o, v) in opt.iter_mut().zip(c) {
+            *o += *v as f64 / n as f64;
+        }
+    }
+    let mut engine =
+        PushSumEngine::new(vec![rng.gaussian_vec(d); n].to_vec(), 0, false);
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let gamma = (n as f64 / iters as f64).sqrt().min(0.5) as f32;
+    let mut rows = Vec::new();
+    for k in 0..iters {
+        for i in 0..n {
+            let z = engine.states[i].debiased();
+            // Stochastic gradient: (z − cᵢ) + noise.
+            let g: Vec<f32> = z
+                .iter()
+                .zip(&centers[i])
+                .map(|(zi, ci)| zi - ci + 0.1 * rng.gaussian() as f32)
+                .collect();
+            for (x, gi) in engine.states[i].x.iter_mut().zip(&g) {
+                *x -= gamma * gi;
+            }
+        }
+        engine.step(k, &sched);
+        if (k + 1) % (iters / 8).max(1) == 0 {
+            let mean = engine.mean_x();
+            let gnorm: f64 = mean
+                .iter()
+                .zip(&opt)
+                .map(|(m, o)| {
+                    let e = *m as f64 - o;
+                    e * e
+                })
+                .sum::<f64>()
+                .sqrt();
+            let (cons, _, _) = engine.consensus_distance();
+            rows.push(vec![
+                (k + 1).to_string(),
+                format!("{gnorm:.4}"),
+                format!("{cons:.2e}"),
+            ]);
+        }
+    }
+    print_table(
+        &format!("Theorem 1/2 sanity — SGP on least squares (n={n}, γ=√(n/K))"),
+        &["iter", "‖∇f(x̄)‖ (≈‖x̄−x*‖)", "consensus dist"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Run everything (the `repro bench all` entry used for EXPERIMENTS.md).
+pub fn all(rt: &Runtime, fast: bool) -> Result<()> {
+    appendix_a()?;
+    fig1_table1(rt, fast)?;
+    table2(rt, fast)?;
+    fig2(rt, fast)?;
+    table3(rt, fast)?;
+    table4(rt, fast)?;
+    table5(rt, fast)?;
+    fig3(rt, fast)?;
+    figd3(rt, fast)?;
+    figd4()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_dir_created() {
+        let d = results_dir();
+        assert!(d.exists());
+    }
+
+    #[test]
+    fn epochs_fast_mode_scales_down() {
+        assert_eq!(epochs(90.0, false), 90.0);
+        assert!(epochs(90.0, true) < 20.0);
+        assert!(epochs(6.0, true) >= 3.0);
+    }
+}

@@ -1,0 +1,438 @@
+//! The PushSum gossip engine (Alg. 1 lines 5–8 / Alg. 2 lines 5–24).
+//!
+//! Each node holds the push-sum numerator `x ∈ R^d`, the scalar push-sum
+//! weight `w`, and exposes the de-biased parameters `z = x / w`. One gossip
+//! step pre-weights `(x, w)` by the node's uniform outgoing mixing weight,
+//! transmits to the schedule's out-neighbours, and aggregates whatever has
+//! arrived. With `delay = τ > 0` messages land τ iterations later
+//! (τ-Overlap SGP); with `biased = true` the push-sum weight is frozen at 1
+//! (the ablation of Table 4 that "directly incorporates delayed messages
+//! without accounting for the bias").
+//!
+//! The engine is the in-process substrate for n logical nodes: messages are
+//! moved through per-destination delivery queues, which both implements the
+//! semantics exactly and lets tests assert **mass conservation** — the
+//! column-stochasticity invariant that Σᵢ xᵢ plus all in-flight mass is
+//! constant under gossip.
+
+use crate::topology::Schedule;
+
+/// One in-flight push-sum message (already pre-weighted by the sender).
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub from: usize,
+    pub sent_iter: u64,
+    pub deliver_iter: u64,
+    pub x: Vec<f32>,
+    pub w: f64,
+}
+
+/// Per-node push-sum state.
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    /// Push-sum numerator (the *biased* parameters gradients are applied to).
+    pub x: Vec<f32>,
+    /// Push-sum weight; stays positive, starts at 1.
+    pub w: f64,
+}
+
+impl NodeState {
+    pub fn new(x: Vec<f32>) -> Self {
+        Self { x, w: 1.0 }
+    }
+
+    /// De-biased parameters z = x / w (Alg. 1 line 8).
+    pub fn debiased(&self) -> Vec<f32> {
+        let inv = (1.0 / self.w) as f32;
+        self.x.iter().map(|v| v * inv).collect()
+    }
+
+    /// Write z = x / w into `out` without allocating.
+    pub fn debias_into(&self, out: &mut [f32]) {
+        let inv = (1.0 / self.w) as f32;
+        for (o, v) in out.iter_mut().zip(&self.x) {
+            *o = v * inv;
+        }
+    }
+}
+
+/// The synchronous multi-node PushSum engine.
+pub struct PushSumEngine {
+    pub n: usize,
+    pub dim: usize,
+    pub states: Vec<NodeState>,
+    /// Overlap delay τ: 0 = blocking SGP, ≥1 = τ-OSGP.
+    pub delay: u64,
+    /// Table-4 ablation: ignore the push-sum weight (w ≡ 1, z = x).
+    pub biased: bool,
+    /// Per-destination in-flight messages, ordered by deliver_iter.
+    inboxes: Vec<Vec<Message>>,
+    /// Scratch buffer reused across steps (perf: no per-step allocation).
+    scale_buf: Vec<f32>,
+    /// Recycled message payload buffers (perf: delivering a message returns
+    /// its `x` here; sending pops one instead of allocating dim-sized
+    /// fresh-page Vecs on every message — see EXPERIMENTS.md §Perf).
+    pool: Vec<Vec<f32>>,
+}
+
+impl PushSumEngine {
+    pub fn new(init: Vec<Vec<f32>>, delay: u64, biased: bool) -> Self {
+        let n = init.len();
+        let dim = init[0].len();
+        assert!(init.iter().all(|v| v.len() == dim));
+        Self {
+            n,
+            dim,
+            states: init.into_iter().map(NodeState::new).collect(),
+            delay,
+            biased,
+            inboxes: (0..n).map(|_| Vec::new()).collect(),
+            scale_buf: vec![0.0; dim],
+            pool: Vec::new(),
+        }
+    }
+
+    /// Pop a recycled payload buffer or allocate a fresh one.
+    fn take_buf(&mut self) -> Vec<f32> {
+        self.pool.pop().unwrap_or_else(|| vec![0.0; self.dim])
+    }
+
+    /// One full gossip step at iteration `k` for all nodes (Alg. 1 l. 5–7 /
+    /// Alg. 2 l. 5–24): pre-weight & send, keep self-share, aggregate
+    /// everything whose `deliver_iter == k`.
+    pub fn step(&mut self, k: u64, schedule: &Schedule) {
+        let deliver_at = k + self.delay;
+        // Phase 1: every node pre-weights and enqueues its outgoing
+        // messages, and scales its own state by the self-loop weight.
+        // The first payload is computed fused (read x once, write scaled);
+        // further peers copy it; the node's own state is scaled in place —
+        // one full pass fewer than the naive scale-buffer formulation.
+        for i in 0..self.n {
+            let peers = schedule.out_peers(i, k);
+            let w_mix = 1.0 / (1.0 + peers.len() as f64);
+            let wf = w_mix as f32;
+            let msg_w = self.states[i].w * w_mix;
+            if peers.len() == 1 {
+                // Dominant (1-peer) case: fused read-scale-write, no
+                // intermediate buffer.
+                let mut payload = self.take_buf();
+                for (p, v) in payload.iter_mut().zip(&self.states[i].x) {
+                    *p = v * wf;
+                }
+                self.inboxes[peers[0]].push(Message {
+                    from: i,
+                    sent_iter: k,
+                    deliver_iter: deliver_at,
+                    x: payload,
+                    w: msg_w,
+                });
+            } else if !peers.is_empty() {
+                for (b, v) in self.scale_buf.iter_mut().zip(&self.states[i].x) {
+                    *b = v * wf;
+                }
+                for &j in &peers {
+                    let mut payload = self.take_buf();
+                    payload.copy_from_slice(&self.scale_buf);
+                    self.inboxes[j].push(Message {
+                        from: i,
+                        sent_iter: k,
+                        deliver_iter: deliver_at,
+                        x: payload,
+                        w: msg_w,
+                    });
+                }
+            }
+            // Self-loop share (Alg. 2 lines 7–8), scaled in place.
+            let st = &mut self.states[i];
+            for v in st.x.iter_mut() {
+                *v *= wf;
+            }
+            st.w *= w_mix;
+        }
+        // Phase 2: aggregate deliveries due at k; payload buffers go back
+        // to the pool.
+        for i in 0..self.n {
+            let mut inbox = std::mem::take(&mut self.inboxes[i]);
+            let mut j = 0;
+            while j < inbox.len() {
+                if inbox[j].deliver_iter <= k {
+                    let msg = inbox.swap_remove(j);
+                    let st = &mut self.states[i];
+                    for (a, b) in st.x.iter_mut().zip(&msg.x) {
+                        *a += b;
+                    }
+                    st.w += msg.w;
+                    self.pool.push(msg.x);
+                } else {
+                    j += 1;
+                }
+            }
+            self.inboxes[i] = inbox;
+        }
+        if self.biased {
+            for st in &mut self.states {
+                st.w = 1.0;
+            }
+        }
+    }
+
+    /// Flush all in-flight messages (used at the end of a run so no mass is
+    /// stranded; OSGP's bounded-delay assumption guarantees this terminates).
+    pub fn drain(&mut self) {
+        for i in 0..self.n {
+            for msg in std::mem::take(&mut self.inboxes[i]) {
+                let st = &mut self.states[i];
+                for (a, b) in st.x.iter_mut().zip(&msg.x) {
+                    *a += b;
+                }
+                st.w += msg.w;
+            }
+        }
+        if self.biased {
+            for st in &mut self.states {
+                st.w = 1.0;
+            }
+        }
+    }
+
+    /// Number of in-flight messages (test/diagnostic).
+    pub fn in_flight(&self) -> usize {
+        self.inboxes.iter().map(|b| b.len()).sum()
+    }
+
+    /// Maximum staleness among in-flight messages relative to iteration k.
+    pub fn max_staleness(&self, k: u64) -> u64 {
+        self.inboxes
+            .iter()
+            .flatten()
+            .map(|m| k.saturating_sub(m.sent_iter))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total mass: (Σᵢ xᵢ + in-flight x, Σᵢ wᵢ + in-flight w). Invariant
+    /// under unbiased gossip — the proptest anchor.
+    pub fn total_mass(&self) -> (Vec<f64>, f64) {
+        let mut xm = vec![0.0f64; self.dim];
+        let mut wm = 0.0f64;
+        for st in &self.states {
+            for (a, b) in xm.iter_mut().zip(&st.x) {
+                *a += *b as f64;
+            }
+            wm += st.w;
+        }
+        for inbox in &self.inboxes {
+            for msg in inbox {
+                for (a, b) in xm.iter_mut().zip(&msg.x) {
+                    *a += *b as f64;
+                }
+                wm += msg.w;
+            }
+        }
+        (xm, wm)
+    }
+
+    /// Node-wise average of the numerators x̄ = (1/n) Σ xᵢ (not incl.
+    /// in-flight mass).
+    pub fn mean_x(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.dim];
+        for st in &self.states {
+            for (a, b) in m.iter_mut().zip(&st.x) {
+                *a += b;
+            }
+        }
+        let inv = 1.0 / self.n as f32;
+        for a in &mut m {
+            *a *= inv;
+        }
+        m
+    }
+
+    /// Consensus statistics: (mean, min, max) over nodes of ‖zᵢ − x̄‖₂,
+    /// the quantity plotted in Fig. 2.
+    pub fn consensus_distance(&self) -> (f64, f64, f64) {
+        let mean = self.mean_x();
+        let mut dists = Vec::with_capacity(self.n);
+        for st in &self.states {
+            let inv = (1.0 / st.w) as f32;
+            let d: f64 = st
+                .x
+                .iter()
+                .zip(&mean)
+                .map(|(x, m)| {
+                    let e = (x * inv - m) as f64;
+                    e * e
+                })
+                .sum();
+            dists.push(d.sqrt());
+        }
+        let sum: f64 = dists.iter().sum();
+        let min = dists.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = dists.iter().cloned().fold(0.0, f64::max);
+        (sum / self.n as f64, min, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+    use crate::topology::{Schedule, TopologyKind};
+
+    fn random_init(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.gaussian_vec(d)).collect()
+    }
+
+    #[test]
+    fn blocking_gossip_converges_to_average() {
+        let n = 8;
+        let init = random_init(n, 16, 1);
+        let mut avg = vec![0.0f64; 16];
+        for v in &init {
+            for (a, b) in avg.iter_mut().zip(v) {
+                *a += *b as f64 / n as f64;
+            }
+        }
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in 0..60 {
+            eng.step(k, &sched);
+        }
+        for st in &eng.states {
+            let z = st.debiased();
+            for (zi, ai) in z.iter().zip(&avg) {
+                assert!((*zi as f64 - ai).abs() < 1e-4, "{zi} vs {ai}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_average_after_log2n_steps() {
+        // Appendix A: deterministic exp-graph cycling averages exactly in
+        // ⌊log2⌋ steps for power-of-two n.
+        let n = 16;
+        let init = random_init(n, 8, 2);
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in 0..4 {
+            eng.step(k, &sched);
+        }
+        let z0 = eng.states[0].debiased();
+        for st in &eng.states[1..] {
+            let z = st.debiased();
+            for (a, b) in z.iter().zip(&z0) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn mass_conserved_with_and_without_delay() {
+        for delay in [0u64, 1, 2, 3] {
+            let init = random_init(8, 8, 3);
+            let mut eng = PushSumEngine::new(init, delay, false);
+            let (x0, w0) = eng.total_mass();
+            let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+            for k in 0..25 {
+                eng.step(k, &sched);
+                let (x, w) = eng.total_mass();
+                for (a, b) in x.iter().zip(&x0) {
+                    assert!((a - b).abs() < 1e-3, "delay={delay}");
+                }
+                assert!((w - w0).abs() < 1e-9, "delay={delay}");
+            }
+        }
+    }
+
+    #[test]
+    fn delayed_gossip_has_in_flight_mass_and_bounded_staleness() {
+        let init = random_init(8, 4, 4);
+        let mut eng = PushSumEngine::new(init, 2, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        for k in 0..10 {
+            eng.step(k, &sched);
+            assert!(eng.max_staleness(k) <= 2);
+        }
+        assert!(eng.in_flight() > 0);
+        eng.drain();
+        assert_eq!(eng.in_flight(), 0);
+    }
+
+    #[test]
+    fn delayed_gossip_still_converges_after_drain() {
+        let n = 8;
+        let init = random_init(n, 8, 5);
+        let mut avg = vec![0.0f64; 8];
+        for v in &init {
+            for (a, b) in avg.iter_mut().zip(v) {
+                *a += *b as f64 / n as f64;
+            }
+        }
+        let mut eng = PushSumEngine::new(init, 1, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in 0..80 {
+            eng.step(k, &sched);
+        }
+        eng.drain();
+        for st in &eng.states {
+            for (zi, ai) in st.debiased().iter().zip(&avg) {
+                assert!((*zi as f64 - ai).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn biased_engine_drifts_from_average() {
+        // Without the push-sum weight, the de-biased values do NOT converge
+        // to the initial average under an asymmetric schedule with delays —
+        // the mass "lost" to in-flight scaling is never recovered.
+        let n = 8;
+        let init: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; 4]).collect();
+        let avg = (0..n).map(|i| i as f64).sum::<f64>() / n as f64;
+        let mut biased = PushSumEngine::new(init.clone(), 1, true);
+        let mut unbiased = PushSumEngine::new(init, 1, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in 0..40 {
+            biased.step(k, &sched);
+            unbiased.step(k, &sched);
+        }
+        let zu = unbiased.states[0].debiased()[0] as f64;
+        let zb = biased.states[0].debiased()[0] as f64;
+        assert!((zu - avg).abs() < 0.05, "unbiased {zu} vs {avg}");
+        assert!((zb - avg).abs() > (zu - avg).abs(), "biased should be worse");
+    }
+
+    #[test]
+    fn weights_remain_positive() {
+        let init = random_init(16, 4, 6);
+        let mut eng = PushSumEngine::new(init, 1, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 16);
+        for k in 0..200 {
+            eng.step(k, &sched);
+            assert!(eng.states.iter().all(|s| s.w > 0.0));
+        }
+    }
+
+    #[test]
+    fn consensus_distance_zero_when_identical() {
+        let init = vec![vec![1.0f32; 8]; 4];
+        let eng = PushSumEngine::new(init, 0, false);
+        let (mean, min, max) = eng.consensus_distance();
+        assert!(mean < 1e-9 && min < 1e-9 && max < 1e-9);
+    }
+
+    #[test]
+    fn dense_schedule_tightens_consensus_faster_than_sparse() {
+        // Fig. 2's mechanism: per-step contraction is stronger on the dense
+        // graph.
+        let init = random_init(16, 8, 7);
+        let sparse_s = Schedule::new(TopologyKind::OnePeerExp, 16);
+        let dense_s = Schedule::new(TopologyKind::Complete, 16);
+        let mut sparse = PushSumEngine::new(init.clone(), 0, false);
+        let mut dense = PushSumEngine::new(init, 0, false);
+        sparse.step(0, &sparse_s);
+        dense.step(0, &dense_s);
+        assert!(dense.consensus_distance().0 < sparse.consensus_distance().0);
+    }
+}

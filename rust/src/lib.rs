@@ -1,0 +1,53 @@
+//! # sgp — Stochastic Gradient Push for Distributed Deep Learning
+//!
+//! A from-scratch reproduction of Assran et al., ICML 2019, as the L3
+//! coordinator of a three-layer Rust + JAX + Pallas stack. The library
+//! provides:
+//!
+//! * [`topology`] — communication graphs (directed exponential, bipartite,
+//!   complete, …), time-varying schedules and column-stochastic mixing
+//!   matrices, plus spectral tools (λ₂ of mixing products, Appendix A).
+//! * [`gossip`] — the PushSum engine: per-node `(x, w)` state, delayed
+//!   message buffers (τ-Overlap SGP), the biased variant, and
+//!   mass-conservation accounting.
+//! * [`collectives`] — the exact-averaging substrate (ring AllReduce) with
+//!   its α–β cost model, used by the AllReduce-SGD baseline.
+//! * [`net`] — the cluster/network simulator standing in for the paper's
+//!   32×DGX-1 testbed: 10 GbE / 100 Gb-IB link models, log-normal straggler
+//!   compute model, and per-algorithm timing recursions.
+//! * [`sim`] — a discrete-event clock for the asynchronous baseline
+//!   (AD-PSGD).
+//! * [`optim`] — SGD / Nesterov momentum / Adam over flat `f32` vectors,
+//!   plus the Goyal et al. learning-rate protocol.
+//! * [`data`] — synthetic per-node data shards (Gaussian blobs, Zipf bigram
+//!   LM) with controllable heterogeneity (the paper's ζ²).
+//! * [`runtime`] — the PJRT bridge: loads the HLO-text artifacts emitted by
+//!   `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! * [`algorithms`] + [`coordinator`] — SGP, Overlap-SGP, D-PSGD, AD-PSGD
+//!   and AllReduce-SGD over a single event-driven training loop.
+//! * [`metrics`] — loss/consensus/throughput series and CSV emitters for
+//!   regenerating every table and figure in the paper.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod algorithms;
+pub mod benchkit;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod gossip;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+
+pub use config::TrainConfig;
+pub use coordinator::Trainer;

@@ -1,0 +1,167 @@
+//! `repro` — CLI launcher for the SGP reproduction.
+//!
+//! Subcommands:
+//!   train        one training run (model × algorithm × cluster)
+//!   bench <exp>  regenerate a paper table/figure (all, fig1, table1..5, …)
+//!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
+//!   average      PushSum averaging demo through the Pallas dense-gossip HLO
+//!   convergence  Theorem 1/2 sanity demo (pure Rust)
+//!   inspect      print the artifact manifest
+
+use anyhow::{bail, Result};
+
+use sgp::algorithms::Algorithm;
+use sgp::cli::Args;
+use sgp::config::{Fabric, TrainConfig};
+use sgp::coordinator::Trainer;
+use sgp::experiments;
+use sgp::metrics;
+use sgp::optim::OptimKind;
+use sgp::runtime::Runtime;
+
+const USAGE: &str = "\
+repro — Stochastic Gradient Push (ICML 2019) reproduction
+
+USAGE:
+  repro train   [--model mlp_small] [--algo sgp|ar-sgd|sgp-2p|osgp|osgp-biased|
+                 dpsgd|adpsgd|hybrid-ar-1p|hybrid-2p-1p] [--nodes 8]
+                [--epochs 10] [--steps-per-epoch 16] [--fabric ethernet|ib]
+                [--tau 1] [--seed 0] [--adam] [--heterogeneity 0.3]
+  repro bench   <all|fig1|table1|table2|table3|table4|table5|fig2|fig3|
+                 figd3|figd4|appendix-a> [--fast]
+  repro spectral
+  repro average [--nodes 32] [--rounds 8]
+  repro convergence [--nodes 16] [--iters 2000]
+  repro inspect
+";
+
+fn build_algo(name: &str, n: usize, tau: u64, switch_at: u64) -> Result<Algorithm> {
+    Ok(match name {
+        "ar-sgd" | "arsgd" | "ar" => Algorithm::ArSgd,
+        "sgp" | "sgp-1p" => Algorithm::sgp_1peer(n),
+        "sgp-2p" => Algorithm::sgp_2peer(n),
+        "osgp" => Algorithm::osgp_1peer(n, tau.max(1)),
+        "osgp-biased" => Algorithm::osgp_biased(n, tau.max(1)),
+        "dpsgd" => Algorithm::dpsgd(n),
+        "adpsgd" => Algorithm::adpsgd(n),
+        "hybrid-ar-1p" => Algorithm::hybrid_ar_then_1p(n, switch_at),
+        "hybrid-2p-1p" => Algorithm::hybrid_2p_then_1p(n, switch_at),
+        other => bail!("unknown algorithm `{other}`\n{USAGE}"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let model = args.str_or("model", "mlp_small");
+    let nodes = args.usize_or("nodes", 8)?;
+    let mut cfg = TrainConfig::imagenet_like(&model, nodes, args.u64_or("seed", 0)?);
+    cfg.epochs = args.f64_or("epochs", 10.0)?;
+    cfg.steps_per_epoch = args.u64_or("steps-per-epoch", 16)?;
+    cfg.heterogeneity = args.f64_or("heterogeneity", 0.3)?;
+    if let Some(f) = args.get("fabric") {
+        cfg.link = Fabric::parse(f)
+            .ok_or_else(|| anyhow::anyhow!("unknown fabric `{f}`"))?
+            .link();
+    }
+    if args.flag("adam") {
+        cfg.optim = OptimKind::Adam;
+        cfg.lr = sgp::optim::LrSchedule::constant(1e-3);
+    }
+    let tau = args.u64_or("tau", 1)?;
+    let switch = cfg.total_iters() / 3;
+    let algorithm = build_algo(&args.str_or("algo", "sgp"), nodes, tau, switch)?;
+    println!(
+        "training {model} with {} on {nodes} nodes ({} iters)…",
+        algorithm.name(),
+        cfg.total_iters()
+    );
+    let trainer = Trainer::new(&rt, cfg, algorithm)?;
+    let r = trainer.run()?;
+    r.write_csv(&experiments::results_dir())?;
+    metrics::print_table(
+        "result",
+        &["label", "train loss", "val loss", "val metric", "sim time", "wall"],
+        &[vec![
+            r.label.clone(),
+            format!("{:.4}", r.final_train_loss()),
+            format!("{:.4}", r.final_val_loss),
+            format!("{:.4}", r.final_val_metric),
+            metrics::hours(r.sim_total_s),
+            format!("{:.1}s", r.wall_s),
+        ]],
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("exp"))
+        .unwrap_or("all")
+        .to_string();
+    let fast = args.flag("fast");
+    match exp.as_str() {
+        "appendix-a" => experiments::appendix_a()?,
+        "figd4" => experiments::figd4()?,
+        other => {
+            let rt = Runtime::open_default()?;
+            match other {
+                "all" => experiments::all(&rt, fast)?,
+                "fig1" | "table1" => experiments::fig1_table1(&rt, fast)?,
+                "table2" => experiments::table2(&rt, fast)?,
+                "table3" => experiments::table3(&rt, fast)?,
+                "table4" => experiments::table4(&rt, fast)?,
+                "table5" => experiments::table5(&rt, fast)?,
+                "fig2" => experiments::fig2(&rt, fast)?,
+                "fig3" => experiments::fig3(&rt, fast)?,
+                "figd3" => experiments::figd3(&rt, fast)?,
+                _ => bail!("unknown experiment `{other}`\n{USAGE}"),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args)?,
+        Some("bench") => cmd_bench(&args)?,
+        Some("spectral") => experiments::appendix_a()?,
+        Some("average") => {
+            let rt = Runtime::open_default()?;
+            experiments::averaging(
+                &rt,
+                args.usize_or("nodes", 32)?,
+                args.u64_or("rounds", 8)?,
+            )?;
+        }
+        Some("convergence") => experiments::convergence_demo(
+            args.usize_or("nodes", 16)?,
+            args.u64_or("iters", 2000)?,
+        )?,
+        Some("inspect") => {
+            let rt = Runtime::open_default()?;
+            let mut rows: Vec<Vec<String>> = rt
+                .manifest
+                .artifacts
+                .iter()
+                .map(|(name, a)| {
+                    vec![
+                        name.clone(),
+                        a.kind.clone(),
+                        a.param_count.map(|p| p.to_string()).unwrap_or_default(),
+                        a.file.clone(),
+                    ]
+                })
+                .collect();
+            rows.sort();
+            metrics::print_table("artifacts", &["name", "kind", "params", "file"], &rows);
+        }
+        Some("help") | None => println!("{USAGE}"),
+        Some(other) => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Metrics: per-iteration/epoch series recorded by the trainer and the CSV
+//! emitters used to regenerate the paper's tables and figures.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One recorded training iteration.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: u64,
+    pub epoch: f64,
+    /// Mean training loss across nodes at this iteration.
+    pub train_loss: f64,
+    /// Simulated wall-clock (seconds) when this iteration completed.
+    pub sim_time_s: f64,
+    pub lr: f64,
+}
+
+/// One recorded evaluation point (epoch granularity).
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub iter: u64,
+    pub epoch: f64,
+    pub sim_time_s: f64,
+    /// Validation loss / metric of the averaged (consensus) model.
+    pub val_loss: f64,
+    pub val_metric: f64,
+    /// Per-node validation metric spread (min, mean, max) — Fig. D.3.
+    pub node_metric_min: f64,
+    pub node_metric_mean: f64,
+    pub node_metric_max: f64,
+    /// Consensus distance ‖zᵢ − x̄‖ (mean, min, max) — Fig. 2.
+    pub consensus_mean: f64,
+    pub consensus_min: f64,
+    pub consensus_max: f64,
+}
+
+/// Full result of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub label: String,
+    pub iters: Vec<IterRecord>,
+    pub evals: Vec<EvalRecord>,
+    /// Total simulated time (seconds) for the whole run.
+    pub sim_total_s: f64,
+    /// Real wall-clock spent executing (diagnostics only).
+    pub wall_s: f64,
+    pub final_val_loss: f64,
+    pub final_val_metric: f64,
+}
+
+impl RunResult {
+    pub fn final_train_loss(&self) -> f64 {
+        self.iters.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
+    }
+
+    /// Average simulated seconds per iteration.
+    pub fn avg_iter_time(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.sim_total_s / self.iters.len() as f64
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> Result<()> {
+        fs::create_dir_all(dir)?;
+        let mut f = fs::File::create(dir.join(format!("{}_iters.csv", self.label)))?;
+        writeln!(f, "iter,epoch,train_loss,sim_time_s,lr")?;
+        for r in &self.iters {
+            writeln!(
+                f,
+                "{},{:.4},{:.6},{:.4},{:.6}",
+                r.iter, r.epoch, r.train_loss, r.sim_time_s, r.lr
+            )?;
+        }
+        let mut f = fs::File::create(dir.join(format!("{}_evals.csv", self.label)))?;
+        writeln!(
+            f,
+            "iter,epoch,sim_time_s,val_loss,val_metric,node_min,node_mean,node_max,\
+             consensus_mean,consensus_min,consensus_max"
+        )?;
+        for r in &self.evals {
+            writeln!(
+                f,
+                "{},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6e},{:.6e},{:.6e}",
+                r.iter,
+                r.epoch,
+                r.sim_time_s,
+                r.val_loss,
+                r.val_metric,
+                r.node_metric_min,
+                r.node_metric_mean,
+                r.node_metric_max,
+                r.consensus_mean,
+                r.consensus_min,
+                r.consensus_max
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// mean ± max-absolute-deviation, the statistic of Table 2.
+pub fn mean_maxdev(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let maxdev = xs
+        .iter()
+        .map(|x| (x - mean).abs())
+        .fold(0.0, f64::max);
+    (mean, maxdev)
+}
+
+/// Render an aligned ASCII table (paper-table printer).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        s
+    };
+    println!("{}", line(header.iter().map(|s| s.to_string()).collect()));
+    println!(
+        "|{}|",
+        widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("|")
+    );
+    for row in rows {
+        println!("{}", line(row.clone()));
+    }
+}
+
+/// Format seconds as simulated hours (tables report hours).
+pub fn hours(secs: f64) -> String {
+    format!("{:.2} h", secs / 3600.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_maxdev_basics() {
+        let (m, d) = mean_maxdev(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((d - 1.0).abs() < 1e-12);
+        let (m, d) = mean_maxdev(&[5.0]);
+        assert_eq!((m, d), (5.0, 0.0));
+    }
+
+    #[test]
+    fn run_result_avg_iter_time() {
+        let mut r = RunResult { label: "t".into(), ..Default::default() };
+        r.sim_total_s = 10.0;
+        r.iters = (0..5)
+            .map(|i| IterRecord {
+                iter: i,
+                epoch: 0.0,
+                train_loss: 0.0,
+                sim_time_s: 0.0,
+                lr: 0.0,
+            })
+            .collect();
+        assert!((r.avg_iter_time() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_writing_roundtrip(){
+        let dir = std::env::temp_dir().join("sgp_metrics_test");
+        let mut r = RunResult { label: "unit".into(), ..Default::default() };
+        r.iters.push(IterRecord {
+            iter: 0, epoch: 0.0, train_loss: 1.5, sim_time_s: 0.1, lr: 0.1,
+        });
+        r.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("unit_iters.csv")).unwrap();
+        assert!(text.contains("1.5"));
+    }
+}

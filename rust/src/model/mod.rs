@@ -1,0 +1,274 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! emits HLO text + initial parameters once, at build time) and the Rust
+//! runtime (which loads and executes them on the training path).
+//!
+//! Parsed with the in-tree JSON substrate ([`json`]) — the offline build
+//! has no serde_json.
+
+pub mod json;
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub param_count: Option<usize>,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<String>,
+    pub n: Option<usize>,
+    pub d: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub param_count: usize,
+    pub init: String,
+    pub config: Json,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub models: HashMap<String, ModelMeta>,
+}
+
+fn tensor_meta(j: &Json) -> Result<TensorMeta> {
+    Ok(TensorMeta {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("tensor meta missing name")?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor meta missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("non-numeric dim"))
+            .collect::<Result<_>>()?,
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("float32")
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing `artifacts`")?
+        {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .context("artifact missing file")?
+                        .to_string(),
+                    kind: a
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    model: a.get("model").and_then(Json::as_str).map(String::from),
+                    param_count: a.get("param_count").and_then(Json::as_usize),
+                    inputs,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                    n: a.get("n").and_then(Json::as_usize),
+                    d: a.get("d").and_then(Json::as_usize),
+                },
+            );
+        }
+        let mut models = HashMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .context("manifest missing `models`")?
+        {
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    param_count: m
+                        .get("param_count")
+                        .and_then(Json::as_usize)
+                        .context("model missing param_count")?,
+                    init: m
+                        .get("init")
+                        .and_then(Json::as_str)
+                        .context("model missing init")?
+                        .to_string(),
+                    config: m.get("config").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Manifest { artifacts, models })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model `{name}` not in manifest"))
+    }
+
+    /// Batch-config helper pulled from the model's exported JAX config.
+    pub fn model_cfg_usize(&self, model: &str, key: &str) -> Result<usize> {
+        let m = self.model(model)?;
+        m.config
+            .get(key)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("model `{model}` config missing `{key}`"))
+    }
+
+    pub fn model_cfg_str(&self, model: &str, key: &str) -> Result<&str> {
+        let m = self.model(model)?;
+        m.config
+            .get(key)
+            .and_then(Json::as_str)
+            .with_context(|| format!("model `{model}` config missing `{key}`"))
+    }
+}
+
+/// Read a little-endian f32 init file.
+pub fn read_init(dir: &Path, manifest: &Manifest, model: &str) -> Result<Vec<f32>> {
+    let meta = manifest.model(model)?;
+    let path = dir.join(&meta.init);
+    let mut bytes = Vec::new();
+    fs::File::open(&path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut bytes)?;
+    if bytes.len() != meta.param_count * 4 {
+        bail!(
+            "init file {path:?} has {} bytes, expected {}",
+            bytes.len(),
+            meta.param_count * 4
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walks up from cwd until found).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("REPRO_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "train_mlp": {
+          "file": "train_mlp.hlo.txt", "kind": "train_step",
+          "model": "mlp", "param_count": 10,
+          "inputs": [
+            {"name": "params", "shape": [10], "dtype": "float32"},
+            {"name": "x", "shape": [4, 2], "dtype": "float32"}
+          ],
+          "outputs": ["loss", "grads"]
+        },
+        "gossip_dense_n4": {
+          "file": "g.hlo.txt", "kind": "gossip_dense", "n": 4, "d": 8,
+          "inputs": [], "outputs": ["x", "w", "z"]
+        }
+      },
+      "models": {
+        "mlp": {"param_count": 10, "init": "mlp.init.bin",
+                "config": {"batch": 4, "in_dim": 2, "kind": "mlp"}}
+      }
+    }"#;
+
+    #[test]
+    fn parses_and_queries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("train_mlp").unwrap();
+        assert_eq!(a.inputs[1].elements(), 8);
+        assert_eq!(a.outputs, vec!["loss", "grads"]);
+        assert_eq!(m.model_cfg_usize("mlp", "batch").unwrap(), 4);
+        assert_eq!(m.model_cfg_str("mlp", "kind").unwrap(), "mlp");
+        assert_eq!(m.artifact("gossip_dense_n4").unwrap().n, Some(4));
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model_cfg_usize("mlp", "nope").is_err());
+    }
+
+    #[test]
+    fn scalar_tensor_has_one_element() {
+        let t = TensorMeta { name: "s".into(), shape: vec![], dtype: "float32".into() };
+        assert_eq!(t.elements(), 1);
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(Manifest::parse(r#"{"artifacts": {}}"#).is_err());
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! Cluster/network simulator — the substrate standing in for the paper's
+//! 32×DGX-1 testbed (DESIGN.md §2).
+//!
+//! Timing of the synchronous algorithms does not depend on gradient
+//! *values*, only on (a) per-node compute times (with stragglers), (b) the
+//! point-to-point message cost, and (c) the synchronization pattern:
+//!
+//! * AllReduce-SGD — a **global barrier** every iteration plus the ring
+//!   collective cost: one straggler stalls everyone, and the latency term
+//!   grows with n.
+//! * SGP — each node blocks only on its (one or two) in-neighbours: a
+//!   straggler delays a single peer, and the point-to-point cost is
+//!   independent of n.
+//! * τ-OSGP — in-neighbour messages may be up to τ iterations stale, so
+//!   communication hides behind compute almost entirely.
+//! * D-PSGD — a **pairwise barrier** (symmetric exchange) plus handshake
+//!   overhead for deadlock avoidance.
+//!
+//! [`TimingSim`] implements these recursions incrementally so the trainer
+//! can attach simulated wall-clock to a real training run, and timing-only
+//! sweeps (Fig. 1c/d, Fig. D.4) can run them standalone.
+
+use std::collections::VecDeque;
+
+use crate::collectives;
+use crate::rng::Pcg;
+use crate::topology::Schedule;
+
+/// An α–β link model with a collective-efficiency factor capturing how far
+/// real allreduce implementations run from link peak on that fabric.
+#[derive(Clone, Debug)]
+pub struct LinkModel {
+    /// One-way small-message latency (seconds).
+    pub alpha_s: f64,
+    /// Peak point-to-point bandwidth (bytes/second).
+    pub beta_bps: f64,
+    /// Efficiency of collective (AllReduce) traffic relative to peak —
+    /// TCP-over-Ethernet collectives run far from line rate (incast,
+    /// congestion control); RDMA/IB collectives run close to it.
+    pub collective_efficiency: f64,
+    pub name: &'static str,
+}
+
+impl LinkModel {
+    /// 10 Gbps Ethernet (data-center TCP): the paper's low-bandwidth rig.
+    pub fn ethernet_10g() -> Self {
+        Self {
+            alpha_s: 75e-6,
+            beta_bps: 1.25e9,
+            collective_efficiency: 0.22,
+            name: "ethernet-10g",
+        }
+    }
+
+    /// 100 Gbps InfiniBand with GPUDirect RDMA: the high-bandwidth rig.
+    pub fn infiniband_100g() -> Self {
+        Self {
+            alpha_s: 2e-6,
+            beta_bps: 12.5e9,
+            collective_efficiency: 0.85,
+            name: "infiniband-100g",
+        }
+    }
+
+    /// Point-to-point time for one message of `bytes`.
+    pub fn ptp_time(&self, bytes: usize) -> f64 {
+        self.alpha_s + bytes as f64 / self.beta_bps
+    }
+
+    /// Link as seen by collectives (derated bandwidth).
+    pub fn collective_link(&self) -> LinkModel {
+        LinkModel {
+            beta_bps: self.beta_bps * self.collective_efficiency,
+            ..self.clone()
+        }
+    }
+}
+
+/// Per-node compute-time model: shifted log-normal jitter around a base
+/// iteration time, plus rare straggler events — the empirical shape of
+/// multi-tenant GPU-cluster step times.
+#[derive(Clone, Debug)]
+pub struct ComputeModel {
+    /// Mean compute time per iteration (seconds).
+    pub base_s: f64,
+    /// Log-normal sigma of the multiplicative jitter (0 = deterministic).
+    pub jitter_sigma: f64,
+    /// Probability a step is a straggler event.
+    pub p_slow: f64,
+    /// Multiplier applied on straggler events.
+    pub slow_factor: f64,
+}
+
+impl ComputeModel {
+    /// The paper's ResNet-50 server-scale iteration profile.
+    pub fn resnet50_dgx1() -> Self {
+        Self { base_s: 0.30, jitter_sigma: 0.08, p_slow: 0.01, slow_factor: 2.5 }
+    }
+
+    pub fn deterministic(base_s: f64) -> Self {
+        Self { base_s, jitter_sigma: 0.0, p_slow: 0.0, slow_factor: 1.0 }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg) -> f64 {
+        let mut t = if self.jitter_sigma > 0.0 {
+            // Normalize so E[t] = base_s: E[lognormal(µ,σ)] = e^{µ+σ²/2}.
+            let mu = -0.5 * self.jitter_sigma * self.jitter_sigma;
+            self.base_s * rng.lognormal(mu, self.jitter_sigma)
+        } else {
+            self.base_s
+        };
+        if self.p_slow > 0.0 && rng.f64() < self.p_slow {
+            t *= self.slow_factor;
+        }
+        t
+    }
+
+    pub fn sample_all(&self, n: usize, rng: &mut Pcg) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// The per-iteration communication pattern, decided by the algorithm.
+#[derive(Clone, Debug)]
+pub enum CommPattern<'a> {
+    /// Global barrier + collective of `bytes` (AllReduce-SGD).
+    AllReduce { bytes: usize },
+    /// Directed push messages along the schedule; receives from iteration
+    /// `k − tau` must have arrived (SGP: τ=0, OSGP: τ≥1).
+    PushSum { schedule: &'a Schedule, bytes: usize, tau: u64 },
+    /// Symmetric pairwise exchange (D-PSGD). `handshake` multiplies the
+    /// point-to-point cost to model the send+recv + deadlock-avoidance
+    /// ordering of symmetric gossip.
+    Symmetric { schedule: &'a Schedule, bytes: usize, handshake: f64 },
+    /// No communication (single node / local SGD).
+    None,
+}
+
+/// Incremental timing recursion over iterations.
+#[derive(Clone, Debug)]
+pub struct TimingSim {
+    pub n: usize,
+    pub link: LinkModel,
+    /// Completion time of each node's last finished iteration.
+    pub t: Vec<f64>,
+    /// Ring buffer of per-destination arrival deadlines for τ-delayed
+    /// push-sum messages (front = oldest iteration still unconsumed).
+    pending: VecDeque<Vec<f64>>,
+    iter: u64,
+}
+
+impl TimingSim {
+    pub fn new(n: usize, link: LinkModel) -> Self {
+        Self { n, link, t: vec![0.0; n], pending: VecDeque::new(), iter: 0 }
+    }
+
+    /// Advance one iteration given sampled compute times; returns the
+    /// simulated makespan (max node clock) after this iteration.
+    pub fn advance(&mut self, pattern: &CommPattern, comp: &[f64]) -> f64 {
+        assert_eq!(comp.len(), self.n);
+        let k = self.iter;
+        match pattern {
+            CommPattern::None => {
+                for i in 0..self.n {
+                    self.t[i] += comp[i];
+                }
+            }
+            CommPattern::AllReduce { bytes } => {
+                let ready =
+                    (0..self.n).map(|i| self.t[i] + comp[i]).fold(0.0, f64::max);
+                let done = ready
+                    + collectives::allreduce_time(
+                        self.n,
+                        *bytes,
+                        &self.link.collective_link(),
+                    );
+                for ti in &mut self.t {
+                    *ti = done;
+                }
+            }
+            CommPattern::PushSum { schedule, bytes, tau } => {
+                // Send times: node i transmits right after its local step.
+                let send: Vec<f64> =
+                    (0..self.n).map(|i| self.t[i] + comp[i]).collect();
+                // Arrival deadline per destination for messages sent at k.
+                let mut arrive = vec![0.0f64; self.n];
+                for i in 0..self.n {
+                    let cost = self.link.ptp_time(*bytes);
+                    for j in schedule.out_peers(i, k) {
+                        arrive[j] = arrive[j].max(send[i] + cost);
+                    }
+                }
+                self.pending.push_back(arrive);
+                // Node j's iteration k completes once it has done its local
+                // compute AND received the messages sent at k − τ.
+                let constraint: Option<Vec<f64>> =
+                    if self.pending.len() as u64 > *tau {
+                        self.pending.pop_front()
+                    } else {
+                        None // first τ iterations: nothing due yet
+                    };
+                for j in 0..self.n {
+                    let mut tj = send[j];
+                    if let Some(c) = &constraint {
+                        tj = tj.max(c[j]);
+                    }
+                    self.t[j] = tj;
+                }
+            }
+            CommPattern::Symmetric { schedule, bytes, handshake } => {
+                let send: Vec<f64> =
+                    (0..self.n).map(|i| self.t[i] + comp[i]).collect();
+                let cost = handshake * self.link.ptp_time(*bytes);
+                let mut new_t = send.clone();
+                for i in 0..self.n {
+                    for j in schedule.out_peers(i, k) {
+                        // Pairwise barrier: both wait for the slower one.
+                        let done = send[i].max(send[j]) + cost;
+                        new_t[i] = new_t[i].max(done);
+                        new_t[j] = new_t[j].max(done);
+                    }
+                }
+                self.t = new_t;
+            }
+        }
+        self.iter += 1;
+        self.t.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.t.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Run a timing-only sweep: average seconds/iteration for `iters`
+/// iterations of the given pattern-producing closure.
+pub fn average_iteration_time(
+    n: usize,
+    link: LinkModel,
+    compute: &ComputeModel,
+    iters: u64,
+    seed: u64,
+    mut pattern_at: impl FnMut(u64) -> OwnedCommPattern,
+) -> f64 {
+    let mut sim = TimingSim::new(n, link);
+    let mut rng = Pcg::new(seed);
+    for k in 0..iters {
+        let comp = compute.sample_all(n, &mut rng);
+        let p = pattern_at(k);
+        sim.advance(&p.borrowed(), &comp);
+    }
+    sim.makespan() / iters as f64
+}
+
+/// Owned variant of [`CommPattern`] for returning from closures.
+#[derive(Clone, Debug)]
+pub enum OwnedCommPattern {
+    AllReduce { bytes: usize },
+    PushSum { schedule: Schedule, bytes: usize, tau: u64 },
+    Symmetric { schedule: Schedule, bytes: usize, handshake: f64 },
+    None,
+}
+
+impl OwnedCommPattern {
+    pub fn borrowed(&self) -> CommPattern<'_> {
+        match self {
+            OwnedCommPattern::AllReduce { bytes } => {
+                CommPattern::AllReduce { bytes: *bytes }
+            }
+            OwnedCommPattern::PushSum { schedule, bytes, tau } => {
+                CommPattern::PushSum { schedule, bytes: *bytes, tau: *tau }
+            }
+            OwnedCommPattern::Symmetric { schedule, bytes, handshake } => {
+                CommPattern::Symmetric {
+                    schedule,
+                    bytes: *bytes,
+                    handshake: *handshake,
+                }
+            }
+            OwnedCommPattern::None => CommPattern::None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyKind;
+
+    const MSG: usize = 100 << 20; // ~ResNet-50 fp32 message
+
+    fn sgp_avg(n: usize, link: LinkModel, tau: u64) -> f64 {
+        let compute = ComputeModel::resnet50_dgx1();
+        average_iteration_time(n, link, &compute, 200, 1, |_k| {
+            OwnedCommPattern::PushSum {
+                schedule: Schedule::new(TopologyKind::OnePeerExp, n),
+                bytes: MSG,
+                tau,
+            }
+        })
+    }
+
+    fn ar_avg(n: usize, link: LinkModel) -> f64 {
+        let compute = ComputeModel::resnet50_dgx1();
+        average_iteration_time(n, link, &compute, 200, 1, |_k| {
+            OwnedCommPattern::AllReduce { bytes: MSG }
+        })
+    }
+
+    #[test]
+    fn ethernet_allreduce_slows_with_n_sgp_flat() {
+        // Fig. 1c: over 10 GbE, AR per-iteration time grows markedly with n
+        // while SGP stays nearly constant.
+        let e = LinkModel::ethernet_10g;
+        let (ar4, ar32) = (ar_avg(4, e()), ar_avg(32, e()));
+        let (sgp4, sgp32) = (sgp_avg(4, e(), 0), sgp_avg(32, e(), 0));
+        assert!(ar32 > ar4 * 1.2, "ar4={ar4} ar32={ar32}");
+        assert!(sgp32 < sgp4 * 1.25, "sgp4={sgp4} sgp32={sgp32}");
+        assert!(ar32 > 2.0 * sgp32, "paper shows ≈3× at n=32");
+    }
+
+    #[test]
+    fn infiniband_near_linear_for_all() {
+        // Fig. 1d: on 100 Gb IB, both methods are compute-bound.
+        let ib = LinkModel::infiniband_100g;
+        let ar32 = ar_avg(32, ib());
+        let sgp32 = sgp_avg(32, ib(), 0);
+        let base = ComputeModel::resnet50_dgx1().base_s;
+        assert!(ar32 < 2.0 * base, "{ar32}");
+        assert!(sgp32 < 1.8 * base, "{sgp32}");
+    }
+
+    #[test]
+    fn overlap_hides_communication() {
+        // Table 4: 1-OSGP ≈ compute-bound even on Ethernet.
+        let e = LinkModel::ethernet_10g;
+        let sgp = sgp_avg(16, e(), 0);
+        let osgp = sgp_avg(16, e(), 1);
+        assert!(osgp < sgp, "osgp={osgp} sgp={sgp}");
+        let base = ComputeModel::resnet50_dgx1().base_s;
+        assert!(osgp < 1.35 * base, "{osgp}");
+    }
+
+    #[test]
+    fn dpsgd_slower_than_sgp() {
+        // Sec. 6.1: SGP ≈1.5× faster than D-PSGD over Ethernet.
+        let e = LinkModel::ethernet_10g;
+        let compute = ComputeModel::resnet50_dgx1();
+        let dpsgd = average_iteration_time(16, e(), &compute, 200, 1, |_k| {
+            OwnedCommPattern::Symmetric {
+                schedule: Schedule::new(TopologyKind::BipartiteExp, 16),
+                bytes: MSG,
+                handshake: 2.0,
+            }
+        });
+        let sgp = sgp_avg(16, e(), 0);
+        assert!(dpsgd > 1.2 * sgp, "dpsgd={dpsgd} sgp={sgp}");
+    }
+
+    #[test]
+    fn compute_model_mean_close_to_base() {
+        let m = ComputeModel { base_s: 1.0, jitter_sigma: 0.2, p_slow: 0.0, slow_factor: 1.0 };
+        let mut rng = Pcg::new(5);
+        let mean: f64 =
+            (0..20_000).map(|_| m.sample(&mut rng)).sum::<f64>() / 20_000.0;
+        assert!((mean - 1.0).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn straggler_events_increase_tail() {
+        let m = ComputeModel { base_s: 1.0, jitter_sigma: 0.0, p_slow: 0.05, slow_factor: 3.0 };
+        let mut rng = Pcg::new(6);
+        let max = (0..1000).map(|_| m.sample(&mut rng)).fold(0.0, f64::max);
+        assert!((max - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ptp_time_monotone_in_bytes() {
+        let link = LinkModel::ethernet_10g();
+        assert!(link.ptp_time(1 << 20) < link.ptp_time(1 << 24));
+    }
+
+    #[test]
+    fn deterministic_compute_no_jitter() {
+        let m = ComputeModel::deterministic(0.25);
+        let mut rng = Pcg::new(7);
+        for _ in 0..10 {
+            assert_eq!(m.sample(&mut rng), 0.25);
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them from the training hot path.
+//!
+//! Wiring (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled once on first use and cached; Python is never
+//! involved at runtime.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::data::Batch;
+use crate::model::Manifest;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Executions performed (diagnostics / perf accounting).
+    pub exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and connect the CPU PJRT client.
+    pub fn new(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Open the default artifacts directory.
+    pub fn open_default() -> Result<Self> {
+        Self::new(crate::model::artifacts_dir())
+    }
+
+    /// Compile-on-first-use executable cache.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(name)?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling `{name}`: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        *self.exec_count.borrow_mut() += 1;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing `{name}`: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching `{name}` result: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling `{name}` result: {e:?}"))
+    }
+
+    fn lit_f32(xs: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let l = xla::Literal::vec1(xs);
+        if dims.len() == 1 {
+            return Ok(l);
+        }
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        l.reshape(&d).map_err(|e| anyhow::anyhow!("reshape f32: {e:?}"))
+    }
+
+    fn lit_i32(xs: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let l = xla::Literal::vec1(xs);
+        if dims.len() == 1 {
+            return Ok(l);
+        }
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        l.reshape(&d).map_err(|e| anyhow::anyhow!("reshape i32: {e:?}"))
+    }
+
+    fn batch_literals(batch: &Batch) -> Result<Vec<xla::Literal>> {
+        Ok(match batch {
+            Batch::Classif { x, y, b, in_dim } => vec![
+                Self::lit_f32(x, &[*b, *in_dim])?,
+                Self::lit_i32(y, &[y.len()])?,
+            ],
+            Batch::Tokens { t, b, seq } => {
+                vec![Self::lit_i32(t, &[*b, *seq + 1])?]
+            }
+        })
+    }
+
+    /// Run `train_<model>`: (params, batch…) → (loss, grads).
+    pub fn train_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<f32>)> {
+        let name = format!("train_{model}");
+        let mut args = vec![Self::lit_f32(params, &[params.len()])?];
+        args.extend(Self::batch_literals(batch)?);
+        let out = self.run(&name, &args)?;
+        anyhow::ensure!(out.len() == 2, "train step returned {} outputs", out.len());
+        let loss = out[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?;
+        let grads =
+            out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("grads: {e:?}"))?;
+        anyhow::ensure!(grads.len() == params.len(), "grad length mismatch");
+        Ok((loss, grads))
+    }
+
+    /// Run `eval_<model>`: (params, batch…) → (loss, metric).
+    pub fn eval_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, f32)> {
+        let name = format!("eval_{model}");
+        let mut args = vec![Self::lit_f32(params, &[params.len()])?];
+        args.extend(Self::batch_literals(batch)?);
+        let out = self.run(&name, &args)?;
+        anyhow::ensure!(out.len() == 2, "eval step returned {} outputs", out.len());
+        let loss = out[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?;
+        let metric = out[1]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("metric: {e:?}"))?;
+        Ok((loss, metric))
+    }
+
+    /// Run the fused Nesterov artifact (ablation path): returns (x', u').
+    pub fn update_sgdm(
+        &self,
+        name: &str,
+        x: &[f32],
+        u: &[f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let args = vec![
+            Self::lit_f32(x, &[x.len()])?,
+            Self::lit_f32(u, &[u.len()])?,
+            Self::lit_f32(g, &[g.len()])?,
+            Self::lit_f32(&[lr], &[1])?,
+        ];
+        let out = self.run(name, &args)?;
+        anyhow::ensure!(out.len() == 2, "sgdm returned {} outputs", out.len());
+        Ok((
+            out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Run the fused Adam artifact: returns (x', m', v').
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_adam(
+        &self,
+        name: &str,
+        x: &[f32],
+        m: &[f32],
+        v: &[f32],
+        g: &[f32],
+        lr: f32,
+        t: u64,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let scalars = [
+            lr,
+            1.0 - 0.9f32.powi(t as i32),
+            1.0 - 0.98f32.powi(t as i32),
+        ];
+        let args = vec![
+            Self::lit_f32(x, &[x.len()])?,
+            Self::lit_f32(m, &[m.len()])?,
+            Self::lit_f32(v, &[v.len()])?,
+            Self::lit_f32(g, &[g.len()])?,
+            Self::lit_f32(&scalars, &[3])?,
+        ];
+        let out = self.run(name, &args)?;
+        anyhow::ensure!(out.len() == 3, "adam returned {} outputs", out.len());
+        Ok((
+            out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Run the dense push-sum round (gossip-as-matmul Pallas artifact):
+    /// `P ∈ f32[n,n]`, `x ∈ f32[n·d]` row-major, `w ∈ f32[n]` → (x', w', z').
+    pub fn gossip_dense(
+        &self,
+        n: usize,
+        p: &[f32],
+        x: &[f32],
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let name = format!("gossip_dense_n{n}");
+        let d = x.len() / n;
+        let args = vec![
+            Self::lit_f32(p, &[n, n])?,
+            Self::lit_f32(x, &[n, d])?,
+            Self::lit_f32(w, &[n])?,
+        ];
+        let out = self.run(&name, &args)?;
+        anyhow::ensure!(out.len() == 3, "gossip returned {} outputs", out.len());
+        Ok((
+            out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Message size in bytes for a model's parameters + push-sum weight —
+    /// what one SGP message carries over the simulated network.
+    pub fn message_bytes(&self, model: &str) -> Result<usize> {
+        Ok(self.manifest.model(model)?.param_count * 4 + 8)
+    }
+}

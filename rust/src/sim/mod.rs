@@ -1,0 +1,129 @@
+//! Discrete-event simulation clock for the asynchronous baseline
+//! (AD-PSGD, Lian et al. 2018) and other event-driven experiments.
+//!
+//! A tiny binary-heap scheduler over (time, node, event) with a strict
+//! causality guarantee: events pop in non-decreasing time order, ties
+//! broken deterministically by sequence number so runs are reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event<T> {
+    pub time: f64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T: PartialEq> Eq for Event<T> {}
+
+impl<T: PartialEq> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T: PartialEq> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap semantics on BinaryHeap (max-heap).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-time event queue.
+pub struct EventQueue<T: PartialEq> {
+    heap: BinaryHeap<Event<T>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<T: PartialEq> EventQueue<T> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    pub fn push(&mut self, time: f64, payload: T) {
+        assert!(time >= self.now, "cannot schedule into the past");
+        self.heap.push(Event { time, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now);
+        self.now = ev.time;
+        Some(ev)
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T: PartialEq> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop().map(|e| e.payload))
+            .collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_broken_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(1.0, 3);
+        let order: Vec<_> =
+            std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(0.5, ());
+        q.push(0.7, ());
+        q.pop();
+        assert_eq!(q.now(), 0.5);
+        q.push(0.6, ());
+        q.pop();
+        assert_eq!(q.now(), 0.6);
+        q.pop();
+        assert_eq!(q.now(), 0.7);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule into the past")]
+    fn scheduling_into_the_past_panics() {
+        let mut q = EventQueue::new();
+        q.push(1.0, ());
+        q.pop();
+        q.push(0.5, ());
+    }
+}

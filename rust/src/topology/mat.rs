@@ -1,0 +1,170 @@
+//! Minimal dense square-matrix type (f64, row-major) for mixing-matrix
+//! algebra and spectral analysis. n is small (≤ a few hundred nodes), so a
+//! straightforward O(n³) implementation is the right tool.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub n: usize,
+    a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(n: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(n);
+        for r in 0..n {
+            for c in 0..n {
+                *m.at_mut(r, c) = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// Uniform averaging matrix (1/n)·11ᵀ.
+    pub fn uniform(n: usize) -> Self {
+        Self::from_fn(n, |_, _| 1.0 / n as f64)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.n + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.a[r * self.n + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.a[r * self.n..(r + 1) * self.n]
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for r in 0..n {
+            for k in 0..n {
+                let v = self.at(r, k);
+                if v == 0.0 {
+                    continue;
+                }
+                for c in 0..n {
+                    *out.at_mut(r, c) += v * other.at(k, c);
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        (0..self.n)
+            .map(|r| self.row(r).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.n, |r, c| self.at(c, r))
+    }
+
+    pub fn col_sums(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|c| (0..self.n).map(|r| self.at(r, c)).sum())
+            .collect()
+    }
+
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.n).map(|r| self.row(r).iter().sum()).collect()
+    }
+
+    pub fn is_column_stochastic(&self, tol: f64) -> bool {
+        self.a.iter().all(|&v| v >= -tol)
+            && self.col_sums().iter().all(|s| (s - 1.0).abs() <= tol)
+    }
+
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        self.is_column_stochastic(tol)
+            && self.row_sums().iter().all(|s| (s - 1.0).abs() <= tol)
+    }
+
+    /// Frobenius distance.
+    pub fn dist(&self, other: &Mat) -> f64 {
+        self.a
+            .iter()
+            .zip(&other.a)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Product P^(k-1) ⋯ P^(0) of a sequence (applied left to right as given).
+    pub fn product(mats: &[Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let mut acc = mats[0].clone();
+        for m in &mats[1..] {
+            acc = m.matmul(&acc);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_noop() {
+        let m = Mat::from_fn(4, |r, c| (r * 4 + c) as f64);
+        assert_eq!(m.matmul(&Mat::identity(4)), m);
+        assert_eq!(Mat::identity(4).matmul(&m), m);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let m = Mat::from_fn(3, |r, c| (r + 2 * c) as f64);
+        let x = vec![1.0, -1.0, 2.0];
+        let y = m.matvec(&x);
+        assert_eq!(y, vec![
+            m.at(0, 0) - m.at(0, 1) + 2.0 * m.at(0, 2),
+            m.at(1, 0) - m.at(1, 1) + 2.0 * m.at(1, 2),
+            m.at(2, 0) - m.at(2, 1) + 2.0 * m.at(2, 2),
+        ]);
+    }
+
+    #[test]
+    fn uniform_is_doubly_stochastic_projection() {
+        let u = Mat::uniform(5);
+        assert!(u.is_doubly_stochastic(1e-12));
+        assert!(u.matmul(&u).dist(&u) < 1e-12); // idempotent
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(4, |r, c| (r as f64).sin() + c as f64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn product_order() {
+        // product([A, B]) must equal B·A (P^(1) P^(0)).
+        let a = Mat::from_fn(2, |r, c| if r == c { 2.0 } else { 0.0 });
+        let mut b = Mat::zeros(2);
+        *b.at_mut(0, 1) = 1.0;
+        *b.at_mut(1, 0) = 1.0;
+        let p = Mat::product(&[a.clone(), b.clone()]);
+        assert_eq!(p, b.matmul(&a));
+    }
+}

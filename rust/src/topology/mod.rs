@@ -1,0 +1,401 @@
+//! Communication topologies and time-varying mixing-matrix schedules.
+//!
+//! SGP only requires each column of `P^(k)` to sum to 1 (column-stochastic)
+//! and the union graph over any window of `B` iterations to be strongly
+//! connected (Assumption 4). Each node chooses its own outgoing mixing
+//! weights — here uniform over its out-neighbours (incl. the self-loop),
+//! matching Appendix C of the paper.
+
+pub mod mat;
+pub mod spectral;
+
+pub use mat::Mat;
+
+use crate::rng::Pcg;
+
+/// The topology families used across the paper's experiments (Appendix A)
+/// plus the baselines used for the averaging comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Directed exponential graph, cycling 2^0, 2^1, … hops; each node
+    /// sends to exactly ONE peer per iteration (paper's SGP default).
+    OnePeerExp,
+    /// Same graph, transmitting to TWO consecutive-offset peers/iteration.
+    TwoPeerExp,
+    /// Fully-connected: every node sends to all others every iteration
+    /// (the "dense" topology of Fig. 2; equivalent to exact averaging).
+    Complete,
+    /// Cycle deterministically through the n-1 edges of the complete graph,
+    /// one peer per iteration (Appendix A comparison).
+    CompleteCycling,
+    /// One peer per iteration sampled uniformly from the exponential-graph
+    /// neighbour list (Appendix A "random scheme").
+    RandomExp,
+    /// One peer per iteration sampled uniformly from ALL other nodes.
+    RandomAny,
+    /// Static directed ring (worst-case connectivity baseline).
+    Ring,
+    /// Undirected bipartite exponential pairing (hypercube XOR matching):
+    /// the symmetric, doubly-stochastic schedule used by D-PSGD.
+    BipartiteExp,
+}
+
+/// A time-varying schedule: for node `i` at iteration `k`, which peers does
+/// it transmit to? Mixing weights are uniform: `1 / (1 + |out(i,k)|)`.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: TopologyKind,
+    pub n: usize,
+    /// Seed for the randomized kinds (deterministic given seed + k + i).
+    pub seed: u64,
+}
+
+impl Schedule {
+    pub fn new(kind: TopologyKind, n: usize) -> Self {
+        Self { kind, n, seed: 0 }
+    }
+
+    pub fn with_seed(kind: TopologyKind, n: usize, seed: u64) -> Self {
+        Self { kind, n, seed }
+    }
+
+    /// Exponential-graph hop offsets: 2^0, 2^1, …, 2^⌊log2(n-1)⌋.
+    pub fn exp_offsets(n: usize) -> Vec<usize> {
+        let mut offs = Vec::new();
+        let mut h = 1usize;
+        while h <= n.saturating_sub(1) {
+            offs.push(h);
+            h *= 2;
+        }
+        if offs.is_empty() {
+            offs.push(0);
+        }
+        offs
+    }
+
+    /// Length of the deterministic cycle (number of distinct phases).
+    pub fn cycle_len(&self) -> usize {
+        match self.kind {
+            TopologyKind::OnePeerExp | TopologyKind::TwoPeerExp => {
+                Self::exp_offsets(self.n).len()
+            }
+            TopologyKind::CompleteCycling => self.n - 1,
+            TopologyKind::BipartiteExp => Self::exp_offsets(self.n).len(),
+            _ => 1,
+        }
+    }
+
+    /// Out-neighbours of node `i` at iteration `k` (self-loop NOT included;
+    /// every node is implicitly its own in/out-neighbour).
+    pub fn out_peers(&self, i: usize, k: u64) -> Vec<usize> {
+        let n = self.n;
+        if n <= 1 {
+            return vec![];
+        }
+        match self.kind {
+            TopologyKind::OnePeerExp => {
+                let offs = Self::exp_offsets(n);
+                let h = offs[(k as usize) % offs.len()];
+                vec![(i + h) % n]
+            }
+            TopologyKind::TwoPeerExp => {
+                let offs = Self::exp_offsets(n);
+                let a = offs[(k as usize) % offs.len()];
+                let b = offs[(k as usize + 1) % offs.len()];
+                let p1 = (i + a) % n;
+                let p2 = (i + b) % n;
+                if p1 == p2 {
+                    vec![p1]
+                } else {
+                    vec![p1, p2]
+                }
+            }
+            TopologyKind::Complete => (0..n).filter(|&j| j != i).collect(),
+            TopologyKind::CompleteCycling => {
+                let h = 1 + (k as usize) % (n - 1);
+                vec![(i + h) % n]
+            }
+            TopologyKind::RandomExp => {
+                let offs = Self::exp_offsets(n);
+                let mut rng = self.peer_rng(i, k);
+                let h = offs[rng.below(offs.len())];
+                vec![(i + h) % n]
+            }
+            TopologyKind::RandomAny => {
+                let mut rng = self.peer_rng(i, k);
+                let mut j = rng.below(n - 1);
+                if j >= i {
+                    j += 1;
+                }
+                vec![j]
+            }
+            TopologyKind::Ring => vec![(i + 1) % n],
+            TopologyKind::BipartiteExp => {
+                // Hypercube matching: pair i ↔ i XOR 2^(k mod log2 n).
+                // Perfect matching when n is a power of two; nodes whose
+                // partner is out of range idle that iteration.
+                let offs = Self::exp_offsets(n);
+                let h = offs[(k as usize) % offs.len()];
+                let j = i ^ h;
+                if j < n && j != i {
+                    vec![j]
+                } else {
+                    vec![]
+                }
+            }
+        }
+    }
+
+    fn peer_rng(&self, i: usize, k: u64) -> Pcg {
+        // Deterministic per (seed, node, iteration) — reproducible runs.
+        Pcg::with_stream(self.seed ^ k.wrapping_mul(0x9e37_79b9_7f4a_7c15), i as u64 + 1)
+    }
+
+    /// Whether the induced mixing matrix is symmetric (required by D-PSGD).
+    pub fn is_symmetric(&self, k: u64) -> bool {
+        let n = self.n;
+        (0..n).all(|i| {
+            self.out_peers(i, k)
+                .iter()
+                .all(|&j| self.out_peers(j, k).contains(&i))
+        })
+    }
+
+    /// Column-stochastic mixing matrix `P^(k)` (row r, col c = weight node c
+    /// assigns to the message it sends node r), uniform out-weights and a
+    /// self-loop, exactly as in Appendix C.
+    pub fn mixing_matrix(&self, k: u64) -> Mat {
+        let n = self.n;
+        let mut p = Mat::zeros(n);
+        for c in 0..n {
+            let peers = self.out_peers(c, k);
+            let w = 1.0 / (1.0 + peers.len() as f64);
+            *p.at_mut(c, c) += w;
+            for &r in &peers {
+                *p.at_mut(r, c) += w;
+            }
+        }
+        p
+    }
+
+    /// Doubly-stochastic symmetric matrix for D-PSGD (pairwise averaging on
+    /// the bipartite matching; identity rows for idle nodes).
+    pub fn symmetric_mixing_matrix(&self, k: u64) -> Mat {
+        let n = self.n;
+        let mut p = Mat::zeros(n);
+        for i in 0..n {
+            let peers = self.out_peers(i, k);
+            if peers.is_empty() {
+                *p.at_mut(i, i) = 1.0;
+            } else {
+                let w = 1.0 / (1.0 + peers.len() as f64);
+                *p.at_mut(i, i) = w;
+                for &j in &peers {
+                    *p.at_mut(i, j) = w;
+                }
+            }
+        }
+        p
+    }
+
+    /// Union edge set over a window of `b` iterations starting at `k0` —
+    /// used to verify Assumption 4 (B-strong connectivity).
+    pub fn union_reachable(&self, k0: u64, b: u64) -> bool {
+        let n = self.n;
+        let mut adj = vec![vec![false; n]; n];
+        for i in 0..n {
+            adj[i][i] = true;
+        }
+        for k in k0..k0 + b {
+            for i in 0..n {
+                for j in self.out_peers(i, k) {
+                    adj[j][i] = true; // edge from sender i to receiver j
+                }
+            }
+        }
+        // Floyd–Warshall closure, then check all-pairs reachability.
+        for m in 0..n {
+            for a in 0..n {
+                if adj[a][m] {
+                    for b2 in 0..n {
+                        if adj[m][b2] {
+                            adj[a][b2] = true;
+                        }
+                    }
+                }
+            }
+        }
+        adj.iter().all(|row| row.iter().all(|&x| x))
+    }
+}
+
+/// Hybrid schedule phases from the paper's Table 3: e.g. AllReduce for the
+/// first 30 epochs then 1-peer SGP, or 2-peer then 1-peer.
+#[derive(Clone, Debug)]
+pub struct HybridSchedule {
+    pub phases: Vec<(u64, Schedule)>, // (first iteration of phase, schedule)
+}
+
+impl HybridSchedule {
+    pub fn single(s: Schedule) -> Self {
+        Self { phases: vec![(0, s)] }
+    }
+
+    pub fn two_phase(first: Schedule, switch_at: u64, second: Schedule) -> Self {
+        Self { phases: vec![(0, first), (switch_at, second)] }
+    }
+
+    pub fn at(&self, k: u64) -> &Schedule {
+        let mut cur = &self.phases[0].1;
+        for (start, s) in &self.phases {
+            if *start <= k {
+                cur = s;
+            }
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_offsets_power_of_two() {
+        assert_eq!(Schedule::exp_offsets(8), vec![1, 2, 4]);
+        assert_eq!(Schedule::exp_offsets(32), vec![1, 2, 4, 8, 16]);
+        assert_eq!(Schedule::exp_offsets(5), vec![1, 2, 4]);
+        assert_eq!(Schedule::exp_offsets(2), vec![1]);
+    }
+
+    #[test]
+    fn one_peer_exp_matches_paper_example() {
+        // Fig. A.1: node 0's neighbours in an 8-node graph are 1, 2, 4.
+        let s = Schedule::new(TopologyKind::OnePeerExp, 8);
+        assert_eq!(s.out_peers(0, 0), vec![1]);
+        assert_eq!(s.out_peers(0, 1), vec![2]);
+        assert_eq!(s.out_peers(0, 2), vec![4]);
+        assert_eq!(s.out_peers(0, 3), vec![1]); // cycle restarts
+    }
+
+    #[test]
+    fn one_peer_send_and_receive_exactly_one() {
+        for n in [4usize, 8, 16, 32] {
+            let s = Schedule::new(TopologyKind::OnePeerExp, n);
+            for k in 0..10u64 {
+                let mut recv = vec![0usize; n];
+                for i in 0..n {
+                    let peers = s.out_peers(i, k);
+                    assert_eq!(peers.len(), 1);
+                    recv[peers[0]] += 1;
+                }
+                assert!(recv.iter().all(|&r| r == 1), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_peer_send_and_receive_exactly_two() {
+        let s = Schedule::new(TopologyKind::TwoPeerExp, 16);
+        for k in 0..8u64 {
+            let mut recv = vec![0usize; 16];
+            for i in 0..16 {
+                let peers = s.out_peers(i, k);
+                assert_eq!(peers.len(), 2);
+                for p in peers {
+                    recv[p] += 1;
+                }
+            }
+            assert!(recv.iter().all(|&r| r == 2));
+        }
+    }
+
+    #[test]
+    fn mixing_matrix_column_stochastic() {
+        for kind in [
+            TopologyKind::OnePeerExp,
+            TopologyKind::TwoPeerExp,
+            TopologyKind::Complete,
+            TopologyKind::CompleteCycling,
+            TopologyKind::RandomExp,
+            TopologyKind::RandomAny,
+            TopologyKind::Ring,
+            TopologyKind::BipartiteExp,
+        ] {
+            let s = Schedule::new(kind, 8);
+            for k in 0..6u64 {
+                let p = s.mixing_matrix(k);
+                for c in 0..8 {
+                    let sum: f64 = (0..8).map(|r| p.at(r, c)).sum();
+                    assert!((sum - 1.0).abs() < 1e-12, "{kind:?} k={k} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_peer_matrix_entries_are_half() {
+        let s = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let p = s.mixing_matrix(0);
+        for c in 0..8 {
+            assert_eq!(p.at(c, c), 0.5);
+            assert_eq!(p.at((c + 1) % 8, c), 0.5);
+        }
+    }
+
+    #[test]
+    fn bipartite_is_symmetric_and_doubly_stochastic() {
+        let s = Schedule::new(TopologyKind::BipartiteExp, 16);
+        for k in 0..6u64 {
+            assert!(s.is_symmetric(k));
+            let p = s.symmetric_mixing_matrix(k);
+            for i in 0..16 {
+                let rs: f64 = (0..16).map(|j| p.at(i, j)).sum();
+                let cs: f64 = (0..16).map(|j| p.at(j, i)).sum();
+                assert!((rs - 1.0).abs() < 1e-12 && (cs - 1.0).abs() < 1e-12);
+                for j in 0..16 {
+                    assert_eq!(p.at(i, j), p.at(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn directed_exp_is_not_symmetric() {
+        let s = Schedule::new(TopologyKind::OnePeerExp, 8);
+        assert!(!s.is_symmetric(0));
+    }
+
+    #[test]
+    fn union_strongly_connected_within_cycle() {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::Ring] {
+            let s = Schedule::new(kind, 8);
+            let b = match kind {
+                TopologyKind::Ring => 8,
+                _ => s.cycle_len() as u64,
+            };
+            assert!(s.union_reachable(0, b), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn hybrid_switches_at_boundary() {
+        let h = HybridSchedule::two_phase(
+            Schedule::new(TopologyKind::Complete, 8),
+            100,
+            Schedule::new(TopologyKind::OnePeerExp, 8),
+        );
+        assert_eq!(h.at(0).kind, TopologyKind::Complete);
+        assert_eq!(h.at(99).kind, TopologyKind::Complete);
+        assert_eq!(h.at(100).kind, TopologyKind::OnePeerExp);
+        assert_eq!(h.at(1_000_000).kind, TopologyKind::OnePeerExp);
+    }
+
+    #[test]
+    fn random_peers_deterministic_given_seed() {
+        let s = Schedule::with_seed(TopologyKind::RandomAny, 16, 99);
+        let a: Vec<_> = (0..20).map(|k| s.out_peers(3, k)).collect();
+        let b: Vec<_> = (0..20).map(|k| s.out_peers(3, k)).collect();
+        assert_eq!(a, b);
+    }
+}

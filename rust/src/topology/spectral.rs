@@ -1,0 +1,168 @@
+//! Spectral tools for mixing-matrix analysis (Appendix A of the paper).
+//!
+//! The worst-case averaging error after k gossip iterations is governed by
+//! the second-largest **singular value** of the product
+//! `P^(k-1:0) = P^(k-1) ⋯ P^(0)`:
+//!
+//! Σᵢ ‖yᵢ^(k) − ȳ‖² ≤ λ₂(P^(k-1:0)) Σᵢ ‖yᵢ^(0) − ȳ‖².
+//!
+//! Singular values are computed as the square roots of the eigenvalues of
+//! AᵀA via a cyclic Jacobi eigensolver — exact enough (1e-12) for the n ≤ a
+//! few hundred matrices in play, with no external linear-algebra crate.
+
+use super::mat::Mat;
+
+/// Eigenvalues of a symmetric matrix via cyclic Jacobi rotations,
+/// descending order.
+pub fn symmetric_eigenvalues(m: &Mat) -> Vec<f64> {
+    let n = m.n;
+    let mut a = m.clone();
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for r in 0..n {
+            for c in r + 1..n {
+                off += a.at(r, c) * a.at(r, c);
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a.at(p, q);
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = a.at(p, p);
+                let aqq = a.at(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply Givens rotation J(p,q,θ) on both sides.
+                for k in 0..n {
+                    let akp = a.at(k, p);
+                    let akq = a.at(k, q);
+                    *a.at_mut(k, p) = c * akp - s * akq;
+                    *a.at_mut(k, q) = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a.at(p, k);
+                    let aqk = a.at(q, k);
+                    *a.at_mut(p, k) = c * apk - s * aqk;
+                    *a.at_mut(q, k) = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| a.at(i, i)).collect();
+    eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    eig
+}
+
+/// All singular values of `m`, descending.
+pub fn singular_values(m: &Mat) -> Vec<f64> {
+    let ata = m.transpose().matmul(m);
+    symmetric_eigenvalues(&ata)
+        .into_iter()
+        .map(|e| e.max(0.0).sqrt())
+        .collect()
+}
+
+/// The paper's λ₂(P^(k-1:0)): the worst-case contraction factor of the
+/// *squared* consensus error, Σ‖yᵢ−ȳ‖² ≤ λ₂·Σ‖yᵢ⁰−ȳ‖². Computed as the
+/// squared largest singular value of the deviation-restricted operator
+/// `P · (I − (1/n)11ᵀ)` (the mass-preserving direction projected out).
+/// With this convention our n=32 numbers land on the paper's quoted
+/// 0 / ≈0.6 / ≈0.4 / ≈0.2.
+pub fn lambda2(m: &Mat) -> f64 {
+    let n = m.n;
+    let proj = Mat::from_fn(n, |r, c| {
+        (if r == c { 1.0 } else { 0.0 }) - 1.0 / n as f64
+    });
+    let err_op = m.matmul(&proj);
+    let s = singular_values(&err_op)[0];
+    s * s
+}
+
+/// λ₂ of the product of a schedule's first `k` mixing matrices.
+pub fn lambda2_of_product(mats: &[Mat]) -> f64 {
+    lambda2(&Mat::product(mats))
+}
+
+/// Monte-Carlo estimate of E[λ₂(P^(k-1:0))] for randomized schedules.
+pub fn expected_lambda2(
+    schedule: &crate::topology::Schedule,
+    window: usize,
+    trials: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for t in 0..trials {
+        let mut sched = schedule.clone();
+        sched.seed = schedule.seed.wrapping_add(t as u64 * 7919);
+        let mats: Vec<Mat> =
+            (0..window as u64).map(|k| sched.mixing_matrix(k)).collect();
+        total += lambda2_of_product(&mats);
+    }
+    total / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Schedule, TopologyKind};
+
+    #[test]
+    fn eigenvalues_of_diagonal() {
+        let m = Mat::from_fn(3, |r, c| if r == c { (r + 1) as f64 } else { 0.0 });
+        let e = symmetric_eigenvalues(&m);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 2.0).abs() < 1e-10);
+        assert!((e[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn singular_values_of_scaled_identity() {
+        let m = Mat::from_fn(4, |r, c| if r == c { -2.0 } else { 0.0 });
+        let s = singular_values(&m);
+        assert!(s.iter().all(|v| (v - 2.0).abs() < 1e-10));
+    }
+
+    #[test]
+    fn lambda2_of_uniform_is_zero() {
+        assert!(lambda2(&Mat::uniform(8)) < 1e-10);
+    }
+
+    #[test]
+    fn lambda2_of_identity_is_one() {
+        assert!((lambda2(&Mat::identity(8)) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn exp_graph_cycle_reaches_exact_consensus() {
+        // Appendix A: after ⌊log2(n-1)⌋+? iterations of deterministic
+        // exponential-graph cycling, λ₂ of the product is exactly 0 — all
+        // nodes hold the average. For n = 32 that is 5 iterations.
+        let s = Schedule::new(TopologyKind::OnePeerExp, 32);
+        let mats: Vec<Mat> = (0..5u64).map(|k| s.mixing_matrix(k)).collect();
+        let l2 = lambda2_of_product(&mats);
+        assert!(l2 < 1e-9, "λ₂ = {l2}");
+    }
+
+    #[test]
+    fn exp_graph_partial_cycle_not_converged() {
+        let s = Schedule::new(TopologyKind::OnePeerExp, 32);
+        let mats: Vec<Mat> = (0..3u64).map(|k| s.mixing_matrix(k)).collect();
+        assert!(lambda2_of_product(&mats) > 0.1);
+    }
+
+    #[test]
+    fn complete_cycling_worse_than_exp_cycling() {
+        // Appendix A: for n = 32 after 5 iterations, complete-graph cycling
+        // has λ₂ ≈ 0.6 while exponential cycling is at 0.
+        let s = Schedule::new(TopologyKind::CompleteCycling, 32);
+        let mats: Vec<Mat> = (0..5u64).map(|k| s.mixing_matrix(k)).collect();
+        let l2 = lambda2_of_product(&mats);
+        assert!(l2 > 0.4 && l2 < 0.8, "λ₂ = {l2}");
+    }
+}

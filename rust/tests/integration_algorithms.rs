@@ -1,0 +1,209 @@
+//! End-to-end algorithm tests over the full stack (runtime + coordinator):
+//! every algorithm trains, the paper's equivalences hold, and the simulated
+//! timing orders methods the way Section 6 reports.
+
+use sgp::algorithms::Algorithm;
+use sgp::config::TrainConfig;
+use sgp::coordinator::Trainer;
+use sgp::metrics::RunResult;
+use sgp::model;
+use sgp::net::LinkModel;
+use sgp::optim::OptimKind;
+use sgp::runtime::Runtime;
+use sgp::topology::{HybridSchedule, Schedule, TopologyKind};
+
+fn runtime() -> Option<Runtime> {
+    let dir = model::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn run(rt: &Runtime, cfg: TrainConfig, algo: Algorithm) -> RunResult {
+    Trainer::new(rt, cfg, algo).unwrap().run().unwrap()
+}
+
+#[test]
+fn every_algorithm_trains_and_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let n = 4;
+    let algos = vec![
+        Algorithm::ArSgd,
+        Algorithm::sgp_1peer(n),
+        Algorithm::sgp_2peer(n),
+        Algorithm::osgp_1peer(n, 1),
+        Algorithm::osgp_biased(n, 1),
+        Algorithm::dpsgd(n),
+        Algorithm::adpsgd(n),
+        Algorithm::hybrid_ar_then_1p(n, 5),
+        Algorithm::hybrid_2p_then_1p(n, 5),
+    ];
+    for algo in algos {
+        let name = algo.name();
+        let mut cfg = TrainConfig::test_tiny("mlp_small", n);
+        cfg.epochs = 3.0;
+        let r = run(&rt, cfg, algo);
+        let first = r.iters.first().unwrap().train_loss;
+        let last = r.final_train_loss();
+        assert!(
+            last < first,
+            "{name}: loss did not decrease ({first} → {last})"
+        );
+        assert!(r.final_val_metric > 0.3, "{name}: val acc {}", r.final_val_metric);
+        assert!(r.sim_total_s > 0.0);
+    }
+}
+
+#[test]
+fn sgp_with_complete_topology_equals_allreduce_sgd() {
+    // Sec. 2: with P = (1/n)·11ᵀ and identical init, SGP ≡ parallel SGD.
+    let Some(rt) = runtime() else { return };
+    let n = 4;
+    let mk = || {
+        let mut cfg = TrainConfig::test_tiny("mlp_small", n);
+        cfg.optim = OptimKind::Sgd; // pure SGD keeps the equivalence exact
+        cfg.epochs = 2.0;
+        cfg.eval_every_epochs = 0.0;
+        cfg.track_consensus = false;
+        cfg
+    };
+    let ar = run(&rt, mk(), Algorithm::ArSgd);
+    let sgp = run(
+        &rt,
+        mk(),
+        Algorithm::Sgp {
+            schedule: HybridSchedule::single(Schedule::new(TopologyKind::Complete, n)),
+        },
+    );
+    for (a, b) in ar.iters.iter().zip(&sgp.iters) {
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 1e-4,
+            "iter {}: AR loss {} vs SGP-complete {}",
+            a.iter,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+    assert!((ar.final_val_loss - sgp.final_val_loss).abs() < 1e-3);
+}
+
+#[test]
+fn biased_osgp_worse_than_unbiased() {
+    // Table 4's ablation: dropping the push-sum weight hurts validation.
+    let Some(rt) = runtime() else { return };
+    let n = 8;
+    let mk = || {
+        let mut cfg = TrainConfig::test_tiny("mlp_small", n);
+        cfg.epochs = 6.0;
+        cfg.steps_per_epoch = 8;
+        cfg.eval_every_epochs = 0.0;
+        cfg.track_consensus = false;
+        cfg
+    };
+    let unbiased = run(&rt, mk(), Algorithm::osgp_1peer(n, 1));
+    let biased = run(&rt, mk(), Algorithm::osgp_biased(n, 1));
+    assert!(
+        biased.final_val_loss > unbiased.final_val_loss,
+        "biased {} should exceed unbiased {}",
+        biased.final_val_loss,
+        unbiased.final_val_loss
+    );
+}
+
+#[test]
+fn simulated_timing_orders_methods_like_the_paper() {
+    // On 10 GbE at ResNet-50 message sizes: OSGP < SGP < D-PSGD < AR-SGD.
+    // (Timing uses the model's real message size here — a small model — so
+    // force the paper-scale message by using the compute/link directly.)
+    let Some(rt) = runtime() else { return };
+    let n = 8;
+    let mk = || {
+        let mut cfg = TrainConfig::test_tiny("mlp_small", n);
+        cfg.epochs = 2.0;
+        cfg.eval_every_epochs = 0.0;
+        cfg.track_consensus = false;
+        // Slow fabric so that even the 88 KB model message matters:
+        cfg.link = LinkModel {
+            alpha_s: 5e-3,
+            beta_bps: 1e6,
+            collective_efficiency: 0.5,
+            name: "slow-test-link",
+        };
+        cfg
+    };
+    let ar = run(&rt, mk(), Algorithm::ArSgd);
+    let sgp = run(&rt, mk(), Algorithm::sgp_1peer(n));
+    let osgp = run(&rt, mk(), Algorithm::osgp_1peer(n, 1));
+    let dpsgd = run(&rt, mk(), Algorithm::dpsgd(n));
+    assert!(sgp.sim_total_s < ar.sim_total_s, "SGP {} vs AR {}", sgp.sim_total_s, ar.sim_total_s);
+    assert!(osgp.sim_total_s < sgp.sim_total_s, "OSGP {} vs SGP {}", osgp.sim_total_s, sgp.sim_total_s);
+    assert!(dpsgd.sim_total_s > sgp.sim_total_s, "D-PSGD {} vs SGP {}", dpsgd.sim_total_s, sgp.sim_total_s);
+}
+
+#[test]
+fn consensus_tracked_and_tightens_with_dense_topology() {
+    let Some(rt) = runtime() else { return };
+    let n = 8;
+    let mk = |kind| {
+        let mut cfg = TrainConfig::test_tiny("mlp_small", n);
+        cfg.epochs = 3.0;
+        cfg.track_consensus = true;
+        (cfg, Algorithm::Sgp {
+            schedule: HybridSchedule::single(Schedule::new(kind, n)),
+        })
+    };
+    let (cfg_s, algo_s) = mk(TopologyKind::OnePeerExp);
+    let (cfg_d, algo_d) = mk(TopologyKind::Complete);
+    let sparse = run(&rt, cfg_s, algo_s);
+    let dense = run(&rt, cfg_d, algo_d);
+    let s_cons = sparse.evals.last().unwrap().consensus_mean;
+    let d_cons = dense.evals.last().unwrap().consensus_mean;
+    assert!(
+        d_cons < s_cons,
+        "dense consensus {d_cons} should beat sparse {s_cons}"
+    );
+    assert!(s_cons > 0.0);
+}
+
+#[test]
+fn adam_trains_the_tiny_transformer() {
+    let Some(rt) = runtime() else { return };
+    let n = 4;
+    let mut cfg = TrainConfig::test_tiny("lm_tiny", n);
+    cfg.optim = OptimKind::Adam;
+    cfg.lr = sgp::optim::LrSchedule::constant(3e-3);
+    cfg.epochs = 5.0;
+    cfg.steps_per_epoch = 8;
+    cfg.track_consensus = false;
+    let r = run(&rt, cfg, Algorithm::sgp_1peer(n));
+    let first = r.iters.first().unwrap().train_loss;
+    let last = r.final_train_loss();
+    assert!(last < first - 0.2, "LM loss {first} → {last}");
+}
+
+#[test]
+fn adpsgd_total_updates_match_sync_budget() {
+    let Some(rt) = runtime() else { return };
+    let n = 4;
+    let mut cfg = TrainConfig::test_tiny("mlp_small", n);
+    cfg.epochs = 2.0;
+    let total = cfg.total_iters();
+    let r = run(&rt, cfg, Algorithm::adpsgd(n));
+    // One IterRecord per node-update ⇒ n × total records.
+    assert_eq!(r.iters.len() as u64, total * n as u64);
+}
+
+#[test]
+fn run_results_write_csv_series() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig::test_tiny("mlp_small", 2);
+    let r = run(&rt, cfg, Algorithm::sgp_1peer(2));
+    let dir = std::env::temp_dir().join("sgp_it_csv");
+    r.write_csv(&dir).unwrap();
+    let iters = std::fs::read_to_string(dir.join(format!("{}_iters.csv", r.label))).unwrap();
+    assert!(iters.lines().count() > 5);
+    let evals = std::fs::read_to_string(dir.join(format!("{}_evals.csv", r.label))).unwrap();
+    assert!(evals.contains("consensus_mean"));
+}

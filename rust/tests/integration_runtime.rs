@@ -1,0 +1,235 @@
+//! Integration tests over the PJRT runtime: Rust ⇄ compiled-HLO agreement.
+//! Require `make artifacts` to have run (skipped otherwise).
+
+use sgp::data::Batch;
+use sgp::gossip::PushSumEngine;
+use sgp::model;
+use sgp::optim::Optimizer;
+use sgp::rng::Pcg;
+use sgp::runtime::Runtime;
+use sgp::topology::{Schedule, TopologyKind};
+
+fn runtime() -> Option<Runtime> {
+    let dir = model::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn mlp_batch(seed: u64, rt: &Runtime) -> Batch {
+    let m = &rt.manifest;
+    let b = m.model_cfg_usize("mlp_small", "batch").unwrap();
+    let in_dim = m.model_cfg_usize("mlp_small", "in_dim").unwrap();
+    let classes = m.model_cfg_usize("mlp_small", "classes").unwrap();
+    let mut rng = Pcg::new(seed);
+    Batch::Classif {
+        x: rng.gaussian_vec(b * in_dim),
+        y: (0..b).map(|_| rng.below(classes) as i32).collect(),
+        b,
+        in_dim,
+    }
+}
+
+#[test]
+fn train_step_returns_finite_loss_and_full_gradient() {
+    let Some(rt) = runtime() else { return };
+    let init = model::read_init(&rt.dir, &rt.manifest, "mlp_small").unwrap();
+    let (loss, grads) = rt.train_step("mlp_small", &init, &mlp_batch(1, &rt)).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    assert_eq!(grads.len(), init.len());
+    assert!(grads.iter().all(|g| g.is_finite()));
+    let nonzero = grads.iter().filter(|g| **g != 0.0).count();
+    assert!(nonzero > grads.len() / 2, "{nonzero} nonzero of {}", grads.len());
+}
+
+#[test]
+fn different_batches_give_different_gradients() {
+    let Some(rt) = runtime() else { return };
+    let init = model::read_init(&rt.dir, &rt.manifest, "mlp_small").unwrap();
+    let (_, g1) = rt.train_step("mlp_small", &init, &mlp_batch(1, &rt)).unwrap();
+    let (_, g2) = rt.train_step("mlp_small", &init, &mlp_batch(2, &rt)).unwrap();
+    assert!(g1.iter().zip(&g2).any(|(a, b)| (a - b).abs() > 1e-8));
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let init = model::read_init(&rt.dir, &rt.manifest, "mlp_small").unwrap();
+    let b = mlp_batch(3, &rt);
+    let (l1, g1) = rt.train_step("mlp_small", &init, &b).unwrap();
+    let (l2, g2) = rt.train_step("mlp_small", &init, &b).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn eval_step_metric_is_probability() {
+    let Some(rt) = runtime() else { return };
+    let init = model::read_init(&rt.dir, &rt.manifest, "mlp_small").unwrap();
+    let (loss, acc) = rt.eval_step("mlp_small", &init, &mlp_batch(4, &rt)).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc), "acc={acc}");
+}
+
+#[test]
+fn gradient_descent_through_runtime_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut params = model::read_init(&rt.dir, &rt.manifest, "mlp_small").unwrap();
+    let b = mlp_batch(5, &rt);
+    let (l0, _) = rt.train_step("mlp_small", &params, &b).unwrap();
+    for _ in 0..20 {
+        let (_, g) = rt.train_step("mlp_small", &params, &b).unwrap();
+        for (p, gi) in params.iter_mut().zip(&g) {
+            *p -= 0.1 * gi;
+        }
+    }
+    let (l1, _) = rt.train_step("mlp_small", &params, &b).unwrap();
+    assert!(l1 < l0 * 0.5, "loss {l0} → {l1}");
+}
+
+#[test]
+fn rust_nesterov_matches_pallas_fused_update() {
+    // The pure-Rust hot path and the L1 fused-update artifact must agree —
+    // this pins the optimizer semantics across the language boundary.
+    let Some(rt) = runtime() else { return };
+    let p = rt.manifest.artifact("update_sgdm_mlp_small").unwrap().param_count.unwrap();
+    let mut rng = Pcg::new(11);
+    let x0 = rng.gaussian_vec(p);
+    let g = rng.gaussian_vec(p);
+    let u0 = rng.gaussian_vec(p);
+    let lr = 0.07f32;
+
+    let (x_pjrt, u_pjrt) = rt
+        .update_sgdm("update_sgdm_mlp_small", &x0, &u0, &g, lr)
+        .unwrap();
+
+    let mut x_rust = x0.clone();
+    let mut opt = Optimizer::Nesterov { momentum: 0.9, weight_decay: 1e-4, u: u0 };
+    opt.step(&mut x_rust, &g, lr);
+
+    for (a, b) in x_rust.iter().zip(&x_pjrt) {
+        assert!((a - b).abs() < 1e-5, "x: rust={a} pjrt={b}");
+    }
+    if let Optimizer::Nesterov { u, .. } = &opt {
+        for (a, b) in u.iter().zip(&u_pjrt) {
+            assert!((a - b).abs() < 1e-5, "u: rust={a} pjrt={b}");
+        }
+    }
+}
+
+#[test]
+fn rust_adam_matches_pallas_fused_update() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.manifest.artifact("update_adam_mlp_small").unwrap().param_count.unwrap();
+    let mut rng = Pcg::new(13);
+    let x0 = rng.gaussian_vec(p);
+    let g = rng.gaussian_vec(p);
+    let m0 = rng.gaussian_vec(p);
+    let v0: Vec<f32> = rng.gaussian_vec(p).iter().map(|v| v.abs()).collect();
+    let lr = 1e-3f32;
+
+    // Rust path: replay 1 step with preloaded state at t=4.
+    let mut x_rust = x0.clone();
+    let mut opt = Optimizer::Adam {
+        beta1: 0.9,
+        beta2: 0.98,
+        eps: 1e-9,
+        m: m0.clone(),
+        v: v0.clone(),
+        t: 3, // step() will bump to 4
+    };
+    opt.step(&mut x_rust, &g, lr);
+
+    let (x_pjrt, m_pjrt, v_pjrt) = rt
+        .update_adam("update_adam_mlp_small", &x0, &m0, &v0, &g, lr, 4)
+        .unwrap();
+    for (a, b) in x_rust.iter().zip(&x_pjrt) {
+        assert!((a - b).abs() < 1e-5, "x: rust={a} pjrt={b}");
+    }
+    if let Optimizer::Adam { m, v, .. } = &opt {
+        for (a, b) in m.iter().zip(&m_pjrt) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in v.iter().zip(&v_pjrt) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn pallas_dense_gossip_matches_rust_engine() {
+    // One dense round through the MXU-tiled Pallas artifact must equal the
+    // Rust PushSum engine on the complete graph.
+    let Some(rt) = runtime() else { return };
+    let n = 16;
+    let meta = rt.manifest.artifact("gossip_dense_n16").unwrap();
+    let d = meta.d.unwrap();
+    let mut rng = Pcg::new(17);
+    let x: Vec<f32> = rng.gaussian_vec(n * d);
+    let w = vec![1.0f32; n];
+
+    let sched = Schedule::new(TopologyKind::Complete, n);
+    let p = sched.mixing_matrix(0);
+    let pf: Vec<f32> = (0..n * n).map(|i| p.at(i / n, i % n) as f32).collect();
+    let (x_pjrt, w_pjrt, z_pjrt) = rt.gossip_dense(n, &pf, &x, &w).unwrap();
+
+    let init: Vec<Vec<f32>> = (0..n).map(|i| x[i * d..(i + 1) * d].to_vec()).collect();
+    let mut eng = PushSumEngine::new(init, 0, false);
+    eng.step(0, &sched);
+
+    for i in 0..n {
+        assert!((eng.states[i].w - w_pjrt[i] as f64).abs() < 1e-5);
+        let z = eng.states[i].debiased();
+        for j in 0..d {
+            let a = eng.states[i].x[j];
+            let b = x_pjrt[i * d + j];
+            assert!((a - b).abs() < 1e-3, "x[{i},{j}]: rust={a} pjrt={b}");
+            let zz = z_pjrt[i * d + j];
+            assert!((z[j] - zz).abs() < 1e-3, "z[{i},{j}]: rust={} pjrt={zz}", z[j]);
+        }
+    }
+}
+
+#[test]
+fn lm_train_step_runs_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let mut params = model::read_init(&rt.dir, &rt.manifest, "lm_tiny").unwrap();
+    let b = rt.manifest.model_cfg_usize("lm_tiny", "batch").unwrap();
+    let seq = rt.manifest.model_cfg_usize("lm_tiny", "seq_len").unwrap();
+    let vocab = rt.manifest.model_cfg_usize("lm_tiny", "vocab").unwrap();
+    let mut rng = Pcg::new(19);
+    let batch = Batch::Tokens {
+        t: (0..b * (seq + 1)).map(|_| rng.below(vocab) as i32).collect(),
+        b,
+        seq,
+    };
+    let (l0, _) = rt.train_step("lm_tiny", &params, &batch).unwrap();
+    // Near-uniform init ⇒ loss ≈ ln(vocab) (+ ~σ²/2 from the out-proj
+    // logit variance).
+    assert!(l0 > (vocab as f32).ln() - 0.5 && l0 < (vocab as f32).ln() + 1.0, "l0={l0}");
+    for _ in 0..10 {
+        let (_, g) = rt.train_step("lm_tiny", &params, &batch).unwrap();
+        for (p, gi) in params.iter_mut().zip(&g) {
+            *p -= 0.5 * gi;
+        }
+    }
+    let (l1, _) = rt.train_step("lm_tiny", &params, &batch).unwrap();
+    assert!(l1 < l0, "loss {l0} → {l1}");
+}
+
+#[test]
+fn message_bytes_matches_param_count() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.manifest.model("mlp_small").unwrap().param_count;
+    assert_eq!(rt.message_bytes("mlp_small").unwrap(), p * 4 + 8);
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let e1 = rt.executable("train_mlp_small").unwrap();
+    let e2 = rt.executable("train_mlp_small").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&e1, &e2));
+}

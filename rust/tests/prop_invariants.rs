@@ -1,0 +1,335 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! The offline build has no proptest, so properties are checked with a
+//! seeded random-case generator (hundreds of cases per property,
+//! deterministic seeds, failing case printed via assert message) — same
+//! spirit: generate → check invariant → report the counterexample seed.
+
+use sgp::data::{Batch, BigramLm, Blobs};
+use sgp::gossip::PushSumEngine;
+use sgp::model::json::Json;
+use sgp::net::{CommPattern, ComputeModel, LinkModel, TimingSim};
+use sgp::rng::Pcg;
+use sgp::sim::EventQueue;
+use sgp::topology::{Schedule, TopologyKind};
+
+const KINDS: &[TopologyKind] = &[
+    TopologyKind::OnePeerExp,
+    TopologyKind::TwoPeerExp,
+    TopologyKind::Complete,
+    TopologyKind::CompleteCycling,
+    TopologyKind::RandomExp,
+    TopologyKind::RandomAny,
+    TopologyKind::Ring,
+    TopologyKind::BipartiteExp,
+];
+
+fn arb_n(rng: &mut Pcg) -> usize {
+    [2, 3, 4, 5, 8, 13, 16, 32][rng.below(8)]
+}
+
+#[test]
+fn prop_mixing_matrices_always_column_stochastic() {
+    for case in 0..300u64 {
+        let mut rng = Pcg::new(case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let k = rng.next_u64() % 1000;
+        let s = Schedule::with_seed(kind, n, case);
+        let p = s.mixing_matrix(k);
+        assert!(
+            p.is_column_stochastic(1e-12),
+            "case {case}: {kind:?} n={n} k={k} not column stochastic"
+        );
+    }
+}
+
+#[test]
+fn prop_one_peer_routing_balanced() {
+    // Every node sends exactly one message and receives exactly one, at
+    // every iteration, for every n (the paper's balanced-load claim).
+    for case in 0..200u64 {
+        let mut rng = Pcg::new(case);
+        let n = arb_n(&mut rng);
+        let s = Schedule::new(TopologyKind::OnePeerExp, n);
+        let k = rng.next_u64() % 64;
+        let mut recv = vec![0usize; n];
+        for i in 0..n {
+            let peers = s.out_peers(i, k);
+            assert_eq!(peers.len(), 1, "case {case}: node {i} sends {peers:?}");
+            assert_ne!(peers[0], i, "case {case}: self-send");
+            recv[peers[0]] += 1;
+        }
+        assert!(
+            recv.iter().all(|&r| r == 1),
+            "case {case}: n={n} k={k} recv={recv:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_pushsum_mass_conserved_under_any_schedule_and_delay() {
+    for case in 0..60u64 {
+        let mut rng = Pcg::new(1000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let d = 1 + rng.below(16);
+        let delay = rng.below(4) as u64;
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+        let mut eng = PushSumEngine::new(init, delay, false);
+        let (x0, w0) = eng.total_mass();
+        let s = Schedule::with_seed(kind, n, case);
+        for k in 0..30 {
+            eng.step(k, &s);
+        }
+        eng.drain();
+        let (x1, w1) = eng.total_mass();
+        for (a, b) in x0.iter().zip(&x1) {
+            assert!(
+                (a - b).abs() < 1e-2,
+                "case {case}: {kind:?} n={n} delay={delay}: x mass {a} → {b}"
+            );
+        }
+        assert!((w0 - w1).abs() < 1e-9, "case {case}: w mass {w0} → {w1}");
+    }
+}
+
+#[test]
+fn prop_pushsum_weights_positive_and_debias_finite() {
+    for case in 0..60u64 {
+        let mut rng = Pcg::new(2000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let delay = rng.below(3) as u64;
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(4)).collect();
+        let mut eng = PushSumEngine::new(init, delay, false);
+        let s = Schedule::with_seed(kind, n, case);
+        for k in 0..50 {
+            eng.step(k, &s);
+            for st in &eng.states {
+                assert!(st.w > 0.0, "case {case}: w={} at k={k}", st.w);
+                assert!(
+                    st.debiased().iter().all(|v| v.is_finite()),
+                    "case {case}: non-finite debias"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pushsum_converges_to_average_on_connected_schedules() {
+    // Strong-connectivity kinds must drive consensus error toward zero.
+    let kinds = [
+        TopologyKind::OnePeerExp,
+        TopologyKind::TwoPeerExp,
+        TopologyKind::Complete,
+        TopologyKind::CompleteCycling,
+        TopologyKind::Ring,
+    ];
+    for case in 0..40u64 {
+        let mut rng = Pcg::new(3000 + case);
+        let kind = kinds[rng.below(kinds.len())];
+        let n = [4usize, 8, 16][rng.below(3)];
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(8)).collect();
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let s = Schedule::with_seed(kind, n, case);
+        let before = eng.consensus_distance().0;
+        for k in 0..120 {
+            eng.step(k, &s);
+        }
+        let after = eng.consensus_distance().0;
+        // The ring's spectral gap is O(1/n²) — it contracts far more
+        // slowly than the exponential/complete families (that slowness is
+        // exactly Appendix A's point), so it gets a looser bound.
+        let tol = if kind == TopologyKind::Ring { 0.15 } else { 1e-2 };
+        assert!(
+            after < before * tol + 1e-5,
+            "case {case}: {kind:?} n={n}: {before} → {after}"
+        );
+    }
+}
+
+#[test]
+fn prop_osgp_staleness_bounded_by_tau() {
+    for case in 0..50u64 {
+        let mut rng = Pcg::new(4000 + case);
+        let n = arb_n(&mut rng);
+        let tau = 1 + rng.below(3) as u64;
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(4)).collect();
+        let mut eng = PushSumEngine::new(init, tau, false);
+        let s = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in 0..40 {
+            eng.step(k, &s);
+            assert!(
+                eng.max_staleness(k) <= tau,
+                "case {case}: staleness {} > τ={tau}",
+                eng.max_staleness(k)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_event_queue_causal_under_random_load() {
+    for case in 0..100u64 {
+        let mut rng = Pcg::new(5000 + case);
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut pending = 0usize;
+        let mut last = 0.0f64;
+        for _ in 0..200 {
+            if pending == 0 || rng.f64() < 0.6 {
+                let t = q.now() + rng.f64() * 10.0;
+                q.push(t, rng.next_u32());
+                pending += 1;
+            } else {
+                let ev = q.pop().unwrap();
+                assert!(
+                    ev.time >= last,
+                    "case {case}: time went backwards {last} → {}",
+                    ev.time
+                );
+                last = ev.time;
+                pending -= 1;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_timing_sim_clocks_monotone() {
+    for case in 0..60u64 {
+        let mut rng = Pcg::new(6000 + case);
+        let n = arb_n(&mut rng);
+        let link = if rng.f64() < 0.5 {
+            LinkModel::ethernet_10g()
+        } else {
+            LinkModel::infiniband_100g()
+        };
+        let compute =
+            ComputeModel { base_s: 0.1, jitter_sigma: 0.3, p_slow: 0.05, slow_factor: 4.0 };
+        let mut sim = TimingSim::new(n, link);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        let mut prev_t = vec![0.0; n];
+        let mut prev_makespan = 0.0;
+        for k in 0..50u64 {
+            let comp = compute.sample_all(n, &mut rng);
+            let pattern = match k % 3 {
+                0 => CommPattern::AllReduce { bytes: 1 << 20 },
+                1 => CommPattern::PushSum { schedule: &sched, bytes: 1 << 20, tau: 1 },
+                _ => CommPattern::Symmetric {
+                    schedule: &sched,
+                    bytes: 1 << 20,
+                    handshake: 2.0,
+                },
+            };
+            let makespan = sim.advance(&pattern, &comp);
+            for (i, (&a, &b)) in prev_t.iter().zip(&sim.t).enumerate() {
+                assert!(b >= a, "case {case}: node {i} clock {a} → {b}");
+            }
+            assert!(makespan >= prev_makespan, "case {case}: makespan shrank");
+            prev_t = sim.t.clone();
+            prev_makespan = makespan;
+        }
+    }
+}
+
+#[test]
+fn prop_union_graph_strongly_connected_over_cycle() {
+    for n in [2usize, 4, 5, 8, 11, 16, 32] {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::TwoPeerExp] {
+            let s = Schedule::new(kind, n);
+            let b = s.cycle_len() as u64;
+            assert!(
+                s.union_reachable(0, b.max(1)),
+                "{kind:?} n={n} union over cycle not strongly connected"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_data_batches_deterministic_and_well_shaped() {
+    for case in 0..80u64 {
+        let mut rng = Pcg::new(7000 + case);
+        let n = arb_n(&mut rng);
+        let h = rng.f64();
+        let blobs = Blobs::new(
+            1 + rng.below(32),
+            2 + rng.below(12),
+            1 + rng.below(64),
+            n,
+            h,
+            case,
+        );
+        let node = rng.below(n);
+        let step = rng.next_u64() % 1000;
+        match (blobs.train_batch(node, step), blobs.train_batch(node, step)) {
+            (
+                Batch::Classif { x: x1, y: y1, b, in_dim },
+                Batch::Classif { x: x2, y: y2, .. },
+            ) => {
+                assert_eq!(x1, x2, "case {case}");
+                assert_eq!(y1, y2);
+                assert_eq!(x1.len(), b * in_dim);
+                assert!(x1.iter().all(|v| v.is_finite()));
+            }
+            _ => panic!("wrong batch type"),
+        }
+        let vocab = 8 + rng.below(120);
+        let lm = BigramLm::new(vocab, 1 + rng.below(32), 1 + rng.below(8), n, h, case);
+        match lm.train_batch(node, step) {
+            Batch::Tokens { t, b, seq } => {
+                assert_eq!(t.len(), b * (seq + 1), "case {case}");
+                assert!(t.iter().all(|&v| v >= 0 && (v as usize) < vocab));
+            }
+            _ => panic!("wrong batch type"),
+        }
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    for case in 0..500u64 {
+        let mut rng = Pcg::new(8000 + case);
+        let len = rng.below(64);
+        let charset = br#"{}[]",:0123456789.truefalsn\ e-"#;
+        let s: String = (0..len)
+            .map(|_| charset[rng.below(charset.len())] as char)
+            .collect();
+        let _ = Json::parse(&s); // must return Ok or Err, never panic
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_numbers() {
+    for case in 0..200u64 {
+        let mut rng = Pcg::new(9000 + case);
+        let v = (rng.f64() - 0.5) * 1e6;
+        let s = format!("{v}");
+        let parsed = Json::parse(&s).unwrap();
+        assert!((parsed.as_f64().unwrap() - v).abs() < 1e-9 * v.abs().max(1.0));
+    }
+}
+
+#[test]
+fn prop_symmetric_schedule_keeps_pushsum_weights_at_one() {
+    // D-PSGD-as-PushSum: under the bipartite symmetric schedule the mixing
+    // is doubly stochastic, so w ≡ 1 forever (the SGP ⊇ D-PSGD claim).
+    for n in [2usize, 4, 8, 16, 32] {
+        let mut rng = Pcg::new(n as u64);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(4)).collect();
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let s = Schedule::new(TopologyKind::BipartiteExp, n);
+        for k in 0..40 {
+            eng.step(k, &s);
+            for st in &eng.states {
+                assert!(
+                    (st.w - 1.0).abs() < 1e-9,
+                    "n={n} k={k}: w={} drifted",
+                    st.w
+                );
+            }
+        }
+    }
+}

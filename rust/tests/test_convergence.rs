@@ -1,0 +1,124 @@
+//! Theorem 1 & 2 sanity tests: SGP on synthetic smooth objectives, pure
+//! Rust (no artifacts needed). These check the *trends* the theory
+//! guarantees — O(1/√(nK)) stationarity of the node-wise average and
+//! vanishing consensus error — not the constants.
+
+use sgp::gossip::PushSumEngine;
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+/// Run SGP on node-local least squares fᵢ(x)=½‖x−cᵢ‖² (global optimum =
+/// mean of the cᵢ) with gradient noise; return (‖x̄−x*‖, consensus error).
+fn run_sgp_quadratic(
+    n: usize,
+    iters: u64,
+    tau: u64,
+    biased: bool,
+    noise: f32,
+    seed: u64,
+) -> (f64, f64) {
+    let d = 16;
+    let mut rng = Pcg::new(seed);
+    let centers: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+    let mut opt = vec![0.0f64; d];
+    for c in &centers {
+        for (o, v) in opt.iter_mut().zip(c) {
+            *o += *v as f64 / n as f64;
+        }
+    }
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+    let mut eng = PushSumEngine::new(init, tau, biased);
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    // Theorem 1 step size γ = √(n/K), clamped for stability at small K.
+    let gamma = ((n as f64 / iters as f64).sqrt()).min(0.25) as f32;
+    for k in 0..iters {
+        for i in 0..n {
+            let z = eng.states[i].debiased();
+            for (j, x) in eng.states[i].x.iter_mut().enumerate() {
+                let g = z[j] - centers[i][j] + noise * rng.gaussian() as f32;
+                *x -= gamma * g;
+            }
+        }
+        eng.step(k, &sched);
+    }
+    eng.drain();
+    let mean = eng.mean_x();
+    let err: f64 = mean
+        .iter()
+        .zip(&opt)
+        .map(|(m, o)| {
+            let e = *m as f64 - o;
+            e * e
+        })
+        .sum::<f64>()
+        .sqrt();
+    (err, eng.consensus_distance().0)
+}
+
+#[test]
+fn sgp_average_converges_to_stationary_point() {
+    let (err, _) = run_sgp_quadratic(8, 2000, 0, false, 0.1, 1);
+    assert!(err < 0.05, "‖x̄ − x*‖ = {err}");
+}
+
+#[test]
+fn consensus_error_scales_with_step_size() {
+    // Lemma 3 / Fig. 2: the consensus neighbourhood is ∝ γ. At the
+    // Theorem-1 operating point γ = √(n/K), quadrupling K halves γ and
+    // should (roughly) halve the consensus error.
+    let (_, cons_short) = run_sgp_quadratic(8, 500, 0, false, 0.1, 2);
+    let (_, cons_long) = run_sgp_quadratic(8, 8000, 0, false, 0.1, 2);
+    assert!(
+        cons_long < cons_short * 0.55,
+        "consensus {cons_short} → {cons_long} did not shrink with γ"
+    );
+    assert!(cons_long < 0.25, "consensus error = {cons_long}");
+}
+
+#[test]
+fn more_iterations_improve_stationarity() {
+    // Theorem 1: error at the γ=√(n/K) operating point shrinks with K.
+    let (err_short, _) = run_sgp_quadratic(8, 200, 0, false, 0.2, 3);
+    let (err_long, _) = run_sgp_quadratic(8, 5000, 0, false, 0.2, 3);
+    assert!(
+        err_long < err_short * 0.6,
+        "short={err_short} long={err_long}"
+    );
+}
+
+#[test]
+fn overlap_delays_still_converge() {
+    // Theorem 1 holds under bounded delays (τ-OSGP).
+    for tau in [1u64, 2, 3] {
+        let (err, cons) = run_sgp_quadratic(8, 3000, tau, false, 0.1, 4);
+        assert!(err < 0.15, "τ={tau}: err={err}");
+        assert!(cons < 0.4, "τ={tau}: consensus={cons}");
+    }
+}
+
+#[test]
+fn biased_overlap_converges_to_wrong_point() {
+    // Table 4's mechanism: dropping the push-sum weight biases the fixed
+    // point; the unbiased variant must be strictly more accurate.
+    let (err_unbiased, _) = run_sgp_quadratic(8, 3000, 1, false, 0.05, 5);
+    let (err_biased, _) = run_sgp_quadratic(8, 3000, 1, true, 0.05, 5);
+    assert!(
+        err_biased > 2.0 * err_unbiased,
+        "biased={err_biased} unbiased={err_unbiased}"
+    );
+}
+
+#[test]
+fn heterogeneous_noise_still_reaches_consensus() {
+    // ζ² > 0 (different cᵢ per node) is the default above; crank noise.
+    let (err, cons) = run_sgp_quadratic(16, 4000, 0, false, 0.5, 6);
+    assert!(err < 0.3, "err={err}");
+    assert!(cons < 0.5, "consensus={cons}");
+}
+
+#[test]
+fn larger_networks_converge_too() {
+    let (err, cons) = run_sgp_quadratic(32, 3000, 0, false, 0.1, 7);
+    assert!(err < 0.2, "err={err}");
+    assert!(cons < 0.6, "cons={cons}");
+}
