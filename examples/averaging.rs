@@ -11,8 +11,10 @@
 
 use anyhow::Result;
 
-use sgp::gossip::PushSumEngine;
+use sgp::algorithms::{AlgoParams, DistributedAlgorithm, RoundCtx, Sgp};
 use sgp::metrics::print_table;
+use sgp::net::LinkModel;
+use sgp::optim::OptimKind;
 use sgp::rng::Pcg;
 use sgp::runtime::Runtime;
 use sgp::topology::{spectral, Schedule, TopologyKind};
@@ -95,17 +97,25 @@ fn main() -> Result<()> {
         &rows,
     );
 
-    // --- 3. in-process engine (sanity: matches the artifact path) ---------
-    let mut eng = PushSumEngine::new(
-        (0..n).map(|i| x0[i * d..(i + 1) * d].to_vec()).collect(),
-        0,
-        false,
-    );
-    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
-    for k in 0..5 {
-        eng.step(k, &sched);
+    // --- 3. the strategy trait (sanity: matches the artifact path) --------
+    // Drive pure averaging through the `DistributedAlgorithm` API the
+    // trainer uses: perturb the nodes apart with one fake gradient, then
+    // let SGP's communicate() rounds pull them back into consensus.
+    let params = AlgoParams::new(n, vec![0.0f32; d], OptimKind::Sgd);
+    let mut alg = Sgp::with_topology(TopologyKind::OnePeerExp, &params);
+    for i in 0..n {
+        let g: Vec<f32> = x0[i * d..(i + 1) * d].iter().map(|v| -v).collect();
+        alg.apply_step(i, &g, 1.0); // x_i ← x0 slice (SGD, lr=1)
     }
-    let (mean_dist, _, _) = eng.consensus_distance();
-    println!("\nin-process engine after 5 exp-graph rounds: mean ‖zᵢ−x̄‖ = {mean_dist:.2e}");
+    let link = LinkModel::ethernet_10g();
+    let comp = vec![0.1f64; n];
+    for k in 0..5 {
+        let ctx = RoundCtx { k, comp: &comp, msg_bytes: 4 * d, link: &link };
+        alg.communicate(&ctx);
+    }
+    let (mean_dist, _, _) = alg.consensus_stats();
+    println!(
+        "\nDistributedAlgorithm trait after 5 exp-graph rounds: mean ‖zᵢ−x̄‖ = {mean_dist:.2e}"
+    );
     Ok(())
 }

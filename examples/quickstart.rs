@@ -13,9 +13,8 @@
 
 use anyhow::Result;
 
-use sgp::algorithms::Algorithm;
 use sgp::config::TrainConfig;
-use sgp::coordinator::Trainer;
+use sgp::coordinator::TrainerBuilder;
 use sgp::runtime::Runtime;
 
 fn main() -> Result<()> {
@@ -27,7 +26,9 @@ fn main() -> Result<()> {
     cfg.steps_per_epoch = 16;
     cfg.eval_every_epochs = 2.0;
 
-    let trainer = Trainer::new(&rt, cfg, Algorithm::sgp_1peer(nodes))?;
+    // Strategies are picked by registry name; swap "sgp" for any of
+    // `sgp::algorithms::names()` (ar-sgd, dpsgd, adpsgd, dasgd, …).
+    let mut trainer = TrainerBuilder::new(&rt).config(cfg).algorithm("sgp").build()?;
     let result = trainer.run()?;
 
     println!("\nepoch   train-loss   val-acc   consensus-dist   sim-time");

@@ -7,9 +7,8 @@
 
 use anyhow::Result;
 
-use sgp::algorithms::Algorithm;
 use sgp::config::TrainConfig;
-use sgp::coordinator::Trainer;
+use sgp::coordinator::TrainerBuilder;
 use sgp::experiments::results_dir;
 use sgp::metrics::{hours, print_table};
 use sgp::runtime::Runtime;
@@ -28,17 +27,24 @@ fn main() -> Result<()> {
         cfg
     };
 
+    // The algorithm grid is a list of registry names — adding a method to
+    // this sweep is one string (see `sgp::algorithms::REGISTRY`).
     let grid = vec![
-        ("AR-SGD", Algorithm::ArSgd),
-        ("D-PSGD", Algorithm::dpsgd(nodes)),
-        ("SGP", Algorithm::sgp_1peer(nodes)),
-        ("1-OSGP", Algorithm::osgp_1peer(nodes, 1)),
+        ("AR-SGD", "ar-sgd"),
+        ("D-PSGD", "dpsgd"),
+        ("SGP", "sgp"),
+        ("1-OSGP", "osgp"),
     ];
 
     let mut rows = Vec::new();
     for (name, algo) in grid {
         eprintln!("[{name}] {} iters × {nodes} nodes", mk().total_iters());
-        let r = Trainer::new(&rt, mk(), algo)?.run()?;
+        let r = TrainerBuilder::new(&rt)
+            .config(mk())
+            .algorithm(algo)
+            .tau(1)
+            .build()?
+            .run()?;
         r.write_csv(&results_dir())?;
         rows.push(vec![
             name.to_string(),

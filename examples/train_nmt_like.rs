@@ -12,9 +12,8 @@
 
 use anyhow::Result;
 
-use sgp::algorithms::Algorithm;
 use sgp::config::TrainConfig;
-use sgp::coordinator::Trainer;
+use sgp::coordinator::TrainerBuilder;
 use sgp::experiments::results_dir;
 use sgp::optim::{LrSchedule, OptimKind};
 use sgp::runtime::Runtime;
@@ -37,12 +36,10 @@ fn main() -> Result<()> {
     };
 
     let mut rows = Vec::new();
-    for (name, algo) in [
-        ("SGP-Adam", Algorithm::sgp_1peer(nodes)),
-        ("AR-Adam", Algorithm::ArSgd),
-    ] {
+    for (name, algo) in [("SGP-Adam", "sgp"), ("AR-Adam", "ar-sgd")] {
         println!("\n=== {name}: {} steps ===", mk().total_iters());
-        let trainer = Trainer::new(&rt, mk(), algo)?;
+        let mut trainer =
+            TrainerBuilder::new(&rt).config(mk()).algorithm(algo).build()?;
         let r = trainer.run()?;
         r.write_csv(&results_dir())?;
         println!("epoch   val-NLL   val-ppl   sim-time");

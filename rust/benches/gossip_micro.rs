@@ -4,8 +4,11 @@
 //! This is the L3 cost that must stay off the critical path relative to
 //! gradient compute (see EXPERIMENTS.md §Perf).
 
+use sgp::algorithms::{AlgoParams, DistributedAlgorithm, RoundCtx, Sgp};
 use sgp::benchkit::{bench, black_box, section};
 use sgp::gossip::PushSumEngine;
+use sgp::net::LinkModel;
+use sgp::optim::OptimKind;
 use sgp::rng::Pcg;
 use sgp::topology::{Schedule, TopologyKind};
 
@@ -44,6 +47,36 @@ fn main() {
         eng.step(k, &sched1);
         k += 1;
     });
+
+    section("dispatch overhead: direct engine step vs boxed DistributedAlgorithm");
+    // The trait indirection must cost ~nothing next to the O(n·dim) gossip
+    // work: identical PushSum math, once called directly and once through
+    // a `Box<dyn DistributedAlgorithm>` vtable (incl. the schedule clone
+    // the owned timing pattern carries).
+    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+        let n = 16;
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        let mut eng = engine(n, dim, 0);
+        let mut k = 0u64;
+        bench(&format!("dispatch/direct-engine/{tag}/n{n}"), || {
+            eng.step(k, &sched);
+            k += 1;
+        });
+
+        let mut rng = Pcg::new(1);
+        let mut params = AlgoParams::new(n, rng.gaussian_vec(dim), OptimKind::Sgd);
+        params.seed = 0;
+        let mut alg: Box<dyn DistributedAlgorithm> =
+            Box::new(Sgp::with_topology(TopologyKind::OnePeerExp, &params));
+        let link = LinkModel::ethernet_10g();
+        let comp = vec![0.1f64; n];
+        let mut k = 0u64;
+        bench(&format!("dispatch/boxed-trait/{tag}/n{n}"), || {
+            let ctx = RoundCtx { k, comp: &comp, msg_bytes: 4 * dim, link: &link };
+            black_box(alg.communicate(&ctx));
+            k += 1;
+        });
+    }
 
     section("debias + statistics");
     let eng = engine(16, 923_904, 0);

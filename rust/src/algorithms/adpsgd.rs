@@ -1,0 +1,197 @@
+//! Asynchronous D-PSGD (Lian et al., 2018) as a strategy driven by the
+//! discrete-event queue.
+//!
+//! Staleness semantics per node update, exactly as in the paper: the
+//! gradient is computed on a snapshot (here: the round-start view the
+//! coordinator evaluates at), a pairwise average with a uniformly random
+//! peer happens atomically, and only then is the stale gradient applied.
+//! Within every round the [`crate::sim::EventQueue`] orders the n updates
+//! by each node's cumulative simulated clock — stragglers genuinely fall
+//! behind and their averages/updates land later in the sequence —
+//! while the per-node update budget stays equal to the synchronous
+//! algorithms' (one gradient per node per round), keeping runs comparable.
+//!
+//! Timing is barrier-free: each node's clock advances by its own compute
+//! plus half a point-to-point message (the partially-overlapped averaging
+//! thread of Lian et al., App. C), reported as
+//! [`OwnedCommPattern::Async`].
+
+use anyhow::{bail, Result};
+
+use crate::net::OwnedCommPattern;
+use crate::optim::Optimizer;
+use crate::rng::Pcg;
+use crate::sim::EventQueue;
+
+use super::{consensus_of, AlgoParams, DistributedAlgorithm, RoundCtx};
+
+pub struct AdPsgd {
+    params: Vec<Vec<f32>>,
+    opts: Vec<Optimizer>,
+    /// Gradient handed over this round, applied stale at event-pop time.
+    pending: Vec<Option<(Vec<f32>, f32)>>,
+    /// Cumulative simulated completion clock per node.
+    clock: Vec<f64>,
+    rng: Pcg,
+}
+
+impl AdPsgd {
+    pub fn new(p: &AlgoParams) -> Self {
+        Self {
+            params: vec![p.init.clone(); p.n],
+            opts: (0..p.n).map(|_| Optimizer::new(p.optim, p.init.len())).collect(),
+            pending: (0..p.n).map(|_| None).collect(),
+            clock: vec![0.0; p.n],
+            rng: Pcg::new(p.seed ^ 0xad95),
+        }
+    }
+}
+
+pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
+    if p.topology.is_some() {
+        bail!(
+            "adpsgd pairs peers uniformly at random (Lian et al., 2018); \
+             a topology override is not supported"
+        );
+    }
+    Ok(Box::new(AdPsgd::new(p)))
+}
+
+impl DistributedAlgorithm for AdPsgd {
+    fn name(&self) -> String {
+        "AD-PSGD".into()
+    }
+
+    fn n(&self) -> usize {
+        self.params.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.params[0].len()
+    }
+
+    fn local_view(&self, i: usize, out: &mut [f32]) {
+        // The snapshot the stale gradient is computed on.
+        out.copy_from_slice(&self.params[i]);
+    }
+
+    fn apply_step(&mut self, i: usize, grad: &[f32], lr: f32) {
+        // Deferred: applied after this round's pairwise average, in event
+        // order (the AD-PSGD staleness semantics).
+        self.pending[i] = Some((grad.to_vec(), lr));
+    }
+
+    fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
+        let n = self.params.len();
+        let overhead = 0.5 * ctx.link.ptp_time(ctx.msg_bytes);
+        // Order this round's n updates by cumulative completion time.
+        let mut queue: EventQueue<usize> = EventQueue::new();
+        for i in 0..n {
+            self.clock[i] += ctx.comp[i] + overhead;
+            queue.push(self.clock[i], i);
+        }
+        while let Some(ev) = queue.pop() {
+            let i = ev.payload;
+            // Pairwise average with a uniformly random peer (atomic in the
+            // shared-memory model).
+            if n > 1 {
+                let mut j = self.rng.below(n - 1);
+                if j >= i {
+                    j += 1;
+                }
+                let (a, b) = if i < j {
+                    let (l, r) = self.params.split_at_mut(j);
+                    (&mut l[i], &mut r[0])
+                } else {
+                    let (l, r) = self.params.split_at_mut(i);
+                    (&mut r[0], &mut l[j])
+                };
+                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                    let m = 0.5 * (*x + *y);
+                    *x = m;
+                    *y = m;
+                }
+            }
+            // Apply the stale gradient computed on the round-start snapshot.
+            if let Some((g, lr)) = self.pending[i].take() {
+                self.opts[i].step(&mut self.params[i], &g, lr);
+            }
+        }
+        OwnedCommPattern::Async { overhead_s: overhead }
+    }
+
+    fn consensus_stats(&self) -> (f64, f64, f64) {
+        consensus_of(&self.params)
+    }
+
+    fn drain(&mut self) {
+        // Apply any gradient not yet flushed by a communicate() call.
+        for i in 0..self.params.len() {
+            if let Some((g, lr)) = self.pending[i].take() {
+                self.opts[i].step(&mut self.params[i], &g, lr);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkModel;
+    use crate::optim::OptimKind;
+
+    fn ctx<'a>(
+        k: u64,
+        comp: &'a [f64],
+        link: &'a LinkModel,
+    ) -> RoundCtx<'a> {
+        RoundCtx { k, comp, msg_bytes: 1 << 10, link }
+    }
+
+    #[test]
+    fn gradients_apply_stale_after_averaging() {
+        // Two nodes, opposite params, zero gradients: one round of pairwise
+        // averaging must bring both to the mean.
+        let p = AlgoParams::new(2, vec![0.0f32; 2], OptimKind::Sgd);
+        let mut alg = AdPsgd::new(&p);
+        alg.params[0] = vec![1.0, 1.0];
+        alg.params[1] = vec![-1.0, -1.0];
+        alg.apply_step(0, &[0.0, 0.0], 0.1);
+        alg.apply_step(1, &[0.0, 0.0], 0.1);
+        let link = LinkModel::ethernet_10g();
+        let comp = [0.1, 0.2];
+        let pat = alg.communicate(&ctx(0, &comp, &link));
+        assert!(matches!(pat, OwnedCommPattern::Async { .. }));
+        for v in &alg.params {
+            assert!(v.iter().all(|x| x.abs() < 1e-6), "{v:?}");
+        }
+        assert!(alg.consensus_stats().0 < 1e-9);
+    }
+
+    #[test]
+    fn stragglers_fall_behind_in_event_order() {
+        let p = AlgoParams::new(4, vec![0.0f32; 2], OptimKind::Sgd);
+        let mut alg = AdPsgd::new(&p);
+        let link = LinkModel::ethernet_10g();
+        for k in 0..3 {
+            for i in 0..4 {
+                alg.apply_step(i, &[1.0, 1.0], 0.01);
+            }
+            let comp = [0.1, 0.1, 0.1, 2.0];
+            alg.communicate(&ctx(k, &comp, &link));
+        }
+        // The straggler's cumulative clock trails the fast nodes.
+        assert!(alg.clock[3] > alg.clock[0] * 2.0);
+        // Every gradient was consumed.
+        assert!(alg.pending.iter().all(|p| p.is_none()));
+    }
+
+    #[test]
+    fn drain_flushes_unapplied_gradients() {
+        let p = AlgoParams::new(2, vec![0.0f32; 1], OptimKind::Sgd);
+        let mut alg = AdPsgd::new(&p);
+        alg.apply_step(0, &[1.0], 0.1);
+        alg.drain();
+        assert!((alg.params[0][0] + 0.1).abs() < 1e-6);
+    }
+}

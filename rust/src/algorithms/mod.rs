@@ -1,160 +1,342 @@
-//! The distributed-training algorithms compared in the paper.
+//! Pluggable distributed-training strategies: the paper's algorithms as
+//! interchangeable implementations of one node-centric trait.
 //!
-//! * [`Algorithm::ArSgd`] — AllReduce parallel SGD (Goyal et al., 2017):
-//!   exact gradient averaging behind a global barrier.
-//! * [`Algorithm::Sgp`] — Stochastic Gradient Push (this paper, Alg. 1):
-//!   one local optimizer step interleaved with one PushSum gossip step
-//!   over a column-stochastic (possibly directed/time-varying) schedule.
-//! * [`Algorithm::Osgp`] — τ-Overlap SGP (Alg. 2): non-blocking sends,
-//!   messages consumed with ≤ τ iterations of staleness; `biased = true`
-//!   reproduces the Table-4 ablation that drops the push-sum weight.
-//! * [`Algorithm::DPsgd`] — Decentralized parallel SGD (Lian et al., 2017):
-//!   symmetric doubly-stochastic gossip (pairwise exchanges).
-//! * [`Algorithm::AdPsgd`] — Asynchronous D-PSGD (Lian et al., 2018):
-//!   event-driven pairwise averaging with stale gradients.
+//! The paper's core observation is that PushSum-style gossip is one point
+//! in a *family* of communication strategies. This module encodes that
+//! family as the [`DistributedAlgorithm`] trait — one object owning the
+//! full per-node state (parameters, push-sum weights, optimizer slots,
+//! in-flight messages) — with one implementation per strategy:
 //!
-//! Equivalences encoded here and checked in integration tests:
+//! * [`arsgd::ArSgd`] — AllReduce parallel SGD (Goyal et al., 2017): a
+//!   replicated state with complete mixing every round.
+//! * [`sgp::Sgp`] — Stochastic Gradient Push (this paper, Alg. 1), over
+//!   any column-stochastic (possibly hybrid/time-varying) schedule.
+//! * [`osgp::Osgp`] — τ-Overlap SGP (Alg. 2); `biased = true` reproduces
+//!   the Table-4 ablation that drops the push-sum weight.
+//! * [`dpsgd::DPsgd`] — Decentralized parallel SGD (Lian et al., 2017):
+//!   symmetric doubly-stochastic gossip.
+//! * [`adpsgd::AdPsgd`] — Asynchronous D-PSGD (Lian et al., 2018):
+//!   event-queue-ordered pairwise averaging with stale gradients.
+//! * [`dasgd::DaSgd`] — DaSGD-style delayed averaging (Zhou et al., 2020):
+//!   gradients applied after a fixed delay of communication rounds, on top
+//!   of the τ-delayed gossip machinery.
+//!
+//! Equivalences encoded here and checked in `rust/tests/trait_equivalences.rs`:
 //! SGP ≡ AR-SGD when the mixing matrix is (1/n)·11ᵀ and nodes start equal;
 //! SGP ≡ D-PSGD under a static symmetric doubly-stochastic schedule
 //! (the push-sum weights stay ≡ 1).
+//!
+//! # Adding an algorithm
+//!
+//! Write a struct holding your per-node states, implement
+//! [`DistributedAlgorithm`], and append one [`AlgorithmSpec`] to
+//! [`REGISTRY`]. The coordinator loop, CLI, experiment drivers, and
+//! examples all resolve strategies through [`build`] by name — no other
+//! file needs to change. `dasgd.rs` is the worked example (see DESIGN.md).
 
-use crate::topology::{HybridSchedule, Schedule, TopologyKind};
+pub mod adpsgd;
+pub mod arsgd;
+pub mod dasgd;
+pub mod dpsgd;
+pub mod osgp;
+pub mod sgp;
 
+pub use adpsgd::AdPsgd;
+pub use arsgd::ArSgd;
+pub use dasgd::DaSgd;
+pub use dpsgd::DPsgd;
+pub use osgp::Osgp;
+pub use sgp::Sgp;
+
+use anyhow::{bail, Result};
+
+use crate::collectives;
+use crate::net::{LinkModel, OwnedCommPattern};
+use crate::optim::OptimKind;
+use crate::topology::TopologyKind;
+
+/// Everything a strategy sees about round `k` when it communicates.
+pub struct RoundCtx<'a> {
+    /// Round (iteration) index.
+    pub k: u64,
+    /// Sampled compute seconds per node for this round — the same samples
+    /// the timing simulator advances with, so event-driven strategies
+    /// order their updates consistently with the simulated clocks.
+    pub comp: &'a [f64],
+    /// Bytes one parameter message carries over the simulated network.
+    pub msg_bytes: usize,
+    /// The simulated fabric (for strategies that derive their own costs,
+    /// e.g. AD-PSGD's partially-overlapped averaging thread).
+    pub link: &'a LinkModel,
+}
+
+/// Consensus statistics `(mean, min, max)` over nodes of ‖v_i − v̄‖₂ for a
+/// set of per-node parameter views — shared by strategies that do not keep
+/// a push-sum engine.
+pub(crate) fn consensus_of(views: &[Vec<f32>]) -> (f64, f64, f64) {
+    let mean = collectives::mean_of(views);
+    let mut dists = Vec::with_capacity(views.len());
+    for v in views {
+        let d: f64 = v
+            .iter()
+            .zip(&mean)
+            .map(|(a, b)| {
+                let e = (a - b) as f64;
+                e * e
+            })
+            .sum();
+        dists.push(d.sqrt());
+    }
+    let sum: f64 = dists.iter().sum();
+    let min = dists.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = dists.iter().cloned().fold(0.0, f64::max);
+    (sum / views.len().max(1) as f64, min, max)
+}
+
+/// One distributed-training strategy: the node-centric state plus the four
+/// verbs the coordinator loop speaks. The loop is strategy-agnostic; all
+/// per-algorithm behaviour lives behind this trait.
+///
+/// Per synchronous round `k` the coordinator calls, in order:
+/// 1. [`local_view`](Self::local_view) for each node — the de-biased
+///    parameters `z_i` the gradient is evaluated at;
+/// 2. [`apply_step`](Self::apply_step) for each node — hand the local
+///    gradient to the node's own optimizer slot (strategies may defer or
+///    re-route the application, e.g. delayed or stale updates);
+/// 3. [`communicate`](Self::communicate) once — run the round's exchange
+///    and return the timing pattern for the network simulator.
+pub trait DistributedAlgorithm {
+    /// Paper-style display name (used for run labels and tables).
+    fn name(&self) -> String;
+
+    /// Number of logical nodes.
+    fn n(&self) -> usize;
+
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Write node `i`'s de-biased parameter view `z_i` into `out`.
+    fn local_view(&self, i: usize, out: &mut [f32]);
+
+    /// Hand node `i` its local gradient for this round at step size `lr`.
+    fn apply_step(&mut self, i: usize, grad: &[f32], lr: f32);
+
+    /// Run round-`k` communication; return the pattern the timing
+    /// simulator should charge for it.
+    fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern;
+
+    /// Node `i`'s de-biased parameters as a fresh vector (evaluation).
+    fn node_view(&self, i: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.dim()];
+        self.local_view(i, &mut v);
+        v
+    }
+
+    /// Network average of the de-biased parameters (the consensus model
+    /// that tables evaluate).
+    fn average(&self) -> Vec<f32> {
+        let zs: Vec<Vec<f32>> = (0..self.n()).map(|i| self.node_view(i)).collect();
+        collectives::mean_of(&zs)
+    }
+
+    /// Consensus statistics `(mean, min, max)` over nodes of ‖z_i − x̄‖₂
+    /// (Fig. 2). Exact strategies return zeros.
+    fn consensus_stats(&self) -> (f64, f64, f64);
+
+    /// Whether every node's view is identical by construction (exact
+    /// averaging). The coordinator skips per-node evaluation spreads for
+    /// exact strategies.
+    fn is_exact(&self) -> bool {
+        false
+    }
+
+    /// Flush in-flight state (delayed messages, deferred gradients) at the
+    /// end of a run so no mass or update is stranded.
+    fn drain(&mut self);
+}
+
+/// Constructor parameters shared by every registered strategy. Built by
+/// [`crate::coordinator::TrainerBuilder`]; also usable directly in tests.
 #[derive(Clone, Debug)]
-pub enum Algorithm {
-    /// Exact averaging every iteration (the synchronous baseline).
-    ArSgd,
-    /// PushSum gossip over `schedule` (possibly hybrid, Table 3).
-    Sgp { schedule: HybridSchedule },
-    /// Overlap SGP with delay bound `tau` (≥1); `biased` drops the weight.
-    Osgp { schedule: HybridSchedule, tau: u64, biased: bool },
-    /// Symmetric gossip baseline.
-    DPsgd { schedule: Schedule },
-    /// Asynchronous gossip baseline (event-driven).
-    AdPsgd { schedule: Schedule },
+pub struct AlgoParams {
+    pub n: usize,
+    /// Initial parameters, replicated to every node.
+    pub init: Vec<f32>,
+    pub optim: OptimKind,
+    /// Overlap delay τ (OSGP / DaSGD communication staleness).
+    pub tau: u64,
+    /// Gradient-application delay in rounds (DaSGD).
+    pub grad_delay: u64,
+    /// Iteration at which two-phase hybrid schedules switch. Note the
+    /// default of 0 starts the *second* phase immediately (no dense
+    /// warm-up); [`crate::coordinator::TrainerBuilder`] replaces it with a
+    /// third of the run, the paper's epoch-30-of-90 protocol.
+    pub switch_at: u64,
+    /// Seed for randomized schedules / event ordering.
+    pub seed: u64,
+    /// Override the strategy's default gossip topology (e.g. dense SGP for
+    /// Fig. 2). `None` keeps each strategy's paper default.
+    pub topology: Option<TopologyKind>,
 }
 
-impl Algorithm {
-    /// Paper-style display name.
-    pub fn name(&self) -> String {
-        match self {
-            Algorithm::ArSgd => "AR-SGD".into(),
-            Algorithm::Sgp { schedule } => {
-                let s = &schedule.phases[0].1;
-                if schedule.phases.len() > 1 {
-                    let s2 = &schedule.phases[1].1;
-                    format!("{}/{}-SGP", phase_tag(s.kind), phase_tag(s2.kind))
-                } else {
-                    format!("{}-SGP", phase_tag(s.kind))
-                }
-            }
-            Algorithm::Osgp { tau, biased, .. } => {
-                if *biased {
-                    format!("biased {tau}-OSGP")
-                } else {
-                    format!("{tau}-OSGP")
-                }
-            }
-            Algorithm::DPsgd { .. } => "D-PSGD".into(),
-            Algorithm::AdPsgd { .. } => "AD-PSGD".into(),
+impl AlgoParams {
+    pub fn new(n: usize, init: Vec<f32>, optim: OptimKind) -> Self {
+        Self {
+            n,
+            init,
+            optim,
+            tau: 1,
+            grad_delay: 1,
+            switch_at: 0,
+            seed: 0,
+            topology: None,
         }
     }
 
-    /// Convenience constructors for the standard experiment grid.
-    pub fn sgp_1peer(n: usize) -> Self {
-        Algorithm::Sgp {
-            schedule: HybridSchedule::single(Schedule::new(
-                TopologyKind::OnePeerExp,
-                n,
-            )),
-        }
-    }
-
-    pub fn sgp_2peer(n: usize) -> Self {
-        Algorithm::Sgp {
-            schedule: HybridSchedule::single(Schedule::new(
-                TopologyKind::TwoPeerExp,
-                n,
-            )),
-        }
-    }
-
-    pub fn osgp_1peer(n: usize, tau: u64) -> Self {
-        Algorithm::Osgp {
-            schedule: HybridSchedule::single(Schedule::new(
-                TopologyKind::OnePeerExp,
-                n,
-            )),
-            tau,
-            biased: false,
-        }
-    }
-
-    pub fn osgp_biased(n: usize, tau: u64) -> Self {
-        Algorithm::Osgp {
-            schedule: HybridSchedule::single(Schedule::new(
-                TopologyKind::OnePeerExp,
-                n,
-            )),
-            tau,
-            biased: true,
-        }
-    }
-
-    pub fn dpsgd(n: usize) -> Self {
-        Algorithm::DPsgd { schedule: Schedule::new(TopologyKind::BipartiteExp, n) }
-    }
-
-    pub fn adpsgd(n: usize) -> Self {
-        Algorithm::AdPsgd { schedule: Schedule::new(TopologyKind::BipartiteExp, n) }
-    }
-
-    /// Table 3 hybrids: dense (or 2-peer) first `switch_at` iterations,
-    /// then 1-peer SGP.
-    pub fn hybrid_ar_then_1p(n: usize, switch_at: u64) -> Self {
-        Algorithm::Sgp {
-            schedule: HybridSchedule::two_phase(
-                Schedule::new(TopologyKind::Complete, n),
-                switch_at,
-                Schedule::new(TopologyKind::OnePeerExp, n),
-            ),
-        }
-    }
-
-    pub fn hybrid_2p_then_1p(n: usize, switch_at: u64) -> Self {
-        Algorithm::Sgp {
-            schedule: HybridSchedule::two_phase(
-                Schedule::new(TopologyKind::TwoPeerExp, n),
-                switch_at,
-                Schedule::new(TopologyKind::OnePeerExp, n),
-            ),
-        }
+    pub fn dim(&self) -> usize {
+        self.init.len()
     }
 }
 
-fn phase_tag(kind: TopologyKind) -> &'static str {
-    match kind {
-        TopologyKind::OnePeerExp => "1P",
-        TopologyKind::TwoPeerExp => "2P",
-        TopologyKind::Complete => "AR",
-        _ => "X",
+/// One registry row: canonical name, aliases, summary, and builder.
+pub struct AlgorithmSpec {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub build: fn(&AlgoParams) -> Result<Box<dyn DistributedAlgorithm>>,
+}
+
+/// The name-keyed algorithm registry: the single place a strategy is wired
+/// into the CLI (`repro train --algo <name>`), the experiment drivers, and
+/// the examples.
+pub static REGISTRY: &[AlgorithmSpec] = &[
+    AlgorithmSpec {
+        name: "ar-sgd",
+        aliases: &["arsgd", "ar"],
+        summary: "AllReduce parallel SGD: exact averaging behind a global barrier",
+        build: arsgd::build,
+    },
+    AlgorithmSpec {
+        name: "sgp",
+        aliases: &["sgp-1p"],
+        summary: "Stochastic Gradient Push over the 1-peer exponential graph",
+        build: sgp::build_1peer,
+    },
+    AlgorithmSpec {
+        name: "sgp-2p",
+        aliases: &[],
+        summary: "SGP over the 2-peer exponential graph",
+        build: sgp::build_2peer,
+    },
+    AlgorithmSpec {
+        name: "osgp",
+        aliases: &[],
+        summary: "τ-Overlap SGP: non-blocking sends, ≤ τ rounds of staleness",
+        build: osgp::build,
+    },
+    AlgorithmSpec {
+        name: "osgp-biased",
+        aliases: &[],
+        summary: "Overlap SGP without the push-sum weight (Table-4 ablation)",
+        build: osgp::build_biased,
+    },
+    AlgorithmSpec {
+        name: "dpsgd",
+        aliases: &["d-psgd"],
+        summary: "Decentralized parallel SGD: symmetric doubly-stochastic gossip",
+        build: dpsgd::build,
+    },
+    AlgorithmSpec {
+        name: "adpsgd",
+        aliases: &["ad-psgd"],
+        summary: "Asynchronous D-PSGD: event-ordered pairwise averaging, stale grads",
+        build: adpsgd::build,
+    },
+    AlgorithmSpec {
+        name: "hybrid-ar-1p",
+        aliases: &[],
+        summary: "Table-3 hybrid: dense mixing until switch_at, then 1-peer SGP",
+        build: sgp::build_hybrid_ar_1p,
+    },
+    AlgorithmSpec {
+        name: "hybrid-2p-1p",
+        aliases: &[],
+        summary: "Table-3 hybrid: 2-peer until switch_at, then 1-peer SGP",
+        build: sgp::build_hybrid_2p_1p,
+    },
+    AlgorithmSpec {
+        name: "dasgd",
+        aliases: &["da-sgd"],
+        summary: "DaSGD-style delayed averaging: gradients applied grad_delay rounds late",
+        build: dasgd::build,
+    },
+];
+
+/// Look up a registry row by canonical name or alias.
+pub fn spec(name: &str) -> Option<&'static AlgorithmSpec> {
+    REGISTRY
+        .iter()
+        .find(|s| s.name == name || s.aliases.contains(&name))
+}
+
+/// Build a strategy by registry name.
+pub fn build(name: &str, params: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
+    match spec(name) {
+        Some(s) => (s.build)(params),
+        None => bail!(
+            "unknown algorithm `{name}` (known: {})",
+            names().join(", ")
+        ),
     }
+}
+
+/// Canonical names, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn params(n: usize) -> AlgoParams {
+        AlgoParams::new(n, vec![0.0; 8], OptimKind::Sgd)
+    }
+
+    #[test]
+    fn registry_builds_every_algorithm() {
+        for s in REGISTRY {
+            let a = (s.build)(&params(8)).unwrap_or_else(|e| {
+                panic!("registry `{}` failed to build: {e}", s.name)
+            });
+            assert_eq!(a.n(), 8, "{}", s.name);
+            assert_eq!(a.dim(), 8, "{}", s.name);
+            assert!(!a.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn lookup_by_name_and_alias() {
+        assert!(spec("sgp").is_some());
+        assert!(spec("sgp-1p").is_some());
+        assert!(spec("ar").is_some());
+        assert!(spec("da-sgd").is_some());
+        assert!(spec("nope").is_none());
+        assert!(build("nope", &params(4)).is_err());
+    }
+
     #[test]
     fn names_match_paper_tables() {
-        assert_eq!(Algorithm::ArSgd.name(), "AR-SGD");
-        assert_eq!(Algorithm::sgp_1peer(8).name(), "1P-SGP");
-        assert_eq!(Algorithm::sgp_2peer(8).name(), "2P-SGP");
-        assert_eq!(Algorithm::osgp_1peer(8, 1).name(), "1-OSGP");
-        assert_eq!(Algorithm::osgp_biased(8, 1).name(), "biased 1-OSGP");
-        assert_eq!(Algorithm::dpsgd(8).name(), "D-PSGD");
-        assert_eq!(Algorithm::adpsgd(8).name(), "AD-PSGD");
-        assert_eq!(Algorithm::hybrid_ar_then_1p(8, 100).name(), "AR/1P-SGP");
-        assert_eq!(Algorithm::hybrid_2p_then_1p(8, 100).name(), "2P/1P-SGP");
+        let p = params(8);
+        assert_eq!(build("ar-sgd", &p).unwrap().name(), "AR-SGD");
+        assert_eq!(build("sgp", &p).unwrap().name(), "1P-SGP");
+        assert_eq!(build("sgp-2p", &p).unwrap().name(), "2P-SGP");
+        assert_eq!(build("osgp", &p).unwrap().name(), "1-OSGP");
+        assert_eq!(build("osgp-biased", &p).unwrap().name(), "biased 1-OSGP");
+        assert_eq!(build("dpsgd", &p).unwrap().name(), "D-PSGD");
+        assert_eq!(build("adpsgd", &p).unwrap().name(), "AD-PSGD");
+        assert_eq!(build("hybrid-ar-1p", &p).unwrap().name(), "AR/1P-SGP");
+        assert_eq!(build("hybrid-2p-1p", &p).unwrap().name(), "2P/1P-SGP");
+        assert_eq!(build("dasgd", &p).unwrap().name(), "1-DaSGD");
     }
 }

@@ -1,0 +1,186 @@
+//! Stochastic Gradient Push (Alg. 1) as a strategy object: one local
+//! optimizer step on the biased numerator `x_i` interleaved with one
+//! blocking PushSum gossip step over a column-stochastic — possibly
+//! hybrid/time-varying — schedule. The Table-3 hybrids (dense or 2-peer
+//! mixing early, 1-peer later) are just schedules, not separate code.
+
+use anyhow::{bail, Result};
+
+use crate::gossip::PushSumEngine;
+use crate::net::OwnedCommPattern;
+use crate::optim::Optimizer;
+use crate::topology::{HybridSchedule, Schedule, TopologyKind};
+
+use super::{AlgoParams, DistributedAlgorithm, RoundCtx};
+
+pub struct Sgp {
+    engine: PushSumEngine,
+    schedule: HybridSchedule,
+    opts: Vec<Optimizer>,
+}
+
+impl Sgp {
+    /// SGP over an arbitrary (possibly hybrid) schedule.
+    pub fn new(schedule: HybridSchedule, p: &AlgoParams) -> Self {
+        Self {
+            engine: PushSumEngine::new(vec![p.init.clone(); p.n], 0, false),
+            schedule,
+            opts: (0..p.n).map(|_| Optimizer::new(p.optim, p.init.len())).collect(),
+        }
+    }
+
+    /// SGP over a single static-kind schedule.
+    pub fn with_topology(kind: TopologyKind, p: &AlgoParams) -> Self {
+        Self::new(
+            HybridSchedule::single(Schedule::with_seed(kind, p.n, p.seed)),
+            p,
+        )
+    }
+}
+
+pub fn build_1peer(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
+    let kind = p.topology.unwrap_or(TopologyKind::OnePeerExp);
+    Ok(Box::new(Sgp::with_topology(kind, p)))
+}
+
+pub fn build_2peer(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
+    let kind = p.topology.unwrap_or(TopologyKind::TwoPeerExp);
+    Ok(Box::new(Sgp::with_topology(kind, p)))
+}
+
+pub fn build_hybrid_ar_1p(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
+    ensure_no_topology_override(p, "hybrid-ar-1p")?;
+    Ok(Box::new(Sgp::new(
+        HybridSchedule::two_phase(
+            Schedule::with_seed(TopologyKind::Complete, p.n, p.seed),
+            p.switch_at,
+            Schedule::with_seed(TopologyKind::OnePeerExp, p.n, p.seed),
+        ),
+        p,
+    )))
+}
+
+pub fn build_hybrid_2p_1p(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
+    ensure_no_topology_override(p, "hybrid-2p-1p")?;
+    Ok(Box::new(Sgp::new(
+        HybridSchedule::two_phase(
+            Schedule::with_seed(TopologyKind::TwoPeerExp, p.n, p.seed),
+            p.switch_at,
+            Schedule::with_seed(TopologyKind::OnePeerExp, p.n, p.seed),
+        ),
+        p,
+    )))
+}
+
+/// Hybrid schedules hard-code their two phases; reject a topology override
+/// rather than silently dropping it.
+fn ensure_no_topology_override(p: &AlgoParams, name: &str) -> Result<()> {
+    if p.topology.is_some() {
+        bail!("{name} hard-codes its schedule phases; a topology override is not supported");
+    }
+    Ok(())
+}
+
+/// Paper-style tag for a schedule kind ("1P", "2P", "AR", …).
+pub(crate) fn phase_tag(kind: TopologyKind) -> &'static str {
+    match kind {
+        TopologyKind::OnePeerExp => "1P",
+        TopologyKind::TwoPeerExp => "2P",
+        TopologyKind::Complete => "AR",
+        _ => "X",
+    }
+}
+
+/// Paper-style SGP label for a (possibly hybrid) schedule: "1P-SGP",
+/// "AR/1P-SGP", …
+pub(crate) fn sgp_label(schedule: &HybridSchedule) -> String {
+    let s = &schedule.phases[0].1;
+    if schedule.phases.len() > 1 {
+        let s2 = &schedule.phases[1].1;
+        format!("{}/{}-SGP", phase_tag(s.kind), phase_tag(s2.kind))
+    } else {
+        format!("{}-SGP", phase_tag(s.kind))
+    }
+}
+
+impl DistributedAlgorithm for Sgp {
+    fn name(&self) -> String {
+        sgp_label(&self.schedule)
+    }
+
+    fn n(&self) -> usize {
+        self.engine.n
+    }
+
+    fn dim(&self) -> usize {
+        self.engine.dim
+    }
+
+    fn local_view(&self, i: usize, out: &mut [f32]) {
+        self.engine.states[i].debias_into(out);
+    }
+
+    fn apply_step(&mut self, i: usize, grad: &[f32], lr: f32) {
+        self.opts[i].step(&mut self.engine.states[i].x, grad, lr);
+    }
+
+    fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
+        let sched = self.schedule.at(ctx.k);
+        self.engine.step(ctx.k, sched);
+        OwnedCommPattern::PushSum {
+            schedule: sched.clone(),
+            bytes: ctx.msg_bytes,
+            tau: 0,
+        }
+    }
+
+    fn consensus_stats(&self) -> (f64, f64, f64) {
+        self.engine.consensus_distance()
+    }
+
+    fn drain(&mut self) {
+        self.engine.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkModel;
+    use crate::optim::OptimKind;
+
+    #[test]
+    fn gossip_contracts_consensus_under_the_trait() {
+        let n = 8;
+        let mut init = vec![0.0f32; 4];
+        init[0] = 1.0;
+        let mut p = AlgoParams::new(n, init, OptimKind::Sgd);
+        p.seed = 3;
+        let mut alg = Sgp::with_topology(TopologyKind::OnePeerExp, &p);
+        // Perturb node views apart with one fake gradient each.
+        for i in 0..n {
+            let g = vec![i as f32; 4];
+            alg.apply_step(i, &g, 0.1);
+        }
+        let before = alg.consensus_stats().0;
+        let link = LinkModel::ethernet_10g();
+        let comp = vec![0.1; n];
+        for k in 0..40 {
+            let ctx = RoundCtx { k, comp: &comp, msg_bytes: 16, link: &link };
+            let pat = alg.communicate(&ctx);
+            assert!(matches!(pat, OwnedCommPattern::PushSum { tau: 0, .. }));
+        }
+        alg.drain();
+        let after = alg.consensus_stats().0;
+        assert!(before > 1e-3, "{before}");
+        assert!(after < before * 1e-2, "{before} → {after}");
+    }
+
+    #[test]
+    fn labels_cover_hybrids() {
+        let p = AlgoParams::new(8, vec![0.0; 4], OptimKind::Sgd);
+        assert_eq!(Sgp::with_topology(TopologyKind::OnePeerExp, &p).name(), "1P-SGP");
+        assert_eq!(build_hybrid_ar_1p(&p).unwrap().name(), "AR/1P-SGP");
+        assert_eq!(build_hybrid_2p_1p(&p).unwrap().name(), "2P/1P-SGP");
+    }
+}

@@ -1,45 +1,123 @@
-//! The training coordinator: one event-driven loop that runs every
-//! algorithm in the paper over the PJRT runtime and the simulated cluster.
+//! The training coordinator: ONE strategy-agnostic loop that drives any
+//! [`DistributedAlgorithm`] over the PJRT runtime and the simulated
+//! cluster. The loop contains zero per-algorithm branches — AllReduce-SGD,
+//! the gossip family, the asynchronous baseline, and anything added to the
+//! registry later all run through the same four trait verbs.
 //!
-//! Per synchronous iteration (Alg. 1 / Alg. 2 / baselines):
+//! Per round `k` (Alg. 1 / Alg. 2 / baselines):
 //!   1. every node evaluates its mini-batch gradient at its **de-biased**
-//!      parameters `z_i = x_i / w_i` through the `train_<model>` artifact;
-//!   2. the local optimizer (Nesterov/Adam) applies the step to the
-//!      **biased** numerator `x_i` (Alg. 3);
-//!   3. the algorithm's communication runs: exact AllReduce, PushSum
-//!      gossip (optionally τ-delayed / biased), or symmetric gossip;
+//!      view `z_i` ([`DistributedAlgorithm::local_view`]) through the
+//!      `train_<model>` artifact;
+//!   2. the gradient is handed to the node's strategy slot
+//!      ([`DistributedAlgorithm::apply_step`]) — strategies may apply it
+//!      immediately (SGP), average it exactly (AR-SGD), defer it (DaSGD),
+//!      or apply it stale in event order (AD-PSGD);
+//!   3. the strategy communicates ([`DistributedAlgorithm::communicate`])
+//!      and returns the timing pattern;
 //!   4. the timing recursion attaches simulated wall-clock (the paper's
-//!      10 GbE / IB testbed timing) to the iteration.
+//!      10 GbE / IB testbed) to the round.
 //!
-//! AD-PSGD runs on the discrete-event queue instead: nodes compute
-//! gradients on snapshots and apply them stale after pairwise averaging,
-//! exactly the staleness semantics of Lian et al. (2018).
+//! Construction goes through [`TrainerBuilder`]: pick an algorithm by
+//! registry name (plus knobs like τ, gradient delay, topology override) or
+//! inject a custom strategy object.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::algorithms::Algorithm;
-use crate::collectives;
+use crate::algorithms::{self, AlgoParams, DistributedAlgorithm, RoundCtx};
 use crate::config::TrainConfig;
-use crate::data::{Batch, Blobs, BigramLm, DataSource};
-use crate::gossip::PushSumEngine;
+use crate::data::{Batch, BigramLm, Blobs, DataSource};
 use crate::metrics::{EvalRecord, IterRecord, RunResult};
-use crate::net::{CommPattern, TimingSim};
-use crate::optim::Optimizer;
+use crate::net::TimingSim;
 use crate::rng::Pcg;
 use crate::runtime::Runtime;
-use crate::sim::EventQueue;
+use crate::topology::TopologyKind;
 
-pub struct Trainer<'rt> {
-    pub rt: &'rt Runtime,
-    pub cfg: TrainConfig,
-    pub algo: Algorithm,
-    pub data: DataSource,
-    msg_bytes: usize,
-    dim: usize,
+/// Fluent constructor for [`Trainer`] — replaces the old positional
+/// `Trainer::new(rt, cfg, algo)`.
+///
+/// ```ignore
+/// let mut trainer = TrainerBuilder::new(&rt)
+///     .config(cfg)
+///     .algorithm("osgp")
+///     .tau(2)
+///     .build()?;
+/// let result = trainer.run()?;
+/// ```
+pub struct TrainerBuilder<'rt> {
+    rt: &'rt Runtime,
+    cfg: Option<TrainConfig>,
+    algo_name: String,
+    tau: Option<u64>,
+    grad_delay: Option<u64>,
+    switch_at: Option<u64>,
+    topology: Option<TopologyKind>,
+    custom: Option<Box<dyn DistributedAlgorithm>>,
 }
 
-impl<'rt> Trainer<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: TrainConfig, algo: Algorithm) -> Result<Self> {
+impl<'rt> TrainerBuilder<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Self {
+            rt,
+            cfg: None,
+            algo_name: "sgp".to_string(),
+            tau: None,
+            grad_delay: None,
+            switch_at: None,
+            topology: None,
+            custom: None,
+        }
+    }
+
+    /// The run configuration (required).
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Pick the algorithm by registry name (see `algorithms::names()`).
+    pub fn algorithm(mut self, name: &str) -> Self {
+        self.algo_name = name.to_string();
+        self
+    }
+
+    /// Overlap delay τ for the overlap/delayed strategies.
+    pub fn tau(mut self, tau: u64) -> Self {
+        self.tau = Some(tau);
+        self
+    }
+
+    /// Gradient-application delay in rounds (DaSGD).
+    pub fn grad_delay(mut self, d: u64) -> Self {
+        self.grad_delay = Some(d);
+        self
+    }
+
+    /// Switch iteration for the two-phase hybrid schedules. Defaults to a
+    /// third of the run (the paper's epoch-30-of-90 protocol).
+    pub fn switch_at(mut self, k: u64) -> Self {
+        self.switch_at = Some(k);
+        self
+    }
+
+    /// Override the strategy's default gossip topology (e.g. dense SGP for
+    /// Fig. 2).
+    pub fn topology(mut self, kind: TopologyKind) -> Self {
+        self.topology = Some(kind);
+        self
+    }
+
+    /// Inject a pre-built strategy object instead of a registry name —
+    /// the escape hatch for experiments with bespoke schedules.
+    pub fn strategy(mut self, algo: Box<dyn DistributedAlgorithm>) -> Self {
+        self.custom = Some(algo);
+        self
+    }
+
+    pub fn build(self) -> Result<Trainer<'rt>> {
+        let Some(cfg) = self.cfg else {
+            bail!("TrainerBuilder: .config(..) is required");
+        };
+        let rt = self.rt;
         let m = rt.manifest.model(&cfg.model)?;
         let kind = m
             .config
@@ -73,9 +151,58 @@ impl<'rt> Trainer<'rt> {
         };
         let msg_bytes = rt.message_bytes(&cfg.model)?;
         let dim = m.param_count;
-        Ok(Self { rt, cfg, algo, data, msg_bytes, dim })
-    }
 
+        let algo = match self.custom {
+            Some(a) => a,
+            None => {
+                let init = crate::model::read_init(&rt.dir, &rt.manifest, &cfg.model)?;
+                let mut params = AlgoParams::new(cfg.n_nodes, init, cfg.optim);
+                params.seed = cfg.seed;
+                params.topology = self.topology;
+                if let Some(t) = self.tau {
+                    params.tau = t;
+                }
+                if let Some(d) = self.grad_delay {
+                    params.grad_delay = d;
+                }
+                params.switch_at =
+                    self.switch_at.unwrap_or(cfg.total_iters() / 3);
+                algorithms::build(&self.algo_name, &params)?
+            }
+        };
+        // Fail at build time (not mid-run) if an injected strategy does not
+        // match the run shape; registry-built strategies match by
+        // construction.
+        anyhow::ensure!(
+            algo.n() == cfg.n_nodes,
+            "strategy `{}` has {} nodes but the config has {}",
+            algo.name(),
+            algo.n(),
+            cfg.n_nodes
+        );
+        anyhow::ensure!(
+            algo.dim() == dim,
+            "strategy `{}` has dim {} but model `{}` has {} parameters",
+            algo.name(),
+            algo.dim(),
+            cfg.model,
+            dim
+        );
+
+        Ok(Trainer { rt, cfg, algo, data, msg_bytes, dim })
+    }
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    pub algo: Box<dyn DistributedAlgorithm>,
+    pub data: DataSource,
+    msg_bytes: usize,
+    dim: usize,
+}
+
+impl<'rt> Trainer<'rt> {
     /// Evaluate `(mean val loss, mean val metric)` of a parameter vector
     /// over the shared validation batches.
     pub fn evaluate(&self, params: &[f32], batches: &[Batch]) -> Result<(f64, f64)> {
@@ -90,44 +217,17 @@ impl<'rt> Trainer<'rt> {
         Ok((loss / n, metric / n))
     }
 
-    pub fn run(&self) -> Result<RunResult> {
-        match &self.algo {
-            Algorithm::AdPsgd { schedule } => self.run_adpsgd(schedule.clone()),
-            _ => self.run_synchronous(),
-        }
+    pub fn run(&mut self) -> Result<RunResult> {
+        self.run_synchronous()
     }
 
-    // ---------------------------------------------------------------------
-    // Synchronous algorithms: AR-SGD, SGP, OSGP, D-PSGD
-    // ---------------------------------------------------------------------
-    fn run_synchronous(&self) -> Result<RunResult> {
-        let cfg = &self.cfg;
+    /// The single strategy-agnostic round loop.
+    fn run_synchronous(&mut self) -> Result<RunResult> {
+        let cfg = self.cfg.clone();
         let n = cfg.n_nodes;
         let total = cfg.total_iters();
         let wall_start = std::time::Instant::now();
         let val = self.data.val_batches(cfg.val_batches);
-
-        let init = crate::model::read_init(&self.rt.dir, &self.rt.manifest, &cfg.model)?;
-
-        // AR-SGD keeps a single replicated state; gossip methods keep the
-        // PushSum engine (D-PSGD is PushSum over a symmetric schedule — the
-        // weights stay ≡ 1, see algorithms/mod.rs).
-        let is_ar = matches!(self.algo, Algorithm::ArSgd);
-        let (tau, biased) = match &self.algo {
-            Algorithm::Osgp { tau, biased, .. } => (*tau, *biased),
-            _ => (0, false),
-        };
-        let mut engine = if is_ar {
-            None
-        } else {
-            Some(PushSumEngine::new(vec![init.clone(); n], tau, biased))
-        };
-        let mut ar_params = init.clone();
-        let mut opts: Vec<Optimizer> = if is_ar {
-            vec![Optimizer::new(cfg.optim, self.dim)]
-        } else {
-            (0..n).map(|_| Optimizer::new(cfg.optim, self.dim)).collect()
-        };
 
         let mut timing = TimingSim::new(n, cfg.link.clone());
         let mut rng = Pcg::new(cfg.seed ^ 0x7131);
@@ -148,63 +248,28 @@ impl<'rt> Trainer<'rt> {
             let epoch = cfg.epoch_of(k);
             let lr = cfg.lr.lr_at(epoch) as f32;
 
-            // 1–2: local gradient at z, optimizer step on x.
+            // 1–2: local gradient at each node's view, handed to the
+            // strategy's per-node slot.
             let mut mean_loss = 0.0f64;
-            if is_ar {
-                let mut gsum = vec![0.0f32; self.dim];
-                for i in 0..n {
-                    let batch = self.data.train_batch(i, k);
-                    let (l, g) = self.rt.train_step(&cfg.model, &ar_params, &batch)?;
-                    mean_loss += l as f64;
-                    for (a, b) in gsum.iter_mut().zip(&g) {
-                        *a += b;
-                    }
-                }
-                let inv = 1.0 / n as f32;
-                for a in &mut gsum {
-                    *a *= inv;
-                }
-                opts[0].step(&mut ar_params, &gsum, lr);
-            } else {
-                let engine = engine.as_mut().unwrap();
-                for i in 0..n {
-                    let batch = self.data.train_batch(i, k);
-                    engine.states[i].debias_into(&mut zbuf);
-                    let (l, g) = self.rt.train_step(&cfg.model, &zbuf, &batch)?;
-                    mean_loss += l as f64;
-                    opts[i].step(&mut engine.states[i].x, &g, lr);
-                }
+            for i in 0..n {
+                let batch = self.data.train_batch(i, k);
+                self.algo.local_view(i, &mut zbuf);
+                let (l, g) = self.rt.train_step(&cfg.model, &zbuf, &batch)?;
+                mean_loss += l as f64;
+                self.algo.apply_step(i, &g, lr);
             }
             mean_loss /= n as f64;
 
-            // 3: communication.
-            let pattern = match &self.algo {
-                Algorithm::ArSgd => CommPattern::AllReduce { bytes: self.msg_bytes },
-                Algorithm::Sgp { schedule } | Algorithm::Osgp { schedule, .. } => {
-                    let engine = engine.as_mut().unwrap();
-                    let sched = schedule.at(k);
-                    engine.step(k, sched);
-                    CommPattern::PushSum {
-                        schedule: sched,
-                        bytes: self.msg_bytes,
-                        tau,
-                    }
-                }
-                Algorithm::DPsgd { schedule } => {
-                    let engine = engine.as_mut().unwrap();
-                    engine.step(k, schedule);
-                    CommPattern::Symmetric {
-                        schedule,
-                        bytes: self.msg_bytes,
-                        handshake: 2.0,
-                    }
-                }
-                Algorithm::AdPsgd { .. } => unreachable!(),
-            };
-
-            // 4: timing.
+            // 3: communication (strategy-owned) + 4: timing.
             let comp = cfg.compute.sample_all(n, &mut rng);
-            let sim_now = timing.advance(&pattern, &comp);
+            let ctx = RoundCtx {
+                k,
+                comp: &comp,
+                msg_bytes: self.msg_bytes,
+                link: &cfg.link,
+            };
+            let pattern = self.algo.communicate(&ctx);
+            let sim_now = timing.advance(&pattern.borrowed(), &comp);
 
             result.iters.push(IterRecord {
                 iter: k,
@@ -220,17 +285,13 @@ impl<'rt> Trainer<'rt> {
                     k,
                     epoch + 1.0 / cfg.steps_per_epoch as f64,
                     sim_now,
-                    is_ar.then_some(&ar_params),
-                    engine.as_ref(),
                     &val,
                 )?;
                 result.evals.push(rec);
             }
         }
 
-        if let Some(engine) = engine.as_mut() {
-            engine.drain();
-        }
+        self.algo.drain();
         result.sim_total_s = timing.makespan();
         result.wall_s = wall_start.elapsed().as_secs_f64();
         if let Some(e) = result.evals.last() {
@@ -245,45 +306,33 @@ impl<'rt> Trainer<'rt> {
         k: u64,
         epoch: f64,
         sim_now: f64,
-        ar_params: Option<&Vec<f32>>,
-        engine: Option<&PushSumEngine>,
         val: &[Batch],
     ) -> Result<EvalRecord> {
         let n = self.cfg.n_nodes;
-        let (consensus, node_stats, avg_params) = if let Some(engine) = engine {
-            let consensus = if self.cfg.track_consensus {
-                engine.consensus_distance()
-            } else {
-                (0.0, 0.0, 0.0)
-            };
-            // Per-node validation metric spread (Fig. D.3).
-            let mut metrics = Vec::with_capacity(n);
-            if self.cfg.track_consensus {
-                for st in &engine.states {
-                    let z = st.debiased();
-                    let (_, m) = self.evaluate(&z, &val[..val.len().min(2)])?;
-                    metrics.push(m);
-                }
-            }
-            let avg = {
-                let zs: Vec<Vec<f32>> =
-                    engine.states.iter().map(|s| s.debiased()).collect();
-                collectives::mean_of(&zs)
-            };
-            let stats = if metrics.is_empty() {
-                (0.0, 0.0, 0.0)
-            } else {
-                (
-                    metrics.iter().cloned().fold(f64::INFINITY, f64::min),
-                    metrics.iter().sum::<f64>() / metrics.len() as f64,
-                    metrics.iter().cloned().fold(0.0, f64::max),
-                )
-            };
-            (consensus, stats, avg)
+        let consensus = if self.cfg.track_consensus {
+            self.algo.consensus_stats()
         } else {
-            let p = ar_params.unwrap().clone();
-            ((0.0, 0.0, 0.0), (0.0, 0.0, 0.0), p)
+            (0.0, 0.0, 0.0)
         };
+        // Per-node validation metric spread (Fig. D.3). Exact strategies
+        // hold byte-equal views on every node, so the n evaluations would
+        // be wasted — match the old AR-SGD behaviour and report zeros.
+        let node_stats = if self.cfg.track_consensus && !self.algo.is_exact() {
+            let mut metrics = Vec::with_capacity(n);
+            for i in 0..n {
+                let z = self.algo.node_view(i);
+                let (_, m) = self.evaluate(&z, &val[..val.len().min(2)])?;
+                metrics.push(m);
+            }
+            (
+                metrics.iter().cloned().fold(f64::INFINITY, f64::min),
+                metrics.iter().sum::<f64>() / metrics.len().max(1) as f64,
+                metrics.iter().cloned().fold(0.0, f64::max),
+            )
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+        let avg_params = self.algo.average();
         let (val_loss, val_metric) = self.evaluate(&avg_params, val)?;
         Ok(EvalRecord {
             iter: k,
@@ -298,129 +347,5 @@ impl<'rt> Trainer<'rt> {
             consensus_min: consensus.1,
             consensus_max: consensus.2,
         })
-    }
-
-    // ---------------------------------------------------------------------
-    // AD-PSGD: event-driven asynchronous gossip
-    // ---------------------------------------------------------------------
-    fn run_adpsgd(&self, _schedule: crate::topology::Schedule) -> Result<RunResult> {
-        let cfg = &self.cfg;
-        let n = cfg.n_nodes;
-        let total = cfg.total_iters();
-        let total_updates = total * n as u64;
-        let wall_start = std::time::Instant::now();
-        let val = self.data.val_batches(cfg.val_batches);
-        let init = crate::model::read_init(&self.rt.dir, &self.rt.manifest, &cfg.model)?;
-
-        let mut params: Vec<Vec<f32>> = vec![init; n];
-        let mut opts: Vec<Optimizer> =
-            (0..n).map(|_| Optimizer::new(cfg.optim, self.dim)).collect();
-        let mut steps = vec![0u64; n];
-        let mut rng = Pcg::new(cfg.seed ^ 0xad95);
-
-        // Pending gradient per node, computed on the snapshot taken when
-        // its compute slot began (the AD-PSGD staleness semantics).
-        let mut pending: Vec<Option<(f32, Vec<f32>)>> = vec![None; n];
-        let mut queue: EventQueue<usize> = EventQueue::new();
-        let ptp = cfg.link.ptp_time(self.msg_bytes);
-        // Partial overlap of the averaging thread with compute (App. C of
-        // Lian et al.: communication runs on its own thread).
-        let comm_overhead = 0.5 * ptp;
-
-        // Prime: every node starts computing at t=0 on its initial params.
-        for (i, p) in params.iter().enumerate() {
-            let batch = self.data.train_batch(i, 0);
-            pending[i] = Some(self.rt.train_step(&cfg.model, p, &batch)?);
-            queue.push(cfg.compute.sample(&mut rng), i);
-        }
-
-        let mut result = RunResult {
-            label: format!("AD-PSGD_n{n}"),
-            ..Default::default()
-        };
-        let mut done = 0u64;
-        let eval_every = (total_updates
-            / ((cfg.epochs / cfg.eval_every_epochs.max(0.1)).ceil() as u64).max(1))
-        .max(1);
-
-        while done < total_updates {
-            let ev = queue.pop().expect("queue exhausted early");
-            let i = ev.payload;
-            let now = ev.time;
-
-            // Pairwise average with a random peer (atomic in shared memory).
-            let j = {
-                let mut j = rng.below(n - 1);
-                if j >= i {
-                    j += 1;
-                }
-                j
-            };
-            if i != j {
-                // Split borrows to average the two vectors in place.
-                let (a, b) = if i < j {
-                    let (l, r) = params.split_at_mut(j);
-                    (&mut l[i], &mut r[0])
-                } else {
-                    let (l, r) = params.split_at_mut(i);
-                    (&mut r[0], &mut l[j])
-                };
-                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
-                    let m = 0.5 * (*x + *y);
-                    *x = m;
-                    *y = m;
-                }
-            }
-
-            // Apply the stale gradient.
-            let (loss, grad) = pending[i].take().expect("no pending grad");
-            let epoch = done as f64 / (n as u64 * cfg.steps_per_epoch) as f64;
-            let lr = cfg.lr.lr_at(epoch) as f32;
-            opts[i].step(&mut params[i], &grad, lr);
-            steps[i] += 1;
-            done += 1;
-
-            result.iters.push(IterRecord {
-                iter: done / n as u64,
-                epoch,
-                train_loss: loss as f64,
-                sim_time_s: now,
-                lr: lr as f64,
-            });
-
-            if done % eval_every == 0 || done == total_updates {
-                let avg = collectives::mean_of(&params);
-                let (val_loss, val_metric) = self.evaluate(&avg, &val)?;
-                result.evals.push(EvalRecord {
-                    iter: done / n as u64,
-                    epoch,
-                    sim_time_s: now,
-                    val_loss,
-                    val_metric,
-                    node_metric_min: 0.0,
-                    node_metric_mean: 0.0,
-                    node_metric_max: 0.0,
-                    consensus_mean: 0.0,
-                    consensus_min: 0.0,
-                    consensus_max: 0.0,
-                });
-            }
-
-            // Kick off the next compute on the *current* (fresh) params.
-            if steps[i] < total {
-                let batch = self.data.train_batch(i, steps[i]);
-                pending[i] =
-                    Some(self.rt.train_step(&cfg.model, &params[i], &batch)?);
-                queue.push(now + comm_overhead + cfg.compute.sample(&mut rng), i);
-            }
-        }
-
-        result.sim_total_s = queue.now();
-        result.wall_s = wall_start.elapsed().as_secs_f64();
-        if let Some(e) = result.evals.last() {
-            result.final_val_loss = e.val_loss;
-            result.final_val_metric = e.val_metric;
-        }
-        Ok(result)
     }
 }

@@ -7,9 +7,8 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::algorithms::Algorithm;
 use crate::config::TrainConfig;
-use crate::coordinator::Trainer;
+use crate::coordinator::TrainerBuilder;
 use crate::metrics::{self, print_table, RunResult};
 use crate::net::{self, ComputeModel, LinkModel, OwnedCommPattern};
 use crate::optim::LrSchedule;
@@ -31,20 +30,28 @@ fn epochs(full: f64, fast: bool) -> f64 {
     }
 }
 
-fn run_one(rt: &Runtime, mut cfg: TrainConfig, algo: Algorithm) -> Result<RunResult> {
+/// Run one configuration with a registry-named algorithm; `tune` may add
+/// builder knobs (τ, switch point, topology override, …).
+fn run_tuned<'rt>(
+    rt: &'rt Runtime,
+    mut cfg: TrainConfig,
+    algo: &str,
+    tune: impl FnOnce(TrainerBuilder<'rt>) -> TrainerBuilder<'rt>,
+) -> Result<RunResult> {
     // Shortened (--fast) runs keep the *shape* of the Goyal protocol:
     // rescale the default 30/60/80 milestones to the actual epoch count.
     if cfg.epochs < 90.0 && cfg.lr.milestones == vec![30.0, 60.0, 80.0] {
         let s = cfg.epochs / 90.0;
         cfg.lr.milestones = vec![30.0 * s, 60.0 * s, 80.0 * s];
     }
-    let label = format!("{} n={}", algo.name(), cfg.n_nodes);
+    let builder = TrainerBuilder::new(rt).config(cfg).algorithm(algo);
+    let mut t = tune(builder).build()?;
+    let label = format!("{} n={}", t.algo.name(), t.cfg.n_nodes);
     eprintln!(
         "[run] {label}: {} iters × {} nodes …",
-        cfg.total_iters(),
-        cfg.n_nodes
+        t.cfg.total_iters(),
+        t.cfg.n_nodes
     );
-    let t = Trainer::new(rt, cfg, algo)?;
     let r = t.run()?;
     eprintln!(
         "[run] {label}: loss={:.4} val_metric={:.4} sim={:.1}s wall={:.1}s",
@@ -55,6 +62,11 @@ fn run_one(rt: &Runtime, mut cfg: TrainConfig, algo: Algorithm) -> Result<RunRes
     );
     r.write_csv(&results_dir())?;
     Ok(r)
+}
+
+/// Registry-named run with default knobs.
+fn run_one(rt: &Runtime, cfg: TrainConfig, algo: &str) -> Result<RunResult> {
+    run_tuned(rt, cfg, algo, |b| b)
 }
 
 fn pct(x: f64) -> String {
@@ -75,9 +87,9 @@ pub fn fig1_table1(rt: &Runtime, fast: bool) -> Result<()> {
             c
         };
         let runs = vec![
-            run_one(rt, mk(1), Algorithm::ArSgd)?,
-            run_one(rt, mk(1), Algorithm::dpsgd(n))?,
-            run_one(rt, mk(1), Algorithm::sgp_1peer(n))?,
+            run_one(rt, mk(1), "ar-sgd")?,
+            run_one(rt, mk(1), "dpsgd")?,
+            run_one(rt, mk(1), "sgp")?,
         ];
         for r in &runs {
             rows.push(vec![
@@ -167,10 +179,7 @@ pub fn table2(rt: &Runtime, fast: bool) -> Result<()> {
     let ns: &[usize] = &[4, 16];
     let mut rows = Vec::new();
     for &n in ns {
-        for (algo_name, mk_algo) in [
-            ("AR-SGD", Box::new(|_n| Algorithm::ArSgd) as Box<dyn Fn(usize) -> Algorithm>),
-            ("SGP", Box::new(Algorithm::sgp_1peer)),
-        ] {
+        for (algo_name, algo) in [("AR-SGD", "ar-sgd"), ("SGP", "sgp")] {
             let mut accs = Vec::new();
             let mut times = Vec::new();
             for &seed in seeds {
@@ -179,7 +188,7 @@ pub fn table2(rt: &Runtime, fast: bool) -> Result<()> {
                 cfg.link = LinkModel::infiniband_100g();
                 cfg.eval_every_epochs = 0.0; // only final eval — faster
                 cfg.track_consensus = false;
-                let r = run_one(rt, cfg, mk_algo(n))?;
+                let r = run_one(rt, cfg, algo)?;
                 accs.push(r.final_val_metric);
                 times.push(r.sim_total_s / 3600.0);
             }
@@ -216,10 +225,7 @@ pub fn fig2(rt: &Runtime, fast: bool) -> Result<()> {
         cfg.epochs = epochs(90.0, fast);
         cfg.eval_every_epochs = epochs(90.0, fast) / 18.0;
         cfg.track_consensus = true;
-        let algo = Algorithm::Sgp {
-            schedule: crate::topology::HybridSchedule::single(Schedule::new(kind, n)),
-        };
-        let r = run_one(rt, cfg, algo)?;
+        let r = run_tuned(rt, cfg, "sgp", |b| b.topology(kind))?;
         let mut csv = String::from("epoch,lr,consensus_mean,consensus_min,consensus_max\n");
         for e in &r.evals {
             csv.push_str(&format!(
@@ -270,15 +276,9 @@ pub fn table3(rt: &Runtime, fast: bool) -> Result<()> {
             c
         };
         let switch = (mk().total_iters() as f64 / 3.0).round() as u64; // epoch 30
-        let algos = vec![
-            Algorithm::ArSgd,
-            Algorithm::sgp_2peer(n),
-            Algorithm::sgp_1peer(n),
-            Algorithm::hybrid_ar_then_1p(n, switch),
-            Algorithm::hybrid_2p_then_1p(n, switch),
-        ];
+        let algos = ["ar-sgd", "sgp-2p", "sgp", "hybrid-ar-1p", "hybrid-2p-1p"];
         for algo in algos {
-            let r = run_one(rt, mk(), algo)?;
+            let r = run_tuned(rt, mk(), algo, |b| b.switch_at(switch))?;
             rows.push(vec![
                 r.label.split("_n").next().unwrap_or("?").to_string(),
                 n.to_string(),
@@ -307,24 +307,19 @@ pub fn table4(rt: &Runtime, fast: bool) -> Result<()> {
         c.track_consensus = false;
         c
     };
-    let algos = vec![
-        Algorithm::ArSgd,
-        Algorithm::dpsgd(n),
-        Algorithm::adpsgd(n),
-        Algorithm::sgp_1peer(n),
-        Algorithm::osgp_biased(n, 1),
-        Algorithm::osgp_1peer(n, 1),
-    ];
+    // The registry makes the grid a name list — DaSGD (the post-paper
+    // delayed-averaging method) rides along to show the open family.
+    let algos = ["ar-sgd", "dpsgd", "adpsgd", "sgp", "osgp-biased", "osgp", "dasgd"];
     let mut rows = Vec::new();
     for algo in algos {
         let mut cfg = mk();
-        if matches!(algo, Algorithm::AdPsgd { .. }) {
+        if algo == "adpsgd" {
             // Stale asynchronous gradients tolerate a lower peak LR than
             // the synchronous linear-scaling rule on this small workload
             // (Lian et al. 2018 note the same sensitivity).
             cfg.lr.scale = cfg.lr.scale.min(8.0);
         }
-        let r = run_one(rt, cfg, algo)?;
+        let r = run_tuned(rt, cfg, algo, |b| b.tau(1).grad_delay(1))?;
         rows.push(vec![
             r.label.split("_n").next().unwrap_or("?").to_string(),
             format!("{:.4}", r.final_train_loss()),
@@ -360,7 +355,7 @@ pub fn table5(rt: &Runtime, fast: bool) -> Result<()> {
     cfg.epochs = e90;
     cfg.track_consensus = false;
     cap_lr(&mut cfg);
-    let r = run_one(rt, cfg, Algorithm::ArSgd)?;
+    let r = run_one(rt, cfg, "ar-sgd")?;
     rows.push(vec![
         "AR-SGD".into(),
         format!("{:.4}", r.final_train_loss()),
@@ -368,11 +363,9 @@ pub fn table5(rt: &Runtime, fast: bool) -> Result<()> {
         format!("{} ({} ep)", metrics::hours(r.sim_total_s), e90),
     ]);
 
-    for (name, algo) in [
-        ("AD-PSGD", Algorithm::adpsgd(n)),
-        ("SGP", Algorithm::sgp_1peer(n)),
-        ("1-OSGP", Algorithm::osgp_1peer(n, 1)),
-    ] {
+    for (name, algo) in
+        [("AD-PSGD", "adpsgd"), ("SGP", "sgp"), ("1-OSGP", "osgp")]
+    {
         let mut cfg = TrainConfig::imagenet_like(model, n, 9);
         cfg.epochs = e270;
         cfg.track_consensus = false;
@@ -382,7 +375,7 @@ pub fn table5(rt: &Runtime, fast: bool) -> Result<()> {
             cfg.lr.milestones = vec![e270 / 3.0, 2.0 * e270 / 3.0, 8.0 * e270 / 9.0];
         }
         cap_lr(&mut cfg);
-        let r = run_one(rt, cfg, algo)?;
+        let r = run_tuned(rt, cfg, algo, |b| b.tau(1))?;
         rows.push(vec![
             name.into(),
             format!("{:.4}", r.final_train_loss()),
@@ -413,9 +406,7 @@ pub fn fig3(rt: &Runtime, fast: bool) -> Result<()> {
             eprintln!("[fig3] model {model} missing from artifacts; skipping");
             continue;
         }
-        for (name, algo) in
-            [("AR-Adam", Algorithm::ArSgd), ("SGP-Adam", Algorithm::sgp_1peer(n))]
-        {
+        for (name, algo) in [("AR-Adam", "ar-sgd"), ("SGP-Adam", "sgp")] {
             let mut cfg = TrainConfig::nmt_like(model, n, 11);
             cfg.epochs = 5.0;
             cfg.steps_per_epoch = 20;
@@ -457,7 +448,7 @@ pub fn figd3(rt: &Runtime, fast: bool) -> Result<()> {
         cfg.epochs = epochs(90.0, fast);
         cfg.track_consensus = true;
         cfg.eval_every_epochs = cfg.epochs / 9.0;
-        let r = run_one(rt, cfg, Algorithm::sgp_1peer(n))?;
+        let r = run_one(rt, cfg, "sgp")?;
         let mut csv =
             String::from("epoch,node_min,node_mean,node_max,val_metric\n");
         for e in &r.evals {

@@ -23,13 +23,17 @@
 //!   LM) with controllable heterogeneity (the paper's ζ²).
 //! * [`runtime`] — the PJRT bridge: loads the HLO-text artifacts emitted by
 //!   `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! * [`algorithms`] + [`coordinator`] — SGP, Overlap-SGP, D-PSGD, AD-PSGD
-//!   and AllReduce-SGD over a single event-driven training loop.
+//! * [`algorithms`] — the pluggable [`algorithms::DistributedAlgorithm`]
+//!   trait, one strategy object per method (AR-SGD, SGP, Overlap-SGP,
+//!   D-PSGD, AD-PSGD, DaSGD delayed averaging), and the name-keyed
+//!   registry the CLI/experiments resolve through.
+//! * [`coordinator`] — [`coordinator::TrainerBuilder`] and the single
+//!   strategy-agnostic training loop.
 //! * [`metrics`] — loss/consensus/throughput series and CSV emitters for
 //!   regenerating every table and figure in the paper.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! See DESIGN.md for the module map, the trait API contract, and how to
+//! add an algorithm; EXPERIMENTS.md records paper-vs-measured results.
 
 pub mod algorithms;
 pub mod benchkit;
@@ -49,5 +53,6 @@ pub mod runtime;
 pub mod sim;
 pub mod topology;
 
+pub use algorithms::{AlgoParams, DistributedAlgorithm};
 pub use config::TrainConfig;
-pub use coordinator::Trainer;
+pub use coordinator::{Trainer, TrainerBuilder};

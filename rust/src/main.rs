@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train        one training run (model × algorithm × cluster)
 //!   bench <exp>  regenerate a paper table/figure (all, fig1, table1..5, …)
+//!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
 //!   convergence  Theorem 1/2 sanity demo (pure Rust)
@@ -10,10 +11,10 @@
 
 use anyhow::{bail, Result};
 
-use sgp::algorithms::Algorithm;
+use sgp::algorithms;
 use sgp::cli::Args;
 use sgp::config::{Fabric, TrainConfig};
-use sgp::coordinator::Trainer;
+use sgp::coordinator::TrainerBuilder;
 use sgp::experiments;
 use sgp::metrics;
 use sgp::optim::OptimKind;
@@ -23,32 +24,19 @@ const USAGE: &str = "\
 repro — Stochastic Gradient Push (ICML 2019) reproduction
 
 USAGE:
-  repro train   [--model mlp_small] [--algo sgp|ar-sgd|sgp-2p|osgp|osgp-biased|
-                 dpsgd|adpsgd|hybrid-ar-1p|hybrid-2p-1p] [--nodes 8]
+  repro train   [--model mlp_small] [--algo <name>] [--nodes 8]
                 [--epochs 10] [--steps-per-epoch 16] [--fabric ethernet|ib]
-                [--tau 1] [--seed 0] [--adam] [--heterogeneity 0.3]
+                [--tau 1] [--grad-delay 1] [--seed 0] [--adam]
+                [--heterogeneity 0.3]
+                (see `repro algos` for the registered algorithm names)
   repro bench   <all|fig1|table1|table2|table3|table4|table5|fig2|fig3|
                  figd3|figd4|appendix-a> [--fast]
+  repro algos
   repro spectral
   repro average [--nodes 32] [--rounds 8]
   repro convergence [--nodes 16] [--iters 2000]
   repro inspect
 ";
-
-fn build_algo(name: &str, n: usize, tau: u64, switch_at: u64) -> Result<Algorithm> {
-    Ok(match name {
-        "ar-sgd" | "arsgd" | "ar" => Algorithm::ArSgd,
-        "sgp" | "sgp-1p" => Algorithm::sgp_1peer(n),
-        "sgp-2p" => Algorithm::sgp_2peer(n),
-        "osgp" => Algorithm::osgp_1peer(n, tau.max(1)),
-        "osgp-biased" => Algorithm::osgp_biased(n, tau.max(1)),
-        "dpsgd" => Algorithm::dpsgd(n),
-        "adpsgd" => Algorithm::adpsgd(n),
-        "hybrid-ar-1p" => Algorithm::hybrid_ar_then_1p(n, switch_at),
-        "hybrid-2p-1p" => Algorithm::hybrid_2p_then_1p(n, switch_at),
-        other => bail!("unknown algorithm `{other}`\n{USAGE}"),
-    })
-}
 
 fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
@@ -67,15 +55,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.optim = OptimKind::Adam;
         cfg.lr = sgp::optim::LrSchedule::constant(1e-3);
     }
-    let tau = args.u64_or("tau", 1)?;
-    let switch = cfg.total_iters() / 3;
-    let algorithm = build_algo(&args.str_or("algo", "sgp"), nodes, tau, switch)?;
+    let algo_name = args.str_or("algo", "sgp");
+    if algorithms::spec(&algo_name).is_none() {
+        bail!(
+            "unknown algorithm `{algo_name}` (known: {})\n{USAGE}",
+            algorithms::names().join(", ")
+        );
+    }
+    let iters = cfg.total_iters();
+    let mut trainer = TrainerBuilder::new(&rt)
+        .config(cfg)
+        .algorithm(&algo_name)
+        .tau(args.u64_or("tau", 1)?)
+        .grad_delay(args.u64_or("grad-delay", 1)?)
+        .build()?;
     println!(
-        "training {model} with {} on {nodes} nodes ({} iters)…",
-        algorithm.name(),
-        cfg.total_iters()
+        "training {model} with {} on {nodes} nodes ({iters} iters)…",
+        trainer.algo.name()
     );
-    let trainer = Trainer::new(&rt, cfg, algorithm)?;
     let r = trainer.run()?;
     r.write_csv(&experiments::results_dir())?;
     metrics::print_table(
@@ -91,6 +88,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         ]],
     );
     Ok(())
+}
+
+fn cmd_algos() {
+    let rows: Vec<Vec<String>> = algorithms::REGISTRY
+        .iter()
+        .map(|s| {
+            vec![
+                s.name.to_string(),
+                s.aliases.join(", "),
+                s.summary.to_string(),
+            ]
+        })
+        .collect();
+    metrics::print_table(
+        "registered distributed algorithms",
+        &["name", "aliases", "summary"],
+        &rows,
+    );
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -129,6 +144,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args)?,
         Some("bench") => cmd_bench(&args)?,
+        Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {
             let rt = Runtime::open_default()?;

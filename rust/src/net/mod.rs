@@ -132,6 +132,11 @@ pub enum CommPattern<'a> {
     /// point-to-point cost to model the send+recv + deadlock-avoidance
     /// ordering of symmetric gossip.
     Symmetric { schedule: &'a Schedule, bytes: usize, handshake: f64 },
+    /// Barrier-free asynchronous round (AD-PSGD): every node's clock
+    /// advances independently by its own compute plus a fixed per-round
+    /// `overhead_s` (the partially-overlapped averaging thread of Lian et
+    /// al., App. C). No node ever waits on a peer.
+    Async { overhead_s: f64 },
     /// No communication (single node / local SGD).
     None,
 }
@@ -163,6 +168,11 @@ impl TimingSim {
             CommPattern::None => {
                 for i in 0..self.n {
                     self.t[i] += comp[i];
+                }
+            }
+            CommPattern::Async { overhead_s } => {
+                for i in 0..self.n {
+                    self.t[i] += comp[i] + overhead_s;
                 }
             }
             CommPattern::AllReduce { bytes } => {
@@ -258,6 +268,7 @@ pub enum OwnedCommPattern {
     AllReduce { bytes: usize },
     PushSum { schedule: Schedule, bytes: usize, tau: u64 },
     Symmetric { schedule: Schedule, bytes: usize, handshake: f64 },
+    Async { overhead_s: f64 },
     None,
 }
 
@@ -276,6 +287,9 @@ impl OwnedCommPattern {
                     bytes: *bytes,
                     handshake: *handshake,
                 }
+            }
+            OwnedCommPattern::Async { overhead_s } => {
+                CommPattern::Async { overhead_s: *overhead_s }
             }
             OwnedCommPattern::None => CommPattern::None,
         }
@@ -378,6 +392,20 @@ mod tests {
     fn ptp_time_monotone_in_bytes() {
         let link = LinkModel::ethernet_10g();
         assert!(link.ptp_time(1 << 20) < link.ptp_time(1 << 24));
+    }
+
+    #[test]
+    fn async_rounds_never_block_on_stragglers() {
+        // AD-PSGD's clocks are independent: one slow node does not move
+        // anyone else's clock, unlike the AllReduce global barrier.
+        let mut sim = TimingSim::new(4, LinkModel::ethernet_10g());
+        let comp = [0.1, 0.1, 0.1, 5.0];
+        sim.advance(&CommPattern::Async { overhead_s: 0.01 }, &comp);
+        assert!((sim.t[0] - 0.11).abs() < 1e-12);
+        assert!((sim.t[3] - 5.01).abs() < 1e-12);
+        let mut barrier = TimingSim::new(4, LinkModel::ethernet_10g());
+        barrier.advance(&CommPattern::AllReduce { bytes: 8 }, &comp);
+        assert!(barrier.t[0] > 5.0, "barrier drags everyone to the straggler");
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`. Semantics match upstream for
+//! that surface (context chains print as `caused by: ...` lines from
+//! Debug). Swap the path dependency for the real crate when a registry is
+//! available — no call site changes.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error type: a message plus an optional boxed source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + 'static>>,
+}
+
+/// `anyhow::Result<T>` — alias used across the workspace.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap an existing error with a higher-level context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: c.to_string(), source: Some(Box::new(Chained(self))) }
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> Vec<String> {
+        let mut out = vec![self.msg.clone()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            out.push(e.to_string());
+            cur = e.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, "\n\ncaused by: {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as upstream).
+// The wrapped error is flattened to its Display text (plus its rendered
+// source, if any) so context chains never print a cause twice.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let msg = e.to_string();
+        let source = e
+            .source()
+            .map(|s| Box::new(Flat(s.to_string())) as Box<dyn StdError + 'static>);
+        Error { msg, source }
+    }
+}
+
+/// Leaf node carrying a pre-rendered source message.
+#[derive(Debug)]
+struct Flat(String);
+
+impl fmt::Display for Flat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl StdError for Flat {}
+
+/// Internal adapter so an `Error` can sit inside a `dyn StdError` chain.
+struct Chained(Error);
+
+impl fmt::Display for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl fmt::Debug for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl StdError for Chained {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0.source.as_deref()
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C>(self, c: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C>(self, c: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, c: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert a condition, early-returning an [`Error`] when it fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_chains_render_in_debug() {
+        let e: Error = Err::<(), _>(io_err()).context("opening config").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("opening config"));
+        assert!(dbg.contains("missing thing"));
+        assert_eq!(e.chain(), vec!["opening config", "missing thing"]);
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert!(f(3).is_ok());
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(g().is_err());
+    }
+}
