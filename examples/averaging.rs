@@ -110,7 +110,7 @@ fn main() -> Result<()> {
     let link = LinkModel::ethernet_10g();
     let comp = vec![0.1f64; n];
     for k in 0..5 {
-        let ctx = RoundCtx { k, comp: &comp, msg_bytes: 4 * d, link: &link };
+        let ctx = RoundCtx::new(k, &comp, 4 * d, &link);
         alg.communicate(&ctx);
     }
     let (mean_dist, _, _) = alg.consensus_stats();

@@ -1,11 +1,16 @@
 //! Gossip hot-path microbenchmarks: one PushSum engine step at the two
 //! parameter scales the experiments use (MLP ≈ 22k params, transformer
-//! ≈ 924k params), plus the de-bias and consensus-statistics kernels.
-//! This is the L3 cost that must stay off the critical path relative to
-//! gradient compute (see EXPERIMENTS.md §Perf).
+//! ≈ 924k params), plus the de-bias and consensus-statistics kernels and
+//! the fault-injected step. This is the L3 cost that must stay off the
+//! critical path relative to gradient compute (see EXPERIMENTS.md §Perf).
+//!
+//! Besides the human-readable report, the run writes machine-readable
+//! `results/BENCH_gossip.json` (override with `BENCH_JSON=<path>`) — the
+//! perf-trajectory artifact CI and tooling can diff across commits.
 
 use sgp::algorithms::{AlgoParams, DistributedAlgorithm, RoundCtx, Sgp};
-use sgp::benchkit::{bench, black_box, section};
+use sgp::benchkit::{bench, black_box, section, JsonReport};
+use sgp::faults::{FaultClock, FaultPlan};
 use sgp::gossip::PushSumEngine;
 use sgp::net::LinkModel;
 use sgp::optim::OptimKind;
@@ -19,16 +24,18 @@ fn engine(n: usize, dim: usize, delay: u64) -> PushSumEngine {
 }
 
 fn main() {
+    let mut report = JsonReport::new();
+
     section("gossip engine: one step (send+aggregate all nodes)");
     for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
         for n in [8usize, 16] {
             let sched = Schedule::new(TopologyKind::OnePeerExp, n);
             let mut eng = engine(n, dim, 0);
             let mut k = 0u64;
-            bench(&format!("pushsum_step/1peer/{tag}/n{n}"), || {
+            report.push(bench(&format!("pushsum_step/1peer/{tag}/n{n}"), || {
                 eng.step(k, &sched);
                 k += 1;
-            });
+            }));
         }
     }
 
@@ -36,17 +43,39 @@ fn main() {
     let sched2 = Schedule::new(TopologyKind::TwoPeerExp, 16);
     let mut eng = engine(16, 22_026, 0);
     let mut k = 0u64;
-    bench("pushsum_step/2peer/mlp-22k/n16", || {
+    report.push(bench("pushsum_step/2peer/mlp-22k/n16", || {
         eng.step(k, &sched2);
         k += 1;
-    });
+    }));
     let sched1 = Schedule::new(TopologyKind::OnePeerExp, 16);
     let mut eng = engine(16, 22_026, 1);
     let mut k = 0u64;
-    bench("pushsum_step/1peer-tau1/mlp-22k/n16", || {
+    report.push(bench("pushsum_step/1peer-tau1/mlp-22k/n16", || {
         eng.step(k, &sched1);
         k += 1;
-    });
+    }));
+
+    section("fault injection: lossy + churn step vs clean step, n=16");
+    // The fault layer's overhead budget: a lossy step with churn should
+    // stay within a small factor of the clean step at both scales.
+    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 16);
+        let clock = FaultClock::new(
+            FaultPlan::lossless()
+                .with_drop(0.05)
+                .with_crash(3, 64, Some(128))
+                .with_seed(1),
+        );
+        let mut eng = engine(16, dim, 0);
+        let mut k = 0u64;
+        report.push(bench(
+            &format!("pushsum_step_faulty/5pct-drop/{tag}/n16"),
+            || {
+                eng.step_faulty(k % 256, &sched, &clock);
+                k += 1;
+            },
+        ));
+    }
 
     section("dispatch overhead: direct engine step vs boxed DistributedAlgorithm");
     // The trait indirection must cost ~nothing next to the O(n·dim) gossip
@@ -58,10 +87,10 @@ fn main() {
         let sched = Schedule::new(TopologyKind::OnePeerExp, n);
         let mut eng = engine(n, dim, 0);
         let mut k = 0u64;
-        bench(&format!("dispatch/direct-engine/{tag}/n{n}"), || {
+        report.push(bench(&format!("dispatch/direct-engine/{tag}/n{n}"), || {
             eng.step(k, &sched);
             k += 1;
-        });
+        }));
 
         let mut rng = Pcg::new(1);
         let mut params = AlgoParams::new(n, rng.gaussian_vec(dim), OptimKind::Sgd);
@@ -71,24 +100,32 @@ fn main() {
         let link = LinkModel::ethernet_10g();
         let comp = vec![0.1f64; n];
         let mut k = 0u64;
-        bench(&format!("dispatch/boxed-trait/{tag}/n{n}"), || {
-            let ctx = RoundCtx { k, comp: &comp, msg_bytes: 4 * dim, link: &link };
+        report.push(bench(&format!("dispatch/boxed-trait/{tag}/n{n}"), || {
+            let ctx = RoundCtx::new(k, &comp, 4 * dim, &link);
             black_box(alg.communicate(&ctx));
             k += 1;
-        });
+        }));
     }
 
     section("debias + statistics");
     let eng = engine(16, 923_904, 0);
     let mut out = vec![0.0f32; 923_904];
-    bench("debias_into/lm-924k", || {
+    report.push(bench("debias_into/lm-924k", || {
         eng.states[0].debias_into(&mut out);
         black_box(&out);
-    });
-    bench("consensus_distance/lm-924k/n16", || {
+    }));
+    report.push(bench("consensus_distance/lm-924k/n16", || {
         black_box(eng.consensus_distance());
-    });
-    bench("total_mass/lm-924k/n16", || {
+    }));
+    report.push(bench("total_mass/lm-924k/n16", || {
         black_box(eng.total_mass());
-    });
+    }));
+
+    let path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "results/BENCH_gossip.json".to_string());
+    let path = std::path::PathBuf::from(path);
+    match report.write(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
 }

@@ -18,6 +18,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::faults::MembershipEvent;
 use crate::net::OwnedCommPattern;
 use crate::optim::Optimizer;
 use crate::rng::Pcg;
@@ -32,6 +33,10 @@ pub struct AdPsgd {
     pending: Vec<Option<(Vec<f32>, f32)>>,
     /// Cumulative simulated completion clock per node.
     clock: Vec<f64>,
+    /// Members currently down (fault mode): unlike the gossip strategies,
+    /// AD-PSGD picks its own random peers, so it must know who is gone —
+    /// this is the state the `on_membership_change` hook maintains.
+    down: Vec<bool>,
     rng: Pcg,
 }
 
@@ -42,6 +47,7 @@ impl AdPsgd {
             opts: (0..p.n).map(|_| Optimizer::new(p.optim, p.init.len())).collect(),
             pending: (0..p.n).map(|_| None).collect(),
             clock: vec![0.0; p.n],
+            down: vec![false; p.n],
             rng: Pcg::new(p.seed ^ 0xad95),
         }
     }
@@ -83,33 +89,50 @@ impl DistributedAlgorithm for AdPsgd {
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
         let n = self.params.len();
-        let overhead = 0.5 * ctx.link.ptp_time(ctx.msg_bytes);
-        // Order this round's n updates by cumulative completion time.
+        let link = match ctx.faults {
+            Some(fc) => fc.scaled_link(ctx.link, ctx.k),
+            None => ctx.link.clone(),
+        };
+        let overhead = 0.5 * link.ptp_time(ctx.msg_bytes);
+        // Order this round's updates (surviving members only) by cumulative
+        // completion time. Membership is round-constant, so the sorted
+        // survivor list is built once.
+        let alive: Vec<usize> = (0..n).filter(|&j| !self.down[j]).collect();
         let mut queue: EventQueue<usize> = EventQueue::new();
-        for i in 0..n {
+        for &i in &alive {
             self.clock[i] += ctx.comp[i] + overhead;
             queue.push(self.clock[i], i);
         }
         while let Some(ev) = queue.pop() {
             let i = ev.payload;
-            // Pairwise average with a uniformly random peer (atomic in the
-            // shared-memory model).
-            if n > 1 {
-                let mut j = self.rng.below(n - 1);
-                if j >= i {
-                    j += 1;
-                }
-                let (a, b) = if i < j {
-                    let (l, r) = self.params.split_at_mut(j);
-                    (&mut l[i], &mut r[0])
-                } else {
-                    let (l, r) = self.params.split_at_mut(i);
-                    (&mut r[0], &mut l[j])
-                };
-                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
-                    let m = 0.5 * (*x + *y);
-                    *x = m;
-                    *y = m;
+            if alive.len() > 1 {
+                // Pairwise average with a uniformly random *live* peer
+                // (atomic in the shared-memory model). With full
+                // membership the skip-self index arithmetic consumes the
+                // RNG exactly like the original uniform draw, so lossless
+                // runs are bit-identical.
+                let pos = alive.binary_search(&i).expect("event node is alive");
+                let pick = self.rng.below(alive.len() - 1);
+                let j = alive[pick + (pick >= pos) as usize];
+                // A dropped exchange skips the averaging (the stale
+                // gradient below still lands) — AD-PSGD has no mass ledger.
+                let dropped = ctx
+                    .faults
+                    .map(|fc| fc.drops(i, j, ctx.k))
+                    .unwrap_or(false);
+                if !dropped {
+                    let (a, b) = if i < j {
+                        let (l, r) = self.params.split_at_mut(j);
+                        (&mut l[i], &mut r[0])
+                    } else {
+                        let (l, r) = self.params.split_at_mut(i);
+                        (&mut r[0], &mut l[j])
+                    };
+                    for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                        let m = 0.5 * (*x + *y);
+                        *x = m;
+                        *y = m;
+                    }
                 }
             }
             // Apply the stale gradient computed on the round-start snapshot.
@@ -122,6 +145,22 @@ impl DistributedAlgorithm for AdPsgd {
 
     fn consensus_stats(&self) -> (f64, f64, f64) {
         consensus_of(&self.params)
+    }
+
+    fn on_membership_change(&mut self, event: &MembershipEvent) {
+        match *event {
+            MembershipEvent::Crash { node, .. } | MembershipEvent::Leave { node, .. } => {
+                self.down[node] = true;
+                // The snapshot gradient dies with the crash.
+                self.pending[node] = None;
+            }
+            MembershipEvent::Rejoin { node, .. } => {
+                self.down[node] = false;
+                // Rejoin-from-checkpoint: clock catches up to the cluster.
+                let now = self.clock.iter().cloned().fold(0.0, f64::max);
+                self.clock[node] = now;
+            }
+        }
     }
 
     fn drain(&mut self) {
@@ -145,7 +184,27 @@ mod tests {
         comp: &'a [f64],
         link: &'a LinkModel,
     ) -> RoundCtx<'a> {
-        RoundCtx { k, comp, msg_bytes: 1 << 10, link }
+        RoundCtx::new(k, comp, 1 << 10, link)
+    }
+
+    #[test]
+    fn crashed_peer_is_never_averaged_with() {
+        let p = AlgoParams::new(4, vec![0.0f32; 2], OptimKind::Sgd);
+        let mut alg = AdPsgd::new(&p);
+        alg.params[3] = vec![100.0, 100.0]; // poison value on the crashed node
+        alg.on_membership_change(&MembershipEvent::Leave { node: 3, at: 0 });
+        let link = LinkModel::ethernet_10g();
+        let comp = [0.1; 4];
+        for k in 0..20 {
+            alg.communicate(&ctx(k, &comp, &link));
+        }
+        // Nobody ever pulled mass from the dead node, and its own state and
+        // clock stayed frozen.
+        for v in &alg.params[..3] {
+            assert!(v.iter().all(|x| x.abs() < 1e-6), "{v:?}");
+        }
+        assert_eq!(alg.params[3], vec![100.0, 100.0]);
+        assert_eq!(alg.clock[3], 0.0);
     }
 
     #[test]

@@ -125,7 +125,7 @@ mod tests {
         a.apply_step(0, &[1.0, 0.0], 0.1);
         a.apply_step(1, &[3.0, 0.0], 0.1);
         let link = LinkModel::ethernet_10g();
-        let ctx = RoundCtx { k: 0, comp: &[0.1, 0.1], msg_bytes: 64, link: &link };
+        let ctx = RoundCtx::new(0, &[0.1, 0.1], 64, &link);
         let pat = a.communicate(&ctx);
         assert!(matches!(pat, OwnedCommPattern::AllReduce { bytes: 64 }));
         // SGD with weight decay 1e-4 on x=0: x -= lr * mean(g) = -0.1*2.0.

@@ -50,7 +50,9 @@ impl DaSgd {
 
 pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::OnePeerExp);
-    Ok(Box::new(DaSgd::new(kind, p.tau, p.grad_delay.max(1), p)))
+    // Overlap is DaSGD's point: clamp τ ≥ 1 (AlgoParams defaults τ to 0 =
+    // blocking; the degenerate τ=0 form is reachable via DaSgd::new).
+    Ok(Box::new(DaSgd::new(kind, p.tau.max(1), p.grad_delay.max(1), p)))
 }
 
 impl DistributedAlgorithm for DaSgd {
@@ -80,7 +82,10 @@ impl DistributedAlgorithm for DaSgd {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        self.engine.step(ctx.k, &self.schedule);
+        match ctx.faults {
+            Some(clock) => self.engine.step_faulty(ctx.k, &self.schedule, clock),
+            None => self.engine.step(ctx.k, &self.schedule),
+        }
         // Timing staleness is the *message* delay only: the gradient FIFO
         // is node-local and costless, so it earns no extra timing credit.
         OwnedCommPattern::PushSum {
@@ -143,7 +148,7 @@ mod tests {
                 let g = if k == 0 { vec![i as f32; 4] } else { vec![0.0; 4] };
                 alg.apply_step(i, &g, 0.1);
             }
-            let ctx = RoundCtx { k, comp: &comp, msg_bytes: 16, link: &link };
+            let ctx = RoundCtx::new(k, &comp, 16, &link);
             match alg.communicate(&ctx) {
                 OwnedCommPattern::PushSum { tau, .. } => assert_eq!(tau, 1),
                 _ => panic!("wrong pattern"),

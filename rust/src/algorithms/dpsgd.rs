@@ -26,8 +26,15 @@ pub struct DPsgd {
 
 impl DPsgd {
     pub fn new(kind: TopologyKind, p: &AlgoParams) -> Self {
+        // `biased = true`: real D-PSGD carries no push-sum weight, so the
+        // engine's w is pinned at 1. Under a lossless symmetric schedule
+        // this is a no-op (w stays 1 anyway — the SGP ⊇ D-PSGD
+        // containment); under message loss it models D-PSGD's missing mass
+        // accounting: a dropped message skews the symmetric average and
+        // there is no weight to absorb it, which is exactly the bias the
+        // fault experiments measure against SGP.
         Self {
-            engine: PushSumEngine::new(vec![p.init.clone(); p.n], 0, false),
+            engine: PushSumEngine::new(vec![p.init.clone(); p.n], 0, true),
             schedule: Schedule::with_seed(kind, p.n, p.seed),
             opts: (0..p.n).map(|_| Optimizer::new(p.optim, p.init.len())).collect(),
         }
@@ -36,6 +43,16 @@ impl DPsgd {
 
 pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::BipartiteExp);
+    // D-PSGD is defined over symmetric doubly-stochastic mixing, and the
+    // engine runs weightless (w ≡ 1, no push-sum correction) — reject
+    // directed/asymmetric overrides instead of silently skewing node
+    // views toward high-in-degree nodes (use sgp for directed graphs).
+    let sched = Schedule::with_seed(kind, p.n, p.seed);
+    anyhow::ensure!(
+        (0..8).all(|k| sched.is_symmetric(k)),
+        "dpsgd requires a symmetric schedule; `{kind:?}` is not \
+         (use sgp for directed/asymmetric graphs)"
+    );
     Ok(Box::new(DPsgd::new(kind, p)))
 }
 
@@ -61,7 +78,10 @@ impl DistributedAlgorithm for DPsgd {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        self.engine.step(ctx.k, &self.schedule);
+        match ctx.faults {
+            Some(clock) => self.engine.step_faulty(ctx.k, &self.schedule, clock),
+            None => self.engine.step(ctx.k, &self.schedule),
+        }
         OwnedCommPattern::Symmetric {
             schedule: self.schedule.clone(),
             bytes: ctx.msg_bytes,
@@ -95,7 +115,7 @@ mod tests {
             alg.apply_step(i, &[0.1 * i as f32; 4], 0.05);
         }
         for k in 0..20 {
-            let ctx = RoundCtx { k, comp: &comp, msg_bytes: 16, link: &link };
+            let ctx = RoundCtx::new(k, &comp, 16, &link);
             match alg.communicate(&ctx) {
                 OwnedCommPattern::Symmetric { handshake, .. } => {
                     assert_eq!(handshake, HANDSHAKE)

@@ -51,6 +51,7 @@ pub use sgp::Sgp;
 use anyhow::{bail, Result};
 
 use crate::collectives;
+use crate::faults::{FaultClock, MembershipEvent};
 use crate::net::{LinkModel, OwnedCommPattern};
 use crate::optim::OptimKind;
 use crate::topology::TopologyKind;
@@ -68,6 +69,23 @@ pub struct RoundCtx<'a> {
     /// The simulated fabric (for strategies that derive their own costs,
     /// e.g. AD-PSGD's partially-overlapped averaging thread).
     pub link: &'a LinkModel,
+    /// Active fault scenario, if any: strategies route their gossip through
+    /// the lossy/churn-aware paths when this is set. `None` (the default)
+    /// is the lossless cluster.
+    pub faults: Option<&'a FaultClock>,
+}
+
+impl<'a> RoundCtx<'a> {
+    /// A lossless-round context (the common case in tests and benches).
+    pub fn new(k: u64, comp: &'a [f64], msg_bytes: usize, link: &'a LinkModel) -> Self {
+        Self { k, comp, msg_bytes, link, faults: None }
+    }
+
+    /// Attach a fault scenario to the round.
+    pub fn with_faults(mut self, clock: &'a FaultClock) -> Self {
+        self.faults = Some(clock);
+        self
+    }
 }
 
 /// Consensus statistics `(mean, min, max)` over nodes of ‖v_i − v̄‖₂ for a
@@ -150,6 +168,15 @@ pub trait DistributedAlgorithm {
         false
     }
 
+    /// Membership-change notification under a fault scenario: the
+    /// coordinator (or the fault harness) reports crashes, rejoins and
+    /// permanent leaves before the round they take effect. The default is a
+    /// no-op — the gossip strategies handle churn structurally (crashed
+    /// nodes freeze in place and the schedule re-indexes over survivors),
+    /// so only strategies with their own peer-selection state (e.g.
+    /// AD-PSGD) need to react.
+    fn on_membership_change(&mut self, _event: &MembershipEvent) {}
+
     /// Flush in-flight state (delayed messages, deferred gradients) at the
     /// end of a run so no mass or update is stranded.
     fn drain(&mut self);
@@ -163,7 +190,11 @@ pub struct AlgoParams {
     /// Initial parameters, replicated to every node.
     pub init: Vec<f32>,
     pub optim: OptimKind,
-    /// Overlap delay τ (OSGP / DaSGD communication staleness).
+    /// Overlap delay τ (OSGP / DaSGD communication staleness). Defaults to
+    /// 0 — blocking SGP semantics — so direct constructions don't silently
+    /// inherit overlap staleness; the overlap strategies (OSGP, DaSGD)
+    /// clamp it to ≥ 1 at build time, and callers that want more overlap
+    /// set it explicitly ([`crate::coordinator::TrainerBuilder::tau`]).
     pub tau: u64,
     /// Gradient-application delay in rounds (DaSGD).
     pub grad_delay: u64,
@@ -185,7 +216,7 @@ impl AlgoParams {
             n,
             init,
             optim,
-            tau: 1,
+            tau: 0,
             grad_delay: 1,
             switch_at: 0,
             seed: 0,
@@ -313,6 +344,16 @@ mod tests {
             assert_eq!(a.dim(), 8, "{}", s.name);
             assert!(!a.name().is_empty());
         }
+    }
+
+    #[test]
+    fn default_params_are_blocking() {
+        // τ = 0 by default: direct (non-builder) constructions get blocking
+        // SGP semantics; OSGP/DaSGD clamp to ≥ 1 where they need overlap.
+        let p = params(4);
+        assert_eq!(p.tau, 0);
+        assert_eq!(build("osgp", &p).unwrap().name(), "1-OSGP");
+        assert_eq!(build("dasgd", &p).unwrap().name(), "1-DaSGD");
     }
 
     #[test]

@@ -70,7 +70,10 @@ impl DistributedAlgorithm for Osgp {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        self.engine.step(ctx.k, &self.schedule);
+        match ctx.faults {
+            Some(clock) => self.engine.step_faulty(ctx.k, &self.schedule, clock),
+            None => self.engine.step(ctx.k, &self.schedule),
+        }
         OwnedCommPattern::PushSum {
             schedule: self.schedule.clone(),
             bytes: ctx.msg_bytes,
@@ -102,7 +105,7 @@ mod tests {
         let link = LinkModel::ethernet_10g();
         let comp = vec![0.1; n];
         for k in 0..6 {
-            let ctx = RoundCtx { k, comp: &comp, msg_bytes: 16, link: &link };
+            let ctx = RoundCtx::new(k, &comp, 16, &link);
             match alg.communicate(&ctx) {
                 OwnedCommPattern::PushSum { tau, .. } => assert_eq!(tau, 2),
                 _ => panic!("wrong pattern"),

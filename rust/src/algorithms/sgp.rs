@@ -126,7 +126,10 @@ impl DistributedAlgorithm for Sgp {
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
         let sched = self.schedule.at(ctx.k);
-        self.engine.step(ctx.k, sched);
+        match ctx.faults {
+            Some(clock) => self.engine.step_faulty(ctx.k, sched, clock),
+            None => self.engine.step(ctx.k, sched),
+        }
         OwnedCommPattern::PushSum {
             schedule: sched.clone(),
             bytes: ctx.msg_bytes,
@@ -166,7 +169,7 @@ mod tests {
         let link = LinkModel::ethernet_10g();
         let comp = vec![0.1; n];
         for k in 0..40 {
-            let ctx = RoundCtx { k, comp: &comp, msg_bytes: 16, link: &link };
+            let ctx = RoundCtx::new(k, &comp, 16, &link);
             let pat = alg.communicate(&ctx);
             assert!(matches!(pat, OwnedCommPattern::PushSum { tau: 0, .. }));
         }

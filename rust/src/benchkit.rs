@@ -77,6 +77,53 @@ pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchStats {
     bench_for(name, Duration::from_secs(2), f)
 }
 
+/// Collects [`BenchStats`] and writes them as machine-readable JSON — the
+/// artifact CI and perf-trajectory tooling diff across commits (e.g.
+/// `results/BENCH_gossip.json`). Hand-rolled emitter: the offline build has
+/// no serde, and the schema is flat.
+#[derive(Default)]
+pub struct JsonReport {
+    entries: Vec<BenchStats>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, stats: BenchStats) {
+        self.entries.push(stats);
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"benches\": [\n");
+        for (i, b) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \
+                 \"median_ns\": {}, \"p95_ns\": {}, \"min_ns\": {}, \"max_ns\": {}}}{}\n",
+                b.name.replace('"', "'"),
+                b.iters,
+                b.mean.as_nanos(),
+                b.median.as_nanos(),
+                b.p95.as_nanos(),
+                b.min.as_nanos(),
+                b.max.as_nanos(),
+                if i + 1 == self.entries.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the report, creating parent directories as needed.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
 /// Prevent the optimizer from discarding a value (std::hint::black_box is
 /// stable; thin alias so benches read uniformly).
 #[inline]
@@ -86,4 +133,44 @@ pub fn black_box<T>(x: T) -> T {
 
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::json::Json;
+
+    #[test]
+    fn json_report_is_parseable_and_complete() {
+        let mut rep = JsonReport::new();
+        rep.push(BenchStats {
+            name: "a/b\"c".into(),
+            iters: 7,
+            mean: Duration::from_nanos(1500),
+            median: Duration::from_nanos(1400),
+            p95: Duration::from_nanos(2000),
+            min: Duration::from_nanos(1000),
+            max: Duration::from_nanos(3000),
+        });
+        rep.push(BenchStats {
+            name: "second".into(),
+            iters: 3,
+            mean: Duration::from_micros(2),
+            median: Duration::from_micros(2),
+            p95: Duration::from_micros(2),
+            min: Duration::from_micros(1),
+            max: Duration::from_micros(4),
+        });
+        let parsed = Json::parse(&rep.to_json()).expect("valid JSON");
+        let benches = parsed.get("benches").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(
+            benches[1].get("mean_ns").and_then(|v| v.as_f64()),
+            Some(2000.0)
+        );
+        assert_eq!(
+            benches[0].get("name").and_then(|v| v.as_str()),
+            Some("a/b'c")
+        );
+    }
 }

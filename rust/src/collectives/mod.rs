@@ -5,6 +5,7 @@
 //! below the level the experiments depend on.
 
 use crate::net::LinkModel;
+use crate::rng::Pcg;
 
 /// Exactly average a set of flat vectors in place (the AllReduce result:
 /// every participant ends with the same mean vector).
@@ -39,6 +40,20 @@ pub fn mean_of(vs: &[Vec<f32>]) -> Vec<f32> {
     acc.iter().map(|a| (a / n as f64) as f32).collect()
 }
 
+/// Shape of the ring algorithm: `(serial steps, parallel transfers per
+/// step, seconds per transfer)` — the single source both the clean and
+/// fault-inflated cost paths derive from.
+fn ring_shape(n: usize, bytes: usize, link: &LinkModel) -> (usize, usize, f64) {
+    let chunk = bytes as f64 / n as f64;
+    (2 * (n - 1), n, link.alpha_s + chunk / link.beta_bps)
+}
+
+/// Shape of the binary-tree algorithm (reduce + broadcast), same triple.
+fn tree_shape(n: usize, bytes: usize, link: &LinkModel) -> (usize, usize, f64) {
+    let rounds = 2 * (n as f64).log2().ceil() as usize;
+    (rounds, (n / 2).max(1), link.alpha_s + bytes as f64 / link.beta_bps)
+}
+
 /// Time for a bandwidth-optimal ring AllReduce of `bytes` over `n` nodes:
 /// 2(n−1) latency terms plus 2(n−1)/n bandwidth terms (reduce-scatter +
 /// all-gather). This is the standard α–β model (Thakur et al.).
@@ -46,9 +61,8 @@ pub fn ring_allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
     if n <= 1 {
         return 0.0;
     }
-    let steps = 2 * (n - 1);
-    let chunk = bytes as f64 / n as f64;
-    steps as f64 * (link.alpha_s + chunk / link.beta_bps)
+    let (steps, _, transfer) = ring_shape(n, bytes, link);
+    steps as f64 * transfer
 }
 
 /// Time for a binary-tree AllReduce (reduce + broadcast): 2·log2(n) rounds
@@ -57,14 +71,64 @@ pub fn tree_allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
     if n <= 1 {
         return 0.0;
     }
-    let rounds = 2.0 * (n as f64).log2().ceil();
-    rounds * (link.alpha_s + bytes as f64 / link.beta_bps)
+    let (steps, _, transfer) = tree_shape(n, bytes, link);
+    steps as f64 * transfer
 }
 
 /// The better of ring/tree for the message size — what a real collective
 /// library's algorithm picker does.
 pub fn allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
     ring_allreduce_time(n, bytes, link).min(tree_allreduce_time(n, bytes, link))
+}
+
+/// Maximum retransmissions per transfer before a collective step gives up
+/// and eats the cost anyway (bounds the fault model; real stacks abort).
+pub const MAX_RETRANSMITS: u32 = 8;
+
+/// One serial collective step of `parallel` concurrent transfers, each
+/// taking `transfer` seconds, with per-transfer drop probability `p`: the
+/// step completes when the *slowest* transfer lands, and each dropped
+/// transfer is retransmitted (geometric, capped). This is the mechanism
+/// behind the paper's sensitivity claim — a collective must wait for
+/// every link, so the per-step slowdown grows with the number of parallel
+/// transfers, while a push-sum node only ever waits for its own message.
+fn faulty_step_time(parallel: usize, transfer: f64, p: f64, rng: &mut Pcg) -> f64 {
+    let mut worst = 1u32;
+    for _ in 0..parallel {
+        let mut attempts = 1u32;
+        while attempts <= MAX_RETRANSMITS && rng.f64() < p {
+            attempts += 1;
+        }
+        worst = worst.max(attempts);
+    }
+    worst as f64 * transfer
+}
+
+/// AllReduce time under per-message drop probability `p`, retransmitting
+/// lost chunks (deterministic given `rng`). With `p = 0` this equals
+/// [`allreduce_time`] exactly, so fault-free comparisons are unbiased.
+pub fn allreduce_time_faulty(
+    n: usize,
+    bytes: usize,
+    link: &LinkModel,
+    p: f64,
+    rng: &mut Pcg,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return allreduce_time(n, bytes, link);
+    }
+    let (ring_steps, ring_par, ring_transfer) = ring_shape(n, bytes, link);
+    let ring: f64 = (0..ring_steps)
+        .map(|_| faulty_step_time(ring_par, ring_transfer, p, rng))
+        .sum();
+    let (tree_steps, tree_par, tree_transfer) = tree_shape(n, bytes, link);
+    let tree: f64 = (0..tree_steps)
+        .map(|_| faulty_step_time(tree_par, tree_transfer, p, rng))
+        .sum();
+    ring.min(tree)
 }
 
 #[cfg(test)]
@@ -119,5 +183,38 @@ mod tests {
     fn single_node_costs_nothing() {
         let link = LinkModel::ethernet_10g();
         assert_eq!(allreduce_time(1, 1 << 20, &link), 0.0);
+        let mut rng = Pcg::new(1);
+        assert_eq!(allreduce_time_faulty(1, 1 << 20, &link, 0.2, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn faulty_allreduce_equals_clean_at_zero_drop() {
+        let link = LinkModel::ethernet_10g();
+        let mut rng = Pcg::new(2);
+        for n in [4usize, 16, 32] {
+            assert_eq!(
+                allreduce_time_faulty(n, 100 << 20, &link, 0.0, &mut rng),
+                allreduce_time(n, 100 << 20, &link)
+            );
+        }
+    }
+
+    #[test]
+    fn faulty_allreduce_inflates_with_drop_rate_and_n() {
+        let link = LinkModel::ethernet_10g();
+        let avg = |n: usize, p: f64| {
+            let mut rng = Pcg::new(3);
+            (0..200)
+                .map(|_| allreduce_time_faulty(n, 100 << 20, &link, p, &mut rng))
+                .sum::<f64>()
+                / 200.0
+        };
+        let clean = avg(16, 0.0);
+        let lossy = avg(16, 0.05);
+        assert!(lossy > 1.2 * clean, "5% loss must inflate: {clean} → {lossy}");
+        // More parallel links ⇒ worse relative inflation (the scaling trap).
+        let r8 = avg(8, 0.05) / avg(8, 0.0);
+        let r32 = avg(32, 0.05) / avg(32, 0.0);
+        assert!(r32 > r8, "inflation must grow with n: {r8} vs {r32}");
     }
 }

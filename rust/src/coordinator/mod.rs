@@ -26,6 +26,7 @@ use anyhow::{bail, Result};
 use crate::algorithms::{self, AlgoParams, DistributedAlgorithm, RoundCtx};
 use crate::config::TrainConfig;
 use crate::data::{Batch, BigramLm, Blobs, DataSource};
+use crate::faults::{FaultClock, FaultPlan};
 use crate::metrics::{EvalRecord, IterRecord, RunResult};
 use crate::net::TimingSim;
 use crate::rng::Pcg;
@@ -52,6 +53,7 @@ pub struct TrainerBuilder<'rt> {
     switch_at: Option<u64>,
     topology: Option<TopologyKind>,
     custom: Option<Box<dyn DistributedAlgorithm>>,
+    faults: Option<FaultPlan>,
 }
 
 impl<'rt> TrainerBuilder<'rt> {
@@ -65,6 +67,7 @@ impl<'rt> TrainerBuilder<'rt> {
             switch_at: None,
             topology: None,
             custom: None,
+            faults: None,
         }
     }
 
@@ -110,6 +113,14 @@ impl<'rt> TrainerBuilder<'rt> {
     /// the escape hatch for experiments with bespoke schedules.
     pub fn strategy(mut self, algo: Box<dyn DistributedAlgorithm>) -> Self {
         self.custom = Some(algo);
+        self
+    }
+
+    /// Run the training under a fault scenario: message loss, degraded
+    /// links, node crash/rejoin (see [`crate::faults`]). Replayed
+    /// deterministically from the plan's seed.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
         self
     }
 
@@ -189,7 +200,8 @@ impl<'rt> TrainerBuilder<'rt> {
             dim
         );
 
-        Ok(Trainer { rt, cfg, algo, data, msg_bytes, dim })
+        let faults = self.faults.map(FaultClock::new);
+        Ok(Trainer { rt, cfg, algo, data, msg_bytes, dim, faults })
     }
 }
 
@@ -200,6 +212,7 @@ pub struct Trainer<'rt> {
     pub data: DataSource,
     msg_bytes: usize,
     dim: usize,
+    faults: Option<FaultClock>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -244,21 +257,37 @@ impl<'rt> Trainer<'rt> {
             u64::MAX
         };
 
+        let mut last_sim = 0.0;
         for k in 0..total {
             let epoch = cfg.epoch_of(k);
             let lr = cfg.lr.lr_at(epoch) as f32;
 
-            // 1–2: local gradient at each node's view, handed to the
-            // strategy's per-node slot.
+            // Fault scenario: surface this round's membership transitions
+            // to the strategy before anything else happens at k.
+            if let Some(fc) = &self.faults {
+                for ev in fc.events_at(k) {
+                    self.algo.on_membership_change(&ev);
+                }
+            }
+            let is_down =
+                |i: usize| self.faults.as_ref().is_some_and(|fc| fc.is_down(i, k));
+
+            // 1–2: local gradient at each surviving node's view, handed to
+            // the strategy's per-node slot (crashed nodes compute nothing).
             let mut mean_loss = 0.0f64;
+            let mut alive_n = 0usize;
             for i in 0..n {
+                if is_down(i) {
+                    continue;
+                }
                 let batch = self.data.train_batch(i, k);
                 self.algo.local_view(i, &mut zbuf);
                 let (l, g) = self.rt.train_step(&cfg.model, &zbuf, &batch)?;
                 mean_loss += l as f64;
                 self.algo.apply_step(i, &g, lr);
+                alive_n += 1;
             }
-            mean_loss /= n as f64;
+            mean_loss /= alive_n.max(1) as f64;
 
             // 3: communication (strategy-owned) + 4: timing.
             let comp = cfg.compute.sample_all(n, &mut rng);
@@ -267,9 +296,15 @@ impl<'rt> Trainer<'rt> {
                 comp: &comp,
                 msg_bytes: self.msg_bytes,
                 link: &cfg.link,
+                faults: self.faults.as_ref(),
             };
             let pattern = self.algo.communicate(&ctx);
-            let sim_now = timing.advance(&pattern.borrowed(), &comp);
+            let sim_now = timing.advance_with_faults(
+                &pattern.borrowed(),
+                &comp,
+                self.faults.as_ref(),
+            );
+            last_sim = sim_now;
 
             result.iters.push(IterRecord {
                 iter: k,
@@ -279,8 +314,9 @@ impl<'rt> Trainer<'rt> {
                 lr: lr as f64,
             });
 
-            // Evaluation (end of epoch points + final iteration).
-            if (k + 1) % eval_every == 0 || k + 1 == total {
+            // Mid-run evaluation at epoch ends; the final point is emitted
+            // after the drain below so it never strands in-flight mass.
+            if (k + 1) % eval_every == 0 && k + 1 != total {
                 let rec = self.eval_point(
                     k,
                     epoch + 1.0 / cfg.steps_per_epoch as f64,
@@ -291,7 +327,15 @@ impl<'rt> Trainer<'rt> {
             }
         }
 
+        // Flush in-flight state (τ-delayed messages, deferred gradients)
+        // *before* the final evaluation — the metrics the sweeps and tables
+        // report must account for every message that was still travelling.
         self.algo.drain();
+        if total > 0 {
+            let rec =
+                self.eval_point(total - 1, cfg.epoch_of(total), last_sim, &val)?;
+            result.evals.push(rec);
+        }
         result.sim_total_s = timing.makespan();
         result.wall_s = wall_start.elapsed().as_secs_f64();
         if let Some(e) = result.evals.last() {
@@ -309,8 +353,29 @@ impl<'rt> Trainer<'rt> {
         val: &[Batch],
     ) -> Result<EvalRecord> {
         let n = self.cfg.n_nodes;
+        // Fault mode: a crashed/departed node's frozen checkpoint is not
+        // part of the consensus model — evaluate over survivors only,
+        // matching the offline harness (`faults::harness::run_quadratic`).
+        let is_down =
+            |i: usize| self.faults.as_ref().is_some_and(|fc| fc.is_down(i, k));
+        let survivor_views: Option<Vec<Vec<f32>>> =
+            if self.faults.is_some() && !self.algo.is_exact() {
+                Some(
+                    (0..n)
+                        .filter(|&i| !is_down(i))
+                        .map(|i| self.algo.node_view(i))
+                        .collect(),
+                )
+            } else {
+                None
+            };
         let consensus = if self.cfg.track_consensus {
-            self.algo.consensus_stats()
+            match &survivor_views {
+                Some(views) if !views.is_empty() => {
+                    crate::algorithms::consensus_of(views)
+                }
+                _ => self.algo.consensus_stats(),
+            }
         } else {
             (0.0, 0.0, 0.0)
         };
@@ -320,19 +385,29 @@ impl<'rt> Trainer<'rt> {
         let node_stats = if self.cfg.track_consensus && !self.algo.is_exact() {
             let mut metrics = Vec::with_capacity(n);
             for i in 0..n {
+                if is_down(i) {
+                    continue;
+                }
                 let z = self.algo.node_view(i);
                 let (_, m) = self.evaluate(&z, &val[..val.len().min(2)])?;
                 metrics.push(m);
             }
-            (
-                metrics.iter().cloned().fold(f64::INFINITY, f64::min),
-                metrics.iter().sum::<f64>() / metrics.len().max(1) as f64,
-                metrics.iter().cloned().fold(0.0, f64::max),
-            )
+            if metrics.is_empty() {
+                (0.0, 0.0, 0.0)
+            } else {
+                (
+                    metrics.iter().cloned().fold(f64::INFINITY, f64::min),
+                    metrics.iter().sum::<f64>() / metrics.len() as f64,
+                    metrics.iter().cloned().fold(0.0, f64::max),
+                )
+            }
         } else {
             (0.0, 0.0, 0.0)
         };
-        let avg_params = self.algo.average();
+        let avg_params = match &survivor_views {
+            Some(views) if !views.is_empty() => crate::collectives::mean_of(views),
+            _ => self.algo.average(),
+        };
         let (val_loss, val_metric) = self.evaluate(&avg_params, val)?;
         Ok(EvalRecord {
             iter: k,

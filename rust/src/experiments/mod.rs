@@ -9,6 +9,8 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::coordinator::TrainerBuilder;
+use crate::faults::harness::{run_quadratic, FaultRunConfig};
+use crate::faults::{Crash, FaultPlan};
 use crate::metrics::{self, print_table, RunResult};
 use crate::net::{self, ComputeModel, LinkModel, OwnedCommPattern};
 use crate::optim::LrSchedule;
@@ -534,6 +536,130 @@ pub fn figd4() -> Result<()> {
 }
 
 // ===========================================================================
+// Robustness sweep: algorithm × fault level (message loss / churn), offline
+// ===========================================================================
+
+/// What `repro faults` sweeps over. Fully offline — synthetic quadratic
+/// gradients through the registered strategies, no HLO artifacts needed.
+#[derive(Clone, Debug)]
+pub struct FaultSweep {
+    /// Message-drop probabilities to sweep (the x-axis).
+    pub drops: Vec<f64>,
+    /// Node crashes applied at every fault level.
+    pub crashes: Vec<Crash>,
+    /// Rescue mode: senders re-absorb undelivered mass — push-sum's local
+    /// loss-recovery, ON by default (`--no-rescue` surfaces the naive-loss
+    /// instability documented in DESIGN.md §Faults).
+    pub rescue: bool,
+    pub n: usize,
+    pub iters: u64,
+    pub seed: u64,
+    /// Registry names to compare.
+    pub algos: Vec<String>,
+}
+
+impl FaultSweep {
+    pub fn new(fast: bool) -> Self {
+        Self {
+            drops: if fast {
+                vec![0.0, 0.05, 0.1]
+            } else {
+                vec![0.0, 0.05, 0.1, 0.15, 0.2]
+            },
+            crashes: Vec::new(),
+            rescue: true,
+            n: 16,
+            iters: if fast { 80 } else { 200 },
+            seed: 1,
+            algos: if fast {
+                vec!["ar-sgd".into(), "sgp".into()]
+            } else {
+                vec!["ar-sgd".into(), "dpsgd".into(), "sgp".into(), "osgp".into()]
+            },
+        }
+    }
+}
+
+/// The robustness table the paper's Section-1 claim predicts: as message
+/// loss rises, SGP's consensus distance and makespan degrade gracefully
+/// while AllReduce's makespan inflates (every round waits for the
+/// unluckiest link, and a crashed member stalls the collective).
+pub fn faults_sweep(sweep: &FaultSweep) -> Result<()> {
+    let cfg = FaultRunConfig {
+        n: sweep.n,
+        iters: sweep.iters,
+        seed: sweep.seed,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    let mut csv = String::from(
+        "method,drop,crashes,rescue,final_err,consensus,makespan_s,slowdown\n",
+    );
+    let mk_plan = |drop: f64| {
+        let mut plan = FaultPlan::lossless()
+            .with_drop(drop)
+            .with_rescue(sweep.rescue)
+            .with_seed(sweep.seed);
+        for c in &sweep.crashes {
+            plan = plan.with_crash(c.node, c.at, c.rejoin);
+        }
+        plan
+    };
+    for algo in &sweep.algos {
+        // Slowdown is always relative to the loss-free run of the same
+        // scenario (same crashes/rescue), even when the user's drop list
+        // does not include 0. Runs are deterministic, so the baseline is
+        // reused verbatim when 0 is also a swept level.
+        let base_stats = run_quadratic(algo, &cfg, &mk_plan(0.0))?;
+        let baseline = base_stats.makespan;
+        for &drop in &sweep.drops {
+            let s = if drop == 0.0 {
+                base_stats.clone()
+            } else {
+                run_quadratic(algo, &cfg, &mk_plan(drop))?
+            };
+            let slowdown = s.makespan / baseline;
+            csv.push_str(&format!(
+                "{},{drop},{},{},{:.6},{:.6e},{:.2},{:.3}\n",
+                s.algo,
+                sweep.crashes.len(),
+                sweep.rescue,
+                s.final_err,
+                s.consensus,
+                s.makespan,
+                slowdown
+            ));
+            rows.push(vec![
+                s.algo.clone(),
+                pct(drop),
+                format!("{:.4}", s.final_err),
+                format!("{:.3e}", s.consensus),
+                metrics::hours(s.makespan),
+                format!("{slowdown:.2}×"),
+            ]);
+        }
+    }
+    std::fs::write(results_dir().join("faults_sweep.csv"), csv)?;
+    let crash_note = if sweep.crashes.is_empty() {
+        String::new()
+    } else {
+        format!(", {} crash(es)", sweep.crashes.len())
+    };
+    print_table(
+        &format!(
+            "Robustness — final error / consensus / makespan vs message loss \
+             (n = {}, {} iters{crash_note}{})",
+            sweep.n,
+            sweep.iters,
+            if sweep.rescue { ", rescue on" } else { "" }
+        ),
+        &["method", "drop", "‖x̄ − x*‖", "consensus", "makespan", "slowdown"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ===========================================================================
 // Appendix A: decentralized averaging errors (λ₂ of mixing products)
 // ===========================================================================
 pub fn appendix_a() -> Result<()> {
@@ -621,6 +747,32 @@ pub fn averaging(rt: &Runtime, n: usize, rounds: u64) -> Result<()> {
     Ok(())
 }
 
+/// One `convergence_demo` report row: ‖x̄ − x*‖ and consensus distance at
+/// iteration `k`.
+fn push_report_row(
+    engine: &crate::gossip::PushSumEngine,
+    k: u64,
+    opt: &[f64],
+    rows: &mut Vec<Vec<String>>,
+) {
+    let mean = engine.mean_x();
+    let gnorm: f64 = mean
+        .iter()
+        .zip(opt)
+        .map(|(m, o)| {
+            let e = *m as f64 - o;
+            e * e
+        })
+        .sum::<f64>()
+        .sqrt();
+    let (cons, _, _) = engine.consensus_distance();
+    rows.push(vec![
+        k.to_string(),
+        format!("{gnorm:.4}"),
+        format!("{cons:.2e}"),
+    ]);
+}
+
 /// Sanity check for Theorems 1–2 trends: SGP on a synthetic least-squares
 /// objective — mean gradient norm decays and consensus error vanishes.
 pub fn convergence_demo(n: usize, iters: u64) -> Result<()> {
@@ -655,25 +807,16 @@ pub fn convergence_demo(n: usize, iters: u64) -> Result<()> {
             }
         }
         engine.step(k, &sched);
-        if (k + 1) % (iters / 8).max(1) == 0 {
-            let mean = engine.mean_x();
-            let gnorm: f64 = mean
-                .iter()
-                .zip(&opt)
-                .map(|(m, o)| {
-                    let e = *m as f64 - o;
-                    e * e
-                })
-                .sum::<f64>()
-                .sqrt();
-            let (cons, _, _) = engine.consensus_distance();
-            rows.push(vec![
-                (k + 1).to_string(),
-                format!("{gnorm:.4}"),
-                format!("{cons:.2e}"),
-            ]);
+        if (k + 1) % (iters / 8).max(1) == 0 && k + 1 != iters {
+            push_report_row(&engine, k + 1, &opt, &mut rows);
         }
     }
+    // Drain-audit: flush in-flight mass before the final report point so
+    // the printed trend never strands messages (the engine here is
+    // blocking, but the audit keeps the driver honest if someone turns
+    // the delay knob) — unconditionally, whatever --iters is.
+    engine.drain();
+    push_report_row(&engine, iters, &opt, &mut rows);
     print_table(
         &format!("Theorem 1/2 sanity — SGP on least squares (n={n}, γ=√(n/K))"),
         &["iter", "‖∇f(x̄)‖ (≈‖x̄−x*‖)", "consensus dist"],

@@ -1,0 +1,392 @@
+//! Fault & churn injection: the scenario layer that turns the fixed,
+//! lossless simulated cluster into the messy one the paper argues SGP is
+//! robust to ("approaches that synchronize nodes using exact distributed
+//! averaging are sensitive to stragglers and communication delays").
+//!
+//! A [`FaultPlan`] declares *what* goes wrong — per-link message-drop
+//! probability, transient link-degradation windows that scale the
+//! [`crate::net::LinkModel`] α/β, node crashes at an iteration with an
+//! optional rejoin-from-checkpoint, permanent leaves — and a [`FaultClock`]
+//! replays the plan **deterministically from a seed**: every layer that
+//! asks "does message (i→j) at iteration k drop?" or "is node i down at
+//! k?" gets the same answer, so the gossip semantics
+//! ([`crate::gossip::PushSumEngine::step_faulty`]), the timing recursion
+//! ([`crate::net::TimingSim::advance_with_faults`]) and the membership
+//! re-indexing ([`crate::topology::Schedule::out_peers_among`]) stay
+//! mutually consistent without sharing mutable state.
+//!
+//! Crash semantics: a crashed node freezes in place — its `(x, w)` state
+//! *is* the checkpoint. While down it neither computes, sends, nor
+//! receives (messages addressed to it wait in its inbox; the schedule
+//! re-indexes over survivors so mixing stays column-stochastic). On rejoin
+//! it resumes from the frozen state as a merely *stale* peer — exactly the
+//! situation push-sum's weight accounting tolerates. A `rejoin: None`
+//! crash is a permanent leave.
+//!
+//! See DESIGN.md §Faults for the plan format and per-layer interactions,
+//! and [`harness`] for the offline robustness harness behind
+//! `repro faults`.
+
+pub mod harness;
+
+use crate::net::LinkModel;
+use crate::rng::Pcg;
+
+/// A transient link-degradation window: within `[from, until)` iterations
+/// the fabric's latency is multiplied by `alpha_mult` and its bandwidth
+/// divided by `beta_div` (both ≥ 1 for a degradation; windows compose
+/// multiplicatively when they overlap).
+#[derive(Clone, Debug)]
+pub struct Degradation {
+    pub from: u64,
+    pub until: u64,
+    pub alpha_mult: f64,
+    pub beta_div: f64,
+}
+
+/// One node fault: crash at iteration `at`, optionally rejoining from its
+/// frozen checkpoint at `rejoin`. `rejoin: None` is a permanent leave.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Crash {
+    pub node: usize,
+    pub at: u64,
+    pub rejoin: Option<u64>,
+}
+
+/// A membership transition the coordinator reports to the strategy via
+/// [`crate::algorithms::DistributedAlgorithm::on_membership_change`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// Node went down at `at` and is expected back at `rejoin`.
+    Crash { node: usize, at: u64, rejoin: u64 },
+    /// Node came back from its checkpoint at `at`.
+    Rejoin { node: usize, at: u64 },
+    /// Node left permanently at `at`.
+    Leave { node: usize, at: u64 },
+}
+
+/// Declarative fault scenario. `lossless()` is the identity plan — running
+/// any algorithm under it is bit-identical to running without faults.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Baseline per-link, per-iteration message-drop probability.
+    pub drop: f64,
+    /// Per-link overrides `(from, to, p)` taking precedence over `drop`.
+    pub link_drops: Vec<(usize, usize, f64)>,
+    pub degradations: Vec<Degradation>,
+    pub crashes: Vec<Crash>,
+    /// Rescue mode: a sender detects its undelivered message and re-absorbs
+    /// the `(x, w)` mass locally instead of losing it — push-sum stays
+    /// *exactly* column-stochastic under loss. This is the loss-tolerant
+    /// configuration (`repro faults` defaults to it): without rescue, lost
+    /// mass shrinks unlucky nodes' push-sum weights and the gradient
+    /// applied at `z = x/w` has effective step `lr/w` — long runs
+    /// destabilize (see DESIGN.md §Faults for the full account).
+    pub rescue: bool,
+    /// Failure-detection timeout charged to collectives when membership
+    /// changes mid-run (abort + re-form with survivors).
+    pub timeout_s: f64,
+    /// Seed of the deterministic replay.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::lossless()
+    }
+}
+
+impl FaultPlan {
+    /// The identity plan: no drops, no degradations, no churn.
+    pub fn lossless() -> Self {
+        Self {
+            drop: 0.0,
+            link_drops: Vec::new(),
+            degradations: Vec::new(),
+            crashes: Vec::new(),
+            rescue: false,
+            timeout_s: 5.0,
+            seed: 0,
+        }
+    }
+
+    pub fn with_drop(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "drop probability {p} out of [0,1]");
+        self.drop = p;
+        self
+    }
+
+    pub fn with_link_drop(mut self, from: usize, to: usize, p: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&p),
+            "link drop probability {p} out of [0,1]"
+        );
+        self.link_drops.push((from, to, p));
+        self
+    }
+
+    pub fn with_degradation(mut self, d: Degradation) -> Self {
+        self.degradations.push(d);
+        self
+    }
+
+    pub fn with_crash(mut self, node: usize, at: u64, rejoin: Option<u64>) -> Self {
+        if let Some(r) = rejoin {
+            assert!(r > at, "rejoin {r} must come after crash {at}");
+        }
+        self.crashes.push(Crash { node, at, rejoin });
+        self
+    }
+
+    pub fn with_rescue(mut self, rescue: bool) -> Self {
+        self.rescue = rescue;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Whether the plan is the identity (fast-path check for callers that
+    /// want to skip the fault machinery entirely).
+    pub fn is_lossless(&self) -> bool {
+        self.drop == 0.0
+            && self.link_drops.is_empty()
+            && self.degradations.is_empty()
+            && self.crashes.is_empty()
+    }
+}
+
+/// Deterministic replay of a [`FaultPlan`]: pure functions of
+/// `(plan.seed, iteration, endpoints)`, so every layer sees one consistent
+/// fault history and the same seed reproduces it bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct FaultClock {
+    pub plan: FaultPlan,
+}
+
+impl FaultClock {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan }
+    }
+
+    /// Drop probability of the directed link `from → to`.
+    pub fn drop_prob(&self, from: usize, to: usize) -> f64 {
+        self.plan
+            .link_drops
+            .iter()
+            .find(|(f, t, _)| *f == from && *t == to)
+            .map(|(_, _, p)| *p)
+            .unwrap_or(self.plan.drop)
+    }
+
+    /// Does the message `from → to` sent at iteration `k` drop?
+    /// Deterministic per `(seed, from, to, k)`.
+    pub fn drops(&self, from: usize, to: usize, k: u64) -> bool {
+        let p = self.drop_prob(from, to);
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = self.round_rng(k, ((from as u64) << 32) | to as u64);
+        rng.f64() < p
+    }
+
+    /// Is node `i` down (crashed / left) at iteration `k`?
+    pub fn is_down(&self, node: usize, k: u64) -> bool {
+        self.plan.crashes.iter().any(|c| {
+            c.node == node
+                && k >= c.at
+                && match c.rejoin {
+                    Some(r) => k < r,
+                    None => true,
+                }
+        })
+    }
+
+    /// Sorted surviving members at iteration `k`.
+    pub fn alive(&self, n: usize, k: u64) -> Vec<usize> {
+        (0..n).filter(|&i| !self.is_down(i, k)).collect()
+    }
+
+    /// Membership transitions occurring exactly at iteration `k`, in plan
+    /// order. Events are consistent with [`Self::is_down`] even when crash
+    /// windows for one node overlap: a down→down "rejoin" (another window
+    /// still covers the node) or an already-down "crash" is suppressed,
+    /// and at most one event per node fires per iteration.
+    pub fn events_at(&self, k: u64) -> Vec<MembershipEvent> {
+        let mut evs: Vec<MembershipEvent> = Vec::new();
+        let seen = |evs: &[MembershipEvent], node: usize| {
+            evs.iter().any(|e| match *e {
+                MembershipEvent::Crash { node: n, .. }
+                | MembershipEvent::Rejoin { node: n, .. }
+                | MembershipEvent::Leave { node: n, .. } => n == node,
+            })
+        };
+        for c in &self.plan.crashes {
+            let was_up = k == 0 || !self.is_down(c.node, k - 1);
+            if c.at == k && was_up && !seen(&evs, c.node) {
+                evs.push(match c.rejoin {
+                    Some(r) => MembershipEvent::Crash { node: c.node, at: k, rejoin: r },
+                    None => MembershipEvent::Leave { node: c.node, at: k },
+                });
+            }
+            if c.rejoin == Some(k)
+                && !self.is_down(c.node, k)
+                && !was_up
+                && !seen(&evs, c.node)
+            {
+                evs.push(MembershipEvent::Rejoin { node: c.node, at: k });
+            }
+        }
+        evs
+    }
+
+    /// Did any membership transition happen at `k` (crash, leave, rejoin)?
+    pub fn membership_changed_at(&self, k: u64) -> bool {
+        !self.events_at(k).is_empty()
+    }
+
+    /// Effective drop probability a collective over the `alive` members
+    /// sees: the mean directed-link drop probability across survivor
+    /// pairs. Collectives stripe chunks over every link, so per-link
+    /// overrides dilute into the average — finer per-transfer attribution
+    /// is below the α–β model's resolution.
+    pub fn collective_drop_prob(&self, alive: &[usize]) -> f64 {
+        if self.plan.link_drops.is_empty() || alive.len() < 2 {
+            return self.plan.drop;
+        }
+        let mut sum = 0.0;
+        let mut cnt = 0u64;
+        for &a in alive {
+            for &b in alive {
+                if a != b {
+                    sum += self.drop_prob(a, b);
+                    cnt += 1;
+                }
+            }
+        }
+        sum / cnt as f64
+    }
+
+    /// Cumulative `(alpha_mult, beta_div)` of the degradation windows
+    /// active at iteration `k`.
+    pub fn link_scale(&self, k: u64) -> (f64, f64) {
+        let mut am = 1.0;
+        let mut bd = 1.0;
+        for d in &self.plan.degradations {
+            if k >= d.from && k < d.until {
+                am *= d.alpha_mult;
+                bd *= d.beta_div;
+            }
+        }
+        (am, bd)
+    }
+
+    /// The fabric as seen at iteration `k` (degradation windows applied).
+    pub fn scaled_link(&self, base: &LinkModel, k: u64) -> LinkModel {
+        let (am, bd) = self.link_scale(k);
+        if am == 1.0 && bd == 1.0 {
+            return base.clone();
+        }
+        LinkModel {
+            alpha_s: base.alpha_s * am,
+            beta_bps: base.beta_bps / bd,
+            ..base.clone()
+        }
+    }
+
+    /// A deterministic per-(iteration, salt) RNG stream — used for fault
+    /// draws that are not tied to a single directed link (e.g. collective
+    /// retransmissions).
+    pub fn round_rng(&self, k: u64, salt: u64) -> Pcg {
+        Pcg::with_stream(
+            self.plan.seed ^ k.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            salt.wrapping_mul(2).wrapping_add(1),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_plan_is_identity() {
+        let c = FaultClock::new(FaultPlan::lossless());
+        assert!(c.plan.is_lossless());
+        for k in 0..50 {
+            assert!(!c.drops(0, 1, k));
+            assert!(!c.is_down(3, k));
+            assert_eq!(c.link_scale(k), (1.0, 1.0));
+            assert!(c.events_at(k).is_empty());
+        }
+        assert_eq!(c.alive(4, 10), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn drops_deterministic_and_rate_close_to_p() {
+        let c = FaultClock::new(FaultPlan::lossless().with_drop(0.15).with_seed(9));
+        let mut hits = 0usize;
+        let total = 20_000;
+        for k in 0..total as u64 {
+            let d = c.drops(2, 5, k);
+            assert_eq!(d, c.drops(2, 5, k), "same query, same answer");
+            hits += d as usize;
+        }
+        let rate = hits as f64 / total as f64;
+        assert!((rate - 0.15).abs() < 0.01, "empirical drop rate {rate}");
+        // A different seed yields a different history.
+        let c2 = FaultClock::new(FaultPlan::lossless().with_drop(0.15).with_seed(10));
+        assert!((0..100).any(|k| c.drops(2, 5, k) != c2.drops(2, 5, k)));
+    }
+
+    #[test]
+    fn per_link_override_beats_baseline() {
+        let c = FaultClock::new(
+            FaultPlan::lossless().with_drop(0.0).with_link_drop(1, 2, 1.0),
+        );
+        assert!(c.drops(1, 2, 7));
+        assert!(!c.drops(2, 1, 7));
+        assert_eq!(c.drop_prob(1, 2), 1.0);
+        assert_eq!(c.drop_prob(0, 3), 0.0);
+    }
+
+    #[test]
+    fn crash_rejoin_windows_and_events() {
+        let c = FaultClock::new(
+            FaultPlan::lossless()
+                .with_crash(3, 10, Some(20))
+                .with_crash(5, 15, None),
+        );
+        assert!(!c.is_down(3, 9));
+        assert!(c.is_down(3, 10) && c.is_down(3, 19));
+        assert!(!c.is_down(3, 20));
+        assert!(c.is_down(5, 1000), "permanent leave never rejoins");
+        assert_eq!(
+            c.events_at(10),
+            vec![MembershipEvent::Crash { node: 3, at: 10, rejoin: 20 }]
+        );
+        assert_eq!(c.events_at(15), vec![MembershipEvent::Leave { node: 5, at: 15 }]);
+        assert_eq!(c.events_at(20), vec![MembershipEvent::Rejoin { node: 3, at: 20 }]);
+        assert_eq!(c.alive(8, 16), vec![0, 1, 2, 4, 6, 7]);
+        assert!(c.membership_changed_at(10) && !c.membership_changed_at(11));
+    }
+
+    #[test]
+    fn degradation_windows_scale_the_link() {
+        let c = FaultClock::new(FaultPlan::lossless().with_degradation(Degradation {
+            from: 5,
+            until: 10,
+            alpha_mult: 4.0,
+            beta_div: 2.0,
+        }));
+        let base = LinkModel::ethernet_10g();
+        let l4 = c.scaled_link(&base, 4);
+        let l7 = c.scaled_link(&base, 7);
+        assert_eq!(l4.alpha_s, base.alpha_s);
+        assert_eq!(l7.alpha_s, base.alpha_s * 4.0);
+        assert_eq!(l7.beta_bps, base.beta_bps / 2.0);
+        assert!(l7.ptp_time(1 << 20) > l4.ptp_time(1 << 20));
+    }
+}

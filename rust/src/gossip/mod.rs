@@ -15,6 +15,7 @@
 //! column-stochasticity invariant that Σᵢ xᵢ plus all in-flight mass is
 //! constant under gossip.
 
+use crate::faults::FaultClock;
 use crate::topology::Schedule;
 
 /// One in-flight push-sum message (already pre-weighted by the sender).
@@ -73,6 +74,15 @@ pub struct PushSumEngine {
     /// its `x` here; sending pops one instead of allocating dim-sized
     /// fresh-page Vecs on every message — see EXPERIMENTS.md §Perf).
     pool: Vec<Vec<f32>>,
+    /// Cumulative numerator mass lost to dropped messages (fault mode).
+    dropped_x: Vec<f64>,
+    /// Cumulative push-sum-weight mass lost to dropped messages.
+    dropped_w: f64,
+    /// Count of messages dropped (diagnostics).
+    pub drop_count: u64,
+    /// Count of messages rescued (re-absorbed at the sender; fault mode
+    /// with `FaultPlan::rescue`).
+    pub rescue_count: u64,
 }
 
 impl PushSumEngine {
@@ -89,6 +99,10 @@ impl PushSumEngine {
             inboxes: (0..n).map(|_| Vec::new()).collect(),
             scale_buf: vec![0.0; dim],
             pool: Vec::new(),
+            dropped_x: vec![0.0; dim],
+            dropped_w: 0.0,
+            drop_count: 0,
+            rescue_count: 0,
         }
     }
 
@@ -174,6 +188,113 @@ impl PushSumEngine {
                 st.w = 1.0;
             }
         }
+    }
+
+    /// One gossip step under a fault scenario: only surviving members send
+    /// and aggregate (the schedule re-indexes over them, staying
+    /// column-stochastic), messages drop per the deterministic
+    /// [`FaultClock`] history, and every dropped `(x, w)` pair is either
+    /// **recorded** in the loss ledger (`dropped_mass`) or — in rescue mode
+    /// — **re-absorbed** by the sender, keeping the step exactly
+    /// column-stochastic.
+    ///
+    /// Crashed nodes freeze in place (state = checkpoint); messages already
+    /// queued for them wait in their inbox and deliver on rejoin (or at
+    /// [`Self::drain`]). This is why push-sum tolerates loss where
+    /// symmetric averaging biases: a drop removes numerator *and* weight
+    /// together, so the de-biased `z = x / w` stays a convex combination of
+    /// honest values — tested against the biased engine in
+    /// `rust/tests/test_faults.rs`.
+    pub fn step_faulty(&mut self, k: u64, schedule: &Schedule, clock: &FaultClock) {
+        let deliver_at = k + self.delay;
+        let alive = clock.alive(self.n, k);
+        let rescue = clock.plan.rescue;
+        for &i in &alive {
+            let peers = schedule.out_peers_among(i, k, &alive);
+            let w_mix = 1.0 / (1.0 + peers.len() as f64);
+            let wf = w_mix as f32;
+            let msg_w = self.states[i].w * w_mix;
+            let mut rescued = 0usize;
+            for &j in &peers {
+                if clock.drops(i, j, k) {
+                    if rescue {
+                        // Sender detects the failed send and keeps its
+                        // share: nothing leaves, nothing is lost.
+                        self.rescue_count += 1;
+                        rescued += 1;
+                        continue;
+                    }
+                    // The share leaves the sender and vanishes — ledger it.
+                    self.drop_count += 1;
+                    for (d, v) in self.dropped_x.iter_mut().zip(&self.states[i].x) {
+                        *d += (*v * wf) as f64;
+                    }
+                    self.dropped_w += msg_w;
+                    continue;
+                }
+                let mut payload = self.take_buf();
+                for (p, v) in payload.iter_mut().zip(&self.states[i].x) {
+                    *p = v * wf;
+                }
+                self.inboxes[j].push(Message {
+                    from: i,
+                    sent_iter: k,
+                    deliver_iter: deliver_at,
+                    x: payload,
+                    w: msg_w,
+                });
+            }
+            // Self-loop share; rescued shares stay too, so the node keeps
+            // `w_mix · (1 + rescued)` of itself.
+            let keep = (w_mix * (1 + rescued) as f64) as f32;
+            let st = &mut self.states[i];
+            for v in st.x.iter_mut() {
+                *v *= keep;
+            }
+            st.w *= w_mix * (1 + rescued) as f64;
+        }
+        // Aggregate deliveries due at k — survivors only; a crashed node's
+        // inbox holds until it rejoins.
+        for &i in &alive {
+            let mut inbox = std::mem::take(&mut self.inboxes[i]);
+            let mut j = 0;
+            while j < inbox.len() {
+                if inbox[j].deliver_iter <= k {
+                    let msg = inbox.swap_remove(j);
+                    let st = &mut self.states[i];
+                    for (a, b) in st.x.iter_mut().zip(&msg.x) {
+                        *a += b;
+                    }
+                    st.w += msg.w;
+                    self.pool.push(msg.x);
+                } else {
+                    j += 1;
+                }
+            }
+            self.inboxes[i] = inbox;
+        }
+        if self.biased {
+            for st in &mut self.states {
+                st.w = 1.0;
+            }
+        }
+    }
+
+    /// Mass recorded as lost to dropped messages: `(Σ dropped x, Σ dropped w)`.
+    pub fn dropped_mass(&self) -> (&[f64], f64) {
+        (&self.dropped_x, self.dropped_w)
+    }
+
+    /// Total mass *including* the recorded losses — the quantity that stays
+    /// invariant under any fault plan (the fault-mode proptest anchor):
+    /// Σᵢ xᵢ + in-flight + recorded-dropped.
+    pub fn total_mass_with_losses(&self) -> (Vec<f64>, f64) {
+        let (mut xm, mut wm) = self.total_mass();
+        for (a, b) in xm.iter_mut().zip(&self.dropped_x) {
+            *a += b;
+        }
+        wm += self.dropped_w;
+        (xm, wm)
     }
 
     /// Flush all in-flight messages (used at the end of a run so no mass is
@@ -420,6 +541,122 @@ mod tests {
         let eng = PushSumEngine::new(init, 0, false);
         let (mean, min, max) = eng.consensus_distance();
         assert!(mean < 1e-9 && min < 1e-9 && max < 1e-9);
+    }
+
+    #[test]
+    fn faulty_step_with_lossless_plan_matches_step() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let init = random_init(8, 8, 11);
+        let mut a = PushSumEngine::new(init.clone(), 1, false);
+        let mut b = PushSumEngine::new(init, 1, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let clock = FaultClock::new(FaultPlan::lossless());
+        for k in 0..30 {
+            a.step(k, &sched);
+            b.step_faulty(k, &sched, &clock);
+        }
+        for (sa, sb) in a.states.iter().zip(&b.states) {
+            assert_eq!(sa.x, sb.x, "lossless fault path must be bit-identical");
+            assert_eq!(sa.w, sb.w);
+        }
+        assert_eq!(b.drop_count, 0);
+    }
+
+    #[test]
+    fn lossy_step_ledgers_exactly_the_missing_mass() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let init = random_init(8, 8, 12);
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let (x0, w0) = eng.total_mass();
+        let clock = FaultClock::new(FaultPlan::lossless().with_drop(0.3).with_seed(4));
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        for k in 0..40 {
+            eng.step_faulty(k, &sched, &clock);
+            let (x, w) = eng.total_mass_with_losses();
+            for (a, b) in x.iter().zip(&x0) {
+                assert!((a - b).abs() < 1e-2, "k={k}: {a} vs {b}");
+            }
+            assert!((w - w0).abs() < 1e-9, "k={k}");
+        }
+        assert!(eng.drop_count > 0, "0.3 drop rate must drop something");
+        let (_, dw) = eng.dropped_mass();
+        assert!(dw > 0.0);
+        // Plain total mass (without the ledger) has genuinely shrunk.
+        let (_, w_now) = eng.total_mass();
+        assert!(w_now < w0);
+    }
+
+    #[test]
+    fn rescue_mode_conserves_mass_exactly_with_empty_ledger() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let init = random_init(8, 8, 13);
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let (x0, w0) = eng.total_mass();
+        let clock = FaultClock::new(
+            FaultPlan::lossless().with_drop(0.3).with_seed(4).with_rescue(true),
+        );
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        for k in 0..40 {
+            eng.step_faulty(k, &sched, &clock);
+        }
+        assert!(eng.rescue_count > 0);
+        assert_eq!(eng.drop_count, 0);
+        assert_eq!(eng.dropped_mass().1, 0.0);
+        let (x, w) = eng.total_mass();
+        for (a, b) in x.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-2);
+        }
+        assert!((w - w0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lossy_gossip_debiased_views_still_reach_consensus() {
+        // The robustness mechanism: both x and w drop together, so z = x/w
+        // still contracts to a common point under 10% loss.
+        use crate::faults::{FaultClock, FaultPlan};
+        let init = random_init(8, 8, 14);
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let clock = FaultClock::new(FaultPlan::lossless().with_drop(0.1).with_seed(2));
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let before = eng.consensus_distance().0;
+        for k in 0..120 {
+            eng.step_faulty(k, &sched, &clock);
+        }
+        let after = eng.consensus_distance().0;
+        assert!(after < before * 1e-2, "{before} → {after}");
+        assert!(eng.states.iter().all(|s| s.w > 0.0));
+    }
+
+    #[test]
+    fn crashed_node_freezes_and_rejoins_from_checkpoint() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let init = random_init(8, 4, 15);
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let clock =
+            FaultClock::new(FaultPlan::lossless().with_crash(3, 5, Some(15)));
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let (x0, w0) = eng.total_mass();
+        let mut frozen: Option<NodeState> = None;
+        for k in 0..40 {
+            eng.step_faulty(k, &sched, &clock);
+            if k == 5 {
+                frozen = Some(eng.states[3].clone());
+            }
+            if (6..15).contains(&k) {
+                let f = frozen.as_ref().unwrap();
+                assert_eq!(eng.states[3].x, f.x, "down node must freeze (k={k})");
+                assert_eq!(eng.states[3].w, f.w);
+            }
+        }
+        // After rejoin the stale node is mixed back in; mass never leaked.
+        let f = frozen.unwrap();
+        assert_ne!(eng.states[3].x, f.x, "rejoined node participates again");
+        eng.drain();
+        let (x1, w1) = eng.total_mass_with_losses();
+        for (a, b) in x1.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-2);
+        }
+        assert!((w1 - w0).abs() < 1e-9);
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //! * [`net`] — the cluster/network simulator standing in for the paper's
 //!   32×DGX-1 testbed: 10 GbE / 100 Gb-IB link models, log-normal straggler
 //!   compute model, and per-algorithm timing recursions.
+//! * [`faults`] — deterministic, seedable fault & churn injection
+//!   ([`faults::FaultPlan`] / [`faults::FaultClock`]): per-link message
+//!   loss, transient link degradation, node crash/rejoin-from-checkpoint
+//!   and permanent leave, composed through every layer above — plus the
+//!   offline robustness harness behind `repro faults`.
 //! * [`sim`] — a discrete-event clock for the asynchronous baseline
 //!   (AD-PSGD).
 //! * [`optim`] — SGD / Nesterov momentum / Adam over flat `f32` vectors,
@@ -43,6 +48,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod gossip;
 pub mod metrics;
 pub mod model;

@@ -3,19 +3,21 @@
 //! Subcommands:
 //!   train        one training run (model × algorithm × cluster)
 //!   bench <exp>  regenerate a paper table/figure (all, fig1, table1..5, …)
+//!   faults       robustness sweep under message loss / churn (offline)
 //!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
 //!   convergence  Theorem 1/2 sanity demo (pure Rust)
 //!   inspect      print the artifact manifest
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use sgp::algorithms;
 use sgp::cli::Args;
 use sgp::config::{Fabric, TrainConfig};
 use sgp::coordinator::TrainerBuilder;
 use sgp::experiments;
+use sgp::faults::Crash;
 use sgp::metrics;
 use sgp::optim::OptimKind;
 use sgp::runtime::Runtime;
@@ -31,6 +33,15 @@ USAGE:
                 (see `repro algos` for the registered algorithm names)
   repro bench   <all|fig1|table1|table2|table3|table4|table5|fig2|fig3|
                  figd3|figd4|appendix-a> [--fast]
+  repro faults  [--drop 0..0.2 | --drop 0,0.05,0.1] [--crash 3@40:80,5@60]
+                [--nodes 16] [--iters 200] [--algos ar-sgd,sgp,...]
+                [--seed 1] [--no-rescue] [--fast]
+                offline robustness sweep: final error / consensus / makespan
+                per algorithm × fault level. --crash uses node@iter[:rejoin]
+                (no :rejoin = permanent leave). Rescue (senders re-absorb
+                undelivered push-sum mass) is on by default; --no-rescue
+                surfaces the naive-loss instability (DESIGN.md §Faults).
+                Writes results/faults_sweep.csv.
   repro algos
   repro spectral
   repro average [--nodes 32] [--rounds 8]
@@ -90,6 +101,90 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--drop`: either a comma list (`0,0.05,0.1`) or an inclusive
+/// range `a..b` swept in 5 evenly-spaced levels. Probabilities must lie
+/// in [0, 1] — reported as a usage error, not a downstream panic.
+fn parse_drops(s: &str) -> Result<Vec<f64>> {
+    let prob = |txt: &str| -> Result<f64> {
+        let v: f64 =
+            txt.trim().parse().with_context(|| format!("--drop `{txt}`"))?;
+        if !(0.0..=1.0).contains(&v) {
+            bail!("--drop {v}: probability must be in [0, 1]");
+        }
+        Ok(v)
+    };
+    if let Some((a, b)) = s.split_once("..") {
+        let lo = prob(a)?;
+        let hi = prob(b)?;
+        if hi < lo {
+            bail!("--drop range {lo}..{hi} is reversed");
+        }
+        let steps = 5usize;
+        return Ok((0..steps)
+            .map(|i| lo + (hi - lo) * i as f64 / (steps - 1) as f64)
+            .collect());
+    }
+    s.split(',').map(prob).collect()
+}
+
+/// Parse `--crash`: comma list of `node@iter` (permanent leave) or
+/// `node@iter:rejoin` (rejoin from checkpoint).
+fn parse_crashes(s: &str) -> Result<Vec<Crash>> {
+    s.split(',')
+        .map(|spec| {
+            let spec = spec.trim();
+            let (node, rest) = spec
+                .split_once('@')
+                .with_context(|| format!("--crash `{spec}`: expected node@iter[:rejoin]"))?;
+            let node = node.parse().with_context(|| format!("--crash node `{node}`"))?;
+            let (at, rejoin) = match rest.split_once(':') {
+                Some((a, r)) => (
+                    a.parse().with_context(|| format!("--crash iter `{a}`"))?,
+                    Some(r.parse().with_context(|| format!("--crash rejoin `{r}`"))?),
+                ),
+                None => (rest.parse().with_context(|| format!("--crash iter `{rest}`"))?, None),
+            };
+            if let Some(r) = rejoin {
+                if r <= at {
+                    bail!("--crash `{spec}`: rejoin must come after the crash");
+                }
+            }
+            Ok(Crash { node, at, rejoin })
+        })
+        .collect()
+}
+
+fn cmd_faults(args: &Args) -> Result<()> {
+    let mut sweep = experiments::FaultSweep::new(args.flag("fast"));
+    if let Some(d) = args.get("drop") {
+        sweep.drops = parse_drops(d)?;
+    }
+    if let Some(c) = args.get("crash") {
+        sweep.crashes = parse_crashes(c)?;
+    }
+    sweep.n = args.usize_or("nodes", sweep.n)?;
+    sweep.iters = args.u64_or("iters", sweep.iters)?;
+    sweep.seed = args.u64_or("seed", sweep.seed)?;
+    sweep.rescue = !args.flag("no-rescue");
+    if let Some(a) = args.get("algos") {
+        sweep.algos = a.split(',').map(|s| s.trim().to_string()).collect();
+        for name in &sweep.algos {
+            if algorithms::spec(name).is_none() {
+                bail!(
+                    "unknown algorithm `{name}` (known: {})",
+                    algorithms::names().join(", ")
+                );
+            }
+        }
+    }
+    for c in &sweep.crashes {
+        if c.node >= sweep.n {
+            bail!("--crash node {} out of range (n = {})", c.node, sweep.n);
+        }
+    }
+    experiments::faults_sweep(&sweep)
+}
+
 fn cmd_algos() {
     let rows: Vec<Vec<String>> = algorithms::REGISTRY
         .iter()
@@ -144,6 +239,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args)?,
         Some("bench") => cmd_bench(&args)?,
+        Some("faults") => cmd_faults(&args)?,
         Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {

@@ -23,6 +23,7 @@
 use std::collections::VecDeque;
 
 use crate::collectives;
+use crate::faults::FaultClock;
 use crate::rng::Pcg;
 use crate::topology::Schedule;
 
@@ -162,42 +163,132 @@ impl TimingSim {
     /// Advance one iteration given sampled compute times; returns the
     /// simulated makespan (max node clock) after this iteration.
     pub fn advance(&mut self, pattern: &CommPattern, comp: &[f64]) -> f64 {
+        self.advance_with_faults(pattern, comp, None)
+    }
+
+    /// Fault-aware advance: crashed nodes' clocks freeze (and fast-forward
+    /// to the cluster's current makespan on rejoin), degradation windows
+    /// scale the fabric's α/β for the round, and drops hit each pattern
+    /// where it hurts in reality:
+    ///
+    /// * **AllReduce** — a membership change at `k` costs the plan's
+    ///   failure-detection timeout (abort + re-form with survivors), and
+    ///   message loss inflates the collective via capped retransmissions
+    ///   ([`collectives::allreduce_time_faulty`]): everyone waits for the
+    ///   unluckiest link.
+    /// * **PushSum** — a dropped message simply never constrains its
+    ///   destination: the receiver proceeds on what arrived (mass
+    ///   accounting happens in the gossip engine, not here).
+    /// * **Symmetric** — each dropped direction of the pairwise exchange
+    ///   costs the pair one extra handshake (retry), on top of the barrier.
+    ///
+    /// With `faults: None` (or a lossless plan) this is bit-identical to
+    /// the plain recursion.
+    pub fn advance_with_faults(
+        &mut self,
+        pattern: &CommPattern,
+        comp: &[f64],
+        faults: Option<&FaultClock>,
+    ) -> f64 {
         assert_eq!(comp.len(), self.n);
         let k = self.iter;
+        let down: Vec<bool> = match faults {
+            Some(fc) => (0..self.n).map(|i| fc.is_down(i, k)).collect(),
+            None => vec![false; self.n],
+        };
+        if let Some(fc) = faults {
+            if k > 0 {
+                // Rejoining nodes sync their clock to the cluster's "now".
+                let now = self.makespan();
+                for i in 0..self.n {
+                    if !down[i] && fc.is_down(i, k - 1) {
+                        self.t[i] = self.t[i].max(now);
+                    }
+                }
+            }
+        }
+        let link = match faults {
+            Some(fc) => fc.scaled_link(&self.link, k),
+            None => self.link.clone(),
+        };
         match pattern {
             CommPattern::None => {
                 for i in 0..self.n {
-                    self.t[i] += comp[i];
+                    if !down[i] {
+                        self.t[i] += comp[i];
+                    }
                 }
             }
             CommPattern::Async { overhead_s } => {
                 for i in 0..self.n {
-                    self.t[i] += comp[i] + overhead_s;
+                    if !down[i] {
+                        self.t[i] += comp[i] + overhead_s;
+                    }
                 }
             }
             CommPattern::AllReduce { bytes } => {
-                let ready =
-                    (0..self.n).map(|i| self.t[i] + comp[i]).fold(0.0, f64::max);
-                let done = ready
-                    + collectives::allreduce_time(
+                let alive: Vec<usize> =
+                    (0..self.n).filter(|&i| !down[i]).collect();
+                let ready = alive
+                    .iter()
+                    .map(|&i| self.t[i] + comp[i])
+                    .fold(0.0, f64::max);
+                let cost = match faults {
+                    Some(fc) => {
+                        let mut c = if fc.membership_changed_at(k) {
+                            fc.plan.timeout_s
+                        } else {
+                            0.0
+                        };
+                        let mut rng = fc.round_rng(k, 0xA11D);
+                        c += collectives::allreduce_time_faulty(
+                            alive.len(),
+                            *bytes,
+                            &link.collective_link(),
+                            fc.collective_drop_prob(&alive),
+                            &mut rng,
+                        );
+                        c
+                    }
+                    None => collectives::allreduce_time(
                         self.n,
                         *bytes,
-                        &self.link.collective_link(),
-                    );
-                for ti in &mut self.t {
-                    *ti = done;
+                        &link.collective_link(),
+                    ),
+                };
+                let done = ready + cost;
+                for i in alive {
+                    self.t[i] = done;
                 }
             }
             CommPattern::PushSum { schedule, bytes, tau } => {
-                // Send times: node i transmits right after its local step.
-                let send: Vec<f64> =
-                    (0..self.n).map(|i| self.t[i] + comp[i]).collect();
+                // Send times: node i transmits right after its local step;
+                // a down node's clock is frozen.
+                let send: Vec<f64> = (0..self.n)
+                    .map(|i| if down[i] { self.t[i] } else { self.t[i] + comp[i] })
+                    .collect();
                 // Arrival deadline per destination for messages sent at k.
                 let mut arrive = vec![0.0f64; self.n];
-                for i in 0..self.n {
-                    let cost = self.link.ptp_time(*bytes);
-                    for j in schedule.out_peers(i, k) {
-                        arrive[j] = arrive[j].max(send[i] + cost);
+                let cost = link.ptp_time(*bytes);
+                match faults {
+                    None => {
+                        for i in 0..self.n {
+                            for j in schedule.out_peers(i, k) {
+                                arrive[j] = arrive[j].max(send[i] + cost);
+                            }
+                        }
+                    }
+                    Some(fc) => {
+                        let alive = fc.alive(self.n, k);
+                        for &i in &alive {
+                            for j in schedule.out_peers_among(i, k, &alive) {
+                                // A dropped message never constrains its
+                                // destination — the receiver moves on.
+                                if !fc.drops(i, j, k) {
+                                    arrive[j] = arrive[j].max(send[i] + cost);
+                                }
+                            }
+                        }
                     }
                 }
                 self.pending.push_back(arrive);
@@ -210,6 +301,9 @@ impl TimingSim {
                         None // first τ iterations: nothing due yet
                     };
                 for j in 0..self.n {
+                    if down[j] {
+                        continue;
+                    }
                     let mut tj = send[j];
                     if let Some(c) = &constraint {
                         tj = tj.max(c[j]);
@@ -218,19 +312,44 @@ impl TimingSim {
                 }
             }
             CommPattern::Symmetric { schedule, bytes, handshake } => {
-                let send: Vec<f64> =
-                    (0..self.n).map(|i| self.t[i] + comp[i]).collect();
-                let cost = handshake * self.link.ptp_time(*bytes);
+                let send: Vec<f64> = (0..self.n)
+                    .map(|i| if down[i] { self.t[i] } else { self.t[i] + comp[i] })
+                    .collect();
+                let cost = handshake * link.ptp_time(*bytes);
                 let mut new_t = send.clone();
-                for i in 0..self.n {
-                    for j in schedule.out_peers(i, k) {
-                        // Pairwise barrier: both wait for the slower one.
-                        let done = send[i].max(send[j]) + cost;
-                        new_t[i] = new_t[i].max(done);
-                        new_t[j] = new_t[j].max(done);
+                match faults {
+                    None => {
+                        for i in 0..self.n {
+                            for j in schedule.out_peers(i, k) {
+                                // Pairwise barrier: both wait for the slower.
+                                let done = send[i].max(send[j]) + cost;
+                                new_t[i] = new_t[i].max(done);
+                                new_t[j] = new_t[j].max(done);
+                            }
+                        }
+                    }
+                    Some(fc) => {
+                        let alive = fc.alive(self.n, k);
+                        for &i in &alive {
+                            for j in schedule.out_peers_among(i, k, &alive) {
+                                // Each dropped direction costs the pair one
+                                // extra handshake attempt.
+                                let attempts = 1
+                                    + fc.drops(i, j, k) as u32
+                                    + fc.drops(j, i, k) as u32;
+                                let done = send[i].max(send[j])
+                                    + attempts as f64 * cost;
+                                new_t[i] = new_t[i].max(done);
+                                new_t[j] = new_t[j].max(done);
+                            }
+                        }
                     }
                 }
-                self.t = new_t;
+                for i in 0..self.n {
+                    if !down[i] {
+                        self.t[i] = new_t[i];
+                    }
+                }
             }
         }
         self.iter += 1;
@@ -406,6 +525,102 @@ mod tests {
         let mut barrier = TimingSim::new(4, LinkModel::ethernet_10g());
         barrier.advance(&CommPattern::AllReduce { bytes: 8 }, &comp);
         assert!(barrier.t[0] > 5.0, "barrier drags everyone to the straggler");
+    }
+
+    #[test]
+    fn faulty_advance_with_lossless_plan_is_bit_identical() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let clock = FaultClock::new(FaultPlan::lossless());
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let mut a = TimingSim::new(8, LinkModel::ethernet_10g());
+        let mut b = TimingSim::new(8, LinkModel::ethernet_10g());
+        let mut rng = Pcg::new(1);
+        let compute = ComputeModel::resnet50_dgx1();
+        for k in 0..30u64 {
+            let comp = compute.sample_all(8, &mut rng);
+            let pattern = match k % 4 {
+                0 => CommPattern::AllReduce { bytes: MSG },
+                1 => CommPattern::PushSum { schedule: &sched, bytes: MSG, tau: 1 },
+                2 => CommPattern::Symmetric { schedule: &sched, bytes: MSG, handshake: 2.0 },
+                _ => CommPattern::Async { overhead_s: 0.01 },
+            };
+            let ma = a.advance(&pattern, &comp);
+            let mb = b.advance_with_faults(&pattern, &comp, Some(&clock));
+            assert_eq!(ma, mb, "k={k}");
+            assert_eq!(a.t, b.t, "k={k}");
+        }
+    }
+
+    #[test]
+    fn crashed_member_freezes_clock_and_allreduce_pays_timeout() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let clock =
+            FaultClock::new(FaultPlan::lossless().with_crash(3, 2, Some(5)));
+        let mut sim = TimingSim::new(4, LinkModel::ethernet_10g());
+        let comp = [0.1; 4];
+        let mut prev = 0.0;
+        for k in 0..8u64 {
+            let before3 = sim.t[3];
+            let m = sim.advance_with_faults(
+                &CommPattern::AllReduce { bytes: 1 << 20 },
+                &comp,
+                Some(&clock),
+            );
+            if (2..5).contains(&k) {
+                assert_eq!(sim.t[3], before3, "down node clock frozen at k={k}");
+            }
+            if k == 2 || k == 5 {
+                // Abort + re-form: the detection timeout lands on the round
+                // of the membership change (crash and rejoin alike).
+                assert!(m - prev > clock.plan.timeout_s, "k={k}: {prev} → {m}");
+            }
+            prev = m;
+        }
+        // After rejoin the returning clock fast-forwarded to the cluster.
+        assert_eq!(sim.t[3], sim.t[0]);
+    }
+
+    #[test]
+    fn pushsum_makespan_flat_under_drops_while_allreduce_inflates() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let n = 16;
+        let compute = ComputeModel::resnet50_dgx1();
+        let run = |pattern_of: &dyn Fn(u64) -> OwnedCommPattern, drop: f64| {
+            let clock = FaultClock::new(FaultPlan::lossless().with_drop(drop));
+            let mut sim = TimingSim::new(n, LinkModel::ethernet_10g());
+            let mut rng = Pcg::new(7);
+            for k in 0..150u64 {
+                let comp = compute.sample_all(n, &mut rng);
+                let p = pattern_of(k);
+                sim.advance_with_faults(&p.borrowed(), &comp, Some(&clock));
+            }
+            sim.makespan()
+        };
+        let sgp = |_k: u64| OwnedCommPattern::PushSum {
+            schedule: Schedule::new(TopologyKind::OnePeerExp, n),
+            bytes: MSG,
+            tau: 0,
+        };
+        let ar = |_k: u64| OwnedCommPattern::AllReduce { bytes: MSG };
+        let sgp_ratio = run(&sgp, 0.05) / run(&sgp, 0.0);
+        let ar_ratio = run(&ar, 0.05) / run(&ar, 0.0);
+        assert!(sgp_ratio < 1.05, "SGP must stay flat under loss: {sgp_ratio}");
+        assert!(ar_ratio > 1.2, "AllReduce must inflate under loss: {ar_ratio}");
+    }
+
+    #[test]
+    fn degradation_window_slows_the_round() {
+        use crate::faults::{Degradation, FaultClock, FaultPlan};
+        let clock = FaultClock::new(FaultPlan::lossless().with_degradation(
+            Degradation { from: 1, until: 2, alpha_mult: 1.0, beta_div: 10.0 },
+        ));
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 4);
+        let mut sim = TimingSim::new(4, LinkModel::ethernet_10g());
+        let comp = [0.0; 4];
+        let p = CommPattern::PushSum { schedule: &sched, bytes: MSG, tau: 0 };
+        let m0 = sim.advance_with_faults(&p, &comp, Some(&clock));
+        let m1 = sim.advance_with_faults(&p, &comp, Some(&clock)) - m0;
+        assert!(m1 > 5.0 * m0, "degraded round {m1} vs clean {m0}");
     }
 
     #[test]

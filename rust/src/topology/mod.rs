@@ -146,6 +146,45 @@ impl Schedule {
         }
     }
 
+    /// Out-neighbours of physical node `i` at iteration `k` when only the
+    /// (sorted) `alive` members survive: the schedule re-indexes itself
+    /// over the survivor ranks, so the induced mixing stays
+    /// column-stochastic over exactly the surviving set — the churn
+    /// contract of the fault subsystem (DESIGN.md §Faults). Dead or
+    /// unknown nodes send to no-one.
+    pub fn out_peers_among(&self, i: usize, k: u64, alive: &[usize]) -> Vec<usize> {
+        debug_assert!(alive.windows(2).all(|w| w[0] < w[1]), "alive must be sorted");
+        if alive.len() == self.n {
+            return self.out_peers(i, k);
+        }
+        let Ok(rank) = alive.binary_search(&i) else {
+            return vec![];
+        };
+        if alive.len() <= 1 {
+            return vec![];
+        }
+        let virt = Schedule { kind: self.kind, n: alive.len(), seed: self.seed };
+        virt.out_peers(rank, k).into_iter().map(|r| alive[r]).collect()
+    }
+
+    /// Column-stochastic mixing matrix over the `alive.len()` survivors
+    /// (row/col order = survivor rank order), uniform out-weights with a
+    /// self-loop — the fault-mode analogue of [`Self::mixing_matrix`].
+    pub fn mixing_matrix_among(&self, k: u64, alive: &[usize]) -> Mat {
+        let m = alive.len();
+        let mut p = Mat::zeros(m);
+        for (ci, &c) in alive.iter().enumerate() {
+            let peers = self.out_peers_among(c, k, alive);
+            let w = 1.0 / (1.0 + peers.len() as f64);
+            *p.at_mut(ci, ci) += w;
+            for r in &peers {
+                let ri = alive.binary_search(r).expect("peer must be alive");
+                *p.at_mut(ri, ci) += w;
+            }
+        }
+        p
+    }
+
     fn peer_rng(&self, i: usize, k: u64) -> Pcg {
         // Deterministic per (seed, node, iteration) — reproducible runs.
         Pcg::with_stream(self.seed ^ k.wrapping_mul(0x9e37_79b9_7f4a_7c15), i as u64 + 1)
@@ -389,6 +428,82 @@ mod tests {
         assert_eq!(h.at(99).kind, TopologyKind::Complete);
         assert_eq!(h.at(100).kind, TopologyKind::OnePeerExp);
         assert_eq!(h.at(1_000_000).kind, TopologyKind::OnePeerExp);
+    }
+
+    #[test]
+    fn out_peers_among_full_membership_is_identity() {
+        let alive: Vec<usize> = (0..8).collect();
+        for kind in [
+            TopologyKind::OnePeerExp,
+            TopologyKind::TwoPeerExp,
+            TopologyKind::BipartiteExp,
+            TopologyKind::RandomAny,
+        ] {
+            let s = Schedule::with_seed(kind, 8, 3);
+            for k in 0..6u64 {
+                for i in 0..8 {
+                    assert_eq!(s.out_peers_among(i, k, &alive), s.out_peers(i, k));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_peers_among_reindexes_over_survivors() {
+        let s = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let alive = vec![0, 1, 2, 4, 6, 7]; // 3 and 5 are down
+        for k in 0..12u64 {
+            let mut recv = vec![0usize; 8];
+            for &i in &alive {
+                let peers = s.out_peers_among(i, k, &alive);
+                assert_eq!(peers.len(), 1, "k={k} i={i}");
+                assert!(alive.contains(&peers[0]), "sent to a dead node");
+                assert_ne!(peers[0], i);
+                recv[peers[0]] += 1;
+            }
+            // Dead nodes send to no-one; survivors each receive exactly one.
+            assert!(s.out_peers_among(3, k, &alive).is_empty());
+            assert!(s.out_peers_among(5, k, &alive).is_empty());
+            for &i in &alive {
+                assert_eq!(recv[i], 1, "k={k}");
+            }
+            assert_eq!(recv[3] + recv[5], 0);
+        }
+    }
+
+    #[test]
+    fn mixing_matrix_among_column_stochastic_under_churn() {
+        for kind in [
+            TopologyKind::OnePeerExp,
+            TopologyKind::TwoPeerExp,
+            TopologyKind::CompleteCycling,
+            TopologyKind::BipartiteExp,
+            TopologyKind::Ring,
+        ] {
+            let s = Schedule::new(kind, 16);
+            for alive in [
+                (0..16).filter(|i| i % 3 != 0).collect::<Vec<_>>(),
+                vec![1, 5, 9],
+                (0..16).collect(),
+            ] {
+                for k in 0..8u64 {
+                    let p = s.mixing_matrix_among(k, &alive);
+                    for c in 0..alive.len() {
+                        let sum: f64 = (0..alive.len()).map(|r| p.at(r, c)).sum();
+                        assert!(
+                            (sum - 1.0).abs() < 1e-12,
+                            "{kind:?} k={k} col {c} sums to {sum}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_survivor_idles() {
+        let s = Schedule::new(TopologyKind::OnePeerExp, 8);
+        assert!(s.out_peers_among(2, 0, &[2]).is_empty());
     }
 
     #[test]

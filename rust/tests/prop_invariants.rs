@@ -6,6 +6,8 @@
 //! spirit: generate → check invariant → report the counterexample seed.
 
 use sgp::data::{Batch, BigramLm, Blobs};
+use sgp::faults::harness::{run_quadratic, FaultRunConfig};
+use sgp::faults::{Degradation, FaultClock, FaultPlan};
 use sgp::gossip::PushSumEngine;
 use sgp::model::json::Json;
 use sgp::net::{CommPattern, ComputeModel, LinkModel, TimingSim};
@@ -167,6 +169,110 @@ fn prop_osgp_staleness_bounded_by_tau() {
                 eng.max_staleness(k)
             );
         }
+    }
+}
+
+/// Draw a random fault plan: drop rate, maybe rescue, random crashes
+/// (rejoining or permanent), a random degradation window.
+fn arb_plan(rng: &mut Pcg, n: usize, horizon: u64, seed: u64) -> FaultPlan {
+    let mut plan = FaultPlan::lossless()
+        .with_drop(rng.f64() * 0.3)
+        .with_rescue(rng.f64() < 0.3)
+        .with_seed(seed);
+    for _ in 0..rng.below(3) {
+        let node = rng.below(n);
+        let at = rng.next_u64() % horizon.max(1);
+        let rejoin = if rng.f64() < 0.5 {
+            Some(at + 1 + rng.next_u64() % horizon.max(1))
+        } else {
+            None
+        };
+        plan = plan.with_crash(node, at, rejoin);
+    }
+    if rng.f64() < 0.5 {
+        let from = rng.next_u64() % horizon.max(1);
+        plan = plan.with_degradation(Degradation {
+            from,
+            until: from + 1 + rng.next_u64() % horizon.max(1),
+            alpha_mult: 1.0 + rng.f64() * 9.0,
+            beta_div: 1.0 + rng.f64() * 9.0,
+        });
+    }
+    plan
+}
+
+#[test]
+fn prop_fault_mode_mass_conserved_under_any_plan() {
+    // The fault-mode conservation law: Σᵢ xᵢ + in-flight + recorded-dropped
+    // mass is invariant under ANY fault plan — drops, rescue, churn,
+    // degradations, any schedule, any delay.
+    for case in 0..60u64 {
+        let mut rng = Pcg::new(11_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let d = 1 + rng.below(16);
+        let delay = rng.below(4) as u64;
+        let plan = arb_plan(&mut rng, n, 30, case);
+        let clock = FaultClock::new(plan);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+        let mut eng = PushSumEngine::new(init, delay, false);
+        let (x0, w0) = eng.total_mass_with_losses();
+        let s = Schedule::with_seed(kind, n, case);
+        for k in 0..30 {
+            eng.step_faulty(k, &s, &clock);
+            let (x, w) = eng.total_mass_with_losses();
+            for (a, b) in x.iter().zip(&x0) {
+                assert!(
+                    (a - b).abs() < 1e-2,
+                    "case {case}: {kind:?} n={n} delay={delay} k={k}: x {a} → {b}"
+                );
+            }
+            assert!((w - w0).abs() < 1e-9, "case {case} k={k}: w {w0} → {w}");
+        }
+        eng.drain();
+        let (x1, w1) = eng.total_mass_with_losses();
+        for (a, b) in x0.iter().zip(&x1) {
+            assert!((a - b).abs() < 1e-2, "case {case}: post-drain x {a} → {b}");
+        }
+        assert!((w0 - w1).abs() < 1e-9, "case {case}: post-drain w");
+        // Weights stay positive and the de-biased views stay finite even
+        // under loss and churn.
+        for st in &eng.states {
+            assert!(st.w > 0.0, "case {case}: w={}", st.w);
+            assert!(st.debiased().iter().all(|v| v.is_finite()), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_fault_runs_deterministic_per_seed() {
+    // Same fault seed ⇒ bit-identical metrics, across algorithms and
+    // random plans; a different fault seed perturbs the history.
+    // Comparisons go through to_bits so a destabilized naive-loss run
+    // (inf/NaN — see DESIGN.md §Faults) still replays bit-identically.
+    let bits = |s: &sgp::faults::harness::FaultRunStats| {
+        (s.final_err.to_bits(), s.consensus.to_bits(), s.makespan.to_bits())
+    };
+    let cfg = FaultRunConfig { n: 8, iters: 40, ..FaultRunConfig::default() };
+    for case in 0..6u64 {
+        let mut rng = Pcg::new(12_000 + case);
+        let algo = ["sgp", "osgp", "dpsgd", "ar-sgd", "adpsgd", "dasgd"]
+            [rng.below(6)];
+        let plan = arb_plan(&mut rng, cfg.n, cfg.iters, case).with_drop(0.1);
+        let a = run_quadratic(algo, &cfg, &plan).unwrap();
+        let b = run_quadratic(algo, &cfg, &plan).unwrap();
+        assert_eq!(
+            bits(&a),
+            bits(&b),
+            "case {case}: {algo} replay must be bit-identical"
+        );
+        let c =
+            run_quadratic(algo, &cfg, &plan.clone().with_seed(999 + case)).unwrap();
+        assert!(
+            c.makespan.to_bits() != a.makespan.to_bits()
+                || c.final_err.to_bits() != a.final_err.to_bits(),
+            "case {case}: {algo} must react to the fault seed"
+        );
     }
 }
 

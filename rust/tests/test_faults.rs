@@ -1,0 +1,246 @@
+//! End-to-end fault & churn regression tests — all offline (synthetic
+//! quadratic gradients through the registered strategies), so they run in
+//! tier-1 everywhere the crate builds.
+//!
+//! The acceptance anchor for the fault subsystem is the paper's Section-1
+//! claim: gossip degrades gracefully under message loss while exact
+//! averaging pays for its barrier — locked in by
+//! `sgp_degrades_gracefully_while_allreduce_inflates`. Rescue mode
+//! (senders re-absorb undelivered mass, push-sum's local loss-recovery;
+//! DESIGN.md §Faults) is the loss-tolerant configuration the sweep
+//! defaults to; `naive_loss_destabilizes_but_rescue_recovers` pins down
+//! *why* it is needed.
+
+use sgp::algorithms::{self, AlgoParams, DistributedAlgorithm, RoundCtx};
+use sgp::faults::harness::{run_quadratic, FaultRunConfig, FaultRunStats};
+use sgp::faults::{FaultClock, FaultPlan};
+use sgp::gossip::PushSumEngine;
+use sgp::net::LinkModel;
+use sgp::optim::OptimKind;
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+fn cfg() -> FaultRunConfig {
+    FaultRunConfig::default() // n=16, 150 iters, 10 GbE, ResNet-scale msgs
+}
+
+fn run(algo: &str, plan: &FaultPlan) -> FaultRunStats {
+    run_quadratic(algo, &cfg(), plan).unwrap()
+}
+
+#[test]
+fn sgp_degrades_gracefully_while_allreduce_inflates() {
+    // The ordering the whole subsystem exists to demonstrate, at the
+    // acceptance threshold (≥5% message drop):
+    //  * SGP (in the sweep's default loss-tolerant rescue configuration)
+    //    keeps a flat makespan — a dropped message never stalls its
+    //    destination — and its accuracy/consensus degrade gracefully;
+    //  * AR-SGD still converges exactly but its makespan inflates — every
+    //    round waits for the unluckiest link's retransmissions.
+    let clean = FaultPlan::lossless().with_seed(3);
+    let lossy = FaultPlan::lossless().with_drop(0.05).with_rescue(true).with_seed(3);
+
+    let sgp0 = run("sgp", &clean);
+    let sgp5 = run("sgp", &lossy);
+    let ar0 = run("ar-sgd", &clean);
+    let ar5 = run("ar-sgd", &lossy);
+
+    let sgp_slowdown = sgp5.makespan / sgp0.makespan;
+    let ar_slowdown = ar5.makespan / ar0.makespan;
+    assert!(
+        sgp_slowdown < 1.05,
+        "SGP makespan must stay flat under 5% loss: {sgp_slowdown:.3}×"
+    );
+    assert!(
+        ar_slowdown > 1.2,
+        "AR-SGD makespan must inflate under 5% loss: {ar_slowdown:.3}×"
+    );
+    assert!(
+        ar_slowdown - 1.0 > 3.0 * (sgp_slowdown - 1.0).max(0.0) + 0.1,
+        "the ordering the paper claims: AR {ar_slowdown:.3}× vs SGP {sgp_slowdown:.3}×"
+    );
+
+    // Graceful semantic degradation: SGP still lands near the optimum with
+    // a consensus distance close to the lossless equilibrium (which sits
+    // at O(lr · gradient heterogeneity), not zero).
+    assert!(sgp5.final_err < 0.2, "SGP error under loss: {}", sgp5.final_err);
+    assert!(
+        sgp5.consensus < 2.0 * sgp0.consensus + 0.1,
+        "no consensus blow-up: {} vs {}",
+        sgp0.consensus,
+        sgp5.consensus
+    );
+}
+
+#[test]
+fn naive_loss_destabilizes_but_rescue_recovers() {
+    // The finding DESIGN.md §Faults documents: without rescue, a lost
+    // message removes (x, w) mass permanently; the push-sum weight of an
+    // unlucky node random-walks toward zero and the *effective* step size
+    // of the gradient applied at z = x/w is lr/w — the run destabilizes.
+    // Rescue (the sender re-absorbs what it could not deliver) restores
+    // exact column-stochasticity and the run tracks the lossless one.
+    let naive = run("sgp", &FaultPlan::lossless().with_drop(0.15).with_seed(13));
+    let rescued = run(
+        "sgp",
+        &FaultPlan::lossless().with_drop(0.15).with_seed(13).with_rescue(true),
+    );
+    let lossless = run("sgp", &FaultPlan::lossless().with_seed(13));
+    assert!(
+        rescued.final_err < 0.2,
+        "rescued SGP must stay near the optimum: {}",
+        rescued.final_err
+    );
+    assert!(
+        rescued.final_err < lossless.final_err + 0.15,
+        "rescued {} should track lossless {}",
+        rescued.final_err,
+        lossless.final_err
+    );
+    // NaN-safe: a destabilized run may overflow to inf/NaN — both count.
+    assert!(
+        !(naive.final_err <= 5.0 * rescued.final_err),
+        "naive loss must be way off (or diverged): naive {} vs rescued {}",
+        naive.final_err,
+        rescued.final_err
+    );
+}
+
+#[test]
+fn sweep_top_fault_level_stays_graceful_with_rescue() {
+    // Even at the sweep's top fault level (20% drop) the default (rescue)
+    // configuration must not collapse.
+    let s = run(
+        "sgp",
+        &FaultPlan::lossless().with_drop(0.2).with_rescue(true).with_seed(7),
+    );
+    assert!(s.final_err < 0.3, "err {}", s.final_err);
+    assert!(s.consensus < 1.0, "consensus {}", s.consensus);
+}
+
+#[test]
+fn pushsum_weight_absorbs_loss_where_biased_averaging_drifts() {
+    // Why column-stochasticity tolerates loss: a dropped message removes
+    // numerator AND weight together, so the de-biased consensus stays near
+    // the true average. The biased engine (w ≡ 1 — the same ablation that
+    // models D-PSGD's weightless symmetric averaging) has nothing to
+    // absorb the loss and its consensus value drifts far from the average.
+    let n = 8;
+    let d = 8;
+    let mut rng = Pcg::new(14);
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+    let mut avg = vec![0.0f64; d];
+    for v in &init {
+        for (a, b) in avg.iter_mut().zip(v) {
+            *a += *b as f64 / n as f64;
+        }
+    }
+    let clock = FaultClock::new(FaultPlan::lossless().with_drop(0.1).with_seed(2));
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let mut unbiased = PushSumEngine::new(init.clone(), 0, false);
+    let mut biased = PushSumEngine::new(init, 0, true);
+    for k in 0..120 {
+        // Identical deterministic drop history for both engines.
+        unbiased.step_faulty(k, &sched, &clock);
+        biased.step_faulty(k, &sched, &clock);
+    }
+    unbiased.drain();
+    biased.drain();
+    let dev = |eng: &PushSumEngine| {
+        let mut m = vec![0.0f64; d];
+        for st in &eng.states {
+            let z = st.debiased();
+            for (a, b) in m.iter_mut().zip(&z) {
+                *a += *b as f64 / n as f64;
+            }
+        }
+        m.iter()
+            .zip(&avg)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let du = dev(&unbiased);
+    let db = dev(&biased);
+    assert!(du < 0.5, "unbiased consensus must stay near the average: {du}");
+    assert!(
+        db > 2.0 * du,
+        "biased averaging must drift much further: {db} vs {du}"
+    );
+}
+
+#[test]
+fn crash_and_rejoin_still_converges_for_every_strategy() {
+    // Churn composes with every registered strategy: crash one node a
+    // third of the way in, rejoin it from its checkpoint later; everything
+    // still optimizes the quadratic.
+    let plan = FaultPlan::lossless()
+        .with_crash(3, 50, Some(100))
+        .with_seed(17);
+    for algo in ["sgp", "sgp-2p", "osgp", "dpsgd", "adpsgd", "dasgd", "ar-sgd"] {
+        let s = run_quadratic(algo, &cfg(), &plan).unwrap();
+        assert!(
+            s.final_err < 0.6,
+            "{algo} under crash/rejoin: err {}",
+            s.final_err
+        );
+        assert!(s.consensus < 1.0, "{algo}: consensus {}", s.consensus);
+    }
+}
+
+#[test]
+fn permanent_leave_excludes_the_node_from_the_consensus_model() {
+    let plan = FaultPlan::lossless().with_crash(5, 30, None).with_seed(19);
+    let s = run("sgp", &plan);
+    // Survivors converge to the survivors' optimum, which sits
+    // ‖c̄ − c₅‖ / (n − 1) away from the full optimum — bounded drift, and
+    // the departed node's frozen checkpoint is excluded from the reported
+    // statistics.
+    assert!(s.final_err < 0.6, "err {}", s.final_err);
+    assert!(s.consensus < 1.0, "consensus {}", s.consensus);
+}
+
+#[test]
+fn crashed_member_stalls_the_collective_but_not_the_gossip() {
+    let plan = FaultPlan::lossless().with_crash(2, 40, Some(80)).with_seed(23);
+    let clean = FaultPlan::lossless().with_seed(23);
+    let ar = run("ar-sgd", &plan);
+    let ar0 = run("ar-sgd", &clean);
+    let sgp = run("sgp", &plan);
+    let sgp0 = run("sgp", &clean);
+    // AR pays detection timeouts (abort + re-form) on crash and rejoin.
+    assert!(
+        ar.makespan > ar0.makespan + 1.5 * plan.timeout_s,
+        "AR must pay the churn timeouts: {} vs {}",
+        ar.makespan,
+        ar0.makespan
+    );
+    // Gossip just re-indexes over survivors: makespan may even shrink.
+    assert!(
+        sgp.makespan < sgp0.makespan * 1.05,
+        "SGP under churn: {} vs {}",
+        sgp.makespan,
+        sgp0.makespan
+    );
+}
+
+#[test]
+fn membership_hook_default_is_noop_and_trait_object_safe() {
+    // The default-implemented hook must be callable through a boxed trait
+    // object without the strategy opting in.
+    let p = AlgoParams::new(4, vec![0.0f32; 8], OptimKind::Sgd);
+    let mut alg: Box<dyn DistributedAlgorithm> =
+        algorithms::build("sgp", &p).unwrap();
+    let clock = FaultClock::new(FaultPlan::lossless().with_crash(1, 2, Some(4)));
+    for k in 0..6u64 {
+        for ev in clock.events_at(k) {
+            alg.on_membership_change(&ev);
+        }
+        let comp = vec![0.1; 4];
+        let link = LinkModel::ethernet_10g();
+        let ctx = RoundCtx::new(k, &comp, 32, &link).with_faults(&clock);
+        alg.communicate(&ctx);
+    }
+    alg.drain();
+    assert_eq!(alg.n(), 4);
+}

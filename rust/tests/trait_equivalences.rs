@@ -35,7 +35,7 @@ fn drive(
                 view.iter().zip(&centers[i]).map(|(z, c)| z - c).collect();
             alg.apply_step(i, &g, lr);
         }
-        let ctx = RoundCtx { k, comp: &comp, msg_bytes: 4 * DIM, link: &link };
+        let ctx = RoundCtx::new(k, &comp, 4 * DIM, &link);
         alg.communicate(&ctx);
     }
 }
@@ -72,8 +72,7 @@ fn sgp_under_complete_mixing_equals_arsgd() {
                     view.iter().zip(&cs[i]).map(|(z, c)| z - c).collect();
                 alg.apply_step(i, &g, 0.05);
             }
-            let ctx =
-                RoundCtx { k, comp: &comp, msg_bytes: 4 * DIM, link: &link };
+            let ctx = RoundCtx::new(k, &comp, 4 * DIM, &link);
             alg.communicate(&ctx);
         }
         // After each round every SGP node's de-biased view must equal the
@@ -168,7 +167,7 @@ fn dasgd_matches_osgp_when_gradient_delay_is_degenerate() {
     let cs = centers(n, 19);
     let p = params(n, OptimKind::Sgd);
     let mut dasgd = DaSgd::new(TopologyKind::OnePeerExp, 1, 0, &p);
-    let mut osgp = algorithms::build("osgp", &p).unwrap(); // τ defaults to 1
+    let mut osgp = algorithms::build("osgp", &p).unwrap(); // τ clamps to 1
     drive(&mut dasgd, &cs, 50, 0.05);
     drive(osgp.as_mut(), &cs, 50, 0.05);
     for i in 0..n {
