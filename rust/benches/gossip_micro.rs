@@ -5,13 +5,15 @@
 //! critical path relative to gradient compute (see EXPERIMENTS.md §Perf).
 //!
 //! Besides the human-readable report, the run writes machine-readable
-//! `results/BENCH_gossip.json` (override with `BENCH_JSON=<path>`) — the
-//! perf-trajectory artifact CI and tooling can diff across commits.
+//! `results/BENCH_gossip.json` (override with `BENCH_JSON=<path>`) and the
+//! execution-engine scaling curve `results/BENCH_engine.json` (override
+//! with `BENCH_ENGINE_JSON=<path>`) — the perf-trajectory artifacts CI and
+//! tooling can diff across commits.
 
 use sgp::algorithms::{AlgoParams, DistributedAlgorithm, RoundCtx, Sgp};
-use sgp::benchkit::{bench, black_box, section, JsonReport};
+use sgp::benchkit::{bench, bench_for, black_box, section, JsonReport};
 use sgp::faults::{FaultClock, FaultPlan};
-use sgp::gossip::PushSumEngine;
+use sgp::gossip::{ExecPolicy, PushSumEngine};
 use sgp::net::LinkModel;
 use sgp::optim::OptimKind;
 use sgp::rng::Pcg;
@@ -120,6 +122,40 @@ fn main() {
     report.push(bench("total_mass/lm-924k/n16", || {
         black_box(eng.total_mass());
     }));
+
+    section("execution engine: sequential vs sharded-parallel step scaling");
+    // The engine scaling curve (ISSUE 3 acceptance): one full gossip step
+    // at large N, sequential baseline vs the parallel engine at several
+    // shard counts. Results are bit-identical by construction (the
+    // engine-equivalence suite verifies it); this curve records how much
+    // wall-clock the sharding buys on this machine. Written separately to
+    // results/BENCH_engine.json so perf tooling can track the speedup.
+    let mut engine_report = JsonReport::new();
+    let budget = std::time::Duration::from_secs(2);
+    for n in [64usize, 256] {
+        let dim = 22_026; // MLP-scale parameters per node
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for shards in [1usize, 2, 4, 8] {
+            let exec = ExecPolicy::parallel(shards);
+            let mut eng = engine(n, dim, 0);
+            let mut k = 0u64;
+            engine_report.push(bench_for(
+                &format!("engine_step/mlp-22k/n{n}/shards{shards}"),
+                budget,
+                || {
+                    eng.step_exec(k, &sched, None, exec);
+                    k += 1;
+                },
+            ));
+        }
+    }
+    let engine_path = std::env::var("BENCH_ENGINE_JSON")
+        .unwrap_or_else(|_| "results/BENCH_engine.json".to_string());
+    let engine_path = std::path::PathBuf::from(engine_path);
+    match engine_report.write(&engine_path) {
+        Ok(()) => println!("\nwrote {}", engine_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", engine_path.display()),
+    }
 
     let path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "results/BENCH_gossip.json".to_string());

@@ -26,6 +26,7 @@ use crate::sim::EventQueue;
 
 use super::{consensus_of, AlgoParams, DistributedAlgorithm, RoundCtx};
 
+/// AD-PSGD strategy state (per-node parameters, clocks and event order).
 pub struct AdPsgd {
     params: Vec<Vec<f32>>,
     opts: Vec<Optimizer>,
@@ -41,6 +42,7 @@ pub struct AdPsgd {
 }
 
 impl AdPsgd {
+    /// Build per-node replicas from the shared parameters.
     pub fn new(p: &AlgoParams) -> Self {
         Self {
             params: vec![p.init.clone(); p.n],
@@ -53,6 +55,7 @@ impl AdPsgd {
     }
 }
 
+/// Registry builder for `adpsgd`.
 pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     if p.topology.is_some() {
         bail!(

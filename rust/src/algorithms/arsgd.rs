@@ -13,6 +13,7 @@ use crate::optim::Optimizer;
 
 use super::{AlgoParams, DistributedAlgorithm, RoundCtx};
 
+/// AllReduce-SGD strategy state (replicated parameters + one optimizer).
 pub struct ArSgd {
     n: usize,
     /// The replicated parameter vector (all nodes identical).
@@ -26,6 +27,7 @@ pub struct ArSgd {
 }
 
 impl ArSgd {
+    /// Build the replicated state from the shared parameters.
     pub fn new(p: &AlgoParams) -> Self {
         Self {
             n: p.n,
@@ -56,6 +58,7 @@ impl ArSgd {
     }
 }
 
+/// Registry builder for `ar-sgd`.
 pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     if p.topology.is_some() {
         bail!("ar-sgd mixes exactly (complete graph); a topology override is not supported");

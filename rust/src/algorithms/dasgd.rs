@@ -25,6 +25,7 @@ use crate::topology::{Schedule, TopologyKind};
 
 use super::{AlgoParams, DistributedAlgorithm, RoundCtx};
 
+/// DaSGD strategy state (delayed PushSum engine + per-node gradient FIFOs).
 pub struct DaSgd {
     engine: PushSumEngine,
     schedule: Schedule,
@@ -36,6 +37,7 @@ pub struct DaSgd {
 }
 
 impl DaSgd {
+    /// DaSGD over `kind` with message delay τ and gradient lag `grad_delay`.
     pub fn new(kind: TopologyKind, tau: u64, grad_delay: u64, p: &AlgoParams) -> Self {
         Self {
             engine: PushSumEngine::new(vec![p.init.clone(); p.n], tau, false),
@@ -48,6 +50,7 @@ impl DaSgd {
     }
 }
 
+/// Registry builder for `dasgd`.
 pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::OnePeerExp);
     // Overlap is DaSGD's point: clamp τ ≥ 1 (AlgoParams defaults τ to 0 =
@@ -82,10 +85,7 @@ impl DistributedAlgorithm for DaSgd {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        match ctx.faults {
-            Some(clock) => self.engine.step_faulty(ctx.k, &self.schedule, clock),
-            None => self.engine.step(ctx.k, &self.schedule),
-        }
+        self.engine.step_exec(ctx.k, &self.schedule, ctx.faults, ctx.exec);
         // Timing staleness is the *message* delay only: the gradient FIFO
         // is node-local and costless, so it earns no extra timing credit.
         OwnedCommPattern::PushSum {

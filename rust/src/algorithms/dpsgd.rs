@@ -18,6 +18,8 @@ use super::{AlgoParams, DistributedAlgorithm, RoundCtx};
 /// avoidance), matching the paper's D-PSGD timing discussion.
 pub const HANDSHAKE: f64 = 2.0;
 
+/// D-PSGD strategy state (weightless PushSum engine over a symmetric
+/// schedule).
 pub struct DPsgd {
     engine: PushSumEngine,
     schedule: Schedule,
@@ -25,6 +27,7 @@ pub struct DPsgd {
 }
 
 impl DPsgd {
+    /// D-PSGD over a symmetric schedule of the given kind.
     pub fn new(kind: TopologyKind, p: &AlgoParams) -> Self {
         // `biased = true`: real D-PSGD carries no push-sum weight, so the
         // engine's w is pinned at 1. Under a lossless symmetric schedule
@@ -41,6 +44,7 @@ impl DPsgd {
     }
 }
 
+/// Registry builder for `dpsgd` (rejects asymmetric schedules).
 pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::BipartiteExp);
     // D-PSGD is defined over symmetric doubly-stochastic mixing, and the
@@ -78,10 +82,7 @@ impl DistributedAlgorithm for DPsgd {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        match ctx.faults {
-            Some(clock) => self.engine.step_faulty(ctx.k, &self.schedule, clock),
-            None => self.engine.step(ctx.k, &self.schedule),
-        }
+        self.engine.step_exec(ctx.k, &self.schedule, ctx.faults, ctx.exec);
         OwnedCommPattern::Symmetric {
             schedule: self.schedule.clone(),
             bytes: ctx.msg_bytes,

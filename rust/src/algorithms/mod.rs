@@ -52,6 +52,7 @@ use anyhow::{bail, Result};
 
 use crate::collectives;
 use crate::faults::{FaultClock, MembershipEvent};
+use crate::gossip::ExecPolicy;
 use crate::net::{LinkModel, OwnedCommPattern};
 use crate::optim::OptimKind;
 use crate::topology::TopologyKind;
@@ -73,17 +74,29 @@ pub struct RoundCtx<'a> {
     /// the lossy/churn-aware paths when this is set. `None` (the default)
     /// is the lossless cluster.
     pub faults: Option<&'a FaultClock>,
+    /// Execution policy for the round's state updates: the shard handle the
+    /// coordinator threads through to every engine-owning strategy. Any
+    /// policy yields bit-identical results at a fixed seed (the engine's
+    /// determinism contract), so strategies apply it blindly — no
+    /// algorithm-specific branches.
+    pub exec: ExecPolicy,
 }
 
 impl<'a> RoundCtx<'a> {
     /// A lossless-round context (the common case in tests and benches).
     pub fn new(k: u64, comp: &'a [f64], msg_bytes: usize, link: &'a LinkModel) -> Self {
-        Self { k, comp, msg_bytes, link, faults: None }
+        Self { k, comp, msg_bytes, link, faults: None, exec: ExecPolicy::Sequential }
     }
 
     /// Attach a fault scenario to the round.
     pub fn with_faults(mut self, clock: &'a FaultClock) -> Self {
         self.faults = Some(clock);
+        self
+    }
+
+    /// Set the execution policy for the round's state updates.
+    pub fn with_exec(mut self, exec: ExecPolicy) -> Self {
+        self.exec = exec;
         self
     }
 }
@@ -186,9 +199,11 @@ pub trait DistributedAlgorithm {
 /// [`crate::coordinator::TrainerBuilder`]; also usable directly in tests.
 #[derive(Clone, Debug)]
 pub struct AlgoParams {
+    /// Number of logical nodes.
     pub n: usize,
     /// Initial parameters, replicated to every node.
     pub init: Vec<f32>,
+    /// Local optimizer family (one slot per node).
     pub optim: OptimKind,
     /// Overlap delay τ (OSGP / DaSGD communication staleness). Defaults to
     /// 0 — blocking SGP semantics — so direct constructions don't silently
@@ -211,6 +226,7 @@ pub struct AlgoParams {
 }
 
 impl AlgoParams {
+    /// Parameters with the default knobs (τ=0, unit grad delay, seed 0).
     pub fn new(n: usize, init: Vec<f32>, optim: OptimKind) -> Self {
         Self {
             n,
@@ -224,6 +240,7 @@ impl AlgoParams {
         }
     }
 
+    /// Parameter dimension (length of `init`).
     pub fn dim(&self) -> usize {
         self.init.len()
     }
@@ -231,9 +248,13 @@ impl AlgoParams {
 
 /// One registry row: canonical name, aliases, summary, and builder.
 pub struct AlgorithmSpec {
+    /// Canonical registry name (`repro train --algo <name>`).
     pub name: &'static str,
+    /// Accepted aliases.
     pub aliases: &'static [&'static str],
+    /// One-line description shown by `repro algos`.
     pub summary: &'static str,
+    /// Strategy constructor.
     pub build: fn(&AlgoParams) -> Result<Box<dyn DistributedAlgorithm>>,
 }
 

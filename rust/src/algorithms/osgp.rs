@@ -13,6 +13,7 @@ use crate::topology::{Schedule, TopologyKind};
 
 use super::{AlgoParams, DistributedAlgorithm, RoundCtx};
 
+/// τ-Overlap SGP strategy state (delayed PushSum engine + optimizers).
 pub struct Osgp {
     engine: PushSumEngine,
     schedule: Schedule,
@@ -22,6 +23,8 @@ pub struct Osgp {
 }
 
 impl Osgp {
+    /// Overlap-SGP over `kind` with delay τ (clamped ≥ 1); `biased` freezes
+    /// the push-sum weight (the Table-4 ablation).
     pub fn new(kind: TopologyKind, tau: u64, biased: bool, p: &AlgoParams) -> Self {
         let tau = tau.max(1);
         Self {
@@ -34,11 +37,13 @@ impl Osgp {
     }
 }
 
+/// Registry builder for `osgp`.
 pub fn build(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::OnePeerExp);
     Ok(Box::new(Osgp::new(kind, p.tau, false, p)))
 }
 
+/// Registry builder for `osgp-biased` (the Table-4 ablation).
 pub fn build_biased(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::OnePeerExp);
     Ok(Box::new(Osgp::new(kind, p.tau, true, p)))
@@ -70,10 +75,7 @@ impl DistributedAlgorithm for Osgp {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        match ctx.faults {
-            Some(clock) => self.engine.step_faulty(ctx.k, &self.schedule, clock),
-            None => self.engine.step(ctx.k, &self.schedule),
-        }
+        self.engine.step_exec(ctx.k, &self.schedule, ctx.faults, ctx.exec);
         OwnedCommPattern::PushSum {
             schedule: self.schedule.clone(),
             bytes: ctx.msg_bytes,

@@ -13,6 +13,7 @@ use crate::topology::{HybridSchedule, Schedule, TopologyKind};
 
 use super::{AlgoParams, DistributedAlgorithm, RoundCtx};
 
+/// SGP strategy state (PushSum engine + per-node optimizers).
 pub struct Sgp {
     engine: PushSumEngine,
     schedule: HybridSchedule,
@@ -38,16 +39,19 @@ impl Sgp {
     }
 }
 
+/// Registry builder for `sgp` (1-peer exponential graph).
 pub fn build_1peer(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::OnePeerExp);
     Ok(Box::new(Sgp::with_topology(kind, p)))
 }
 
+/// Registry builder for `sgp-2p` (2-peer exponential graph).
 pub fn build_2peer(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     let kind = p.topology.unwrap_or(TopologyKind::TwoPeerExp);
     Ok(Box::new(Sgp::with_topology(kind, p)))
 }
 
+/// Registry builder for `hybrid-ar-1p` (dense until `switch_at`, then 1-peer).
 pub fn build_hybrid_ar_1p(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     ensure_no_topology_override(p, "hybrid-ar-1p")?;
     Ok(Box::new(Sgp::new(
@@ -60,6 +64,7 @@ pub fn build_hybrid_ar_1p(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm
     )))
 }
 
+/// Registry builder for `hybrid-2p-1p` (2-peer until `switch_at`, then 1-peer).
 pub fn build_hybrid_2p_1p(p: &AlgoParams) -> Result<Box<dyn DistributedAlgorithm>> {
     ensure_no_topology_override(p, "hybrid-2p-1p")?;
     Ok(Box::new(Sgp::new(
@@ -126,10 +131,7 @@ impl DistributedAlgorithm for Sgp {
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
         let sched = self.schedule.at(ctx.k);
-        match ctx.faults {
-            Some(clock) => self.engine.step_faulty(ctx.k, sched, clock),
-            None => self.engine.step(ctx.k, sched),
-        }
+        self.engine.step_exec(ctx.k, sched, ctx.faults, ctx.exec);
         OwnedCommPattern::PushSum {
             schedule: sched.clone(),
             bytes: ctx.msg_bytes,

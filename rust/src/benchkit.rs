@@ -4,18 +4,27 @@
 
 use std::time::{Duration, Instant};
 
+/// Robust statistics of one benchmarked closure.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Benchmark name (slash-separated convention: `group/case/param`).
     pub name: String,
+    /// Timed iterations.
     pub iters: u64,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Median per-iteration time.
     pub median: Duration,
+    /// 95th-percentile per-iteration time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl BenchStats {
+    /// Print the criterion-style report line.
     pub fn report(&self) {
         println!(
             "{:<44} {:>12} {:>12} {:>12}   ({} iters, min {}, max {})",
@@ -30,6 +39,7 @@ impl BenchStats {
     }
 }
 
+/// Human-readable duration (ns/µs/ms/s auto-scaled).
 pub fn fmt(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {
@@ -87,14 +97,17 @@ pub struct JsonReport {
 }
 
 impl JsonReport {
+    /// An empty report.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one benchmark's statistics.
     pub fn push(&mut self, stats: BenchStats) {
         self.entries.push(stats);
     }
 
+    /// Render the flat `{"benches": [...]}` JSON document.
     pub fn to_json(&self) -> String {
         let mut s = String::from("{\n  \"benches\": [\n");
         for (i, b) in self.entries.iter().enumerate() {
@@ -131,6 +144,7 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Print a section header between benchmark groups.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }

@@ -5,9 +5,13 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+/// Parsed command line: subcommand, positionals, `--key value` options and
+/// bare `--flag`s.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// First non-option token.
     pub subcommand: Option<String>,
+    /// Remaining non-option tokens, in order.
     pub positional: Vec<String>,
     opts: HashMap<String, String>,
     flags: Vec<String>,
@@ -41,22 +45,27 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Result<Self> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Was the bare flag `--name` given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Integer option with a default (error names the offending flag).
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -64,6 +73,7 @@ impl Args {
         }
     }
 
+    /// u64 option with a default (error names the offending flag).
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -71,6 +81,7 @@ impl Args {
         }
     }
 
+    /// Float option with a default (error names the offending flag).
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -78,6 +89,7 @@ impl Args {
         }
     }
 
+    /// Required option (error if absent).
     pub fn require(&self, name: &str) -> Result<&str> {
         match self.get(name) {
             Some(v) => Ok(v),

@@ -4,6 +4,7 @@
 //! faithful ring-AllReduce *timing* model; the paper's NCCL/Gloo stack is
 //! below the level the experiments depend on.
 
+use crate::gossip::ExecPolicy;
 use crate::net::LinkModel;
 use crate::rng::Pcg;
 
@@ -38,6 +39,39 @@ pub fn mean_of(vs: &[Vec<f32>]) -> Vec<f32> {
         }
     }
     acc.iter().map(|a| (a / n as f64) as f32).collect()
+}
+
+/// [`mean_of`] under an execution policy: the *coordinates* are
+/// partitioned into contiguous ranges, one scoped worker per range. Every
+/// coordinate still accumulates over the views in the same order as the
+/// sequential loop, so the result is **bit-identical** to [`mean_of`] for
+/// any shard count — the same determinism contract as the gossip engine.
+pub fn mean_of_exec(vs: &[Vec<f32>], exec: ExecPolicy) -> Vec<f32> {
+    let n = vs.len() as f64;
+    let dim = vs[0].len();
+    let shards = exec.shards_for(dim);
+    if shards <= 1 {
+        return mean_of(vs);
+    }
+    let chunk = dim.div_ceil(shards);
+    let mut out = vec![0.0f32; dim];
+    std::thread::scope(|scope| {
+        for (ci, dst) in out.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            scope.spawn(move || {
+                let mut acc = vec![0.0f64; dst.len()];
+                for v in vs {
+                    for (a, b) in acc.iter_mut().zip(&v[lo..lo + dst.len()]) {
+                        *a += *b as f64;
+                    }
+                }
+                for (o, a) in dst.iter_mut().zip(&acc) {
+                    *o = (a / n) as f32;
+                }
+            });
+        }
+    });
+    out
 }
 
 /// Shape of the ring algorithm: `(serial steps, parallel transfers per
@@ -148,6 +182,20 @@ mod tests {
         for v in &vs {
             for (a, b) in v.iter().zip(&expect) {
                 assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mean_bit_identical_to_sequential() {
+        use crate::gossip::ExecPolicy;
+        let mut rng = Pcg::new(4);
+        let vs: Vec<Vec<f32>> = (0..9).map(|_| rng.gaussian_vec(37)).collect();
+        let seq = mean_of(&vs);
+        for shards in [1usize, 2, 7, 64] {
+            let par = mean_of_exec(&vs, ExecPolicy::parallel(shards));
+            for (a, b) in seq.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "shards={shards}");
             }
         }
     }

@@ -7,11 +7,14 @@ use crate::optim::{LrSchedule, OptimKind};
 /// Which fabric the simulated cluster uses (Sec. 6: low- vs high-bandwidth).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fabric {
+    /// 10 Gbps Ethernet (the paper's low-bandwidth rig).
     Ethernet,
+    /// 100 Gbps InfiniBand with GPUDirect RDMA (the high-bandwidth rig).
     Infiniband,
 }
 
 impl Fabric {
+    /// The α–β link model of this fabric.
     pub fn link(&self) -> LinkModel {
         match self {
             Fabric::Ethernet => LinkModel::ethernet_10g(),
@@ -19,6 +22,7 @@ impl Fabric {
         }
     }
 
+    /// Parse a CLI fabric name (`ethernet`/`eth`/`10g`, `infiniband`/`ib`/`100g`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "ethernet" | "eth" | "10g" => Some(Fabric::Ethernet),
@@ -33,18 +37,24 @@ impl Fabric {
 pub struct TrainConfig {
     /// Model preset name (must exist in the artifact manifest).
     pub model: String,
+    /// Number of simulated nodes.
     pub n_nodes: usize,
+    /// Epochs to run (fractional allowed for fast tests).
     pub epochs: f64,
     /// Iterations per epoch. With n nodes the paper halves iterations as n
     /// doubles (fixed total samples); callers encode that here.
     pub steps_per_epoch: u64,
+    /// Local optimizer family.
     pub optim: OptimKind,
+    /// Learning-rate protocol.
     pub lr: LrSchedule,
+    /// Seed for data shards, compute jitter and randomized schedules.
     pub seed: u64,
     /// Data heterogeneity knob (the paper's ζ²).
     pub heterogeneity: f64,
-    /// Simulated fabric + per-node compute profile.
+    /// Simulated fabric.
     pub link: LinkModel,
+    /// Per-node compute-time profile (stragglers included).
     pub compute: ComputeModel,
     /// Evaluate every this many epochs (0 = only at the end).
     pub eval_every_epochs: f64,
@@ -125,10 +135,12 @@ impl TrainConfig {
         }
     }
 
+    /// Total iterations of the run (`epochs × steps_per_epoch`, rounded).
     pub fn total_iters(&self) -> u64 {
         (self.epochs * self.steps_per_epoch as f64).round() as u64
     }
 
+    /// Fractional epoch that iteration `iter` falls in.
     pub fn epoch_of(&self, iter: u64) -> f64 {
         iter as f64 / self.steps_per_epoch as f64
     }

@@ -27,6 +27,7 @@ use crate::algorithms::{self, AlgoParams, DistributedAlgorithm, RoundCtx};
 use crate::config::TrainConfig;
 use crate::data::{Batch, BigramLm, Blobs, DataSource};
 use crate::faults::{FaultClock, FaultPlan};
+use crate::gossip::ExecPolicy;
 use crate::metrics::{EvalRecord, IterRecord, RunResult};
 use crate::net::TimingSim;
 use crate::rng::Pcg;
@@ -54,9 +55,11 @@ pub struct TrainerBuilder<'rt> {
     topology: Option<TopologyKind>,
     custom: Option<Box<dyn DistributedAlgorithm>>,
     faults: Option<FaultPlan>,
+    exec: ExecPolicy,
 }
 
 impl<'rt> TrainerBuilder<'rt> {
+    /// Start building a trainer over the given runtime.
     pub fn new(rt: &'rt Runtime) -> Self {
         Self {
             rt,
@@ -68,6 +71,7 @@ impl<'rt> TrainerBuilder<'rt> {
             topology: None,
             custom: None,
             faults: None,
+            exec: ExecPolicy::Sequential,
         }
     }
 
@@ -124,6 +128,19 @@ impl<'rt> TrainerBuilder<'rt> {
         self
     }
 
+    /// Select the execution engine for the per-round state updates:
+    /// [`ExecPolicy::Sequential`] (the default) or a sharded-parallel
+    /// gossip round ([`ExecPolicy::parallel`]). Any policy produces
+    /// bit-identical results at a fixed seed — including under a fault
+    /// plan — so this is purely a wall-clock knob for large-N runs (see
+    /// ARCHITECTURE.md §Determinism).
+    pub fn engine(mut self, exec: ExecPolicy) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Resolve the configuration into a ready-to-run [`Trainer`]. Fails at
+    /// build time (not mid-run) on unknown names or shape mismatches.
     pub fn build(self) -> Result<Trainer<'rt>> {
         let Some(cfg) = self.cfg else {
             bail!("TrainerBuilder: .config(..) is required");
@@ -201,18 +218,35 @@ impl<'rt> TrainerBuilder<'rt> {
         );
 
         let faults = self.faults.map(FaultClock::new);
-        Ok(Trainer { rt, cfg, algo, data, msg_bytes, dim, faults })
+        Ok(Trainer {
+            rt,
+            cfg,
+            algo,
+            data,
+            msg_bytes,
+            dim,
+            faults,
+            exec: self.exec,
+        })
     }
 }
 
+/// A fully-assembled training run: the runtime bridge, the resolved
+/// strategy object, the data shards and the per-round simulated cluster —
+/// built by [`TrainerBuilder`], driven by [`Trainer::run`].
 pub struct Trainer<'rt> {
+    /// The PJRT runtime the gradients execute on.
     pub rt: &'rt Runtime,
+    /// The run configuration.
     pub cfg: TrainConfig,
+    /// The distributed strategy under training.
     pub algo: Box<dyn DistributedAlgorithm>,
+    /// Per-node synthetic data shards.
     pub data: DataSource,
     msg_bytes: usize,
     dim: usize,
     faults: Option<FaultClock>,
+    exec: ExecPolicy,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -230,6 +264,7 @@ impl<'rt> Trainer<'rt> {
         Ok((loss / n, metric / n))
     }
 
+    /// Execute the full training run and return its recorded series.
     pub fn run(&mut self) -> Result<RunResult> {
         self.run_synchronous()
     }
@@ -243,6 +278,7 @@ impl<'rt> Trainer<'rt> {
         let val = self.data.val_batches(cfg.val_batches);
 
         let mut timing = TimingSim::new(n, cfg.link.clone());
+        timing.set_shards(self.exec.shards_for(n));
         let mut rng = Pcg::new(cfg.seed ^ 0x7131);
         let mut result = RunResult {
             label: format!("{}_n{}", self.algo.name().replace([' ', '/'], "-"), n),
@@ -297,6 +333,7 @@ impl<'rt> Trainer<'rt> {
                 msg_bytes: self.msg_bytes,
                 link: &cfg.link,
                 faults: self.faults.as_ref(),
+                exec: self.exec,
             };
             let pattern = self.algo.communicate(&ctx);
             let sim_now = timing.advance_with_faults(
@@ -405,7 +442,9 @@ impl<'rt> Trainer<'rt> {
             (0.0, 0.0, 0.0)
         };
         let avg_params = match &survivor_views {
-            Some(views) if !views.is_empty() => crate::collectives::mean_of(views),
+            Some(views) if !views.is_empty() => {
+                crate::collectives::mean_of_exec(views, self.exec)
+            }
             _ => self.algo.average(),
         };
         let (val_loss, val_metric) = self.evaluate(&avg_params, val)?;

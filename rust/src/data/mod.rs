@@ -20,21 +20,43 @@ use crate::rng::Pcg;
 /// One batch, matching the artifact input layouts from `manifest.json`.
 #[derive(Clone, Debug)]
 pub enum Batch {
-    /// x: f32[b, in_dim] row-major; y: i32[b].
-    Classif { x: Vec<f32>, y: Vec<i32>, b: usize, in_dim: usize },
-    /// tokens: i32[b, seq+1] row-major (inputs = [:, :-1], targets = [:, 1:]).
-    Tokens { t: Vec<i32>, b: usize, seq: usize },
+    /// Classification batch: x is f32\[b, in_dim\] row-major; y is i32\[b\].
+    Classif {
+        /// Features, row-major `[b, in_dim]`.
+        x: Vec<f32>,
+        /// Class labels, `[b]`.
+        y: Vec<i32>,
+        /// Batch size.
+        b: usize,
+        /// Feature dimension.
+        in_dim: usize,
+    },
+    /// LM batch: tokens are i32\[b, seq+1\] row-major (inputs = \[:, :-1\],
+    /// targets = \[:, 1:\]).
+    Tokens {
+        /// Token ids, row-major `[b, seq + 1]`.
+        t: Vec<i32>,
+        /// Batch size.
+        b: usize,
+        /// Sequence length (inputs per row).
+        seq: usize,
+    },
 }
 
 /// Gaussian-blobs classification source.
 #[derive(Clone, Debug)]
 pub struct Blobs {
+    /// Feature dimension.
     pub in_dim: usize,
+    /// Number of classes in the global mixture.
     pub classes: usize,
+    /// Samples per batch.
     pub batch: usize,
+    /// Number of node shards.
     pub n_nodes: usize,
     /// 0 = iid shards, 1 = each node sees (almost) only its own classes.
     pub heterogeneity: f64,
+    /// Gaussian noise scale around the class means.
     pub noise: f32,
     seed: u64,
     /// Class means, fixed by the global seed.
@@ -42,6 +64,7 @@ pub struct Blobs {
 }
 
 impl Blobs {
+    /// A blobs source with class means fixed by `seed`.
     pub fn new(
         in_dim: usize,
         classes: usize,
@@ -123,10 +146,15 @@ impl Blobs {
 /// Zipf-weighted Markov bigram language source.
 #[derive(Clone, Debug)]
 pub struct BigramLm {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequence length (tokens per row, excluding the shifted target).
     pub seq: usize,
+    /// Rows per batch.
     pub batch: usize,
+    /// Number of node shards.
     pub n_nodes: usize,
+    /// 0 = one shared chain, 1 = every node speaks its own dialect.
     pub heterogeneity: f64,
     seed: u64,
     /// Global cumulative transition rows [vocab × vocab].
@@ -134,6 +162,7 @@ pub struct BigramLm {
 }
 
 impl BigramLm {
+    /// A bigram source whose chain structure is fixed by `seed`.
     pub fn new(
         vocab: usize,
         seq: usize,
@@ -193,6 +222,7 @@ impl BigramLm {
         Batch::Tokens { t, b: self.batch, seq: self.seq }
     }
 
+    /// Training batch for `node` at `step` (deterministic).
     pub fn train_batch(&self, node: usize, step: u64) -> Batch {
         let mut rng = Pcg::with_stream(
             self.seed ^ step.wrapping_mul(0x9e37_79b9_7f4a_7c15),
@@ -202,6 +232,7 @@ impl BigramLm {
         self.gen_batch(shift, &mut rng)
     }
 
+    /// Validation batches from the global (dialect-free) chain.
     pub fn val_batches(&self, count: usize) -> Vec<Batch> {
         (0..count)
             .map(|i| {
@@ -216,11 +247,14 @@ impl BigramLm {
 /// Unified source used by the trainer.
 #[derive(Clone, Debug)]
 pub enum DataSource {
+    /// Gaussian-blobs classification (ImageNet analogue).
     Blobs(Blobs),
+    /// Bigram LM (NMT analogue).
     Lm(BigramLm),
 }
 
 impl DataSource {
+    /// Training batch for `node` at `step` (deterministic).
     pub fn train_batch(&self, node: usize, step: u64) -> Batch {
         match self {
             DataSource::Blobs(b) => b.train_batch(node, step),
@@ -228,6 +262,7 @@ impl DataSource {
         }
     }
 
+    /// Shared validation batches (drawn from the global distribution).
     pub fn val_batches(&self, count: usize) -> Vec<Batch> {
         match self {
             DataSource::Blobs(b) => b.val_batches(count),

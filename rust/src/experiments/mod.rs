@@ -11,12 +11,14 @@ use crate::config::TrainConfig;
 use crate::coordinator::TrainerBuilder;
 use crate::faults::harness::{run_quadratic, FaultRunConfig};
 use crate::faults::{Crash, FaultPlan};
+use crate::gossip::{ExecPolicy, PushSumEngine};
 use crate::metrics::{self, print_table, RunResult};
 use crate::net::{self, ComputeModel, LinkModel, OwnedCommPattern};
 use crate::optim::LrSchedule;
 use crate::runtime::Runtime;
 use crate::topology::{spectral, Schedule, TopologyKind};
 
+/// `results/` output directory (created on first use).
 pub fn results_dir() -> PathBuf {
     let d = PathBuf::from("results");
     let _ = std::fs::create_dir_all(&d);
@@ -78,6 +80,8 @@ fn pct(x: f64) -> String {
 // ===========================================================================
 // Figure 1 (a–d) + Table 1: scaling & convergence, AR vs SGP vs D-PSGD
 // ===========================================================================
+/// Fig. 1a–d + Table 1: accuracy & per-iteration time scaling, AR vs
+/// D-PSGD vs SGP over node counts.
 pub fn fig1_table1(rt: &Runtime, fast: bool) -> Result<()> {
     let model = "mlp_small";
     let ns: &[usize] = if fast { &[4, 8] } else { &[4, 8, 16, 32] };
@@ -175,6 +179,7 @@ pub fn fig1_timing_csv() -> Result<()> {
 // ===========================================================================
 // Table 2: mean ± max-abs-dev over 5 seeds (InfiniBand)
 // ===========================================================================
+/// Table 2: mean ± max-abs-deviation over seeds on the InfiniBand fabric.
 pub fn table2(rt: &Runtime, fast: bool) -> Result<()> {
     let model = "mlp_small";
     let seeds: &[u64] = if fast { &[1, 2, 3] } else { &[1, 2, 3, 4, 5] };
@@ -215,6 +220,7 @@ pub fn table2(rt: &Runtime, fast: bool) -> Result<()> {
 // ===========================================================================
 // Figure 2: parameter deviations, sparse vs dense topology (16 nodes)
 // ===========================================================================
+/// Fig. 2: consensus distance over training, sparse vs dense topology.
 pub fn fig2(rt: &Runtime, fast: bool) -> Result<()> {
     let model = "mlp_small";
     let n = 16;
@@ -266,6 +272,7 @@ pub fn fig2(rt: &Runtime, fast: bool) -> Result<()> {
 // ===========================================================================
 // Table 3: communication topology vs speed/accuracy (hybrids)
 // ===========================================================================
+/// Table 3: topology/hybrid speed–accuracy tradeoff.
 pub fn table3(rt: &Runtime, fast: bool) -> Result<()> {
     let model = "mlp_small";
     let ns: &[usize] = if fast { &[16] } else { &[16, 32] };
@@ -300,6 +307,7 @@ pub fn table3(rt: &Runtime, fast: bool) -> Result<()> {
 // ===========================================================================
 // Table 4: overlap + async comparison (16 nodes)
 // ===========================================================================
+/// Table 4: overlap/async methods incl. the biased ablation and DaSGD.
 pub fn table4(rt: &Runtime, fast: bool) -> Result<()> {
     let model = "mlp_small";
     let n = 16;
@@ -340,6 +348,7 @@ pub fn table4(rt: &Runtime, fast: bool) -> Result<()> {
 // ===========================================================================
 // Table 5: fixed runtime budget (32 nodes; 90 vs 270 epochs)
 // ===========================================================================
+/// Table 5: fixed-runtime budget comparison (90 vs 270 epochs).
 pub fn table5(rt: &Runtime, fast: bool) -> Result<()> {
     let model = "mlp_small";
     let n = 32;
@@ -396,6 +405,7 @@ pub fn table5(rt: &Runtime, fast: bool) -> Result<()> {
 // ===========================================================================
 // Figure 3: NMT analogue — Adam-SGP vs AllReduce-Adam, small & large batch
 // ===========================================================================
+/// Fig. 3: NMT analogue, Adam-SGP vs AllReduce-Adam.
 pub fn fig3(rt: &Runtime, fast: bool) -> Result<()> {
     let n = 8;
     let mut rows = Vec::new();
@@ -442,6 +452,7 @@ pub fn fig3(rt: &Runtime, fast: bool) -> Result<()> {
 // ===========================================================================
 // Figure D.3: per-node error spread (4 and 32 nodes)
 // ===========================================================================
+/// Fig. D.3: per-node validation-metric spread over training.
 pub fn figd3(rt: &Runtime, fast: bool) -> Result<()> {
     let model = "mlp_small";
     let mut rows = Vec::new();
@@ -480,6 +491,7 @@ pub fn figd3(rt: &Runtime, fast: bool) -> Result<()> {
 // ===========================================================================
 // Figure D.4: throughput scaling & efficiency
 // ===========================================================================
+/// Fig. D.4: simulated throughput and scaling efficiency (timing-only).
 pub fn figd4() -> Result<()> {
     let msg = 100 << 20;
     let compute = ComputeModel::resnet50_dgx1();
@@ -551,14 +563,22 @@ pub struct FaultSweep {
     /// loss-recovery, ON by default (`--no-rescue` surfaces the naive-loss
     /// instability documented in DESIGN.md §Faults).
     pub rescue: bool,
+    /// Number of simulated nodes.
     pub n: usize,
+    /// Rounds per run.
     pub iters: u64,
+    /// Seed of the deterministic scenario replay.
     pub seed: u64,
     /// Registry names to compare.
     pub algos: Vec<String>,
+    /// Execution policy for the per-round state updates (`--engine` /
+    /// `--shards`); bit-identical across policies, so it only changes the
+    /// sweep's wall-clock.
+    pub exec: ExecPolicy,
 }
 
 impl FaultSweep {
+    /// The default sweep shape (`fast` = the CI smoke configuration).
     pub fn new(fast: bool) -> Self {
         Self {
             drops: if fast {
@@ -576,6 +596,7 @@ impl FaultSweep {
             } else {
                 vec!["ar-sgd".into(), "dpsgd".into(), "sgp".into(), "osgp".into()]
             },
+            exec: ExecPolicy::Sequential,
         }
     }
 }
@@ -589,6 +610,7 @@ pub fn faults_sweep(sweep: &FaultSweep) -> Result<()> {
         n: sweep.n,
         iters: sweep.iters,
         seed: sweep.seed,
+        exec: sweep.exec,
         ..Default::default()
     };
     let mut rows = Vec::new();
@@ -660,8 +682,127 @@ pub fn faults_sweep(sweep: &FaultSweep) -> Result<()> {
 }
 
 // ===========================================================================
+// Execution-engine scaling sweep: sequential vs sharded-parallel gossip
+// ===========================================================================
+
+/// What `repro engine-sweep` measures: wall-clock of the gossip round loop
+/// at large N — the regime the paper's scaling claim lives in — run once
+/// sequentially and once per shard count, with a built-in bit-identity
+/// check between the two engines. Fully offline (pure gossip, no HLO
+/// artifacts).
+#[derive(Clone, Debug)]
+pub struct EngineSweep {
+    /// Node counts to sweep; the default tops out at the large-N regime
+    /// (1024 nodes) the sequential loop was previously capped below.
+    pub ns: Vec<usize>,
+    /// Parameter dimension per node.
+    pub dim: usize,
+    /// Gossip rounds per measurement.
+    pub steps: u64,
+    /// Shard counts to compare against the sequential baseline.
+    pub shards: Vec<usize>,
+    /// Seed of the node initialization.
+    pub seed: u64,
+}
+
+impl EngineSweep {
+    /// Default sweep shape (`fast` = the CI smoke configuration).
+    pub fn new(fast: bool) -> Self {
+        Self {
+            ns: if fast { vec![64, 256] } else { vec![64, 256, 1024] },
+            dim: 1024,
+            steps: if fast { 20 } else { 50 },
+            shards: vec![2, 4, 8],
+            seed: 1,
+        }
+    }
+}
+
+/// Run the engine scaling sweep: per `(n, shards)`, wall-clock of the
+/// parallel round loop vs the sequential baseline, asserting the two
+/// engines end bit-identical (the determinism contract, exercised at
+/// sweep scale). Writes `results/engine_sweep.csv`.
+pub fn engine_sweep(cfg: &EngineSweep) -> Result<()> {
+    use crate::rng::Pcg;
+    let mut rows = Vec::new();
+    let mut divergences: Vec<(usize, usize)> = Vec::new();
+    let mut csv = String::from("n,dim,steps,engine,shards,wall_s,speedup,identical\n");
+    for &n in &cfg.ns {
+        let mut rng = Pcg::new(cfg.seed);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(cfg.dim)).collect();
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        let run = |exec: ExecPolicy| -> (f64, PushSumEngine) {
+            let mut eng = PushSumEngine::new(init.clone(), 1, false);
+            let t0 = std::time::Instant::now();
+            for k in 0..cfg.steps {
+                eng.step_exec(k, &sched, None, exec);
+            }
+            eng.drain();
+            (t0.elapsed().as_secs_f64(), eng)
+        };
+        let (base_s, base_eng) = run(ExecPolicy::Sequential);
+        csv.push_str(&format!(
+            "{n},{},{},sequential,1,{base_s:.6},1.000,-\n",
+            cfg.dim, cfg.steps
+        ));
+        rows.push(vec![
+            n.to_string(),
+            "sequential".into(),
+            format!("{:.1}ms", base_s * 1e3),
+            "1.00×".into(),
+            "-".into(),
+        ]);
+        for &s in &cfg.shards {
+            if s <= 1 {
+                continue;
+            }
+            let exec = ExecPolicy::parallel(s);
+            let (wall, eng) = run(exec);
+            let identical = base_eng
+                .states
+                .iter()
+                .zip(&eng.states)
+                .all(|(a, b)| a.x == b.x && a.w.to_bits() == b.w.to_bits());
+            if !identical {
+                divergences.push((n, s));
+            }
+            let speedup = base_s / wall.max(1e-12);
+            csv.push_str(&format!(
+                "{n},{},{},parallel,{s},{wall:.6},{speedup:.3},{identical}\n",
+                cfg.dim, cfg.steps
+            ));
+            rows.push(vec![
+                n.to_string(),
+                exec.label(),
+                format!("{:.1}ms", wall * 1e3),
+                format!("{speedup:.2}×"),
+                if identical { "yes".into() } else { "NO".into() },
+            ]);
+        }
+    }
+    // Emit the artifact and the table even when a divergence was found —
+    // the "bit-identical" column IS the diagnostic — then fail the sweep.
+    std::fs::write(results_dir().join("engine_sweep.csv"), csv)?;
+    print_table(
+        &format!(
+            "Execution engine — sequential vs sharded gossip, dim = {}, {} steps",
+            cfg.dim, cfg.steps
+        ),
+        &["nodes", "engine", "wall", "speedup", "bit-identical"],
+        &rows,
+    );
+    anyhow::ensure!(
+        divergences.is_empty(),
+        "parallel engine diverged from sequential at {divergences:?} \
+         (n, shards) — determinism contract violated"
+    );
+    Ok(())
+}
+
+// ===========================================================================
 // Appendix A: decentralized averaging errors (λ₂ of mixing products)
 // ===========================================================================
+/// Appendix A: λ₂ of 5-step mixing products per peer-selection scheme.
 pub fn appendix_a() -> Result<()> {
     let n = 32;
     let window = 5; // ⌊log2(31)⌋ = 4; paper quotes 5 iterations for n=32
@@ -706,6 +847,7 @@ pub fn appendix_a() -> Result<()> {
 // ===========================================================================
 // Pure averaging demo over the PJRT dense-gossip artifact
 // ===========================================================================
+/// PushSum averaging demo through the Pallas dense-gossip HLO artifact.
 pub fn averaging(rt: &Runtime, n: usize, rounds: u64) -> Result<()> {
     use crate::rng::Pcg;
     let meta = rt.manifest.artifact(&format!("gossip_dense_n{n}"))?;

@@ -13,6 +13,7 @@
 use anyhow::Result;
 
 use crate::algorithms::{self, AlgoParams, RoundCtx};
+use crate::gossip::ExecPolicy;
 use crate::net::{ComputeModel, LinkModel, TimingSim};
 use crate::optim::OptimKind;
 use crate::rng::Pcg;
@@ -22,16 +23,26 @@ use super::{FaultClock, FaultPlan};
 /// Shape of one offline fault run.
 #[derive(Clone, Debug)]
 pub struct FaultRunConfig {
+    /// Number of simulated nodes.
     pub n: usize,
+    /// Rounds to run.
     pub iters: u64,
+    /// Dimension of the per-node quadratic.
     pub dim: usize,
+    /// Step size.
     pub lr: f32,
     /// Simulated message size (paper-scale by default so the timing story
     /// is visible).
     pub msg_bytes: usize,
+    /// The simulated fabric.
     pub link: LinkModel,
+    /// The per-node compute-time model.
     pub compute: ComputeModel,
+    /// Seed for centers, compute jitter and event ordering.
     pub seed: u64,
+    /// Execution policy for the per-round state updates (bit-identical
+    /// across policies — the sweep's numbers do not depend on it).
+    pub exec: ExecPolicy,
 }
 
 impl Default for FaultRunConfig {
@@ -45,6 +56,7 @@ impl Default for FaultRunConfig {
             link: LinkModel::ethernet_10g(),
             compute: ComputeModel::resnet50_dgx1(),
             seed: 1,
+            exec: ExecPolicy::Sequential,
         }
     }
 }
@@ -52,6 +64,7 @@ impl Default for FaultRunConfig {
 /// Outcome of one offline fault run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FaultRunStats {
+    /// Display name of the algorithm that ran.
     pub algo: String,
     /// ‖x̄ − x*‖ over the surviving members (distance of the consensus
     /// model from the optimum of the full objective).
@@ -84,6 +97,7 @@ pub fn run_quadratic(
     let mut algo = algorithms::build(algo_name, &params)?;
     let clock = FaultClock::new(plan.clone());
     let mut timing = TimingSim::new(cfg.n, cfg.link.clone());
+    timing.set_shards(cfg.exec.shards_for(cfg.n));
     let mut comp_rng = Pcg::new(cfg.seed ^ 0xfa17);
     let mut view = vec![0.0f32; cfg.dim];
 
@@ -102,7 +116,8 @@ pub fn run_quadratic(
         }
         let comp = cfg.compute.sample_all(cfg.n, &mut comp_rng);
         let ctx = RoundCtx::new(k, &comp, cfg.msg_bytes, &cfg.link)
-            .with_faults(&clock);
+            .with_faults(&clock)
+            .with_exec(cfg.exec);
         let pattern = algo.communicate(&ctx);
         timing.advance_with_faults(&pattern.borrowed(), &comp, Some(&clock));
     }

@@ -38,9 +38,13 @@ use crate::rng::Pcg;
 /// multiplicatively when they overlap).
 #[derive(Clone, Debug)]
 pub struct Degradation {
+    /// First iteration the window covers.
     pub from: u64,
+    /// First iteration after the window (exclusive end).
     pub until: u64,
+    /// Latency multiplier (≥ 1 degrades).
     pub alpha_mult: f64,
+    /// Bandwidth divisor (≥ 1 degrades).
     pub beta_div: f64,
 }
 
@@ -48,8 +52,11 @@ pub struct Degradation {
 /// frozen checkpoint at `rejoin`. `rejoin: None` is a permanent leave.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Crash {
+    /// The crashing node.
     pub node: usize,
+    /// Iteration the node goes down.
     pub at: u64,
+    /// Iteration it rejoins from its checkpoint (`None` = permanent leave).
     pub rejoin: Option<u64>,
 }
 
@@ -58,22 +65,56 @@ pub struct Crash {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MembershipEvent {
     /// Node went down at `at` and is expected back at `rejoin`.
-    Crash { node: usize, at: u64, rejoin: u64 },
+    Crash {
+        /// The crashing node.
+        node: usize,
+        /// Iteration of the crash.
+        at: u64,
+        /// Iteration the node is expected back.
+        rejoin: u64,
+    },
     /// Node came back from its checkpoint at `at`.
-    Rejoin { node: usize, at: u64 },
+    Rejoin {
+        /// The rejoining node.
+        node: usize,
+        /// Iteration of the rejoin.
+        at: u64,
+    },
     /// Node left permanently at `at`.
-    Leave { node: usize, at: u64 },
+    Leave {
+        /// The leaving node.
+        node: usize,
+        /// Iteration of the departure.
+        at: u64,
+    },
 }
 
 /// Declarative fault scenario. `lossless()` is the identity plan — running
 /// any algorithm under it is bit-identical to running without faults.
+///
+/// ```
+/// use sgp::faults::{FaultClock, FaultPlan};
+///
+/// let plan = FaultPlan::lossless()
+///     .with_drop(0.10)              // 10% per-link message loss
+///     .with_crash(3, 40, Some(80))  // node 3 down for iterations 40..80
+///     .with_rescue(true)            // senders re-absorb undelivered mass
+///     .with_seed(7);
+/// let clock = FaultClock::new(plan);
+/// // Replay is deterministic: the same query always answers the same.
+/// assert_eq!(clock.drops(0, 1, 12), clock.drops(0, 1, 12));
+/// assert!(clock.is_down(3, 50) && !clock.is_down(3, 80));
+/// assert_eq!(clock.alive(4, 50), vec![0, 1, 2]);
+/// ```
 #[derive(Clone, Debug)]
 pub struct FaultPlan {
     /// Baseline per-link, per-iteration message-drop probability.
     pub drop: f64,
     /// Per-link overrides `(from, to, p)` taking precedence over `drop`.
     pub link_drops: Vec<(usize, usize, f64)>,
+    /// Transient link-degradation windows (compose multiplicatively).
     pub degradations: Vec<Degradation>,
+    /// Node crash / rejoin / permanent-leave events.
     pub crashes: Vec<Crash>,
     /// Rescue mode: a sender detects its undelivered message and re-absorbs
     /// the `(x, w)` mass locally instead of losing it — push-sum stays
@@ -110,12 +151,14 @@ impl FaultPlan {
         }
     }
 
+    /// Set the baseline per-link drop probability (must lie in [0, 1]).
     pub fn with_drop(mut self, p: f64) -> Self {
         assert!((0.0..=1.0).contains(&p), "drop probability {p} out of [0,1]");
         self.drop = p;
         self
     }
 
+    /// Override the drop probability of the directed link `from → to`.
     pub fn with_link_drop(mut self, from: usize, to: usize, p: f64) -> Self {
         assert!(
             (0.0..=1.0).contains(&p),
@@ -125,11 +168,14 @@ impl FaultPlan {
         self
     }
 
+    /// Add a transient link-degradation window.
     pub fn with_degradation(mut self, d: Degradation) -> Self {
         self.degradations.push(d);
         self
     }
 
+    /// Crash `node` at iteration `at`, optionally rejoining at `rejoin`
+    /// (`None` = permanent leave).
     pub fn with_crash(mut self, node: usize, at: u64, rejoin: Option<u64>) -> Self {
         if let Some(r) = rejoin {
             assert!(r > at, "rejoin {r} must come after crash {at}");
@@ -138,11 +184,13 @@ impl FaultPlan {
         self
     }
 
+    /// Toggle rescue mode (senders re-absorb undelivered push-sum mass).
     pub fn with_rescue(mut self, rescue: bool) -> Self {
         self.rescue = rescue;
         self
     }
 
+    /// Set the seed of the deterministic replay.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -163,10 +211,12 @@ impl FaultPlan {
 /// fault history and the same seed reproduces it bit-for-bit.
 #[derive(Clone, Debug)]
 pub struct FaultClock {
+    /// The scenario being replayed.
     pub plan: FaultPlan,
 }
 
 impl FaultClock {
+    /// A clock replaying the given plan.
     pub fn new(plan: FaultPlan) -> Self {
         Self { plan }
     }

@@ -1,0 +1,152 @@
+//! Execution policy for the sharded gossip round: how many worker shards
+//! the per-node state is partitioned across when a round executes.
+//!
+//! The parallel engine exists to serve the paper's own scaling argument —
+//! SGP's interesting regimes are dozens-to-thousands of workers, and a
+//! serial per-node loop caps simulated N long before the algorithm does.
+//! The policy is deliberately *only* a degree-of-parallelism knob: the
+//! round semantics (what every node computes, in which order messages are
+//! delivered and aggregated) are fixed by the engine's sharded round
+//! protocol (compute+send → ordered merge → aggregate),
+//! so any policy produces **bit-identical** results at a fixed seed (see
+//! ARCHITECTURE.md §Determinism and
+//! [`crate::gossip::PushSumEngine::step_exec`]).
+
+/// Degree of parallelism for one engine round.
+///
+/// `Sequential` is the classic single-thread loop; `Parallel { shards }`
+/// partitions the nodes into `shards` contiguous ranges executed on a
+/// fixed pool of scoped worker threads, with a deterministic ordered merge
+/// between the compute and aggregate phases. Both produce identical bits:
+///
+/// ```
+/// use sgp::gossip::{ExecPolicy, PushSumEngine};
+/// use sgp::topology::{Schedule, TopologyKind};
+///
+/// let init: Vec<Vec<f32>> = (0..16).map(|i| vec![i as f32; 8]).collect();
+/// let sched = Schedule::new(TopologyKind::OnePeerExp, 16);
+/// let mut seq = PushSumEngine::new(init.clone(), 1, false);
+/// let mut par = PushSumEngine::new(init, 1, false);
+/// for k in 0..12 {
+///     seq.step_exec(k, &sched, None, ExecPolicy::Sequential);
+///     par.step_exec(k, &sched, None, ExecPolicy::parallel(4));
+/// }
+/// for (a, b) in seq.states.iter().zip(&par.states) {
+///     assert_eq!(a.x, b.x);
+///     assert_eq!(a.w, b.w);
+/// }
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// One shard, executed inline on the calling thread (the default).
+    #[default]
+    Sequential,
+    /// Partition state across `shards` contiguous node ranges, one scoped
+    /// worker thread per shard. `shards ≤ 1` degenerates to sequential.
+    ///
+    /// Workers are scoped threads spawned per round (borrow-safe, no
+    /// cross-round state), so each round pays ~2·shards spawns; pick a
+    /// shard count whose per-shard work (≈ `n·dim / shards` elements)
+    /// dwarfs that cost — `repro engine-sweep` measures exactly this
+    /// tradeoff, and small-N/small-dim configurations are often fastest
+    /// sequential.
+    Parallel {
+        /// Number of state shards (clamped to ≥ 1 and to the node count).
+        shards: usize,
+    },
+}
+
+impl ExecPolicy {
+    /// A parallel policy with `shards` workers (0 and 1 mean sequential).
+    pub fn parallel(shards: usize) -> Self {
+        if shards <= 1 {
+            Self::Sequential
+        } else {
+            Self::Parallel { shards }
+        }
+    }
+
+    /// A parallel policy sized to the machine: one shard per available
+    /// hardware thread (sequential when parallelism cannot be queried).
+    pub fn auto() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1);
+        Self::parallel(threads)
+    }
+
+    /// The configured shard count (1 for [`ExecPolicy::Sequential`]).
+    pub fn shards(&self) -> usize {
+        match self {
+            Self::Sequential => 1,
+            Self::Parallel { shards } => (*shards).max(1),
+        }
+    }
+
+    /// Shard count actually used for `n` nodes: never more shards than
+    /// nodes, never fewer than one.
+    pub fn shards_for(&self, n: usize) -> usize {
+        self.shards().min(n.max(1))
+    }
+
+    /// Parse a CLI engine name: `sequential`/`seq` or `parallel`/`par`.
+    /// `shards = 0` asks for the machine-sized default in parallel mode.
+    pub fn parse(engine: &str, shards: usize) -> Option<Self> {
+        match engine {
+            "sequential" | "seq" => Some(Self::Sequential),
+            "parallel" | "par" => Some(if shards == 0 {
+                Self::auto()
+            } else {
+                Self::parallel(shards)
+            }),
+            _ => None,
+        }
+    }
+
+    /// Short human label (`"sequential"` or `"parallel×K"`).
+    pub fn label(&self) -> String {
+        match self {
+            Self::Sequential => "sequential".to_string(),
+            Self::Parallel { shards } => format!("parallel×{shards}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_clamps_to_sequential() {
+        assert_eq!(ExecPolicy::parallel(0), ExecPolicy::Sequential);
+        assert_eq!(ExecPolicy::parallel(1), ExecPolicy::Sequential);
+        assert_eq!(
+            ExecPolicy::parallel(4),
+            ExecPolicy::Parallel { shards: 4 }
+        );
+    }
+
+    #[test]
+    fn shards_for_never_exceeds_nodes() {
+        let p = ExecPolicy::parallel(8);
+        assert_eq!(p.shards_for(3), 3);
+        assert_eq!(p.shards_for(100), 8);
+        assert_eq!(ExecPolicy::Sequential.shards_for(100), 1);
+        assert_eq!(p.shards_for(0), 1);
+    }
+
+    #[test]
+    fn parse_cli_names() {
+        assert_eq!(
+            ExecPolicy::parse("sequential", 0),
+            Some(ExecPolicy::Sequential)
+        );
+        assert_eq!(
+            ExecPolicy::parse("parallel", 7),
+            Some(ExecPolicy::Parallel { shards: 7 })
+        );
+        assert!(ExecPolicy::parse("parallel", 0).is_some());
+        assert_eq!(ExecPolicy::parse("nope", 2), None);
+        assert_eq!(ExecPolicy::parallel(3).label(), "parallel×3");
+    }
+}

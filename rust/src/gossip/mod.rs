@@ -10,10 +10,35 @@
 //! without accounting for the bias").
 //!
 //! The engine is the in-process substrate for n logical nodes: messages are
-//! moved through per-destination delivery queues, which both implements the
-//! semantics exactly and lets tests assert **mass conservation** — the
-//! column-stochasticity invariant that Σᵢ xᵢ plus all in-flight mass is
-//! constant under gossip.
+//! moved through per-destination delivery queues (mailboxes), which both
+//! implements the semantics exactly and lets tests assert **mass
+//! conservation** — the column-stochasticity invariant that Σᵢ xᵢ plus all
+//! in-flight mass is constant under gossip.
+//!
+//! # The sharded round and the determinism contract
+//!
+//! Every round runs two parallel phases bridged by a deterministic merge:
+//!
+//! 1. **compute + send** — each node, reading *only its own state*,
+//!    pre-weights its `(x, w)`, emits messages into a per-shard outbox,
+//!    and scales its own state by the self-loop weight;
+//! 2. **ordered merge** — outboxes are appended into the per-destination
+//!    mailboxes in ascending sender order (and fault-ledger contributions
+//!    are applied in the same order);
+//! 3. **aggregate** — each node drains the due messages from *its own*
+//!    mailbox into its state.
+//!
+//! Phases 1 and 3 touch disjoint per-node state, so they shard across a
+//! worker pool ([`ExecPolicy::Parallel`]); phase 2 is a cheap,
+//! deterministic pointer merge on the coordinating thread. Because the
+//! merge reproduces exactly the message ordering of the sequential loop,
+//! **any shard count produces bit-identical state** at a fixed seed —
+//! including under a [`FaultClock`] replay. The contract is locked in by
+//! `rust/tests/engine_equivalence.rs` and documented in ARCHITECTURE.md.
+
+pub mod exec;
+
+pub use exec::ExecPolicy;
 
 use crate::faults::FaultClock;
 use crate::topology::Schedule;
@@ -21,10 +46,18 @@ use crate::topology::Schedule;
 /// One in-flight push-sum message (already pre-weighted by the sender).
 #[derive(Clone, Debug)]
 pub struct Message {
+    /// Sending node (global index).
     pub from: usize,
+    /// Destination node (global index) — the mailbox this message is
+    /// delivered into during the ordered merge.
+    pub to: usize,
+    /// Iteration the message was sent at.
     pub sent_iter: u64,
+    /// Iteration the message becomes visible to the destination.
     pub deliver_iter: u64,
+    /// Pre-weighted numerator share.
     pub x: Vec<f32>,
+    /// Pre-weighted push-sum-weight share.
     pub w: f64,
 }
 
@@ -38,6 +71,7 @@ pub struct NodeState {
 }
 
 impl NodeState {
+    /// A fresh node state with weight 1 around the given numerator.
     pub fn new(x: Vec<f32>) -> Self {
         Self { x, w: 1.0 }
     }
@@ -57,23 +91,258 @@ impl NodeState {
     }
 }
 
+/// Per-shard scratch space: the scale buffer and the recycled payload
+/// pool. One per shard so workers never contend (perf: sending pops a
+/// buffer instead of allocating dim-sized fresh-page Vecs per message —
+/// see EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+struct ShardScratch {
+    scale_buf: Vec<f32>,
+    pool: Vec<Vec<f32>>,
+}
+
+impl ShardScratch {
+    fn new(dim: usize) -> Self {
+        Self { scale_buf: vec![0.0; dim], pool: Vec::new() }
+    }
+}
+
+/// Pop a recycled payload buffer or allocate a fresh one.
+fn take_buf(pool: &mut Vec<Vec<f32>>, dim: usize) -> Vec<f32> {
+    pool.pop().unwrap_or_else(|| vec![0.0; dim])
+}
+
+/// A pooled payload holding `src` scaled by `wf` — the pre-weighted share
+/// a push-sum message carries. One definition for every send/drop site so
+/// the scaling arithmetic (and with it the bit-identity contract) cannot
+/// drift between code paths.
+fn scaled_payload(pool: &mut Vec<Vec<f32>>, dim: usize, src: &[f32], wf: f32) -> Vec<f32> {
+    let mut payload = take_buf(pool, dim);
+    for (p, v) in payload.iter_mut().zip(src) {
+        *p = v * wf;
+    }
+    payload
+}
+
+/// Phase-1 output of one shard, awaiting the ordered merge: outgoing
+/// messages in sender order, materialized dropped shares (fault mode,
+/// rescue off) in sender order, and the shard's rescue counter. The drop
+/// count is `dropped.len()` — not duplicated here, so it cannot
+/// desynchronize from the materialized shares.
+#[derive(Debug, Default)]
+struct ShardOut {
+    sent: Vec<Message>,
+    dropped: Vec<Message>,
+    rescue_count: u64,
+}
+
+/// Everything a shard worker needs to know about the round (shared,
+/// read-only). `faults` carries the clock plus the sorted survivor set.
+#[derive(Clone, Copy)]
+struct StepCtx<'a> {
+    k: u64,
+    deliver_at: u64,
+    dim: usize,
+    schedule: &'a Schedule,
+    faults: Option<(&'a FaultClock, &'a [usize])>,
+}
+
+/// Phase 1 for the contiguous node range starting at global index `base`:
+/// pre-weight, emit outgoing messages (and fault-ledger shares) into the
+/// shard outbox, scale the node's own state by its self-loop weight. Reads
+/// and writes only this shard's states — safe to run on every shard
+/// concurrently.
+fn compute_shard(
+    base: usize,
+    states: &mut [NodeState],
+    scratch: &mut ShardScratch,
+    ctx: StepCtx,
+    out: &mut ShardOut,
+) {
+    let k = ctx.k;
+    match ctx.faults {
+        None => {
+            for (off, st) in states.iter_mut().enumerate() {
+                let i = base + off;
+                let peers = ctx.schedule.out_peers(i, k);
+                let w_mix = 1.0 / (1.0 + peers.len() as f64);
+                let wf = w_mix as f32;
+                let msg_w = st.w * w_mix;
+                if peers.len() == 1 {
+                    // Dominant (1-peer) case: fused read-scale-write, no
+                    // intermediate buffer.
+                    let payload = scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
+                    out.sent.push(Message {
+                        from: i,
+                        to: peers[0],
+                        sent_iter: k,
+                        deliver_iter: ctx.deliver_at,
+                        x: payload,
+                        w: msg_w,
+                    });
+                } else if !peers.is_empty() {
+                    for (b, v) in scratch.scale_buf.iter_mut().zip(&st.x) {
+                        *b = v * wf;
+                    }
+                    for &j in &peers {
+                        let mut payload = take_buf(&mut scratch.pool, ctx.dim);
+                        payload.copy_from_slice(&scratch.scale_buf);
+                        out.sent.push(Message {
+                            from: i,
+                            to: j,
+                            sent_iter: k,
+                            deliver_iter: ctx.deliver_at,
+                            x: payload,
+                            w: msg_w,
+                        });
+                    }
+                }
+                // Self-loop share (Alg. 2 lines 7–8), scaled in place.
+                for v in st.x.iter_mut() {
+                    *v *= wf;
+                }
+                st.w *= w_mix;
+            }
+        }
+        Some((clock, alive)) => {
+            let rescue = clock.plan.rescue;
+            for (off, st) in states.iter_mut().enumerate() {
+                let i = base + off;
+                // Crashed nodes freeze in place (state = checkpoint).
+                if clock.is_down(i, k) {
+                    continue;
+                }
+                let peers = ctx.schedule.out_peers_among(i, k, alive);
+                let w_mix = 1.0 / (1.0 + peers.len() as f64);
+                let wf = w_mix as f32;
+                let msg_w = st.w * w_mix;
+                let mut rescued = 0usize;
+                for &j in &peers {
+                    if clock.drops(i, j, k) {
+                        if rescue {
+                            // Sender detects the failed send and keeps its
+                            // share: nothing leaves, nothing is lost.
+                            out.rescue_count += 1;
+                            rescued += 1;
+                            continue;
+                        }
+                        // The share leaves the sender and vanishes —
+                        // materialize it so the ordered merge can ledger
+                        // it in global sender order.
+                        let payload =
+                            scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
+                        out.dropped.push(Message {
+                            from: i,
+                            to: j,
+                            sent_iter: k,
+                            deliver_iter: ctx.deliver_at,
+                            x: payload,
+                            w: msg_w,
+                        });
+                        continue;
+                    }
+                    let payload =
+                        scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
+                    out.sent.push(Message {
+                        from: i,
+                        to: j,
+                        sent_iter: k,
+                        deliver_iter: ctx.deliver_at,
+                        x: payload,
+                        w: msg_w,
+                    });
+                }
+                // Self-loop share; rescued shares stay too, so the node
+                // keeps `w_mix · (1 + rescued)` of itself.
+                let keep = (w_mix * (1 + rescued) as f64) as f32;
+                for v in st.x.iter_mut() {
+                    *v *= keep;
+                }
+                st.w *= w_mix * (1 + rescued) as f64;
+            }
+        }
+    }
+}
+
+/// Phase 3 for the contiguous node range starting at `base`: drain every
+/// message due at `k` from this shard's mailboxes into its states,
+/// recycling payload buffers into the shard pool. Touches only this
+/// shard's states/mailboxes — safe to run on every shard concurrently.
+fn aggregate_shard(
+    base: usize,
+    states: &mut [NodeState],
+    inboxes: &mut [Vec<Message>],
+    pool: &mut Vec<Vec<f32>>,
+    ctx: StepCtx,
+    biased: bool,
+) {
+    let k = ctx.k;
+    for (off, (st, slot)) in states.iter_mut().zip(inboxes.iter_mut()).enumerate() {
+        // Fault mode: a crashed node's inbox holds until it rejoins.
+        if let Some((clock, _)) = ctx.faults {
+            if clock.is_down(base + off, k) {
+                continue;
+            }
+        }
+        let mut inbox = std::mem::take(slot);
+        let mut j = 0;
+        while j < inbox.len() {
+            if inbox[j].deliver_iter <= k {
+                let msg = inbox.swap_remove(j);
+                for (a, b) in st.x.iter_mut().zip(&msg.x) {
+                    *a += b;
+                }
+                st.w += msg.w;
+                pool.push(msg.x);
+            } else {
+                j += 1;
+            }
+        }
+        *slot = inbox;
+    }
+    if biased {
+        for st in states.iter_mut() {
+            st.w = 1.0;
+        }
+    }
+}
+
 /// The synchronous multi-node PushSum engine.
+///
+/// ```
+/// use sgp::gossip::PushSumEngine;
+/// use sgp::topology::{Schedule, TopologyKind};
+///
+/// // Four nodes holding the values 0, 1, 2, 3; push-sum averages them.
+/// let init: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32]).collect();
+/// let mut eng = PushSumEngine::new(init, 0, false);
+/// let sched = Schedule::new(TopologyKind::OnePeerExp, 4);
+/// for k in 0..40 {
+///     eng.step(k, &sched);
+/// }
+/// let z = eng.states[0].debiased()[0];
+/// assert!((z - 1.5).abs() < 1e-4, "converged to the average: {z}");
+/// ```
 pub struct PushSumEngine {
+    /// Number of logical nodes.
     pub n: usize,
+    /// Parameter dimension d.
     pub dim: usize,
+    /// Per-node `(x, w)` push-sum states, indexed by node.
     pub states: Vec<NodeState>,
     /// Overlap delay τ: 0 = blocking SGP, ≥1 = τ-OSGP.
     pub delay: u64,
     /// Table-4 ablation: ignore the push-sum weight (w ≡ 1, z = x).
     pub biased: bool,
-    /// Per-destination in-flight messages, ordered by deliver_iter.
+    /// Per-destination in-flight messages (mailboxes), ordered by sender
+    /// within each round.
     inboxes: Vec<Vec<Message>>,
-    /// Scratch buffer reused across steps (perf: no per-step allocation).
-    scale_buf: Vec<f32>,
-    /// Recycled message payload buffers (perf: delivering a message returns
-    /// its `x` here; sending pops one instead of allocating dim-sized
-    /// fresh-page Vecs on every message — see EXPERIMENTS.md §Perf).
-    pool: Vec<Vec<f32>>,
+    /// Per-shard scratch (scale buffer + payload pool); grown on demand to
+    /// the largest shard count this engine has been driven with.
+    scratch: Vec<ShardScratch>,
+    /// Per-shard outboxes, persistent so their capacity is reused across
+    /// rounds (drained empty by every ordered merge).
+    outs: Vec<ShardOut>,
     /// Cumulative numerator mass lost to dropped messages (fault mode).
     dropped_x: Vec<f64>,
     /// Cumulative push-sum-weight mass lost to dropped messages.
@@ -86,6 +355,8 @@ pub struct PushSumEngine {
 }
 
 impl PushSumEngine {
+    /// Build an engine over per-node initial numerators (all weights start
+    /// at 1). `delay` is the overlap τ; `biased` freezes w ≡ 1.
     pub fn new(init: Vec<Vec<f32>>, delay: u64, biased: bool) -> Self {
         let n = init.len();
         let dim = init[0].len();
@@ -97,8 +368,8 @@ impl PushSumEngine {
             delay,
             biased,
             inboxes: (0..n).map(|_| Vec::new()).collect(),
-            scale_buf: vec![0.0; dim],
-            pool: Vec::new(),
+            scratch: vec![ShardScratch::new(dim)],
+            outs: vec![ShardOut::default()],
             dropped_x: vec![0.0; dim],
             dropped_w: 0.0,
             drop_count: 0,
@@ -106,88 +377,23 @@ impl PushSumEngine {
         }
     }
 
-    /// Pop a recycled payload buffer or allocate a fresh one.
-    fn take_buf(&mut self) -> Vec<f32> {
-        self.pool.pop().unwrap_or_else(|| vec![0.0; self.dim])
+    /// Grow the per-shard scratch and outbox tables to at least `shards`
+    /// entries.
+    fn ensure_shards(&mut self, shards: usize) {
+        while self.scratch.len() < shards {
+            self.scratch.push(ShardScratch::new(self.dim));
+        }
+        while self.outs.len() < shards {
+            self.outs.push(ShardOut::default());
+        }
     }
 
     /// One full gossip step at iteration `k` for all nodes (Alg. 1 l. 5–7 /
     /// Alg. 2 l. 5–24): pre-weight & send, keep self-share, aggregate
-    /// everything whose `deliver_iter == k`.
+    /// everything whose `deliver_iter == k`. Sequential execution; see
+    /// [`Self::step_exec`] for the sharded driver.
     pub fn step(&mut self, k: u64, schedule: &Schedule) {
-        let deliver_at = k + self.delay;
-        // Phase 1: every node pre-weights and enqueues its outgoing
-        // messages, and scales its own state by the self-loop weight.
-        // The first payload is computed fused (read x once, write scaled);
-        // further peers copy it; the node's own state is scaled in place —
-        // one full pass fewer than the naive scale-buffer formulation.
-        for i in 0..self.n {
-            let peers = schedule.out_peers(i, k);
-            let w_mix = 1.0 / (1.0 + peers.len() as f64);
-            let wf = w_mix as f32;
-            let msg_w = self.states[i].w * w_mix;
-            if peers.len() == 1 {
-                // Dominant (1-peer) case: fused read-scale-write, no
-                // intermediate buffer.
-                let mut payload = self.take_buf();
-                for (p, v) in payload.iter_mut().zip(&self.states[i].x) {
-                    *p = v * wf;
-                }
-                self.inboxes[peers[0]].push(Message {
-                    from: i,
-                    sent_iter: k,
-                    deliver_iter: deliver_at,
-                    x: payload,
-                    w: msg_w,
-                });
-            } else if !peers.is_empty() {
-                for (b, v) in self.scale_buf.iter_mut().zip(&self.states[i].x) {
-                    *b = v * wf;
-                }
-                for &j in &peers {
-                    let mut payload = self.take_buf();
-                    payload.copy_from_slice(&self.scale_buf);
-                    self.inboxes[j].push(Message {
-                        from: i,
-                        sent_iter: k,
-                        deliver_iter: deliver_at,
-                        x: payload,
-                        w: msg_w,
-                    });
-                }
-            }
-            // Self-loop share (Alg. 2 lines 7–8), scaled in place.
-            let st = &mut self.states[i];
-            for v in st.x.iter_mut() {
-                *v *= wf;
-            }
-            st.w *= w_mix;
-        }
-        // Phase 2: aggregate deliveries due at k; payload buffers go back
-        // to the pool.
-        for i in 0..self.n {
-            let mut inbox = std::mem::take(&mut self.inboxes[i]);
-            let mut j = 0;
-            while j < inbox.len() {
-                if inbox[j].deliver_iter <= k {
-                    let msg = inbox.swap_remove(j);
-                    let st = &mut self.states[i];
-                    for (a, b) in st.x.iter_mut().zip(&msg.x) {
-                        *a += b;
-                    }
-                    st.w += msg.w;
-                    self.pool.push(msg.x);
-                } else {
-                    j += 1;
-                }
-            }
-            self.inboxes[i] = inbox;
-        }
-        if self.biased {
-            for st in &mut self.states {
-                st.w = 1.0;
-            }
-        }
+        self.step_exec(k, schedule, None, ExecPolicy::Sequential);
     }
 
     /// One gossip step under a fault scenario: only surviving members send
@@ -206,77 +412,137 @@ impl PushSumEngine {
     /// honest values — tested against the biased engine in
     /// `rust/tests/test_faults.rs`.
     pub fn step_faulty(&mut self, k: u64, schedule: &Schedule, clock: &FaultClock) {
+        self.step_exec(k, schedule, Some(clock), ExecPolicy::Sequential);
+    }
+
+    /// The sharded round driver behind [`Self::step`] / [`Self::step_faulty`]:
+    /// one full gossip step at iteration `k`, optionally under a fault
+    /// scenario, executed under the given [`ExecPolicy`].
+    ///
+    /// The round is the protocol described in the module docs: a parallel
+    /// compute+send phase into per-shard outboxes, a deterministic
+    /// ordered merge (messages appended to each destination mailbox in
+    /// ascending sender order; fault-ledger contributions applied in the
+    /// same order), then a parallel aggregate phase. The merge reproduces
+    /// exactly the operation order of the sequential loop, so **every
+    /// policy yields bit-identical state, mailboxes, ledger and
+    /// counters** at a fixed seed — the engine-equivalence contract
+    /// (`rust/tests/engine_equivalence.rs`).
+    ///
+    /// The policy is honored literally (clamped only to the node count):
+    /// no hidden work-size heuristic second-guesses the caller, so tests
+    /// can force real sharding at any size and callers pick shard counts
+    /// with `repro engine-sweep` (see [`ExecPolicy::Parallel`] on the
+    /// per-round spawn cost).
+    pub fn step_exec(
+        &mut self,
+        k: u64,
+        schedule: &Schedule,
+        faults: Option<&FaultClock>,
+        exec: ExecPolicy,
+    ) {
         let deliver_at = k + self.delay;
-        let alive = clock.alive(self.n, k);
-        let rescue = clock.plan.rescue;
-        for &i in &alive {
-            let peers = schedule.out_peers_among(i, k, &alive);
-            let w_mix = 1.0 / (1.0 + peers.len() as f64);
-            let wf = w_mix as f32;
-            let msg_w = self.states[i].w * w_mix;
-            let mut rescued = 0usize;
-            for &j in &peers {
-                if clock.drops(i, j, k) {
-                    if rescue {
-                        // Sender detects the failed send and keeps its
-                        // share: nothing leaves, nothing is lost.
-                        self.rescue_count += 1;
-                        rescued += 1;
-                        continue;
-                    }
-                    // The share leaves the sender and vanishes — ledger it.
-                    self.drop_count += 1;
-                    for (d, v) in self.dropped_x.iter_mut().zip(&self.states[i].x) {
-                        *d += (*v * wf) as f64;
-                    }
-                    self.dropped_w += msg_w;
-                    continue;
+        let alive: Option<Vec<usize>> = faults.map(|fc| fc.alive(self.n, k));
+        let shards = exec.shards_for(self.n);
+        let chunk = self.n.div_ceil(shards);
+        let used = self.n.div_ceil(chunk);
+        self.ensure_shards(used);
+        let dim = self.dim;
+        let biased = self.biased;
+        let ctx = StepCtx {
+            k,
+            deliver_at,
+            dim,
+            schedule,
+            faults: match (faults, &alive) {
+                (Some(fc), Some(al)) => Some((fc, al.as_slice())),
+                _ => None,
+            },
+        };
+
+        // Phase 1 — per-shard local compute + send into the persistent
+        // shard outboxes (drained empty by the previous merge, capacity
+        // retained).
+        if used == 1 {
+            compute_shard(
+                0,
+                &mut self.states,
+                &mut self.scratch[0],
+                ctx,
+                &mut self.outs[0],
+            );
+        } else {
+            std::thread::scope(|scope| {
+                for (idx, ((states, scratch), out)) in self
+                    .states
+                    .chunks_mut(chunk)
+                    .zip(self.scratch.iter_mut())
+                    .zip(self.outs.iter_mut())
+                    .enumerate()
+                {
+                    scope.spawn(move || {
+                        compute_shard(idx * chunk, states, scratch, ctx, out)
+                    });
                 }
-                let mut payload = self.take_buf();
-                for (p, v) in payload.iter_mut().zip(&self.states[i].x) {
-                    *p = v * wf;
-                }
-                self.inboxes[j].push(Message {
-                    from: i,
-                    sent_iter: k,
-                    deliver_iter: deliver_at,
-                    x: payload,
-                    w: msg_w,
-                });
-            }
-            // Self-loop share; rescued shares stay too, so the node keeps
-            // `w_mix · (1 + rescued)` of itself.
-            let keep = (w_mix * (1 + rescued) as f64) as f32;
-            let st = &mut self.states[i];
-            for v in st.x.iter_mut() {
-                *v *= keep;
-            }
-            st.w *= w_mix * (1 + rescued) as f64;
+            });
         }
-        // Aggregate deliveries due at k — survivors only; a crashed node's
-        // inbox holds until it rejoins.
-        for &i in &alive {
-            let mut inbox = std::mem::take(&mut self.inboxes[i]);
-            let mut j = 0;
-            while j < inbox.len() {
-                if inbox[j].deliver_iter <= k {
-                    let msg = inbox.swap_remove(j);
-                    let st = &mut self.states[i];
-                    for (a, b) in st.x.iter_mut().zip(&msg.x) {
-                        *a += b;
-                    }
-                    st.w += msg.w;
-                    self.pool.push(msg.x);
-                } else {
-                    j += 1;
+
+        // Phase 2 — deterministic ordered merge on the coordinating
+        // thread: shards hold contiguous ascending node ranges, so
+        // concatenating outboxes in shard order appends every mailbox's
+        // messages in ascending sender order — exactly the sequential
+        // loop's insertion order. Ledger contributions are summed in the
+        // same order, so the f64 accumulation is bit-identical too.
+        for idx in 0..used {
+            self.drop_count += self.outs[idx].dropped.len() as u64;
+            self.rescue_count += self.outs[idx].rescue_count;
+            self.outs[idx].rescue_count = 0;
+            for msg in self.outs[idx].sent.drain(..) {
+                self.inboxes[msg.to].push(msg);
+            }
+            for msg in self.outs[idx].dropped.drain(..) {
+                for (d, v) in self.dropped_x.iter_mut().zip(&msg.x) {
+                    *d += *v as f64;
                 }
+                self.dropped_w += msg.w;
+                // Recycle into the *sender's* shard pool so pools stay
+                // balanced across rounds (the sender pops it back next
+                // step); buffer identity never affects values.
+                self.scratch[msg.from / chunk].pool.push(msg.x);
             }
-            self.inboxes[i] = inbox;
         }
-        if self.biased {
-            for st in &mut self.states {
-                st.w = 1.0;
-            }
+
+        // Phase 3 — per-shard aggregation of deliveries due at k.
+        if used == 1 {
+            aggregate_shard(
+                0,
+                &mut self.states,
+                &mut self.inboxes,
+                &mut self.scratch[0].pool,
+                ctx,
+                biased,
+            );
+        } else {
+            std::thread::scope(|scope| {
+                for (idx, ((states, inboxes), scratch)) in self
+                    .states
+                    .chunks_mut(chunk)
+                    .zip(self.inboxes.chunks_mut(chunk))
+                    .zip(self.scratch.iter_mut())
+                    .enumerate()
+                {
+                    scope.spawn(move || {
+                        aggregate_shard(
+                            idx * chunk,
+                            states,
+                            inboxes,
+                            &mut scratch.pool,
+                            ctx,
+                            biased,
+                        )
+                    });
+                }
+            });
         }
     }
 
@@ -299,6 +565,13 @@ impl PushSumEngine {
 
     /// Flush all in-flight messages (used at the end of a run so no mass is
     /// stranded; OSGP's bounded-delay assumption guarantees this terminates).
+    ///
+    /// Post-drain invariant: the mailboxes are empty — [`Self::in_flight`]
+    /// returns 0 and [`Self::max_staleness`] returns 0 for **every** `k` —
+    /// and they stay that way until the next `step*` call. This holds in
+    /// fault mode too: messages parked for a crashed node are delivered
+    /// into its (frozen) state rather than left stranded. Locked in by the
+    /// `drain_leaves_zero_in_flight_and_zero_staleness` test.
     pub fn drain(&mut self) {
         for i in 0..self.n {
             for msg in std::mem::take(&mut self.inboxes[i]) {
@@ -316,12 +589,17 @@ impl PushSumEngine {
         }
     }
 
-    /// Number of in-flight messages (test/diagnostic).
+    /// Number of in-flight messages across all mailboxes (test/diagnostic).
+    /// Zero immediately after [`Self::drain`]; at most `n · peers · τ`
+    /// between steps of a τ-delayed run.
     pub fn in_flight(&self) -> usize {
         self.inboxes.iter().map(|b| b.len()).sum()
     }
 
-    /// Maximum staleness among in-flight messages relative to iteration k.
+    /// Maximum staleness among in-flight messages relative to iteration
+    /// `k`: `max(k − sent_iter)` over the mailboxes, 0 when nothing is in
+    /// flight — in particular, 0 for every `k` after [`Self::drain`].
+    /// Bounded by τ during a delayed run (`prop_osgp_staleness_bounded_by_tau`).
     pub fn max_staleness(&self, k: u64) -> u64 {
         self.inboxes
             .iter()
@@ -481,6 +759,29 @@ mod tests {
     }
 
     #[test]
+    fn drain_leaves_zero_in_flight_and_zero_staleness() {
+        // The post-drain invariant the coordinator's final-eval ordering
+        // relies on: after drain() the mailboxes are empty — zero in-flight
+        // messages, zero staleness at ANY query iteration — including in
+        // fault mode where messages were parked for a crashed node.
+        use crate::faults::{FaultClock, FaultPlan};
+        let init = random_init(8, 4, 21);
+        let mut eng = PushSumEngine::new(init, 3, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let clock =
+            FaultClock::new(FaultPlan::lossless().with_crash(2, 1, Some(50)));
+        for k in 0..10 {
+            eng.step_faulty(k, &sched, &clock);
+        }
+        assert!(eng.in_flight() > 0, "τ=3 run must have in-flight mass");
+        eng.drain();
+        assert_eq!(eng.in_flight(), 0, "drain must empty every mailbox");
+        for k in [0u64, 5, 10, 1_000_000] {
+            assert_eq!(eng.max_staleness(k), 0, "no staleness after drain");
+        }
+    }
+
+    #[test]
     fn delayed_gossip_still_converges_after_drain() {
         let n = 8;
         let init = random_init(n, 8, 5);
@@ -541,6 +842,61 @@ mod tests {
         let eng = PushSumEngine::new(init, 0, false);
         let (mean, min, max) = eng.consensus_distance();
         assert!(mean < 1e-9 && min < 1e-9 && max < 1e-9);
+    }
+
+    #[test]
+    fn sharded_step_bit_identical_to_sequential() {
+        // The determinism contract, quick form (the exhaustive version is
+        // rust/tests/engine_equivalence.rs): sequential and parallel
+        // execution yield identical bits — states, mailboxes and stats.
+        for shards in [2usize, 3, 8] {
+            let init = random_init(10, 16, 31);
+            let mut seq = PushSumEngine::new(init.clone(), 1, false);
+            let mut par = PushSumEngine::new(init, 1, false);
+            let sched = Schedule::new(TopologyKind::TwoPeerExp, 10);
+            for k in 0..25 {
+                seq.step_exec(k, &sched, None, ExecPolicy::Sequential);
+                par.step_exec(k, &sched, None, ExecPolicy::parallel(shards));
+                assert_eq!(seq.in_flight(), par.in_flight(), "k={k}");
+            }
+            for (a, b) in seq.states.iter().zip(&par.states) {
+                assert_eq!(a.x, b.x, "shards={shards}");
+                assert_eq!(a.w.to_bits(), b.w.to_bits(), "shards={shards}");
+            }
+            let (ca, cb) = (seq.consensus_distance(), par.consensus_distance());
+            assert_eq!(ca.0.to_bits(), cb.0.to_bits(), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_faulty_step_bit_identical_to_sequential() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let clock = FaultClock::new(
+            FaultPlan::lossless()
+                .with_drop(0.2)
+                .with_crash(3, 5, Some(12))
+                .with_seed(9),
+        );
+        let init = random_init(9, 8, 32);
+        let mut seq = PushSumEngine::new(init.clone(), 0, false);
+        let mut par = PushSumEngine::new(init, 0, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 9);
+        for k in 0..30 {
+            seq.step_exec(k, &sched, Some(&clock), ExecPolicy::Sequential);
+            par.step_exec(k, &sched, Some(&clock), ExecPolicy::parallel(4));
+        }
+        assert_eq!(seq.drop_count, par.drop_count);
+        assert!(seq.drop_count > 0, "0.2 drop rate must drop something");
+        for (a, b) in seq.states.iter().zip(&par.states) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.w.to_bits(), b.w.to_bits());
+        }
+        let (dxa, dwa) = seq.dropped_mass();
+        let (dxb, dwb) = par.dropped_mass();
+        assert_eq!(dwa.to_bits(), dwb.to_bits());
+        for (a, b) in dxa.iter().zip(dxb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

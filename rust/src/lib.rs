@@ -9,7 +9,9 @@
 //!   matrices, plus spectral tools (λ₂ of mixing products, Appendix A).
 //! * [`gossip`] — the PushSum engine: per-node `(x, w)` state, delayed
 //!   message buffers (τ-Overlap SGP), the biased variant, and
-//!   mass-conservation accounting.
+//!   mass-conservation accounting — with a sharded parallel execution
+//!   engine ([`gossip::ExecPolicy`]) that is bit-identical to the
+//!   sequential loop at a fixed seed (see ARCHITECTURE.md).
 //! * [`collectives`] — the exact-averaging substrate (ring AllReduce) with
 //!   its α–β cost model, used by the AllReduce-SGD baseline.
 //! * [`net`] — the cluster/network simulator standing in for the paper's
@@ -37,8 +39,12 @@
 //! * [`metrics`] — loss/consensus/throughput series and CSV emitters for
 //!   regenerating every table and figure in the paper.
 //!
-//! See DESIGN.md for the module map, the trait API contract, and how to
-//! add an algorithm; EXPERIMENTS.md records paper-vs-measured results.
+//! See ARCHITECTURE.md for the layer diagram and the determinism
+//! contract, DESIGN.md for the module map, the trait API contract, and
+//! how to add an algorithm; EXPERIMENTS.md records paper-vs-measured
+//! results.
+
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod benchkit;
@@ -62,3 +68,4 @@ pub mod topology;
 pub use algorithms::{AlgoParams, DistributedAlgorithm};
 pub use config::TrainConfig;
 pub use coordinator::{Trainer, TrainerBuilder};
+pub use gossip::ExecPolicy;

@@ -4,6 +4,7 @@
 //!   train        one training run (model × algorithm × cluster)
 //!   bench <exp>  regenerate a paper table/figure (all, fig1, table1..5, …)
 //!   faults       robustness sweep under message loss / churn (offline)
+//!   engine-sweep large-N scaling sweep of the parallel execution engine
 //!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
@@ -18,6 +19,7 @@ use sgp::config::{Fabric, TrainConfig};
 use sgp::coordinator::TrainerBuilder;
 use sgp::experiments;
 use sgp::faults::Crash;
+use sgp::gossip::ExecPolicy;
 use sgp::metrics;
 use sgp::optim::OptimKind;
 use sgp::runtime::Runtime;
@@ -29,25 +31,47 @@ USAGE:
   repro train   [--model mlp_small] [--algo <name>] [--nodes 8]
                 [--epochs 10] [--steps-per-epoch 16] [--fabric ethernet|ib]
                 [--tau 1] [--grad-delay 1] [--seed 0] [--adam]
-                [--heterogeneity 0.3]
-                (see `repro algos` for the registered algorithm names)
+                [--heterogeneity 0.3] [--engine sequential|parallel]
+                [--shards K]
+                (see `repro algos` for the registered algorithm names;
+                --engine parallel shards the gossip round across K workers
+                — bit-identical to sequential at the same seed)
   repro bench   <all|fig1|table1|table2|table3|table4|table5|fig2|fig3|
                  figd3|figd4|appendix-a> [--fast]
   repro faults  [--drop 0..0.2 | --drop 0,0.05,0.1] [--crash 3@40:80,5@60]
                 [--nodes 16] [--iters 200] [--algos ar-sgd,sgp,...]
                 [--seed 1] [--no-rescue] [--fast]
+                [--engine sequential|parallel] [--shards K]
                 offline robustness sweep: final error / consensus / makespan
                 per algorithm × fault level. --crash uses node@iter[:rejoin]
                 (no :rejoin = permanent leave). Rescue (senders re-absorb
                 undelivered push-sum mass) is on by default; --no-rescue
                 surfaces the naive-loss instability (DESIGN.md §Faults).
                 Writes results/faults_sweep.csv.
+  repro engine-sweep [--max-n 1024] [--dim 1024] [--steps 50]
+                [--shards 2,4,8] [--seed 1] [--fast]
+                large-N scaling sweep of the gossip execution engine:
+                sequential vs sharded-parallel wall-clock plus a
+                bit-identity check. Writes results/engine_sweep.csv.
   repro algos
   repro spectral
   repro average [--nodes 32] [--rounds 8]
   repro convergence [--nodes 16] [--iters 2000]
   repro inspect
 ";
+
+/// Parse `--engine sequential|parallel` + `--shards K` into an
+/// [`ExecPolicy`]. `--shards K` alone (K > 1) implies the parallel engine;
+/// `--engine parallel` without `--shards` sizes itself to the machine.
+fn parse_exec(args: &Args) -> Result<ExecPolicy> {
+    let shards = args.usize_or("shards", 0)?;
+    match args.get("engine") {
+        None => Ok(ExecPolicy::parallel(shards)),
+        Some(name) => ExecPolicy::parse(name, shards).ok_or_else(|| {
+            anyhow::anyhow!("unknown engine `{name}` (expected sequential|parallel)")
+        }),
+    }
+}
 
 fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
@@ -74,15 +98,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     let iters = cfg.total_iters();
+    let exec = parse_exec(args)?;
     let mut trainer = TrainerBuilder::new(&rt)
         .config(cfg)
         .algorithm(&algo_name)
         .tau(args.u64_or("tau", 1)?)
         .grad_delay(args.u64_or("grad-delay", 1)?)
+        .engine(exec)
         .build()?;
     println!(
-        "training {model} with {} on {nodes} nodes ({iters} iters)…",
-        trainer.algo.name()
+        "training {model} with {} on {nodes} nodes ({iters} iters, {} engine)…",
+        trainer.algo.name(),
+        exec.label()
     );
     let r = trainer.run()?;
     r.write_csv(&experiments::results_dir())?;
@@ -166,6 +193,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
     sweep.iters = args.u64_or("iters", sweep.iters)?;
     sweep.seed = args.u64_or("seed", sweep.seed)?;
     sweep.rescue = !args.flag("no-rescue");
+    sweep.exec = parse_exec(args)?;
     if let Some(a) = args.get("algos") {
         sweep.algos = a.split(',').map(|s| s.trim().to_string()).collect();
         for name in &sweep.algos {
@@ -234,12 +262,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_engine_sweep(args: &Args) -> Result<()> {
+    let mut sweep = experiments::EngineSweep::new(args.flag("fast"));
+    let max_n = args.usize_or("max-n", *sweep.ns.last().unwrap_or(&1024))?;
+    if max_n < 2 {
+        bail!("--max-n {max_n}: need at least 2 nodes to gossip");
+    }
+    sweep.ns.retain(|&n| n <= max_n);
+    // `--max-n` beyond the built-in ceiling extends the sweep to that
+    // point (and below the smallest default it becomes the single point)
+    // instead of being silently ignored.
+    if sweep.ns.last().is_none_or(|&top| max_n > top) {
+        sweep.ns.push(max_n);
+    }
+    sweep.dim = args.usize_or("dim", sweep.dim)?;
+    sweep.steps = args.u64_or("steps", sweep.steps)?;
+    sweep.seed = args.u64_or("seed", sweep.seed)?;
+    if let Some(s) = args.get("shards") {
+        sweep.shards = s
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .with_context(|| format!("--shards `{v}`: not an integer"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+    }
+    experiments::engine_sweep(&sweep)
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args)?,
         Some("bench") => cmd_bench(&args)?,
         Some("faults") => cmd_faults(&args)?,
+        Some("engine-sweep") => cmd_engine_sweep(&args)?,
         Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {

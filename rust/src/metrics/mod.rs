@@ -10,49 +10,66 @@ use anyhow::Result;
 /// One recorded training iteration.
 #[derive(Clone, Debug)]
 pub struct IterRecord {
+    /// Iteration index.
     pub iter: u64,
+    /// Fractional epoch of the iteration.
     pub epoch: f64,
     /// Mean training loss across nodes at this iteration.
     pub train_loss: f64,
     /// Simulated wall-clock (seconds) when this iteration completed.
     pub sim_time_s: f64,
+    /// Learning rate applied this iteration.
     pub lr: f64,
 }
 
 /// One recorded evaluation point (epoch granularity).
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
+    /// Iteration the evaluation happened at.
     pub iter: u64,
+    /// Fractional epoch of the evaluation.
     pub epoch: f64,
+    /// Simulated wall-clock (seconds) at the evaluation.
     pub sim_time_s: f64,
-    /// Validation loss / metric of the averaged (consensus) model.
+    /// Validation loss of the averaged (consensus) model.
     pub val_loss: f64,
+    /// Validation metric (accuracy / perplexity proxy) of the same model.
     pub val_metric: f64,
-    /// Per-node validation metric spread (min, mean, max) — Fig. D.3.
+    /// Per-node validation metric spread, minimum — Fig. D.3.
     pub node_metric_min: f64,
+    /// Per-node validation metric spread, mean — Fig. D.3.
     pub node_metric_mean: f64,
+    /// Per-node validation metric spread, maximum — Fig. D.3.
     pub node_metric_max: f64,
-    /// Consensus distance ‖zᵢ − x̄‖ (mean, min, max) — Fig. 2.
+    /// Consensus distance ‖zᵢ − x̄‖, mean over nodes — Fig. 2.
     pub consensus_mean: f64,
+    /// Consensus distance, minimum over nodes.
     pub consensus_min: f64,
+    /// Consensus distance, maximum over nodes.
     pub consensus_max: f64,
 }
 
 /// Full result of one training run.
 #[derive(Clone, Debug, Default)]
 pub struct RunResult {
+    /// Run label (`<algo>_n<nodes>`), used in CSV file names.
     pub label: String,
+    /// Per-iteration series.
     pub iters: Vec<IterRecord>,
+    /// Per-evaluation series.
     pub evals: Vec<EvalRecord>,
     /// Total simulated time (seconds) for the whole run.
     pub sim_total_s: f64,
     /// Real wall-clock spent executing (diagnostics only).
     pub wall_s: f64,
+    /// Validation loss at the final (post-drain) evaluation.
     pub final_val_loss: f64,
+    /// Validation metric at the final (post-drain) evaluation.
     pub final_val_metric: f64,
 }
 
 impl RunResult {
+    /// Training loss at the last recorded iteration (NaN for empty runs).
     pub fn final_train_loss(&self) -> f64 {
         self.iters.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
     }
@@ -65,6 +82,7 @@ impl RunResult {
         self.sim_total_s / self.iters.len() as f64
     }
 
+    /// Write the `<label>_iters.csv` / `<label>_evals.csv` series under `dir`.
     pub fn write_csv(&self, dir: &Path) -> Result<()> {
         fs::create_dir_all(dir)?;
         let mut f = fs::File::create(dir.join(format!("{}_iters.csv", self.label)))?;

@@ -8,19 +8,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — deterministic iteration).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with byte position and reason.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// Human-readable reason.
     pub msg: String,
 }
 
@@ -33,6 +43,7 @@ impl fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing characters).
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -44,6 +55,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -51,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The value as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -58,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The value as a number, if it is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -65,10 +79,12 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer (numbers truncate).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The value as an array slice, if it is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -76,6 +92,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map, if it is one.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

@@ -16,41 +16,62 @@ use anyhow::{bail, Context, Result};
 
 use json::Json;
 
+/// Shape/dtype of one artifact input tensor.
 #[derive(Clone, Debug)]
 pub struct TensorMeta {
+    /// Parameter name in the HLO entry computation.
     pub name: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
+    /// Element dtype (`"float32"`, `"int32"`, …).
     pub dtype: String,
 }
 
 impl TensorMeta {
+    /// Number of elements (1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
 }
 
+/// One compiled-artifact entry from `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// HLO text file, relative to the artifact dir.
     pub file: String,
+    /// Artifact kind (`"train"`, `"eval"`, `"update"`, `"gossip"`, …).
     pub kind: String,
+    /// Model this artifact belongs to, if any.
     pub model: Option<String>,
+    /// Flat parameter count of the model function.
     pub param_count: Option<usize>,
+    /// Input tensor layouts.
     pub inputs: Vec<TensorMeta>,
+    /// Output names, in order.
     pub outputs: Vec<String>,
+    /// Node count baked into a gossip artifact.
     pub n: Option<usize>,
+    /// Per-node dimension baked into a gossip artifact.
     pub d: Option<usize>,
 }
 
+/// One model entry from `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct ModelMeta {
+    /// Flat parameter count.
     pub param_count: usize,
+    /// Init-parameters file, relative to the artifact dir.
     pub init: String,
+    /// The model's exported JAX config (batch, dims, …).
     pub config: Json,
 }
 
+/// The parsed `manifest.json`: artifact and model tables.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Compiled artifacts by name.
     pub artifacts: HashMap<String, ArtifactMeta>,
+    /// Model metadata by name.
     pub models: HashMap<String, ModelMeta>,
 }
 
@@ -77,6 +98,7 @@ fn tensor_meta(j: &Json) -> Result<TensorMeta> {
 }
 
 impl Manifest {
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Self> {
         let j = Json::parse(text).context("parsing manifest.json")?;
         let mut artifacts = HashMap::new();
@@ -145,6 +167,7 @@ impl Manifest {
         Ok(Manifest { artifacts, models })
     }
 
+    /// Load `manifest.json` from the artifact directory.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = fs::read_to_string(&path)
@@ -152,12 +175,14 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Look up an artifact by name (error names the missing entry).
     pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
         self.artifacts
             .get(name)
             .with_context(|| format!("artifact `{name}` not in manifest"))
     }
 
+    /// Look up a model by name (error names the missing entry).
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
         self.models
             .get(name)
@@ -173,6 +198,7 @@ impl Manifest {
             .with_context(|| format!("model `{model}` config missing `{key}`"))
     }
 
+    /// String-config helper pulled from the model's exported JAX config.
     pub fn model_cfg_str(&self, model: &str, key: &str) -> Result<&str> {
         let m = self.model(model)?;
         m.config

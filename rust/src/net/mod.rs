@@ -39,6 +39,7 @@ pub struct LinkModel {
     /// TCP-over-Ethernet collectives run far from line rate (incast,
     /// congestion control); RDMA/IB collectives run close to it.
     pub collective_efficiency: f64,
+    /// Human-readable fabric name (CSV/table labels).
     pub name: &'static str,
 }
 
@@ -98,10 +99,12 @@ impl ComputeModel {
         Self { base_s: 0.30, jitter_sigma: 0.08, p_slow: 0.01, slow_factor: 2.5 }
     }
 
+    /// Jitter-free profile: every step takes exactly `base_s` seconds.
     pub fn deterministic(base_s: f64) -> Self {
         Self { base_s, jitter_sigma: 0.0, p_slow: 0.0, slow_factor: 1.0 }
     }
 
+    /// Draw one node's compute time for one iteration.
     pub fn sample(&self, rng: &mut Pcg) -> f64 {
         let mut t = if self.jitter_sigma > 0.0 {
             // Normalize so E[t] = base_s: E[lognormal(µ,σ)] = e^{µ+σ²/2}.
@@ -116,6 +119,7 @@ impl ComputeModel {
         t
     }
 
+    /// Draw all n nodes' compute times for one iteration.
     pub fn sample_all(&self, n: usize, rng: &mut Pcg) -> Vec<f64> {
         (0..n).map(|_| self.sample(rng)).collect()
     }
@@ -125,27 +129,53 @@ impl ComputeModel {
 #[derive(Clone, Debug)]
 pub enum CommPattern<'a> {
     /// Global barrier + collective of `bytes` (AllReduce-SGD).
-    AllReduce { bytes: usize },
+    AllReduce {
+        /// Bytes reduced per node.
+        bytes: usize,
+    },
     /// Directed push messages along the schedule; receives from iteration
     /// `k − tau` must have arrived (SGP: τ=0, OSGP: τ≥1).
-    PushSum { schedule: &'a Schedule, bytes: usize, tau: u64 },
+    PushSum {
+        /// The round's out-peer schedule.
+        schedule: &'a Schedule,
+        /// Bytes per message.
+        bytes: usize,
+        /// Overlap delay τ.
+        tau: u64,
+    },
     /// Symmetric pairwise exchange (D-PSGD). `handshake` multiplies the
     /// point-to-point cost to model the send+recv + deadlock-avoidance
     /// ordering of symmetric gossip.
-    Symmetric { schedule: &'a Schedule, bytes: usize, handshake: f64 },
+    Symmetric {
+        /// The round's pairing schedule.
+        schedule: &'a Schedule,
+        /// Bytes per direction.
+        bytes: usize,
+        /// Point-to-point cost multiplier of the symmetric handshake.
+        handshake: f64,
+    },
     /// Barrier-free asynchronous round (AD-PSGD): every node's clock
     /// advances independently by its own compute plus a fixed per-round
     /// `overhead_s` (the partially-overlapped averaging thread of Lian et
     /// al., App. C). No node ever waits on a peer.
-    Async { overhead_s: f64 },
+    Async {
+        /// Per-round overhead of the averaging thread (seconds).
+        overhead_s: f64,
+    },
     /// No communication (single node / local SGD).
     None,
 }
 
+/// Below this many nodes per shard the arrival computation stays
+/// sequential: spawning workers costs more than the loop saves.
+const MIN_NODES_PER_TIMING_SHARD: usize = 64;
+
 /// Incremental timing recursion over iterations.
 #[derive(Clone, Debug)]
 pub struct TimingSim {
+    /// Number of simulated nodes.
     pub n: usize,
+    /// The simulated fabric.
     pub link: LinkModel,
     /// Completion time of each node's last finished iteration.
     pub t: Vec<f64>,
@@ -153,11 +183,23 @@ pub struct TimingSim {
     /// push-sum messages (front = oldest iteration still unconsumed).
     pending: VecDeque<Vec<f64>>,
     iter: u64,
+    /// Worker shards for the per-destination arrival computation (1 =
+    /// sequential). Sharding merges partial results with elementwise
+    /// `f64::max` — associative and commutative — so every shard count
+    /// produces bit-identical clocks.
+    shards: usize,
 }
 
 impl TimingSim {
+    /// A fresh simulator with every node clock at 0 (sequential execution).
     pub fn new(n: usize, link: LinkModel) -> Self {
-        Self { n, link, t: vec![0.0; n], pending: VecDeque::new(), iter: 0 }
+        Self { n, link, t: vec![0.0; n], pending: VecDeque::new(), iter: 0, shards: 1 }
+    }
+
+    /// Shard the arrival computation across `shards` workers for large-N
+    /// sweeps. Bit-identical to sequential for every value (max-merge).
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
     }
 
     /// Advance one iteration given sampled compute times; returns the
@@ -267,30 +309,10 @@ impl TimingSim {
                 let send: Vec<f64> = (0..self.n)
                     .map(|i| if down[i] { self.t[i] } else { self.t[i] + comp[i] })
                     .collect();
-                // Arrival deadline per destination for messages sent at k.
-                let mut arrive = vec![0.0f64; self.n];
+                // Arrival deadline per destination for messages sent at k
+                // (sharded over senders when configured; bit-identical).
                 let cost = link.ptp_time(*bytes);
-                match faults {
-                    None => {
-                        for i in 0..self.n {
-                            for j in schedule.out_peers(i, k) {
-                                arrive[j] = arrive[j].max(send[i] + cost);
-                            }
-                        }
-                    }
-                    Some(fc) => {
-                        let alive = fc.alive(self.n, k);
-                        for &i in &alive {
-                            for j in schedule.out_peers_among(i, k, &alive) {
-                                // A dropped message never constrains its
-                                // destination — the receiver moves on.
-                                if !fc.drops(i, j, k) {
-                                    arrive[j] = arrive[j].max(send[i] + cost);
-                                }
-                            }
-                        }
-                    }
-                }
+                let arrive = self.pushsum_arrivals(k, schedule, &send, cost, faults);
                 self.pending.push_back(arrive);
                 // Node j's iteration k completes once it has done its local
                 // compute AND received the messages sent at k − τ.
@@ -356,8 +378,77 @@ impl TimingSim {
         self.t.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// The current simulated wall-clock: the slowest node's completion time.
     pub fn makespan(&self) -> f64 {
         self.t.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Per-destination arrival deadlines for the push-sum messages sent at
+    /// `k`. With `shards > 1` and enough nodes, the sender range is
+    /// partitioned across scoped workers and the partial deadline vectors
+    /// are merged with elementwise `f64::max` in shard order — max is
+    /// associative and commutative (and these values are never NaN), so
+    /// every shard count yields the same bits as the sequential fold.
+    fn pushsum_arrivals(
+        &self,
+        k: u64,
+        schedule: &Schedule,
+        send: &[f64],
+        cost: f64,
+        faults: Option<&FaultClock>,
+    ) -> Vec<f64> {
+        let n = self.n;
+        let alive: Option<Vec<usize>> = faults.map(|fc| fc.alive(n, k));
+        let range_arrivals = |lo: usize, hi: usize| -> Vec<f64> {
+            let mut arrive = vec![0.0f64; n];
+            match (faults, &alive) {
+                (Some(fc), Some(al)) => {
+                    for i in lo..hi {
+                        if fc.is_down(i, k) {
+                            continue;
+                        }
+                        for j in schedule.out_peers_among(i, k, al) {
+                            // A dropped message never constrains its
+                            // destination — the receiver moves on.
+                            if !fc.drops(i, j, k) {
+                                arrive[j] = arrive[j].max(send[i] + cost);
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    for i in lo..hi {
+                        for j in schedule.out_peers(i, k) {
+                            arrive[j] = arrive[j].max(send[i] + cost);
+                        }
+                    }
+                }
+            }
+            arrive
+        };
+        let shards = self.shards.min(n.max(1));
+        if shards <= 1 || n < shards * MIN_NODES_PER_TIMING_SHARD {
+            return range_arrivals(0, n);
+        }
+        let chunk = n.div_ceil(shards);
+        let range_arrivals = &range_arrivals;
+        let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .step_by(chunk)
+                .map(|lo| scope.spawn(move || range_arrivals(lo, (lo + chunk).min(n))))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("timing shard worker"))
+                .collect()
+        });
+        let mut arrive = vec![0.0f64; n];
+        for part in partials {
+            for (a, p) in arrive.iter_mut().zip(part) {
+                *a = a.max(p);
+            }
+        }
+        arrive
     }
 }
 
@@ -384,14 +475,40 @@ pub fn average_iteration_time(
 /// Owned variant of [`CommPattern`] for returning from closures.
 #[derive(Clone, Debug)]
 pub enum OwnedCommPattern {
-    AllReduce { bytes: usize },
-    PushSum { schedule: Schedule, bytes: usize, tau: u64 },
-    Symmetric { schedule: Schedule, bytes: usize, handshake: f64 },
-    Async { overhead_s: f64 },
+    /// See [`CommPattern::AllReduce`].
+    AllReduce {
+        /// Bytes reduced per node.
+        bytes: usize,
+    },
+    /// See [`CommPattern::PushSum`].
+    PushSum {
+        /// The round's out-peer schedule.
+        schedule: Schedule,
+        /// Bytes per message.
+        bytes: usize,
+        /// Overlap delay τ.
+        tau: u64,
+    },
+    /// See [`CommPattern::Symmetric`].
+    Symmetric {
+        /// The round's pairing schedule.
+        schedule: Schedule,
+        /// Bytes per direction.
+        bytes: usize,
+        /// Point-to-point cost multiplier of the symmetric handshake.
+        handshake: f64,
+    },
+    /// See [`CommPattern::Async`].
+    Async {
+        /// Per-round overhead of the averaging thread (seconds).
+        overhead_s: f64,
+    },
+    /// See [`CommPattern::None`].
     None,
 }
 
 impl OwnedCommPattern {
+    /// The borrowed view the timing recursion consumes.
     pub fn borrowed(&self) -> CommPattern<'_> {
         match self {
             OwnedCommPattern::AllReduce { bytes } => {

@@ -13,6 +13,7 @@
 /// Adam for NMT).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptimKind {
+    /// Plain SGD with weight decay.
     Sgd,
     /// Nesterov momentum, default m=0.9, weight decay 1e-4 (Goyal).
     Nesterov,
@@ -23,25 +24,39 @@ pub enum OptimKind {
 /// Per-node optimizer state.
 #[derive(Clone, Debug)]
 pub enum Optimizer {
+    /// Plain SGD (stateless beyond the decay constant).
     Sgd {
+        /// L2 weight-decay coefficient.
         weight_decay: f32,
     },
+    /// Nesterov momentum.
     Nesterov {
+        /// Momentum coefficient m.
         momentum: f32,
+        /// L2 weight-decay coefficient.
         weight_decay: f32,
+        /// Velocity buffer.
         u: Vec<f32>,
     },
+    /// Adam.
     Adam {
+        /// First-moment decay β₁.
         beta1: f32,
+        /// Second-moment decay β₂.
         beta2: f32,
+        /// Numerical-stability ε.
         eps: f32,
+        /// First-moment estimate.
         m: Vec<f32>,
+        /// Second-moment estimate.
         v: Vec<f32>,
+        /// Step counter (bias correction).
         t: u64,
     },
 }
 
 impl Optimizer {
+    /// Fresh optimizer state of the given family for a `dim`-sized vector.
     pub fn new(kind: OptimKind, dim: usize) -> Self {
         match kind {
             OptimKind::Sgd => Optimizer::Sgd { weight_decay: 1e-4 },
@@ -120,8 +135,11 @@ pub struct LrSchedule {
     pub base_lr: f64,
     /// Linear-scaling target multiplier (paper: n nodes ⇒ n×).
     pub scale: f64,
+    /// Epochs of linear warmup from `base_lr` to `base_lr × scale`.
     pub warmup_epochs: f64,
+    /// Epochs at which the LR step-decays.
     pub milestones: Vec<f64>,
+    /// Multiplicative decay applied at each milestone (paper: 0.1).
     pub decay: f64,
 }
 
@@ -154,6 +172,7 @@ impl LrSchedule {
         Self { base_lr: lr, scale: 1.0, warmup_epochs: 0.0, milestones: vec![], decay: 1.0 }
     }
 
+    /// The learning rate at a (fractional) epoch.
     pub fn lr_at(&self, epoch: f64) -> f64 {
         let peak = self.base_lr * self.scale;
         let mut lr = if self.warmup_epochs > 0.0 && epoch < self.warmup_epochs {

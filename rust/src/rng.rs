@@ -15,6 +15,7 @@ pub struct Pcg {
 }
 
 impl Pcg {
+    /// A generator seeded on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
     }
@@ -28,6 +29,7 @@ impl Pcg {
         rng
     }
 
+    /// Next uniform u32.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -39,6 +41,7 @@ impl Pcg {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next uniform u64 (two u32 draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

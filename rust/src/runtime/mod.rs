@@ -16,9 +16,13 @@ use anyhow::{Context, Result};
 use crate::data::Batch;
 use crate::model::Manifest;
 
+/// The PJRT bridge: a CPU client plus the loaded artifact manifest and a
+/// compile-on-first-use executable cache.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// Executions performed (diagnostics / perf accounting).

@@ -8,10 +8,14 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+/// One scheduled event: fires at `time`, ties broken by `seq`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Event<T> {
+    /// Simulated firing time (seconds).
     pub time: f64,
+    /// Insertion sequence number (deterministic tie-break).
     pub seq: u64,
+    /// The scheduled item.
     pub payload: T,
 }
 
@@ -42,16 +46,19 @@ pub struct EventQueue<T: PartialEq> {
 }
 
 impl<T: PartialEq> EventQueue<T> {
+    /// An empty queue with the clock at 0.
     pub fn new() -> Self {
         Self { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
     }
 
+    /// Schedule `payload` at `time` (panics if `time` is in the past).
     pub fn push(&mut self, time: f64, payload: T) {
         assert!(time >= self.now, "cannot schedule into the past");
         self.heap.push(Event { time, seq: self.seq, payload });
         self.seq += 1;
     }
 
+    /// Pop the earliest event and advance the clock to it.
     pub fn pop(&mut self) -> Option<Event<T>> {
         let ev = self.heap.pop()?;
         debug_assert!(ev.time >= self.now);
@@ -59,14 +66,17 @@ impl<T: PartialEq> EventQueue<T> {
         Some(ev)
     }
 
+    /// The current simulated time (time of the last popped event).
     pub fn now(&self) -> f64 {
         self.now
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

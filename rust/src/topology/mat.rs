@@ -2,17 +2,21 @@
 //! algebra and spectral analysis. n is small (≤ a few hundred nodes), so a
 //! straightforward O(n³) implementation is the right tool.
 
+/// Dense square f64 matrix, row-major.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Side length.
     pub n: usize,
     a: Vec<f64>,
 }
 
 impl Mat {
+    /// The n×n zero matrix.
     pub fn zeros(n: usize) -> Self {
         Self { n, a: vec![0.0; n * n] }
     }
 
+    /// The n×n identity matrix.
     pub fn identity(n: usize) -> Self {
         let mut m = Self::zeros(n);
         for i in 0..n {
@@ -21,6 +25,7 @@ impl Mat {
         m
     }
 
+    /// Build an n×n matrix from an entry function `(row, col) → value`.
     pub fn from_fn(n: usize, f: impl Fn(usize, usize) -> f64) -> Self {
         let mut m = Self::zeros(n);
         for r in 0..n {
@@ -36,20 +41,24 @@ impl Mat {
         Self::from_fn(n, |_, _| 1.0 / n as f64)
     }
 
+    /// Entry (r, c).
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f64 {
         self.a[r * self.n + c]
     }
 
+    /// Mutable entry (r, c).
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
         &mut self.a[r * self.n + c]
     }
 
+    /// Row r as a slice.
     pub fn row(&self, r: usize) -> &[f64] {
         &self.a[r * self.n..(r + 1) * self.n]
     }
 
+    /// Matrix product `self · other`.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.n, other.n);
         let n = self.n;
@@ -76,25 +85,30 @@ impl Mat {
             .collect()
     }
 
+    /// The transposed matrix.
     pub fn transpose(&self) -> Mat {
         Mat::from_fn(self.n, |r, c| self.at(c, r))
     }
 
+    /// Column sums (a column-stochastic matrix sums to 1 everywhere).
     pub fn col_sums(&self) -> Vec<f64> {
         (0..self.n)
             .map(|c| (0..self.n).map(|r| self.at(r, c)).sum())
             .collect()
     }
 
+    /// Row sums.
     pub fn row_sums(&self) -> Vec<f64> {
         (0..self.n).map(|r| self.row(r).iter().sum()).collect()
     }
 
+    /// Non-negative entries and unit column sums, within `tol`.
     pub fn is_column_stochastic(&self, tol: f64) -> bool {
         self.a.iter().all(|&v| v >= -tol)
             && self.col_sums().iter().all(|s| (s - 1.0).abs() <= tol)
     }
 
+    /// Column- and row-stochastic, within `tol`.
     pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
         self.is_column_stochastic(tol)
             && self.row_sums().iter().all(|s| (s - 1.0).abs() <= tol)

@@ -42,19 +42,38 @@ pub enum TopologyKind {
 
 /// A time-varying schedule: for node `i` at iteration `k`, which peers does
 /// it transmit to? Mixing weights are uniform: `1 / (1 + |out(i,k)|)`.
+///
+/// ```
+/// use sgp::topology::{Schedule, TopologyKind};
+///
+/// // The paper's default: the directed exponential graph, one peer per
+/// // iteration, cycling hop distances 2^0, 2^1, 2^2, … (Fig. A.1).
+/// let s = Schedule::new(TopologyKind::OnePeerExp, 8);
+/// assert_eq!(s.out_peers(0, 0), vec![1]);
+/// assert_eq!(s.out_peers(0, 1), vec![2]);
+/// assert_eq!(s.out_peers(0, 2), vec![4]);
+/// assert_eq!(s.out_peers(0, 3), vec![1]); // the cycle restarts
+/// // Every column of the induced mixing matrix sums to 1 (SGP's only
+/// // structural requirement).
+/// assert!(s.mixing_matrix(0).is_column_stochastic(1e-12));
+/// ```
 #[derive(Clone, Debug)]
 pub struct Schedule {
+    /// Topology family.
     pub kind: TopologyKind,
+    /// Number of nodes.
     pub n: usize,
     /// Seed for the randomized kinds (deterministic given seed + k + i).
     pub seed: u64,
 }
 
 impl Schedule {
+    /// A schedule of the given family with seed 0.
     pub fn new(kind: TopologyKind, n: usize) -> Self {
         Self { kind, n, seed: 0 }
     }
 
+    /// A schedule with an explicit seed (matters for the randomized kinds).
     pub fn with_seed(kind: TopologyKind, n: usize, seed: u64) -> Self {
         Self { kind, n, seed }
     }
@@ -272,18 +291,22 @@ impl Schedule {
 /// first 30 epochs then 1-peer SGP, or 2-peer then 1-peer.
 #[derive(Clone, Debug)]
 pub struct HybridSchedule {
-    pub phases: Vec<(u64, Schedule)>, // (first iteration of phase, schedule)
+    /// `(first iteration of phase, schedule)`, in ascending order.
+    pub phases: Vec<(u64, Schedule)>,
 }
 
 impl HybridSchedule {
+    /// A single-phase "hybrid" (plain schedule).
     pub fn single(s: Schedule) -> Self {
         Self { phases: vec![(0, s)] }
     }
 
+    /// Two phases switching at iteration `switch_at`.
     pub fn two_phase(first: Schedule, switch_at: u64, second: Schedule) -> Self {
         Self { phases: vec![(0, first), (switch_at, second)] }
     }
 
+    /// The schedule active at iteration `k`.
     pub fn at(&self, k: u64) -> &Schedule {
         let mut cur = &self.phases[0].1;
         for (start, s) in &self.phases {

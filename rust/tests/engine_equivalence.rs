@@ -1,0 +1,248 @@
+//! The parallel execution engine's determinism contract, property-tested:
+//! at a fixed seed, the sharded engine is **bit-identical** to the
+//! sequential engine — parameters, push-sum weights, consensus distance,
+//! in-flight mailboxes, the fault ledger and the fault counters — for
+//! random topologies, random fault plans (drops, rescue, crash/rejoin,
+//! permanent leaves) and shard counts in {1, 2, 7}.
+//!
+//! Same generator style as `prop_invariants.rs`: the offline build has no
+//! proptest, so cases are drawn from seeded [`Pcg`] streams and the
+//! failing case's seed is printed in the assert message.
+
+use sgp::faults::{FaultClock, FaultPlan};
+use sgp::gossip::{ExecPolicy, PushSumEngine};
+use sgp::net::{CommPattern, ComputeModel, LinkModel, OwnedCommPattern, TimingSim};
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+const KINDS: &[TopologyKind] = &[
+    TopologyKind::OnePeerExp,
+    TopologyKind::TwoPeerExp,
+    TopologyKind::Complete,
+    TopologyKind::CompleteCycling,
+    TopologyKind::RandomExp,
+    TopologyKind::RandomAny,
+    TopologyKind::Ring,
+    TopologyKind::BipartiteExp,
+];
+
+const SHARDS: &[usize] = &[1, 2, 7];
+
+fn arb_n(rng: &mut Pcg) -> usize {
+    [2, 3, 5, 8, 13, 16, 32][rng.below(7)]
+}
+
+/// Random fault plan: drop rate, maybe rescue, up to two crashes
+/// (rejoining or permanent).
+fn arb_plan(rng: &mut Pcg, n: usize, horizon: u64, seed: u64) -> FaultPlan {
+    let mut plan = FaultPlan::lossless()
+        .with_drop(rng.f64() * 0.3)
+        .with_rescue(rng.f64() < 0.5)
+        .with_seed(seed);
+    for _ in 0..rng.below(3) {
+        let node = rng.below(n);
+        let at = rng.next_u64() % horizon.max(1);
+        let rejoin = if rng.f64() < 0.5 {
+            Some(at + 1 + rng.next_u64() % horizon.max(1))
+        } else {
+            None
+        };
+        plan = plan.with_crash(node, at, rejoin);
+    }
+    plan
+}
+
+/// Assert the two engines hold exactly the same bits everywhere the
+/// contract covers.
+fn assert_engines_identical(seq: &PushSumEngine, par: &PushSumEngine, tag: &str) {
+    for (i, (a, b)) in seq.states.iter().zip(&par.states).enumerate() {
+        assert_eq!(a.x, b.x, "{tag}: node {i} numerator diverged");
+        assert_eq!(
+            a.w.to_bits(),
+            b.w.to_bits(),
+            "{tag}: node {i} push-sum weight diverged"
+        );
+    }
+    assert_eq!(seq.in_flight(), par.in_flight(), "{tag}: in-flight count");
+    assert_eq!(seq.drop_count, par.drop_count, "{tag}: drop counter");
+    assert_eq!(seq.rescue_count, par.rescue_count, "{tag}: rescue counter");
+    let (dxa, dwa) = seq.dropped_mass();
+    let (dxb, dwb) = par.dropped_mass();
+    assert_eq!(dwa.to_bits(), dwb.to_bits(), "{tag}: dropped w ledger");
+    for (a, b) in dxa.iter().zip(dxb) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: dropped x ledger");
+    }
+    let (ca, cb) = (seq.consensus_distance(), par.consensus_distance());
+    assert_eq!(ca.0.to_bits(), cb.0.to_bits(), "{tag}: consensus mean");
+    assert_eq!(ca.1.to_bits(), cb.1.to_bits(), "{tag}: consensus min");
+    assert_eq!(ca.2.to_bits(), cb.2.to_bits(), "{tag}: consensus max");
+}
+
+#[test]
+fn prop_parallel_engine_bit_identical_clean() {
+    for case in 0..40u64 {
+        let mut rng = Pcg::new(20_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(24);
+        let delay = rng.below(4) as u64;
+        let biased = rng.f64() < 0.2;
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        for &shards in SHARDS {
+            let tag = format!(
+                "case {case}: {kind:?} n={n} dim={dim} delay={delay} \
+                 biased={biased} shards={shards}"
+            );
+            let mut seq = PushSumEngine::new(init.clone(), delay, biased);
+            let mut par = PushSumEngine::new(init.clone(), delay, biased);
+            for k in 0..25 {
+                seq.step_exec(k, &sched, None, ExecPolicy::Sequential);
+                par.step_exec(k, &sched, None, ExecPolicy::parallel(shards));
+            }
+            assert_engines_identical(&seq, &par, &tag);
+            seq.drain();
+            par.drain();
+            assert_engines_identical(&seq, &par, &format!("{tag} (drained)"));
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_engine_bit_identical_under_fault_replay() {
+    for case in 0..40u64 {
+        let mut rng = Pcg::new(21_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(16);
+        let delay = rng.below(3) as u64;
+        let plan = arb_plan(&mut rng, n, 30, case);
+        let clock = FaultClock::new(plan);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        for &shards in SHARDS {
+            let tag = format!(
+                "case {case}: {kind:?} n={n} dim={dim} delay={delay} \
+                 shards={shards} plan={:?}",
+                clock.plan
+            );
+            let mut seq = PushSumEngine::new(init.clone(), delay, false);
+            let mut par = PushSumEngine::new(init.clone(), delay, false);
+            for k in 0..30 {
+                seq.step_exec(k, &sched, Some(&clock), ExecPolicy::Sequential);
+                par.step_exec(k, &sched, Some(&clock), ExecPolicy::parallel(shards));
+            }
+            assert_engines_identical(&seq, &par, &tag);
+            seq.drain();
+            par.drain();
+            assert_engines_identical(&seq, &par, &format!("{tag} (drained)"));
+        }
+    }
+}
+
+#[test]
+fn prop_legacy_step_entrypoints_match_step_exec() {
+    // step()/step_faulty() are thin wrappers over the sharded driver; the
+    // wrappers and the explicit sequential policy must agree exactly.
+    for case in 0..20u64 {
+        let mut rng = Pcg::new(22_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(8);
+        let plan = arb_plan(&mut rng, n, 20, case);
+        let clock = FaultClock::new(plan);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        let mut a = PushSumEngine::new(init.clone(), 1, false);
+        let mut b = PushSumEngine::new(init, 1, false);
+        for k in 0..20 {
+            a.step_faulty(k, &sched, &clock);
+            b.step_exec(k, &sched, Some(&clock), ExecPolicy::Sequential);
+        }
+        assert_engines_identical(&a, &b, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn prop_sharded_timing_sim_bit_identical() {
+    // The sharded arrival computation in the timing recursion merges
+    // partial deadline vectors with f64::max — the clocks must be
+    // bit-identical to the sequential fold for any shard count, with and
+    // without faults. n = 256 crosses the sharding threshold.
+    let n = 256;
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let compute = ComputeModel::resnet50_dgx1();
+    for &drop in &[0.0, 0.1] {
+        let clock = FaultClock::new(
+            FaultPlan::lossless()
+                .with_drop(drop)
+                .with_crash(7, 3, Some(9))
+                .with_seed(3),
+        );
+        let mut seq = TimingSim::new(n, LinkModel::ethernet_10g());
+        let mut par = TimingSim::new(n, LinkModel::ethernet_10g());
+        par.set_shards(4);
+        let mut rng = Pcg::new(11);
+        for k in 0..12u64 {
+            let comp = compute.sample_all(n, &mut rng);
+            let pat = OwnedCommPattern::PushSum {
+                schedule: sched.clone(),
+                bytes: 1 << 20,
+                tau: 1,
+            };
+            let ma = seq.advance_with_faults(&pat.borrowed(), &comp, Some(&clock));
+            let mb = par.advance_with_faults(&pat.borrowed(), &comp, Some(&clock));
+            assert_eq!(ma.to_bits(), mb.to_bits(), "drop={drop} k={k}");
+            for (a, b) in seq.t.iter().zip(&par.t) {
+                assert_eq!(a.to_bits(), b.to_bits(), "drop={drop} k={k}");
+            }
+        }
+        // Clean advance too (no fault clock at all).
+        let mut seq = TimingSim::new(n, LinkModel::ethernet_10g());
+        let mut par = TimingSim::new(n, LinkModel::ethernet_10g());
+        par.set_shards(4);
+        let mut rng = Pcg::new(12);
+        for k in 0..8u64 {
+            let comp = compute.sample_all(n, &mut rng);
+            let pat = CommPattern::PushSum { schedule: &sched, bytes: 1 << 20, tau: 0 };
+            let ma = seq.advance(&pat, &comp);
+            let mb = par.advance(&pat, &comp);
+            assert_eq!(ma.to_bits(), mb.to_bits(), "clean k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_harness_runs_identical_across_engines() {
+    // End-to-end: the offline fault harness (coordinator round protocol,
+    // gossip, timing) must report bit-identical stats whichever engine
+    // executes it.
+    use sgp::faults::harness::{run_quadratic, FaultRunConfig};
+    for case in 0..4u64 {
+        let mut rng = Pcg::new(23_000 + case);
+        let algo = ["sgp", "osgp", "dpsgd", "dasgd"][rng.below(4)];
+        let plan = arb_plan(&mut rng, 8, 40, case).with_drop(0.1);
+        let seq_cfg = FaultRunConfig { n: 8, iters: 40, ..Default::default() };
+        let par_cfg = FaultRunConfig {
+            exec: ExecPolicy::parallel(7),
+            ..seq_cfg.clone()
+        };
+        let a = run_quadratic(algo, &seq_cfg, &plan).unwrap();
+        let b = run_quadratic(algo, &par_cfg, &plan).unwrap();
+        assert_eq!(
+            a.final_err.to_bits(),
+            b.final_err.to_bits(),
+            "case {case}: {algo} final_err"
+        );
+        assert_eq!(
+            a.consensus.to_bits(),
+            b.consensus.to_bits(),
+            "case {case}: {algo} consensus"
+        );
+        assert_eq!(
+            a.makespan.to_bits(),
+            b.makespan.to_bits(),
+            "case {case}: {algo} makespan"
+        );
+    }
+}
