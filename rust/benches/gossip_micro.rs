@@ -13,7 +13,7 @@
 use sgp::algorithms::{AlgoParams, DistributedAlgorithm, RoundCtx, Sgp};
 use sgp::benchkit::{bench, bench_for, black_box, section, JsonReport};
 use sgp::faults::{FaultClock, FaultPlan};
-use sgp::gossip::{ExecPolicy, PushSumEngine};
+use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
 use sgp::net::LinkModel;
 use sgp::optim::OptimKind;
 use sgp::rng::Pcg;
@@ -155,6 +155,46 @@ fn main() {
     match engine_report.write(&engine_path) {
         Ok(()) => println!("\nwrote {}", engine_path.display()),
         Err(e) => eprintln!("\nfailed to write {}: {e}", engine_path.display()),
+    }
+
+    section("compression: encode cost + wire bytes per scheme (n=16)");
+    // The compression scaling curve (ISSUE 4 acceptance): one full gossip
+    // step per scheme at both parameter scales, with the per-iteration
+    // wire bytes attached so the curve pairs CPU cost against byte
+    // reduction (compression trades a little encode CPU for a lot of
+    // simulated bandwidth). Written to results/BENCH_compress.json.
+    let mut compress_report = JsonReport::new();
+    let budget = std::time::Duration::from_secs(1);
+    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+        let n = 16;
+        let full_bytes = 4 * dim;
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for spec in [
+            Compression::Identity,
+            Compression::TopK { den: 16 },
+            Compression::Qsgd { bits: 4 },
+        ] {
+            let mut eng = engine(n, dim, 0);
+            let mut k = 0u64;
+            let stats = bench_for(
+                &format!("compress_step/{}/{tag}/n{n}", spec.label().replace(':', "")),
+                budget,
+                || {
+                    eng.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
+                    k += 1;
+                },
+            );
+            // n messages per step, each at the encoded size.
+            let wire = n as u64 * spec.encoded_bytes(dim, full_bytes) as u64;
+            compress_report.push(stats.with_bytes(wire));
+        }
+    }
+    let compress_path = std::env::var("BENCH_COMPRESS_JSON")
+        .unwrap_or_else(|_| "results/BENCH_compress.json".to_string());
+    let compress_path = std::path::PathBuf::from(compress_path);
+    match compress_report.write(&compress_path) {
+        Ok(()) => println!("\nwrote {}", compress_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", compress_path.display()),
     }
 
     let path = std::env::var("BENCH_JSON")

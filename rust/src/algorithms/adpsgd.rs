@@ -108,20 +108,36 @@ impl DistributedAlgorithm for AdPsgd {
         }
         while let Some(ev) = queue.pop() {
             let i = ev.payload;
+            // A queued event can outlive its node: if the fault clock says
+            // the node is down at `k` but no membership event reached the
+            // `down` mask (e.g. a caller driving the strategy without the
+            // coordinator's event delivery), the stale event must be
+            // dropped — not averaged, not applied, never a panic. Its
+            // snapshot gradient dies with the node.
+            if ctx.faults.is_some_and(|fc| fc.is_down(i, ctx.k)) {
+                self.pending[i] = None;
+                continue;
+            }
             if alive.len() > 1 {
                 // Pairwise average with a uniformly random *live* peer
                 // (atomic in the shared-memory model). With full
                 // membership the skip-self index arithmetic consumes the
                 // RNG exactly like the original uniform draw, so lossless
-                // runs are bit-identical.
-                let pos = alive.binary_search(&i).expect("event node is alive");
+                // runs are bit-identical. An event node missing from the
+                // survivor list is the same staleness case as above:
+                // drop the event instead of panicking.
+                let Ok(pos) = alive.binary_search(&i) else {
+                    self.pending[i] = None;
+                    continue;
+                };
                 let pick = self.rng.below(alive.len() - 1);
                 let j = alive[pick + (pick >= pos) as usize];
-                // A dropped exchange skips the averaging (the stale
-                // gradient below still lands) — AD-PSGD has no mass ledger.
+                // A dropped exchange — or a peer the clock already marks
+                // as departed — skips the averaging (the stale gradient
+                // below still lands); AD-PSGD has no mass ledger.
                 let dropped = ctx
                     .faults
-                    .map(|fc| fc.drops(i, j, ctx.k))
+                    .map(|fc| fc.drops(i, j, ctx.k) || fc.is_down(j, ctx.k))
                     .unwrap_or(false);
                 if !dropped {
                     let (a, b) = if i < j {
@@ -246,6 +262,37 @@ mod tests {
         assert!(alg.clock[3] > alg.clock[0] * 2.0);
         // Every gradient was consumed.
         assert!(alg.pending.iter().all(|p| p.is_none()));
+    }
+
+    #[test]
+    fn stale_event_for_departed_node_is_dropped_not_fired() {
+        // Crash-then-fire: the fault clock marks node 3 down mid-run but
+        // NO membership event is delivered (a caller driving the strategy
+        // without the coordinator). The queued event for the departed
+        // node must be dropped — frozen state, discarded gradient, no
+        // panic — and nobody averages with the corpse.
+        use crate::faults::{FaultClock, FaultPlan};
+        let p = AlgoParams::new(4, vec![0.0f32; 2], OptimKind::Sgd);
+        let mut alg = AdPsgd::new(&p);
+        alg.params[3] = vec![50.0, 50.0];
+        let clock = FaultClock::new(FaultPlan::lossless().with_crash(3, 0, None));
+        let link = LinkModel::ethernet_10g();
+        let comp = [0.1; 4];
+        for k in 0..20 {
+            for i in 0..4 {
+                alg.apply_step(i, &[0.0, 0.0], 0.1);
+            }
+            let ctx = RoundCtx::new(k, &comp, 1 << 10, &link).with_faults(&clock);
+            alg.communicate(&ctx);
+        }
+        assert_eq!(alg.params[3], vec![50.0, 50.0], "departed node frozen");
+        assert!(alg.pending[3].is_none(), "stale gradient discarded");
+        for v in &alg.params[..3] {
+            assert!(
+                v.iter().all(|x| x.abs() < 1e-6),
+                "survivors never pulled mass from the corpse: {v:?}"
+            );
+        }
     }
 
     #[test]

@@ -85,18 +85,23 @@ impl DistributedAlgorithm for DaSgd {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        self.engine.step_exec(ctx.k, &self.schedule, ctx.faults, ctx.exec);
+        self.engine
+            .step_compressed(ctx.k, &self.schedule, ctx.faults, ctx.exec, ctx.compress);
         // Timing staleness is the *message* delay only: the gradient FIFO
         // is node-local and costless, so it earns no extra timing credit.
         OwnedCommPattern::PushSum {
             schedule: self.schedule.clone(),
-            bytes: ctx.msg_bytes,
+            bytes: ctx.wire_bytes(self.engine.dim),
             tau: self.tau,
         }
     }
 
     fn consensus_stats(&self) -> (f64, f64, f64) {
         self.engine.consensus_distance()
+    }
+
+    fn compresses_gossip(&self) -> bool {
+        true
     }
 
     fn drain(&mut self) {

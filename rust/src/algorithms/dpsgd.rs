@@ -82,16 +82,21 @@ impl DistributedAlgorithm for DPsgd {
     }
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
-        self.engine.step_exec(ctx.k, &self.schedule, ctx.faults, ctx.exec);
+        self.engine
+            .step_compressed(ctx.k, &self.schedule, ctx.faults, ctx.exec, ctx.compress);
         OwnedCommPattern::Symmetric {
             schedule: self.schedule.clone(),
-            bytes: ctx.msg_bytes,
+            bytes: ctx.wire_bytes(self.engine.dim),
             handshake: HANDSHAKE,
         }
     }
 
     fn consensus_stats(&self) -> (f64, f64, f64) {
         self.engine.consensus_distance()
+    }
+
+    fn compresses_gossip(&self) -> bool {
+        true
     }
 
     fn drain(&mut self) {

@@ -52,7 +52,7 @@ use anyhow::{bail, Result};
 
 use crate::collectives;
 use crate::faults::{FaultClock, MembershipEvent};
-use crate::gossip::ExecPolicy;
+use crate::gossip::{Compression, ExecPolicy};
 use crate::net::{LinkModel, OwnedCommPattern};
 use crate::optim::OptimKind;
 use crate::topology::TopologyKind;
@@ -80,12 +80,28 @@ pub struct RoundCtx<'a> {
     /// determinism contract), so strategies apply it blindly — no
     /// algorithm-specific branches.
     pub exec: ExecPolicy,
+    /// Message-compression spec for the round's gossip exchange
+    /// ([`Compression::Identity`] by default). Engine-owning strategies
+    /// thread it straight into
+    /// [`crate::gossip::PushSumEngine::step_compressed`] and charge
+    /// [`Self::wire_bytes`] in their timing pattern — again with no
+    /// algorithm-specific branches. Exact-collective strategies (AR-SGD)
+    /// ship dense: an exact average cannot drop coordinates.
+    pub compress: Compression,
 }
 
 impl<'a> RoundCtx<'a> {
     /// A lossless-round context (the common case in tests and benches).
     pub fn new(k: u64, comp: &'a [f64], msg_bytes: usize, link: &'a LinkModel) -> Self {
-        Self { k, comp, msg_bytes, link, faults: None, exec: ExecPolicy::Sequential }
+        Self {
+            k,
+            comp,
+            msg_bytes,
+            link,
+            faults: None,
+            exec: ExecPolicy::Sequential,
+            compress: Compression::Identity,
+        }
     }
 
     /// Attach a fault scenario to the round.
@@ -98,6 +114,19 @@ impl<'a> RoundCtx<'a> {
     pub fn with_exec(mut self, exec: ExecPolicy) -> Self {
         self.exec = exec;
         self
+    }
+
+    /// Set the message-compression spec for the round's gossip exchange.
+    pub fn with_compress(mut self, compress: Compression) -> Self {
+        self.compress = compress;
+        self
+    }
+
+    /// On-wire bytes of one gossip message of `dim` logical coordinates
+    /// under the round's compression spec — what the timing simulator
+    /// should be charged instead of the dense `msg_bytes`.
+    pub fn wire_bytes(&self, dim: usize) -> usize {
+        self.compress.encoded_bytes(dim, self.msg_bytes)
     }
 }
 
@@ -178,6 +207,16 @@ pub trait DistributedAlgorithm {
     /// averaging). The coordinator skips per-node evaluation spreads for
     /// exact strategies.
     fn is_exact(&self) -> bool {
+        false
+    }
+
+    /// Whether this strategy applies [`RoundCtx::compress`] to its
+    /// exchange. Engine-owning gossip strategies return `true`; the
+    /// default is `false` — exact collectives (AR-SGD) must ship dense,
+    /// and AD-PSGD's pairwise exchange is not routed through the push-sum
+    /// engine. Callers use this to report honestly (and warn) when a
+    /// compression spec would be silently ignored.
+    fn compresses_gossip(&self) -> bool {
         false
     }
 
@@ -375,6 +414,31 @@ mod tests {
         assert_eq!(p.tau, 0);
         assert_eq!(build("osgp", &p).unwrap().name(), "1-OSGP");
         assert_eq!(build("dasgd", &p).unwrap().name(), "1-DaSGD");
+    }
+
+    #[test]
+    fn compresses_gossip_marks_exactly_the_engine_strategies() {
+        // Banner honesty depends on this flag: the engine-owning gossip
+        // strategies compress; exact collectives and AD-PSGD ship dense.
+        let p = params(8);
+        for (name, expect) in [
+            ("sgp", true),
+            ("sgp-2p", true),
+            ("osgp", true),
+            ("osgp-biased", true),
+            ("dpsgd", true),
+            ("dasgd", true),
+            ("hybrid-ar-1p", true),
+            ("hybrid-2p-1p", true),
+            ("ar-sgd", false),
+            ("adpsgd", false),
+        ] {
+            assert_eq!(
+                build(name, &p).unwrap().compresses_gossip(),
+                expect,
+                "{name}"
+            );
+        }
     }
 
     #[test]

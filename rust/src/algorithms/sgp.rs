@@ -131,16 +131,21 @@ impl DistributedAlgorithm for Sgp {
 
     fn communicate(&mut self, ctx: &RoundCtx) -> OwnedCommPattern {
         let sched = self.schedule.at(ctx.k);
-        self.engine.step_exec(ctx.k, sched, ctx.faults, ctx.exec);
+        self.engine
+            .step_compressed(ctx.k, sched, ctx.faults, ctx.exec, ctx.compress);
         OwnedCommPattern::PushSum {
             schedule: sched.clone(),
-            bytes: ctx.msg_bytes,
+            bytes: ctx.wire_bytes(self.engine.dim),
             tau: 0,
         }
     }
 
     fn consensus_stats(&self) -> (f64, f64, f64) {
         self.engine.consensus_distance()
+    }
+
+    fn compresses_gossip(&self) -> bool {
+        true
     }
 
     fn drain(&mut self) {

@@ -21,6 +21,19 @@ pub struct BenchStats {
     pub min: Duration,
     /// Slowest iteration.
     pub max: Duration,
+    /// Simulated wire bytes one iteration puts on the network, when the
+    /// bench tracks it (the compression scaling curve pairs ns with
+    /// bytes); `None` for pure-CPU benches.
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchStats {
+    /// Attach the per-iteration wire-byte count (emitted as
+    /// `bytes_per_iter` in the JSON report).
+    pub fn with_bytes(mut self, bytes: u64) -> Self {
+        self.bytes_per_iter = Some(bytes);
+        self
+    }
 }
 
 impl BenchStats {
@@ -77,6 +90,7 @@ pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchSta
         p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
         min: samples[0],
         max: *samples.last().unwrap(),
+        bytes_per_iter: None,
     };
     stats.report();
     stats
@@ -111,9 +125,13 @@ impl JsonReport {
     pub fn to_json(&self) -> String {
         let mut s = String::from("{\n  \"benches\": [\n");
         for (i, b) in self.entries.iter().enumerate() {
+            let bytes = b
+                .bytes_per_iter
+                .map(|v| format!(", \"bytes_per_iter\": {v}"))
+                .unwrap_or_default();
             s.push_str(&format!(
                 "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \
-                 \"median_ns\": {}, \"p95_ns\": {}, \"min_ns\": {}, \"max_ns\": {}}}{}\n",
+                 \"median_ns\": {}, \"p95_ns\": {}, \"min_ns\": {}, \"max_ns\": {}{bytes}}}{}\n",
                 b.name.replace('"', "'"),
                 b.iters,
                 b.mean.as_nanos(),
@@ -165,16 +183,21 @@ mod tests {
             p95: Duration::from_nanos(2000),
             min: Duration::from_nanos(1000),
             max: Duration::from_nanos(3000),
+            bytes_per_iter: None,
         });
-        rep.push(BenchStats {
-            name: "second".into(),
-            iters: 3,
-            mean: Duration::from_micros(2),
-            median: Duration::from_micros(2),
-            p95: Duration::from_micros(2),
-            min: Duration::from_micros(1),
-            max: Duration::from_micros(4),
-        });
+        rep.push(
+            BenchStats {
+                name: "second".into(),
+                iters: 3,
+                mean: Duration::from_micros(2),
+                median: Duration::from_micros(2),
+                p95: Duration::from_micros(2),
+                min: Duration::from_micros(1),
+                max: Duration::from_micros(4),
+                bytes_per_iter: None,
+            }
+            .with_bytes(4096),
+        );
         let parsed = Json::parse(&rep.to_json()).expect("valid JSON");
         let benches = parsed.get("benches").and_then(|b| b.as_arr()).unwrap();
         assert_eq!(benches.len(), 2);
@@ -185,6 +208,12 @@ mod tests {
         assert_eq!(
             benches[0].get("name").and_then(|v| v.as_str()),
             Some("a/b'c")
+        );
+        // bytes_per_iter is emitted only where tracked.
+        assert!(benches[0].get("bytes_per_iter").is_none());
+        assert_eq!(
+            benches[1].get("bytes_per_iter").and_then(|v| v.as_f64()),
+            Some(4096.0)
         );
     }
 }

@@ -1,5 +1,21 @@
 //! Tiny argument parser (the offline build has no clap): subcommand +
-//! `--key value` / `--flag` options with typed getters and error messages.
+//! `--key value` / `--key=value` / `--flag` options with typed getters
+//! and error messages.
+//!
+//! Two foot-guns of the original parser are now hard errors instead of
+//! silent misreads:
+//!
+//! * **duplicates** — a repeated `--opt`/`--flag` used to silently keep
+//!   only the last value; it now errors, naming the option.
+//! * **values that look like flags** — `--opt --val` cannot be told apart
+//!   from two flags, so the space form never consumes a `--`-prefixed
+//!   value (the option is recorded as a bare flag). The explicit form
+//!   `--opt=--val` passes such values, and every typed getter errors —
+//!   with that hint — when it finds a bare flag where a value was
+//!   expected, so the ambiguity can no longer slip through unnoticed.
+//!   The mirror-image misread (`--flag positional` swallowing the
+//!   positional as the flag's value) is caught at the consumer via
+//!   [`Args::flag_strict`].
 
 use std::collections::HashMap;
 
@@ -19,22 +35,24 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of arguments (exclusive of argv[0]).
+    /// Errors on duplicate options/flags; `--opt=--val` is the explicit
+    /// form for values that start with `--`.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
-                    out.opts.insert(k.to_string(), v.to_string());
+                    out.insert_opt(k, v)?;
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    out.opts.insert(name.to_string(), v);
+                    out.insert_opt(name, &v)?;
                 } else {
-                    out.flags.push(name.to_string());
+                    out.insert_flag(name)?;
                 }
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(a);
@@ -43,6 +61,26 @@ impl Args {
             }
         }
         Ok(out)
+    }
+
+    /// Record `--name value`, rejecting duplicates (including a prior
+    /// bare-flag occurrence of the same name).
+    fn insert_opt(&mut self, name: &str, value: &str) -> Result<()> {
+        if self.opts.contains_key(name) || self.flags.iter().any(|f| f == name) {
+            bail!("duplicate option --{name}: given more than once");
+        }
+        self.opts.insert(name.to_string(), value.to_string());
+        Ok(())
+    }
+
+    /// Record a bare `--name`, rejecting duplicates (including a prior
+    /// valued occurrence of the same name).
+    fn insert_flag(&mut self, name: &str) -> Result<()> {
+        if self.flags.iter().any(|f| f == name) || self.opts.contains_key(name) {
+            bail!("duplicate option --{name}: given more than once");
+        }
+        self.flags.push(name.to_string());
+        Ok(())
     }
 
     /// Parse the process arguments.
@@ -55,19 +93,53 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Like [`Self::flag`], but errors if `--name` swallowed a value: a
+    /// schema-free parser reads `--fast table1` as `fast = "table1"`, and
+    /// for a name the caller knows to be boolean that silently discards a
+    /// positional AND the flag. Callers consuming boolean flags should
+    /// prefer this over [`Self::flag`].
+    pub fn flag_strict(&self, name: &str) -> Result<bool> {
+        if let Some(v) = self.get(name) {
+            bail!(
+                "--{name} is a bare flag but was given the value `{v}`; \
+                 if `{v}` is a positional argument, put it before --{name}"
+            );
+        }
+        Ok(self.flag(name))
+    }
+
     /// The value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
-    /// String option with a default.
-    pub fn str_or(&self, name: &str, default: &str) -> String {
-        self.get(name).unwrap_or(default).to_string()
+    /// The value of option `--name`, erroring if `--name` was given as a
+    /// bare flag: that is the `--name --value` ambiguity (the next token
+    /// looked like a flag, so nothing was consumed as the value) — the
+    /// caller expected a value, so surface it with the `=`-form hint
+    /// instead of silently falling back to the default. Every typed
+    /// getter routes through this; prefer it over [`Self::get`] whenever
+    /// the name is value-carrying.
+    pub fn value_of(&self, name: &str) -> Result<Option<&str>> {
+        match self.get(name) {
+            Some(v) => Ok(Some(v)),
+            None if self.flag(name) => bail!(
+                "option --{name} requires a value; use --{name}=<value> \
+                 (the `=` form also passes values that start with `--`)"
+            ),
+            None => Ok(None),
+        }
+    }
+
+    /// String option with a default (error if `--name` was given as a
+    /// bare flag — see [`Self::value_of`]).
+    pub fn str_or(&self, name: &str, default: &str) -> Result<String> {
+        Ok(self.value_of(name)?.unwrap_or(default).to_string())
     }
 
     /// Integer option with a default (error names the offending flag).
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
-        match self.get(name) {
+        match self.value_of(name)? {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
         }
@@ -75,7 +147,7 @@ impl Args {
 
     /// u64 option with a default (error names the offending flag).
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
-        match self.get(name) {
+        match self.value_of(name)? {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
         }
@@ -83,15 +155,15 @@ impl Args {
 
     /// Float option with a default (error names the offending flag).
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
-        match self.get(name) {
+        match self.value_of(name)? {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{name} {v}: not a number")),
         }
     }
 
-    /// Required option (error if absent).
+    /// Required option (error if absent or given as a bare flag).
     pub fn require(&self, name: &str) -> Result<&str> {
-        match self.get(name) {
+        match self.value_of(name)? {
             Some(v) => Ok(v),
             None => bail!("missing required option --{name}"),
         }
@@ -140,5 +212,58 @@ mod tests {
         assert_eq!(a.subcommand.as_deref(), Some("bench"));
         assert_eq!(a.positional, vec!["table1"]);
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn equals_form_passes_values_starting_with_dashes() {
+        let a = parse("run --label=--weird --drop=-0.5");
+        assert_eq!(a.get("label"), Some("--weird"));
+        assert_eq!(a.get("drop"), Some("-0.5"));
+    }
+
+    #[test]
+    fn duplicate_options_and_flags_error() {
+        let dup = |s: &str| Args::parse(s.split_whitespace().map(String::from));
+        assert!(dup("x --nodes 8 --nodes 9").is_err(), "repeated option");
+        assert!(dup("x --nodes=8 --nodes 9").is_err(), "mixed forms");
+        assert!(dup("x --fast --fast").is_err(), "repeated flag");
+        assert!(dup("x --fast --fast=1").is_err(), "flag then option");
+        assert!(dup("x --nodes 8 --fast").is_ok(), "distinct names fine");
+    }
+
+    #[test]
+    fn strict_flag_rejects_a_swallowed_positional() {
+        // `bench --fast table1` reads as `fast = "table1"` (schema-free
+        // parsing cannot know --fast is boolean); flag_strict turns that
+        // silent double-misread (flag lost AND positional lost) into an
+        // error, while genuine flag/option uses pass through.
+        let a = parse("bench --fast table1");
+        assert!(!a.flag("fast"));
+        let err = a.flag_strict("fast").unwrap_err().to_string();
+        assert!(err.contains("positional"), "{err}");
+        assert!(parse("bench table1 --fast").flag_strict("fast").unwrap());
+        assert!(!parse("bench table1").flag_strict("fast").unwrap());
+    }
+
+    #[test]
+    fn bare_flag_errors_when_a_value_is_expected() {
+        // `--nodes --engine par`: `--nodes` is recorded as a bare flag
+        // (the old parser did the same, silently); every typed getter now
+        // refuses to treat it as "absent" and points at the `=` form.
+        let a = parse("train --nodes --engine par");
+        assert!(a.flag("nodes"));
+        let err = a.usize_or("nodes", 4).unwrap_err().to_string();
+        assert!(err.contains("--nodes=<value>"), "{err}");
+        assert!(a.u64_or("nodes", 4).is_err());
+        assert!(a.f64_or("nodes", 4.0).is_err());
+        assert!(a.require("nodes").is_err());
+        assert!(a.str_or("nodes", "x").is_err(), "string getters too");
+        assert!(a.value_of("nodes").is_err());
+        // Genuine flags with no value expectation are untouched.
+        let b = parse("bench --fast");
+        assert!(b.flag("fast"));
+        assert_eq!(b.usize_or("nodes", 4).unwrap(), 4);
+        assert_eq!(b.str_or("model", "mlp").unwrap(), "mlp");
+        assert_eq!(b.value_of("model").unwrap(), None);
     }
 }

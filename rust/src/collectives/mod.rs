@@ -110,9 +110,30 @@ pub fn tree_allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
 }
 
 /// The better of ring/tree for the message size — what a real collective
-/// library's algorithm picker does.
+/// library's algorithm picker does. `bytes` is the on-wire payload per
+/// node; a compressed collective passes its encoded size.
 pub fn allreduce_time(n: usize, bytes: usize, link: &LinkModel) -> f64 {
     ring_allreduce_time(n, bytes, link).min(tree_allreduce_time(n, bytes, link))
+}
+
+/// Time for a compressed-exchange "allreduce": an all-gather of whole
+/// encoded messages, `n − 1` serial ring steps of `enc_bytes` each.
+///
+/// Reduce-scatter — the trick that makes dense ring-allreduce
+/// bandwidth-optimal — needs partial sums to stay the same size as their
+/// inputs, which sparse/quantized encodings do not (the sum of two top-k
+/// messages has up to 2k coordinates). Compressed collectives
+/// (GossipGraD-style exchange) therefore ship whole encoded messages and
+/// reduce at the endpoints: the bandwidth term scales with `n · enc`
+/// instead of `2 · dense`. This is the honest break-even the
+/// compress-sweep exposes — compression must beat a factor `n/2` of
+/// encoding ratio before a compressed collective outruns the dense ring,
+/// whereas every gossip message enjoys the full ratio.
+pub fn compressed_allgather_time(n: usize, enc_bytes: usize, link: &LinkModel) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    (n - 1) as f64 * (link.alpha_s + enc_bytes as f64 / link.beta_bps)
 }
 
 /// Maximum retransmissions per transfer before a collective step gives up
@@ -231,8 +252,31 @@ mod tests {
     fn single_node_costs_nothing() {
         let link = LinkModel::ethernet_10g();
         assert_eq!(allreduce_time(1, 1 << 20, &link), 0.0);
+        assert_eq!(compressed_allgather_time(1, 1 << 20, &link), 0.0);
         let mut rng = Pcg::new(1);
         assert_eq!(allreduce_time_faulty(1, 1 << 20, &link, 0.2, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn compressed_allgather_breaks_even_only_past_n_over_two() {
+        // The structural disadvantage of compressed collectives vs
+        // compressed gossip: the all-gather bandwidth term is n·enc
+        // against the dense ring's ≈ 2·dense, so an 8× encoder wins at
+        // n = 8 (8·enc = dense < 2·dense) but loses at n = 32
+        // (32·enc = 4·dense > 2·dense). Gossip keeps the full 8× at any n.
+        use crate::gossip::Compression;
+        let link = LinkModel::ethernet_10g();
+        let dense = 100 << 20;
+        let enc = Compression::Qsgd { bits: 4 }.encoded_bytes(25 << 20, dense);
+        assert!(enc * 8 <= dense + 8 * 8, "qsgd:4 is ≈ 8× (8-byte header): {enc}");
+        assert!(
+            compressed_allgather_time(8, enc, &link) < ring_allreduce_time(8, dense, &link),
+            "small n: compressed all-gather wins"
+        );
+        assert!(
+            compressed_allgather_time(32, enc, &link) > ring_allreduce_time(32, dense, &link),
+            "large n: the dense ring wins back"
+        );
     }
 
     #[test]

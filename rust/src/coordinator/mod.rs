@@ -27,7 +27,7 @@ use crate::algorithms::{self, AlgoParams, DistributedAlgorithm, RoundCtx};
 use crate::config::TrainConfig;
 use crate::data::{Batch, BigramLm, Blobs, DataSource};
 use crate::faults::{FaultClock, FaultPlan};
-use crate::gossip::ExecPolicy;
+use crate::gossip::{Compression, ExecPolicy};
 use crate::metrics::{EvalRecord, IterRecord, RunResult};
 use crate::net::TimingSim;
 use crate::rng::Pcg;
@@ -56,6 +56,7 @@ pub struct TrainerBuilder<'rt> {
     custom: Option<Box<dyn DistributedAlgorithm>>,
     faults: Option<FaultPlan>,
     exec: ExecPolicy,
+    compress: Compression,
 }
 
 impl<'rt> TrainerBuilder<'rt> {
@@ -72,6 +73,7 @@ impl<'rt> TrainerBuilder<'rt> {
             custom: None,
             faults: None,
             exec: ExecPolicy::Sequential,
+            compress: Compression::Identity,
         }
     }
 
@@ -136,6 +138,17 @@ impl<'rt> TrainerBuilder<'rt> {
     /// ARCHITECTURE.md §Determinism).
     pub fn engine(mut self, exec: ExecPolicy) -> Self {
         self.exec = exec;
+        self
+    }
+
+    /// Compress the gossip messages of the run ([`Compression::parse`]
+    /// accepts the CLI spellings `topk:D` / `qsgd:B`). Gossip strategies
+    /// encode every outgoing share against per-edge error-feedback
+    /// residuals and the timing simulator is charged the actual encoded
+    /// bytes; exact-collective strategies (AR-SGD) ship dense. The
+    /// default is [`Compression::Identity`].
+    pub fn compressor(mut self, compress: Compression) -> Self {
+        self.compress = compress;
         self
     }
 
@@ -227,6 +240,7 @@ impl<'rt> TrainerBuilder<'rt> {
             dim,
             faults,
             exec: self.exec,
+            compress: self.compress,
         })
     }
 }
@@ -247,6 +261,7 @@ pub struct Trainer<'rt> {
     dim: usize,
     faults: Option<FaultClock>,
     exec: ExecPolicy,
+    compress: Compression,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -334,6 +349,7 @@ impl<'rt> Trainer<'rt> {
                 link: &cfg.link,
                 faults: self.faults.as_ref(),
                 exec: self.exec,
+                compress: self.compress,
             };
             let pattern = self.algo.communicate(&ctx);
             let sim_now = timing.advance_with_faults(

@@ -201,11 +201,7 @@ impl BigramLm {
         };
         let u = rng.f64();
         let base = row * self.vocab;
-        // Binary search in the cumulative row.
-        let slice = &self.cum[base..base + self.vocab];
-        match slice.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
-            Ok(i) | Err(i) => i.min(self.vocab - 1),
-        }
+        pick_token(&self.cum[base..base + self.vocab], u)
     }
 
     fn gen_batch(&self, node_shift: usize, rng: &mut Pcg) -> Batch {
@@ -242,6 +238,19 @@ impl BigramLm {
             })
             .collect()
     }
+}
+
+/// The token a uniform draw `u ∈ [0, 1)` selects from a nondecreasing
+/// cumulative row: the smallest index whose cumulative mass **strictly
+/// exceeds** `u`. Token `i`'s probability mass is `[cum[i-1], cum[i])`, so
+/// an exact hit `u == cum[i]` belongs to token `i + 1` — the boundary the
+/// old `binary_search(…).unwrap()` implementation got wrong (and panicked
+/// on NaN for). `partition_point` never panics: an unordered (NaN)
+/// comparison simply reads as "not ≤ u" and the final clamp keeps the
+/// index in range on degenerate rows.
+fn pick_token(cum_row: &[f64], u: f64) -> usize {
+    let i = cum_row.partition_point(|&p| p <= u);
+    i.min(cum_row.len().saturating_sub(1))
 }
 
 /// Unified source used by the trainer.
@@ -387,6 +396,61 @@ mod tests {
         }
         let top: usize = follow.iter().sum();
         assert!(top as f64 / total as f64 > 0.25, "{top}/{total}");
+    }
+
+    #[test]
+    fn pick_token_boundary_and_degenerate_rows() {
+        let cum = [0.25, 0.5, 0.75, 1.0];
+        // An exact CDF hit belongs to the NEXT token: u ∈ [0, 0.25) is
+        // token 0, so u == 0.25 is the first draw of token 1's mass.
+        assert_eq!(pick_token(&cum, 0.25), 1);
+        assert_eq!(pick_token(&cum, 0.5), 2);
+        assert_eq!(pick_token(&cum, 0.75), 3);
+        // Interior draws pick the bracketing token.
+        assert_eq!(pick_token(&cum, 0.0), 0);
+        assert_eq!(pick_token(&cum, 0.24), 0);
+        assert_eq!(pick_token(&cum, 0.26), 1);
+        assert_eq!(pick_token(&cum, 0.999), 3);
+        // Agreement with the linear-scan definition on a fine grid.
+        for step in 0..1000 {
+            let u = step as f64 / 1000.0;
+            let linear = cum.iter().position(|&p| p > u).unwrap_or(cum.len() - 1);
+            assert_eq!(pick_token(&cum, u), linear, "u={u}");
+        }
+        // NaN / degenerate rows never panic and stay in range.
+        assert_eq!(pick_token(&[f64::NAN; 4], 0.3), 0);
+        assert_eq!(pick_token(&[0.5, f64::NAN, f64::NAN, 1.0], 0.9), 1);
+        assert_eq!(pick_token(&[1.0], 0.7), 0);
+    }
+
+    #[test]
+    fn lm_sampled_distribution_matches_transition_row() {
+        // Regression pin for the sampler: empirical successor frequencies
+        // of one source token must match the cumulative row's implied
+        // probabilities (the old exact-hit bug systematically shifted
+        // boundary mass to the wrong token).
+        let l = BigramLm::new(16, 1, 1, 1, 0.0, 9);
+        let src = 3usize;
+        let probs: Vec<f64> = (0..16)
+            .map(|w| {
+                let hi = l.cum[src * 16 + w];
+                let lo = if w == 0 { 0.0 } else { l.cum[src * 16 + w - 1] };
+                hi - lo
+            })
+            .collect();
+        let mut counts = vec![0usize; 16];
+        let mut rng = Pcg::new(123);
+        let trials = 60_000;
+        for _ in 0..trials {
+            counts[l.next_token(src, 0, &mut rng)] += 1;
+        }
+        for (w, (&c, &p)) in counts.iter().zip(&probs).enumerate() {
+            let f = c as f64 / trials as f64;
+            assert!(
+                (f - p).abs() < 0.01,
+                "successor {w}: empirical {f:.4} vs row {p:.4}"
+            );
+        }
     }
 
     #[test]

@@ -9,9 +9,9 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::coordinator::TrainerBuilder;
-use crate::faults::harness::{run_quadratic, FaultRunConfig};
+use crate::faults::harness::{run_quadratic, FaultRunConfig, FaultRunStats};
 use crate::faults::{Crash, FaultPlan};
-use crate::gossip::{ExecPolicy, PushSumEngine};
+use crate::gossip::{Compression, ExecPolicy, PushSumEngine};
 use crate::metrics::{self, print_table, RunResult};
 use crate::net::{self, ComputeModel, LinkModel, OwnedCommPattern};
 use crate::optim::LrSchedule;
@@ -575,6 +575,10 @@ pub struct FaultSweep {
     /// `--shards`); bit-identical across policies, so it only changes the
     /// sweep's wall-clock.
     pub exec: ExecPolicy,
+    /// Gossip message compression applied at every fault level
+    /// (`--compress`); the loss/churn machinery composes with the
+    /// error-feedback residuals unchanged.
+    pub compress: Compression,
 }
 
 impl FaultSweep {
@@ -597,6 +601,7 @@ impl FaultSweep {
                 vec!["ar-sgd".into(), "dpsgd".into(), "sgp".into(), "osgp".into()]
             },
             exec: ExecPolicy::Sequential,
+            compress: Compression::Identity,
         }
     }
 }
@@ -611,6 +616,7 @@ pub fn faults_sweep(sweep: &FaultSweep) -> Result<()> {
         iters: sweep.iters,
         seed: sweep.seed,
         exec: sweep.exec,
+        compress: sweep.compress,
         ..Default::default()
     };
     let mut rows = Vec::new();
@@ -667,10 +673,15 @@ pub fn faults_sweep(sweep: &FaultSweep) -> Result<()> {
     } else {
         format!(", {} crash(es)", sweep.crashes.len())
     };
+    let compress_note = if sweep.compress.is_identity() {
+        String::new()
+    } else {
+        format!(", {} compression", sweep.compress.label())
+    };
     print_table(
         &format!(
             "Robustness — final error / consensus / makespan vs message loss \
-             (n = {}, {} iters{crash_note}{})",
+             (n = {}, {} iters{crash_note}{}{compress_note})",
             sweep.n,
             sweep.iters,
             if sweep.rescue { ", rescue on" } else { "" }
@@ -795,6 +806,195 @@ pub fn engine_sweep(cfg: &EngineSweep) -> Result<()> {
         divergences.is_empty(),
         "parallel engine diverged from sequential at {divergences:?} \
          (n, shards) — determinism contract violated"
+    );
+    Ok(())
+}
+
+// ===========================================================================
+// Compression sweep: wire-byte reduction × heterogeneity, offline
+// ===========================================================================
+
+/// What `repro compress-sweep` measures: for each compression scheme ×
+/// gradient-heterogeneity level, the wire-byte reduction, the final-error
+/// delta against uncompressed SGP, and the simulated makespan — plus a
+/// built-in bit-identity check of compressed runs across engine shard
+/// counts (the determinism contract extended to compression). Fully
+/// offline (quadratic harness, no HLO artifacts).
+#[derive(Clone, Debug)]
+pub struct CompressSweep {
+    /// Compression schemes to sweep (the uncompressed baseline is always
+    /// run and need not be listed).
+    pub schemes: Vec<Compression>,
+    /// Heterogeneity levels ζ of the node-local quadratics.
+    pub hets: Vec<f64>,
+    /// Number of simulated nodes.
+    pub n: usize,
+    /// Rounds per run.
+    pub iters: u64,
+    /// Dimension of the per-node quadratic (also the logical coordinate
+    /// count the wire format packs indices for).
+    pub dim: usize,
+    /// Seed of the deterministic run.
+    pub seed: u64,
+    /// Shard counts of the bit-identity check (`1` = the sequential
+    /// reference itself).
+    pub shards: Vec<usize>,
+}
+
+impl CompressSweep {
+    /// Default sweep shape (`fast` = the CI smoke configuration).
+    pub fn new(fast: bool) -> Self {
+        Self {
+            schemes: if fast {
+                vec![Compression::TopK { den: 16 }, Compression::Qsgd { bits: 4 }]
+            } else {
+                vec![
+                    Compression::TopK { den: 4 },
+                    Compression::TopK { den: 16 },
+                    Compression::Qsgd { bits: 8 },
+                    Compression::Qsgd { bits: 4 },
+                ]
+            },
+            hets: if fast { vec![0.5] } else { vec![0.25, 0.5, 0.75] },
+            n: 32,
+            iters: if fast { 150 } else { 300 },
+            dim: 256,
+            seed: 1,
+            shards: vec![1, 2, 7],
+        }
+    }
+}
+
+/// Run the compression sweep: per `(scheme, heterogeneity)`, byte
+/// reduction / final error vs dense / consensus / makespan speedup, then
+/// the cross-shard bit-identity check at the first heterogeneity level.
+/// Writes `results/compress_sweep.csv`; fails if any compressed run
+/// diverges across shard counts.
+pub fn compress_sweep(sweep: &CompressSweep) -> Result<()> {
+    let cfg = |h: f64, c: Compression, exec: ExecPolicy| FaultRunConfig {
+        n: sweep.n,
+        iters: sweep.iters,
+        dim: sweep.dim,
+        seed: sweep.seed,
+        heterogeneity: h,
+        compress: c,
+        exec,
+        ..Default::default()
+    };
+    let full_bytes = FaultRunConfig::default().msg_bytes;
+    let mut rows = Vec::new();
+    let mut csv = String::from(
+        "scheme,heterogeneity,full_bytes,encoded_bytes,reduction,\
+         final_loss,loss_vs_dense_pct,final_err,consensus,makespan_s,speedup\n",
+    );
+    // Sequential per-scheme stats at the first heterogeneity level,
+    // cached so the determinism check below does not redo those runs.
+    let mut seq_at_h0: Vec<(Compression, FaultRunStats)> = Vec::new();
+    for &h in &sweep.hets {
+        let dense = run_quadratic(
+            "sgp",
+            &cfg(h, Compression::Identity, ExecPolicy::Sequential),
+            &FaultPlan::lossless(),
+        )?;
+        let mut push = |label: String, enc: usize, s: &FaultRunStats| {
+            let reduction = full_bytes as f64 / enc as f64;
+            // Guarded denominator: at ζ = 0 every node shares one
+            // objective and the dense loss collapses to ~0 — a raw ratio
+            // would print astronomically scaled noise.
+            let loss_delta = 100.0 * (s.final_loss - dense.final_loss)
+                / dense.final_loss.max(1e-9);
+            csv.push_str(&format!(
+                "{label},{h},{full_bytes},{enc},{reduction:.3},{:.6},{loss_delta:.3},{:.6},{:.6e},{:.2},{:.3}\n",
+                s.final_loss,
+                s.final_err,
+                s.consensus,
+                s.makespan,
+                dense.makespan / s.makespan
+            ));
+            rows.push(vec![
+                label,
+                format!("{h}"),
+                format!("{reduction:.1}×"),
+                format!("{:.4}", s.final_loss),
+                format!("{loss_delta:+.3}%"),
+                format!("{:.3e}", s.consensus),
+                metrics::hours(s.makespan),
+                format!("{:.2}×", dense.makespan / s.makespan),
+            ]);
+        };
+        push("none".into(), full_bytes, &dense);
+        for &scheme in &sweep.schemes {
+            let s = run_quadratic(
+                "sgp",
+                &cfg(h, scheme, ExecPolicy::Sequential),
+                &FaultPlan::lossless(),
+            )?;
+            push(scheme.label(), scheme.encoded_bytes(sweep.dim, full_bytes), &s);
+            if Some(&h) == sweep.hets.first() {
+                seq_at_h0.push((scheme, s));
+            }
+        }
+    }
+
+    // Determinism check: every compressed run must be bit-identical
+    // across engine shard counts — the contract the parallel engine
+    // extends to compression (error-feedback residuals are sender-owned,
+    // quantization noise is keyed by (iteration, edge)). The sequential
+    // references were already computed by the sweep loop above.
+    let h = sweep.hets.first().copied().unwrap_or(0.5);
+    let mut divergences = Vec::new();
+    for &scheme in &sweep.schemes {
+        let base = match seq_at_h0.iter().find(|(sc, _)| *sc == scheme) {
+            Some((_, s)) => s.clone(),
+            None => run_quadratic(
+                "sgp",
+                &cfg(h, scheme, ExecPolicy::Sequential),
+                &FaultPlan::lossless(),
+            )?,
+        };
+        for &shards in &sweep.shards {
+            if shards <= 1 {
+                continue;
+            }
+            let par = run_quadratic(
+                "sgp",
+                &cfg(h, scheme, ExecPolicy::parallel(shards)),
+                &FaultPlan::lossless(),
+            )?;
+            let identical = base.final_err.to_bits() == par.final_err.to_bits()
+                && base.final_loss.to_bits() == par.final_loss.to_bits()
+                && base.consensus.to_bits() == par.consensus.to_bits()
+                && base.makespan.to_bits() == par.makespan.to_bits();
+            if !identical {
+                divergences.push((scheme.label(), shards));
+            }
+            rows.push(vec![
+                scheme.label(),
+                format!("{h}"),
+                "-".into(),
+                format!("{:.4}", par.final_loss),
+                format!("shards={shards}"),
+                "-".into(),
+                "-".into(),
+                if identical { "bit-identical".into() } else { "DIVERGED".into() },
+            ]);
+        }
+    }
+
+    std::fs::write(results_dir().join("compress_sweep.csv"), csv)?;
+    print_table(
+        &format!(
+            "Compressed gossip — byte reduction × heterogeneity \
+             (SGP, n = {}, dim = {}, {} iters; dense baseline per ζ)",
+            sweep.n, sweep.dim, sweep.iters
+        ),
+        &["scheme", "ζ", "reduction", "loss", "vs dense", "consensus", "makespan", "speedup"],
+        &rows,
+    );
+    anyhow::ensure!(
+        divergences.is_empty(),
+        "compressed runs diverged across shard counts at {divergences:?} \
+         — determinism contract violated"
     );
     Ok(())
 }

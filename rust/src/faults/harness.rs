@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use crate::algorithms::{self, AlgoParams, RoundCtx};
-use crate::gossip::ExecPolicy;
+use crate::gossip::{Compression, ExecPolicy};
 use crate::net::{ComputeModel, LinkModel, TimingSim};
 use crate::optim::OptimKind;
 use crate::rng::Pcg;
@@ -43,6 +43,16 @@ pub struct FaultRunConfig {
     /// Execution policy for the per-round state updates (bit-identical
     /// across policies — the sweep's numbers do not depend on it).
     pub exec: ExecPolicy,
+    /// Gossip message compression (top-k / quantized with error
+    /// feedback); [`Compression::Identity`] ships dense.
+    pub compress: Compression,
+    /// Gradient-heterogeneity knob ζ ∈ [0, 1]: each node's quadratic
+    /// center is pulled toward the shared mean center by `1 − ζ`
+    /// (`c_i = mean + ζ·(raw_i − mean)`). The default 1.0 reproduces the
+    /// original independent-center draws **bit-exactly** (the raw draws
+    /// are used untouched), so existing sweeps and their regression
+    /// baselines are unchanged.
+    pub heterogeneity: f64,
 }
 
 impl Default for FaultRunConfig {
@@ -57,6 +67,8 @@ impl Default for FaultRunConfig {
             compute: ComputeModel::resnet50_dgx1(),
             seed: 1,
             exec: ExecPolicy::Sequential,
+            compress: Compression::Identity,
+            heterogeneity: 1.0,
         }
     }
 }
@@ -69,10 +81,42 @@ pub struct FaultRunStats {
     /// ‖x̄ − x*‖ over the surviving members (distance of the consensus
     /// model from the optimum of the full objective).
     pub final_err: f64,
+    /// Training loss of the consensus model over the full objective,
+    /// `(1/n) Σᵢ ½‖x̄ − cᵢ‖²` — the harness analogue of "final loss"; its
+    /// floor is the irreducible spread `(1/n) Σᵢ ½‖x* − cᵢ‖²`, so
+    /// relative comparisons between runs are meaningful.
+    pub final_loss: f64,
     /// Mean consensus distance ‖z_i − x̄‖ over surviving members.
     pub consensus: f64,
     /// Simulated makespan of the whole run (seconds).
     pub makespan: f64,
+}
+
+/// Pull each raw center toward the shared mean by `1 − zeta` (the
+/// heterogeneity knob). `zeta ≥ 1` returns the raw draws untouched —
+/// bit-exact with the pre-knob behaviour, which fixed-seed regression
+/// baselines depend on.
+fn blend_centers(raw: Vec<Vec<f32>>, zeta: f64) -> Vec<Vec<f32>> {
+    if zeta >= 1.0 || raw.is_empty() {
+        return raw;
+    }
+    let zeta = zeta.max(0.0);
+    let n = raw.len() as f64;
+    let dim = raw[0].len();
+    let mut mean = vec![0.0f64; dim];
+    for c in &raw {
+        for (m, v) in mean.iter_mut().zip(c) {
+            *m += *v as f64 / n;
+        }
+    }
+    raw.into_iter()
+        .map(|c| {
+            c.iter()
+                .zip(&mean)
+                .map(|(v, m)| (m + zeta * (*v as f64 - m)) as f32)
+                .collect()
+        })
+        .collect()
 }
 
 /// Run `algo_name` on the node-local quadratics under `plan`; fully
@@ -83,7 +127,8 @@ pub fn run_quadratic(
     plan: &FaultPlan,
 ) -> Result<FaultRunStats> {
     let mut rng = Pcg::new(cfg.seed);
-    let centers: Vec<Vec<f32>> = (0..cfg.n).map(|_| rng.gaussian_vec(cfg.dim)).collect();
+    let raw: Vec<Vec<f32>> = (0..cfg.n).map(|_| rng.gaussian_vec(cfg.dim)).collect();
+    let centers = blend_centers(raw, cfg.heterogeneity);
     let mut opt = vec![0.0f64; cfg.dim];
     for c in &centers {
         for (o, v) in opt.iter_mut().zip(c) {
@@ -117,7 +162,8 @@ pub fn run_quadratic(
         let comp = cfg.compute.sample_all(cfg.n, &mut comp_rng);
         let ctx = RoundCtx::new(k, &comp, cfg.msg_bytes, &cfg.link)
             .with_faults(&clock)
-            .with_exec(cfg.exec);
+            .with_exec(cfg.exec)
+            .with_compress(cfg.compress);
         let pattern = algo.communicate(&ctx);
         timing.advance_with_faults(&pattern.borrowed(), &comp, Some(&clock));
     }
@@ -140,6 +186,20 @@ pub fn run_quadratic(
         .map(|(a, o)| (a - o) * (a - o))
         .sum::<f64>()
         .sqrt();
+    let final_loss = centers
+        .iter()
+        .map(|c| {
+            0.5 * mean
+                .iter()
+                .zip(c)
+                .map(|(a, b)| {
+                    let e = a - *b as f64;
+                    e * e
+                })
+                .sum::<f64>()
+        })
+        .sum::<f64>()
+        / cfg.n as f64;
     let consensus = views
         .iter()
         .map(|v| {
@@ -157,6 +217,7 @@ pub fn run_quadratic(
     Ok(FaultRunStats {
         algo: algo.name(),
         final_err,
+        final_loss,
         consensus,
         makespan: timing.makespan(),
     })
@@ -176,6 +237,77 @@ mod tests {
             // heterogeneity) ≈ 0.2–0.35 here; exact strategies report 0.
             assert!(s.consensus < 0.5, "{algo}: consensus {}", s.consensus);
             assert!(s.makespan > 0.0);
+        }
+    }
+
+    #[test]
+    fn full_heterogeneity_is_bit_exact_with_the_raw_draws() {
+        // ζ = 1.0 must not even round-trip the centers through the blend
+        // arithmetic — the fixed-seed fault baselines depend on it.
+        let a = run_quadratic(
+            "sgp",
+            &FaultRunConfig { n: 8, iters: 40, ..Default::default() },
+            &FaultPlan::lossless(),
+        )
+        .unwrap();
+        let b = run_quadratic(
+            "sgp",
+            &FaultRunConfig { n: 8, iters: 40, heterogeneity: 1.0, ..Default::default() },
+            &FaultPlan::lossless(),
+        )
+        .unwrap();
+        assert_eq!(a.final_err.to_bits(), b.final_err.to_bits());
+        assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
+    }
+
+    #[test]
+    fn heterogeneity_knob_scales_the_gradient_dissimilarity() {
+        let run = |h: f64| {
+            run_quadratic(
+                "sgp",
+                &FaultRunConfig { n: 8, iters: 100, heterogeneity: h, ..Default::default() },
+                &FaultPlan::lossless(),
+            )
+            .unwrap()
+        };
+        // The consensus equilibrium is O(lr · ζ): quartering ζ must
+        // visibly shrink it, and ζ = 0 (identical objectives) collapses it.
+        let (h0, h25, h100) = (run(0.0), run(0.25), run(1.0));
+        assert!(h25.consensus < h100.consensus * 0.6, "{} vs {}", h25.consensus, h100.consensus);
+        assert!(h0.consensus < h100.consensus * 1e-2, "{}", h0.consensus);
+    }
+
+    #[test]
+    fn compressed_sgp_tracks_dense_within_five_percent() {
+        // The compress-sweep acceptance pin, at its default shape: top-k
+        // 1/16 (≥ 8× fewer wire bytes) and qsgd:4 both keep the final
+        // consensus-model loss within 5% of uncompressed SGP at
+        // heterogeneity 0.5 — the error-feedback bank delivers the
+        // withheld `(x, w)` mass instead of biasing the fix point (an
+        // equivalent offline simulation of these dynamics puts topk:16 at
+        // ≈ +2% for n = 32 and qsgd:4 at ≈ +0.001%).
+        let cfg = |c: Compression| FaultRunConfig {
+            n: 32,
+            dim: 256,
+            iters: 300,
+            heterogeneity: 0.5,
+            compress: c,
+            ..Default::default()
+        };
+        let dense = run_quadratic("sgp", &cfg(Compression::Identity), &FaultPlan::lossless())
+            .unwrap();
+        for spec in [Compression::TopK { den: 16 }, Compression::Qsgd { bits: 4 }] {
+            let c = run_quadratic("sgp", &cfg(spec), &FaultPlan::lossless()).unwrap();
+            let rel = (c.final_loss - dense.final_loss).abs() / dense.final_loss;
+            assert!(
+                rel <= 0.05,
+                "{spec:?}: loss {} vs dense {} ({:.2}% off)",
+                c.final_loss,
+                dense.final_loss,
+                100.0 * rel
+            );
+            // Fewer wire bytes ⇒ strictly smaller simulated makespan.
+            assert!(c.makespan < dense.makespan, "{spec:?} must be faster");
         }
     }
 

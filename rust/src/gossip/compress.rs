@@ -1,0 +1,504 @@
+//! Message compression for push-sum gossip: top-k sparsification and
+//! stochastic b-bit quantization with **per-edge error-feedback
+//! residuals** (the GossipGraD / GoSGD axis — communication-efficient
+//! gossip exchange).
+//!
+//! A [`Compression`] spec describes how the pre-weighted numerator share
+//! `x · w_mix` of one push-sum message is encoded before it goes on the
+//! wire. The scalar push-sum weight is never *lossily* encoded (8 exact
+//! bytes against megabytes of payload) — but it is **split** in
+//! proportion to the numerator mass actually delivered, so each
+//! message's `(x, w)` pair stays self-consistent and the de-biasing
+//! `z = x / w` survives aggressive sparsification (see below).
+//!
+//! # Error feedback, and why the push-sum weight must trickle with it
+//!
+//! Compressing a share discards numerator mass; dropping it on the floor
+//! would break the Σx conservation law the engine's proptests pin. Every
+//! directed edge `(i → j)` therefore carries a bank `(r_{ij}, ρ_{ij})` of
+//! withheld numerator *and* withheld push-sum weight:
+//!
+//! ```text
+//! acc   = payload + r_ij            # numerator the edge owes
+//! acc_w = w_share + ρ_ij            # weight the edge owes
+//! c     = C(acc)                    # top-k / quantized encoding
+//! φ     = min(1, ‖c‖₁ / ‖acc‖₁)     # fraction of the mass delivered
+//! send (c, φ·acc_w); bank r_ij ← acc − c, ρ_ij ← (1 − φ)·acc_w
+//! ```
+//!
+//! The φ-split is what makes *aggressive* sparsification compatible with
+//! de-biasing: a top-k message at 1/16 density ships ~a fraction of the
+//! numerator share — if the full weight share rode along anyway, every
+//! receiver's `z = x / w` would collapse toward zero and consensus
+//! diverges (measurably: ~50× the dense consensus error in this repo's
+//! harness). Splitting `w` in proportion to the delivered ℓ1 mass keeps
+//! each message's `(x, w)` pair self-consistent; the banked remainder is
+//! exactly a **virtual delayed node** in the push-sum sense — mass that
+//! joins the mix a few rounds late, which push-sum provably tolerates.
+//!
+//! The classic EF recursion then guarantees mass is *delayed*, never
+//! lost: `Σ states + Σ in-flight + Σ banks (+ ledgered drops)` is
+//! invariant for both Σx and Σw, and
+//! [`crate::gossip::PushSumEngine::drain`] re-absorbs outstanding banks
+//! at the sender so end-of-run metrics account for every unit of mass.
+//!
+//! # Determinism
+//!
+//! Top-k selection is a pure function of the accumulated share (ties
+//! broken by ascending coordinate via `total_cmp`), and the stochastic
+//! quantization draws come from a [`Pcg`] stream keyed by
+//! `(iteration, from, to)` only — never by call order — so the sequential
+//! and sharded engines produce bit-identical results at a fixed seed
+//! (`rust/tests/engine_equivalence.rs` extends the contract to
+//! compression; see ARCHITECTURE.md §2).
+//!
+//! # Wire format (byte accounting)
+//!
+//! [`Compression::encoded_bytes`] is what the timing layer charges:
+//!
+//! * top-k — per kept coordinate one fp32 value plus a bit-packed index of
+//!   `⌈log2 dim⌉` bits, plus an 8-byte header (count + scale);
+//! * qsgd — `b` bits per coordinate (sign + magnitude level) packed,
+//!   plus an 8-byte header carrying the fp32 norm scale;
+//! * identity — the dense payload, unchanged.
+//!
+//! The byte count is a pure function of `(scheme, dim, full_bytes)` —
+//! independent of the values — so makespans stay deterministic.
+
+use crate::rng::Pcg;
+
+/// Fixed per-message header: element count / scale factor the decoder
+/// needs (8 bytes for every non-identity scheme).
+const HEADER_BYTES: usize = 8;
+
+/// How one push-sum message payload is encoded on the wire.
+///
+/// ```
+/// use sgp::gossip::Compression;
+///
+/// let topk = Compression::parse("topk:16").unwrap();
+/// let q4 = Compression::parse("qsgd:4").unwrap();
+/// // 100 MiB dense message over 22k logical coordinates:
+/// let full = 100 << 20;
+/// assert!(full / topk.encoded_bytes(22_026, full) >= 8, "≥8× reduction");
+/// assert!(full / q4.encoded_bytes(22_026, full) >= 7);
+/// assert_eq!(Compression::Identity.encoded_bytes(22_026, full), full);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Compression {
+    /// No compression: the dense fp32 payload ships as-is (the default).
+    #[default]
+    Identity,
+    /// Top-k sparsification: keep the `⌈dim / den⌉` largest-magnitude
+    /// coordinates of the accumulated share (density `1/den`), ship them
+    /// as bit-packed `(index, value)` pairs.
+    TopK {
+        /// Density denominator: keep 1-in-`den` coordinates (≥ 1).
+        den: u32,
+    },
+    /// QSGD-style stochastic `bits`-bit quantization: each coordinate is
+    /// rounded to one of `2^(bits−1) − 1` magnitude levels of the share's
+    /// ∞-norm plus a sign, randomly up or down so the expectation is
+    /// exact. Sign + magnitude together fit the advertised `bits` per
+    /// coordinate exactly (`2·(2^(bits−1) − 1) + 1 < 2^bits` symbols), so
+    /// the byte accounting never undercounts the alphabet.
+    Qsgd {
+        /// Bits per coordinate, sign included (2..=16).
+        bits: u8,
+    },
+}
+
+impl Compression {
+    /// Parse a CLI spec: `none`/`identity`, `topk:D` (keep 1-in-D
+    /// coordinates) or `qsgd:B` (B bits per coordinate).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" | "identity" | "off" => return Some(Self::Identity),
+            _ => {}
+        }
+        let (scheme, arg) = s.split_once(':')?;
+        match scheme {
+            "topk" => {
+                let den: u32 = arg.parse().ok()?;
+                (den >= 1).then_some(Self::TopK { den })
+            }
+            "qsgd" => {
+                let bits: u8 = arg.parse().ok()?;
+                // ≥ 2: one bit is the sign, so at least one magnitude bit
+                // must remain.
+                (2..=16).contains(&bits).then_some(Self::Qsgd { bits })
+            }
+            _ => None,
+        }
+    }
+
+    /// Short human label (`"none"`, `"topk:16"`, `"qsgd:4"`).
+    pub fn label(&self) -> String {
+        match *self {
+            Self::Identity => "none".to_string(),
+            Self::TopK { den } => format!("topk:{den}"),
+            Self::Qsgd { bits } => format!("qsgd:{bits}"),
+        }
+    }
+
+    /// Whether this spec is the identity (fast-path check: no residuals,
+    /// no per-edge work).
+    pub fn is_identity(&self) -> bool {
+        matches!(self, Self::Identity)
+    }
+
+    /// Coordinates kept per message for a `dim`-element share (top-k
+    /// density rounded up, never below 1; `dim` for the dense schemes).
+    pub fn kept(&self, dim: usize) -> usize {
+        match *self {
+            Self::TopK { den } => dim.div_ceil(den as usize).max(1).min(dim),
+            _ => dim,
+        }
+    }
+
+    /// On-wire bytes of one message whose dense fp32 payload is
+    /// `full_bytes` over `dim` logical coordinates. Pure function of the
+    /// spec — values never change the size, so timing stays
+    /// deterministic. `full_bytes` is the simulator's model-scale message
+    /// size; the encoded size scales it by the scheme's bits-per-
+    /// coordinate ratio (32 bits dense).
+    pub fn encoded_bytes(&self, dim: usize, full_bytes: usize) -> usize {
+        let d = dim.max(1) as u128;
+        match *self {
+            Self::Identity => full_bytes,
+            Self::TopK { .. } => {
+                let k = self.kept(dim.max(1)) as u128;
+                // Bit-packed index: ⌈log2 dim⌉ bits (min 1) + fp32 value.
+                let idx_bits = (u128::BITS - (d - 1).max(1).leading_zeros()).max(1) as u128;
+                let num = full_bytes as u128 * k * (32 + idx_bits);
+                HEADER_BYTES + (num.div_ceil(d * 32)) as usize
+            }
+            Self::Qsgd { bits } => {
+                let num = full_bytes as u128 * bits as u128;
+                HEADER_BYTES + (num.div_ceil(32)) as usize
+            }
+        }
+    }
+
+    /// Dense-to-encoded byte ratio for one message (≥ 1 means smaller on
+    /// the wire) — the "reduction" column of `repro compress-sweep`.
+    pub fn reduction(&self, dim: usize, full_bytes: usize) -> f64 {
+        full_bytes as f64 / self.encoded_bytes(dim, full_bytes).max(1) as f64
+    }
+
+    /// The deterministic RNG stream for edge `(from → to)` at iteration
+    /// `k` — keyed by coordinates only, never call order, so any shard
+    /// count replays the same quantization noise.
+    fn edge_rng(k: u64, from: usize, to: usize) -> Pcg {
+        Pcg::with_stream(
+            0xc0de_c0de ^ k.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            (((from as u64) << 32) | to as u64).wrapping_mul(2).wrapping_add(1),
+        )
+    }
+
+    /// Apply error-feedback compression to one edge's pre-weighted
+    /// `(x, w)` share in place: the numerator becomes the encoded
+    /// `C(payload + bank.x)`, the weight share becomes the ℓ1-
+    /// proportional fraction `φ · (msg_w + bank.w)`, and the bank keeps
+    /// the remainders (the module-level recursion). `idx` is reusable
+    /// scratch for the top-k selection. Identity is a no-op (bank
+    /// untouched).
+    #[allow(clippy::too_many_arguments)] // one hot-path call site, flat args beat a builder
+    pub(crate) fn apply(
+        &self,
+        payload: &mut [f32],
+        msg_w: &mut f64,
+        bank: &mut EdgeBank,
+        idx: &mut Vec<u32>,
+        k: u64,
+        from: usize,
+        to: usize,
+    ) {
+        if self.is_identity() {
+            return;
+        }
+        debug_assert_eq!(payload.len(), bank.x.len());
+        // acc ← payload + banked residual (what this edge owes).
+        for (p, r) in payload.iter_mut().zip(bank.x.iter()) {
+            *p += r;
+        }
+        let acc_l1: f64 = payload.iter().map(|v| v.abs() as f64).sum();
+        match *self {
+            Self::Identity => unreachable!("identity handled above"),
+            Self::TopK { .. } => {
+                let dim = payload.len();
+                let kk = self.kept(dim);
+                if kk >= dim {
+                    bank.x.fill(0.0);
+                } else {
+                    idx.clear();
+                    idx.extend(0..dim as u32);
+                    // Unique partition: strict total order (|v| desc,
+                    // index asc) makes the kept set a pure function of
+                    // the values.
+                    idx.select_nth_unstable_by(kk - 1, |&a, &b| {
+                        payload[b as usize]
+                            .abs()
+                            .total_cmp(&payload[a as usize].abs())
+                            .then(a.cmp(&b))
+                    });
+                    for &i in &idx[kk..] {
+                        bank.x[i as usize] = payload[i as usize];
+                        payload[i as usize] = 0.0;
+                    }
+                    for &i in &idx[..kk] {
+                        bank.x[i as usize] = 0.0;
+                    }
+                }
+            }
+            Self::Qsgd { bits } => {
+                let scale = payload.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                if scale > 0.0 && scale.is_finite() {
+                    // Sign + magnitude fit `bits` exactly; parse enforces
+                    // bits ≥ 2 (≥ 1 magnitude level), and the clamp keeps
+                    // directly-constructed degenerate specs panic-free.
+                    let levels =
+                        ((1u32 << bits.saturating_sub(1)) - 1).max(1) as f32;
+                    let mut rng = Self::edge_rng(k, from, to);
+                    for (p, r) in payload.iter_mut().zip(bank.x.iter_mut()) {
+                        let acc = *p;
+                        let t = acc.abs() / scale * levels;
+                        let low = t.floor();
+                        let up = (rng.f64() as f32) < (t - low);
+                        let q = (low + up as u32 as f32) / levels * scale;
+                        let qv = if acc < 0.0 { -q } else { q };
+                        *p = qv;
+                        *r = acc - qv;
+                    }
+                } else {
+                    // All-zero (or degenerate) share: ships as zeros.
+                    bank.x.fill(0.0);
+                }
+            }
+        }
+        // φ-split of the weight share: deliver the fraction of ℓ1 mass
+        // the encoded numerator actually carries, bank the rest. An
+        // all-zero share delivers the full weight (nothing to pair with).
+        let sent_l1: f64 = payload.iter().map(|v| v.abs() as f64).sum();
+        let phi = if acc_l1 > 0.0 { (sent_l1 / acc_l1).min(1.0) } else { 1.0 };
+        let acc_w = *msg_w + bank.w;
+        *msg_w = acc_w * phi;
+        bank.w = acc_w * (1.0 - phi);
+    }
+}
+
+/// Per-edge error-feedback bank: the withheld numerator residual plus the
+/// withheld push-sum-weight mass (the φ-split remainder) — the "virtual
+/// delayed node" of the module docs. Owned by the sender; shards with the
+/// node states.
+#[derive(Clone, Debug)]
+pub(crate) struct EdgeBank {
+    /// Withheld numerator mass per coordinate.
+    pub x: Vec<f32>,
+    /// Withheld push-sum-weight mass (≥ 0).
+    pub w: f64,
+}
+
+impl EdgeBank {
+    /// An empty bank for a `dim`-coordinate edge.
+    pub fn new(dim: usize) -> Self {
+        Self { x: vec![0.0; dim], w: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects_garbage() {
+        assert_eq!(Compression::parse("none"), Some(Compression::Identity));
+        assert_eq!(Compression::parse("identity"), Some(Compression::Identity));
+        assert_eq!(
+            Compression::parse("topk:16"),
+            Some(Compression::TopK { den: 16 })
+        );
+        assert_eq!(
+            Compression::parse("qsgd:4"),
+            Some(Compression::Qsgd { bits: 4 })
+        );
+        assert_eq!(Compression::parse("topk:0"), None);
+        assert_eq!(Compression::parse("qsgd:0"), None);
+        assert_eq!(
+            Compression::parse("qsgd:1"),
+            None,
+            "1 bit leaves no room for a magnitude next to the sign"
+        );
+        assert_eq!(Compression::parse("qsgd:17"), None);
+        assert_eq!(Compression::parse("zip:9"), None);
+        assert_eq!(Compression::parse("topk"), None);
+        assert_eq!(Compression::parse("topk:x"), None);
+        assert_eq!(Compression::TopK { den: 16 }.label(), "topk:16");
+        assert_eq!(Compression::parse("topk:16").unwrap().label(), "topk:16");
+    }
+
+    #[test]
+    fn encoded_bytes_hit_the_advertised_ratios() {
+        let full = 100 << 20;
+        // topk:16 over a 15-bit index space: 1/16 of the coords at
+        // (32 + 15)/32 bits each → ≈ 10.9× smaller.
+        let topk = Compression::TopK { den: 16 };
+        assert!(topk.reduction(22_026, full) >= 8.0, "{}", topk.reduction(22_026, full));
+        // qsgd:4 → 4/32 bits per coord → ≈ 8× minus the header.
+        let q4 = Compression::Qsgd { bits: 4 };
+        let r = q4.reduction(22_026, full);
+        assert!(r > 7.99 && r <= 8.0, "{r}");
+        assert_eq!(Compression::Identity.encoded_bytes(8, 1234), 1234);
+        // Monotone in aggressiveness.
+        assert!(
+            Compression::TopK { den: 32 }.encoded_bytes(1024, full)
+                < Compression::TopK { den: 4 }.encoded_bytes(1024, full)
+        );
+        assert!(
+            Compression::Qsgd { bits: 2 }.encoded_bytes(1024, full)
+                < Compression::Qsgd { bits: 8 }.encoded_bytes(1024, full)
+        );
+        // Tiny dims never underflow or return zero.
+        assert!(Compression::TopK { den: 16 }.encoded_bytes(1, 4) > 0);
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_banks_the_rest_with_weight_split() {
+        let spec = Compression::TopK { den: 2 }; // keep 2 of 4
+        let mut payload = vec![1.0f32, -4.0, 0.5, 3.0];
+        let mut msg_w = 0.5f64;
+        let mut bank = EdgeBank::new(4);
+        let mut idx = Vec::new();
+        spec.apply(&mut payload, &mut msg_w, &mut bank, &mut idx, 0, 0, 1);
+        assert_eq!(payload, vec![0.0, -4.0, 0.0, 3.0]);
+        assert_eq!(bank.x, vec![1.0, 0.0, 0.5, 0.0]);
+        // φ = delivered ℓ1 / total ℓ1 = 7 / 8.5; the weight splits with it.
+        let phi = 7.0 / 8.5;
+        assert!((msg_w - 0.5 * phi).abs() < 1e-12, "{msg_w}");
+        assert!((bank.w - 0.5 * (1.0 - phi)).abs() < 1e-12, "{}", bank.w);
+        // Next round: banked x and w ride along; full delivery empties both.
+        let mut payload2 = vec![0.9f32, 0.0, 0.6, 0.0];
+        let mut msg_w2 = 0.5f64;
+        spec.apply(&mut payload2, &mut msg_w2, &mut bank, &mut idx, 1, 0, 1);
+        assert_eq!(payload2, vec![1.9, 0.0, 1.1, 0.0]);
+        assert_eq!(bank.x, vec![0.0; 4]);
+        assert!((msg_w2 - (0.5 + 0.5 * (1.0 - phi))).abs() < 1e-12);
+        assert_eq!(bank.w, 0.0);
+    }
+
+    #[test]
+    fn topk_ties_break_by_ascending_index() {
+        let spec = Compression::TopK { den: 4 }; // keep 1 of 4
+        let mut payload = vec![2.0f32, -2.0, 2.0, 2.0];
+        let mut msg_w = 1.0f64;
+        let mut bank = EdgeBank::new(4);
+        let mut idx = Vec::new();
+        spec.apply(&mut payload, &mut msg_w, &mut bank, &mut idx, 3, 1, 2);
+        assert_eq!(payload, vec![2.0, 0.0, 0.0, 0.0], "lowest index wins the tie");
+    }
+
+    #[test]
+    fn error_feedback_conserves_x_and_w_mass_exactly() {
+        // payload + bank is redistributed, never created or destroyed:
+        // sent + banked == accumulated for both x and w, both schemes,
+        // every round.
+        for spec in [Compression::TopK { den: 8 }, Compression::Qsgd { bits: 3 }] {
+            let mut rng = Pcg::new(7);
+            let mut bank = EdgeBank::new(64);
+            let mut idx = Vec::new();
+            for k in 0..20u64 {
+                let payload0 = rng.gaussian_vec(64);
+                let mut payload = payload0.clone();
+                let acc: Vec<f32> = payload0
+                    .iter()
+                    .zip(&bank.x)
+                    .map(|(a, b)| a + b)
+                    .collect();
+                let w0 = 0.5f64;
+                let acc_w = w0 + bank.w;
+                let mut msg_w = w0;
+                spec.apply(&mut payload, &mut msg_w, &mut bank, &mut idx, k, 2, 5);
+                for ((c, r), a) in payload.iter().zip(&bank.x).zip(&acc) {
+                    assert!((c + r - a).abs() < 1e-5, "{spec:?} k={k}: {c}+{r} != {a}");
+                }
+                assert!(
+                    (msg_w + bank.w - acc_w).abs() < 1e-12,
+                    "{spec:?} k={k}: w mass {} + {} != {acc_w}",
+                    msg_w,
+                    bank.w
+                );
+                assert!(msg_w >= 0.0 && bank.w >= 0.0, "{spec:?} k={k}: w signs");
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_is_deterministic_per_edge_and_unbiased_in_expectation() {
+        let spec = Compression::Qsgd { bits: 3 };
+        let src = vec![0.3f32, -0.7, 1.0, 0.05];
+        let run = |k: u64, from: usize, to: usize| {
+            let mut p = src.clone();
+            let mut w = 1.0f64;
+            let mut bank = EdgeBank::new(4);
+            spec.apply(&mut p, &mut w, &mut bank, &mut Vec::new(), k, from, to);
+            p
+        };
+        assert_eq!(run(4, 1, 3), run(4, 1, 3), "same edge ⇒ same bits");
+        // The rounding is stochastic per (iteration, edge): over a window
+        // of iterations the draws must differ somewhere (a single pair of
+        // rounds can coincide by chance on a 4-coordinate share).
+        assert!(
+            (0..20).any(|k| run(k, 1, 3) != run(k + 100, 1, 3)),
+            "iteration must change the draw"
+        );
+        // Unbiasedness: averaging the quantized share over many edges
+        // approaches the source (the stochastic-rounding property EF
+        // relies on to flush residuals instead of accumulating bias).
+        let mut mean = vec![0.0f64; 4];
+        let n = 4000;
+        for e in 0..n {
+            for (m, v) in mean.iter_mut().zip(run(0, e, e + 1)) {
+                *m += v as f64 / n as f64;
+            }
+        }
+        for (m, s) in mean.iter().zip(&src) {
+            assert!((m - *s as f64).abs() < 0.02, "{m} vs {s}");
+        }
+    }
+
+    #[test]
+    fn identity_is_a_true_noop() {
+        let mut payload = vec![1.0f32, 2.0];
+        let mut msg_w = 0.25f64;
+        let mut bank = EdgeBank { x: vec![9.0, 9.0], w: 0.125 };
+        Compression::Identity.apply(
+            &mut payload,
+            &mut msg_w,
+            &mut bank,
+            &mut Vec::new(),
+            0,
+            0,
+            1,
+        );
+        assert_eq!(payload, vec![1.0, 2.0]);
+        assert_eq!(msg_w, 0.25);
+        assert_eq!(bank.x, vec![9.0, 9.0]);
+        assert_eq!(bank.w, 0.125);
+    }
+
+    #[test]
+    fn degenerate_shares_ship_full_weight_and_never_panic() {
+        for spec in [Compression::Qsgd { bits: 4 }, Compression::TopK { den: 4 }] {
+            let mut payload = vec![0.0f32; 8];
+            let mut msg_w = 0.5f64;
+            let mut bank = EdgeBank::new(8);
+            bank.w = 0.25;
+            spec.apply(&mut payload, &mut msg_w, &mut bank, &mut Vec::new(), 0, 0, 1);
+            assert!(payload.iter().all(|v| *v == 0.0), "{spec:?}");
+            // Nothing to pair the weight with: deliver all of it (the
+            // banked remainder included) instead of stranding it.
+            assert_eq!(msg_w, 0.75, "{spec:?}");
+            assert_eq!(bank.w, 0.0, "{spec:?}");
+        }
+    }
+}

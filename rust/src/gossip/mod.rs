@@ -35,13 +35,37 @@
 //! **any shard count produces bit-identical state** at a fixed seed —
 //! including under a [`FaultClock`] replay. The contract is locked in by
 //! `rust/tests/engine_equivalence.rs` and documented in ARCHITECTURE.md.
+//!
+//! # Compressed messages
+//!
+//! [`Self::step_compressed`](PushSumEngine::step_compressed) applies a
+//! [`Compression`] spec (top-k sparsification or stochastic quantization,
+//! see [`compress`]) to every outgoing `(x, w)` share, banking the
+//! withheld numerator mass — and the ℓ1-proportional slice of the
+//! push-sum weight that pairs with it — in a **per-edge error-feedback
+//! bank** owned by the sender. Bank state is partitioned by sender
+//! exactly like `(x, w)` state, and the quantization noise is keyed by
+//! `(iteration, edge)`, so compression preserves both the
+//! mass-conservation invariant (states + in-flight + banks + ledger, for
+//! Σx *and* Σw) and the bit-identity contract across shard counts.
 
+pub mod compress;
 pub mod exec;
 
+pub use compress::Compression;
 pub use exec::ExecPolicy;
+
+use std::collections::BTreeMap;
+
+use compress::EdgeBank;
 
 use crate::faults::FaultClock;
 use crate::topology::Schedule;
+
+/// Per-sender error-feedback banks, keyed by destination node. A
+/// `BTreeMap` so bank-mass accounting and drain walk edges in a
+/// deterministic order.
+type EdgeResiduals = BTreeMap<usize, EdgeBank>;
 
 /// One in-flight push-sum message (already pre-weighted by the sender).
 #[derive(Clone, Debug)]
@@ -99,11 +123,13 @@ impl NodeState {
 struct ShardScratch {
     scale_buf: Vec<f32>,
     pool: Vec<Vec<f32>>,
+    /// Index scratch for the top-k selection (compression).
+    idx: Vec<u32>,
 }
 
 impl ShardScratch {
     fn new(dim: usize) -> Self {
-        Self { scale_buf: vec![0.0; dim], pool: Vec::new() }
+        Self { scale_buf: vec![0.0; dim], pool: Vec::new(), idx: Vec::new() }
     }
 }
 
@@ -145,16 +171,39 @@ struct StepCtx<'a> {
     dim: usize,
     schedule: &'a Schedule,
     faults: Option<(&'a FaultClock, &'a [usize])>,
+    compress: Compression,
+}
+
+/// Error-feedback compression of one outgoing `(x, w)` share: look up (or
+/// create) the sender's bank for edge `(from → to)` and apply the spec to
+/// the numerator payload and the weight share together. Identity skips
+/// the bank table entirely.
+fn compress_payload(
+    payload: &mut [f32],
+    msg_w: &mut f64,
+    residuals: &mut EdgeResiduals,
+    idx: &mut Vec<u32>,
+    ctx: &StepCtx,
+    from: usize,
+    to: usize,
+) {
+    if ctx.compress.is_identity() {
+        return;
+    }
+    let bank = residuals.entry(to).or_insert_with(|| EdgeBank::new(ctx.dim));
+    ctx.compress.apply(payload, msg_w, bank, idx, ctx.k, from, to);
 }
 
 /// Phase 1 for the contiguous node range starting at global index `base`:
-/// pre-weight, emit outgoing messages (and fault-ledger shares) into the
-/// shard outbox, scale the node's own state by its self-loop weight. Reads
-/// and writes only this shard's states — safe to run on every shard
+/// pre-weight, compress (error feedback, per edge), emit outgoing
+/// messages (and fault-ledger shares) into the shard outbox, scale the
+/// node's own state by its self-loop weight. Reads and writes only this
+/// shard's states and residuals — safe to run on every shard
 /// concurrently.
 fn compute_shard(
     base: usize,
     states: &mut [NodeState],
+    residuals: &mut [EdgeResiduals],
     scratch: &mut ShardScratch,
     ctx: StepCtx,
     out: &mut ShardOut,
@@ -162,7 +211,9 @@ fn compute_shard(
     let k = ctx.k;
     match ctx.faults {
         None => {
-            for (off, st) in states.iter_mut().enumerate() {
+            for (off, (st, res)) in
+                states.iter_mut().zip(residuals.iter_mut()).enumerate()
+            {
                 let i = base + off;
                 let peers = ctx.schedule.out_peers(i, k);
                 let w_mix = 1.0 / (1.0 + peers.len() as f64);
@@ -171,14 +222,24 @@ fn compute_shard(
                 if peers.len() == 1 {
                     // Dominant (1-peer) case: fused read-scale-write, no
                     // intermediate buffer.
-                    let payload = scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
+                    let mut payload = scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
+                    let mut mw = msg_w;
+                    compress_payload(
+                        &mut payload,
+                        &mut mw,
+                        res,
+                        &mut scratch.idx,
+                        &ctx,
+                        i,
+                        peers[0],
+                    );
                     out.sent.push(Message {
                         from: i,
                         to: peers[0],
                         sent_iter: k,
                         deliver_iter: ctx.deliver_at,
                         x: payload,
-                        w: msg_w,
+                        w: mw,
                     });
                 } else if !peers.is_empty() {
                     for (b, v) in scratch.scale_buf.iter_mut().zip(&st.x) {
@@ -187,17 +248,28 @@ fn compute_shard(
                     for &j in &peers {
                         let mut payload = take_buf(&mut scratch.pool, ctx.dim);
                         payload.copy_from_slice(&scratch.scale_buf);
+                        let mut mw = msg_w;
+                        compress_payload(
+                            &mut payload,
+                            &mut mw,
+                            res,
+                            &mut scratch.idx,
+                            &ctx,
+                            i,
+                            j,
+                        );
                         out.sent.push(Message {
                             from: i,
                             to: j,
                             sent_iter: k,
                             deliver_iter: ctx.deliver_at,
                             x: payload,
-                            w: msg_w,
+                            w: mw,
                         });
                     }
                 }
-                // Self-loop share (Alg. 2 lines 7–8), scaled in place.
+                // Self-loop share (Alg. 2 lines 7–8), scaled in place —
+                // never compressed (it never leaves the node).
                 for v in st.x.iter_mut() {
                     *v *= wf;
                 }
@@ -206,7 +278,9 @@ fn compute_shard(
         }
         Some((clock, alive)) => {
             let rescue = clock.plan.rescue;
-            for (off, st) in states.iter_mut().enumerate() {
+            for (off, (st, res)) in
+                states.iter_mut().zip(residuals.iter_mut()).enumerate()
+            {
                 let i = base + off;
                 // Crashed nodes freeze in place (state = checkpoint).
                 if clock.is_down(i, k) {
@@ -221,35 +295,58 @@ fn compute_shard(
                     if clock.drops(i, j, k) {
                         if rescue {
                             // Sender detects the failed send and keeps its
-                            // share: nothing leaves, nothing is lost.
+                            // share: nothing leaves, nothing is lost, and
+                            // the edge residual is untouched (no message
+                            // was encoded).
                             out.rescue_count += 1;
                             rescued += 1;
                             continue;
                         }
-                        // The share leaves the sender and vanishes —
-                        // materialize it so the ordered merge can ledger
-                        // it in global sender order.
-                        let payload =
+                        // The share leaves the sender and vanishes — the
+                        // *encoded* share, so the bank keeps the withheld
+                        // `(x, w)` part and only the transmitted mass is
+                        // ledgered in global sender order by the merge.
+                        let mut payload =
                             scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
+                        let mut mw = msg_w;
+                        compress_payload(
+                            &mut payload,
+                            &mut mw,
+                            res,
+                            &mut scratch.idx,
+                            &ctx,
+                            i,
+                            j,
+                        );
                         out.dropped.push(Message {
                             from: i,
                             to: j,
                             sent_iter: k,
                             deliver_iter: ctx.deliver_at,
                             x: payload,
-                            w: msg_w,
+                            w: mw,
                         });
                         continue;
                     }
-                    let payload =
+                    let mut payload =
                         scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
+                    let mut mw = msg_w;
+                    compress_payload(
+                        &mut payload,
+                        &mut mw,
+                        res,
+                        &mut scratch.idx,
+                        &ctx,
+                        i,
+                        j,
+                    );
                     out.sent.push(Message {
                         from: i,
                         to: j,
                         sent_iter: k,
                         deliver_iter: ctx.deliver_at,
                         x: payload,
-                        w: msg_w,
+                        w: mw,
                     });
                 }
                 // Self-loop share; rescued shares stay too, so the node
@@ -343,6 +440,9 @@ pub struct PushSumEngine {
     /// Per-shard outboxes, persistent so their capacity is reused across
     /// rounds (drained empty by every ordered merge).
     outs: Vec<ShardOut>,
+    /// Per-sender error-feedback residuals (compressed gossip), keyed by
+    /// destination. Empty until a non-identity [`Compression`] runs.
+    residuals: Vec<EdgeResiduals>,
     /// Cumulative numerator mass lost to dropped messages (fault mode).
     dropped_x: Vec<f64>,
     /// Cumulative push-sum-weight mass lost to dropped messages.
@@ -352,6 +452,10 @@ pub struct PushSumEngine {
     /// Count of messages rescued (re-absorbed at the sender; fault mode
     /// with `FaultPlan::rescue`).
     pub rescue_count: u64,
+    /// Count of messages put on the wire (delivered + dropped; rescued
+    /// sends never transmit). Multiply by
+    /// [`Compression::encoded_bytes`] for total wire traffic.
+    pub sent_count: u64,
 }
 
 impl PushSumEngine {
@@ -370,10 +474,12 @@ impl PushSumEngine {
             inboxes: (0..n).map(|_| Vec::new()).collect(),
             scratch: vec![ShardScratch::new(dim)],
             outs: vec![ShardOut::default()],
+            residuals: (0..n).map(|_| EdgeResiduals::new()).collect(),
             dropped_x: vec![0.0; dim],
             dropped_w: 0.0,
             drop_count: 0,
             rescue_count: 0,
+            sent_count: 0,
         }
     }
 
@@ -441,6 +547,26 @@ impl PushSumEngine {
         faults: Option<&FaultClock>,
         exec: ExecPolicy,
     ) {
+        self.step_compressed(k, schedule, faults, exec, Compression::Identity);
+    }
+
+    /// [`Self::step_exec`] with message compression: every outgoing share
+    /// is encoded per the [`Compression`] spec against its edge's
+    /// error-feedback residual before it enters the mailbox (or the drop
+    /// ledger). With [`Compression::Identity`] this is exactly
+    /// `step_exec` — no residuals are allocated and no per-edge work
+    /// runs. The determinism contract extends unchanged: residuals are
+    /// sender-owned (sharded with the states) and quantization draws are
+    /// keyed by `(iteration, edge)`, so any [`ExecPolicy`] produces
+    /// bit-identical results at a fixed seed, including under faults.
+    pub fn step_compressed(
+        &mut self,
+        k: u64,
+        schedule: &Schedule,
+        faults: Option<&FaultClock>,
+        exec: ExecPolicy,
+        compress: Compression,
+    ) {
         let deliver_at = k + self.delay;
         let alive: Option<Vec<usize>> = faults.map(|fc| fc.alive(self.n, k));
         let shards = exec.shards_for(self.n);
@@ -458,6 +584,7 @@ impl PushSumEngine {
                 (Some(fc), Some(al)) => Some((fc, al.as_slice())),
                 _ => None,
             },
+            compress,
         };
 
         // Phase 1 — per-shard local compute + send into the persistent
@@ -467,21 +594,23 @@ impl PushSumEngine {
             compute_shard(
                 0,
                 &mut self.states,
+                &mut self.residuals,
                 &mut self.scratch[0],
                 ctx,
                 &mut self.outs[0],
             );
         } else {
             std::thread::scope(|scope| {
-                for (idx, ((states, scratch), out)) in self
+                for (idx, (((states, residuals), scratch), out)) in self
                     .states
                     .chunks_mut(chunk)
+                    .zip(self.residuals.chunks_mut(chunk))
                     .zip(self.scratch.iter_mut())
                     .zip(self.outs.iter_mut())
                     .enumerate()
                 {
                     scope.spawn(move || {
-                        compute_shard(idx * chunk, states, scratch, ctx, out)
+                        compute_shard(idx * chunk, states, residuals, scratch, ctx, out)
                     });
                 }
             });
@@ -494,6 +623,8 @@ impl PushSumEngine {
         // loop's insertion order. Ledger contributions are summed in the
         // same order, so the f64 accumulation is bit-identical too.
         for idx in 0..used {
+            self.sent_count +=
+                (self.outs[idx].sent.len() + self.outs[idx].dropped.len()) as u64;
             self.drop_count += self.outs[idx].dropped.len() as u64;
             self.rescue_count += self.outs[idx].rescue_count;
             self.outs[idx].rescue_count = 0;
@@ -551,15 +682,39 @@ impl PushSumEngine {
         (&self.dropped_x, self.dropped_w)
     }
 
-    /// Total mass *including* the recorded losses — the quantity that stays
-    /// invariant under any fault plan (the fault-mode proptest anchor):
-    /// Σᵢ xᵢ + in-flight + recorded-dropped.
+    /// `(x, w)` mass currently held in the per-edge error-feedback banks
+    /// (compressed gossip): the withheld numerator residuals plus the
+    /// φ-split weight remainders. Zero — and allocation-free — under
+    /// [`Compression::Identity`].
+    pub fn residual_mass(&self) -> (Vec<f64>, f64) {
+        let mut xm = vec![0.0f64; self.dim];
+        let mut wm = 0.0f64;
+        for res in &self.residuals {
+            for bank in res.values() {
+                for (a, b) in xm.iter_mut().zip(&bank.x) {
+                    *a += *b as f64;
+                }
+                wm += bank.w;
+            }
+        }
+        (xm, wm)
+    }
+
+    /// Total mass *including* the recorded losses and the compression
+    /// banks — the quantity that stays invariant under any fault plan
+    /// *and* any compression spec (the proptest anchor):
+    /// Σᵢ xᵢ + in-flight + error-feedback banks + recorded-dropped, for
+    /// both the numerator and the push-sum weight.
     pub fn total_mass_with_losses(&self) -> (Vec<f64>, f64) {
         let (mut xm, mut wm) = self.total_mass();
         for (a, b) in xm.iter_mut().zip(&self.dropped_x) {
             *a += b;
         }
-        wm += self.dropped_w;
+        let (rx, rw) = self.residual_mass();
+        for (a, b) in xm.iter_mut().zip(rx) {
+            *a += b;
+        }
+        wm += self.dropped_w + rw;
         (xm, wm)
     }
 
@@ -580,6 +735,19 @@ impl PushSumEngine {
                     *a += b;
                 }
                 st.w += msg.w;
+            }
+        }
+        // Compressed gossip: re-absorb every outstanding error-feedback
+        // bank at its sender (in deterministic edge order) so no `(x, w)`
+        // mass is stranded — the final metrics then account for every
+        // unit of mass, mirroring what rescue mode does for undeliverable
+        // shares.
+        for (st, res) in self.states.iter_mut().zip(&mut self.residuals) {
+            for (_, bank) in std::mem::take(res) {
+                for (a, b) in st.x.iter_mut().zip(&bank.x) {
+                    *a += b;
+                }
+                st.w += bank.w;
             }
         }
         if self.biased {
@@ -1013,6 +1181,161 @@ mod tests {
             assert!((a - b).abs() < 1e-2);
         }
         assert!((w1 - w0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_compression_is_bit_identical_to_plain_step() {
+        let init = random_init(8, 16, 41);
+        let mut plain = PushSumEngine::new(init.clone(), 1, false);
+        let mut ident = PushSumEngine::new(init, 1, false);
+        let sched = Schedule::new(TopologyKind::TwoPeerExp, 8);
+        for k in 0..20 {
+            plain.step(k, &sched);
+            ident.step_compressed(
+                k,
+                &sched,
+                None,
+                ExecPolicy::Sequential,
+                Compression::Identity,
+            );
+        }
+        for (a, b) in plain.states.iter().zip(&ident.states) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.w.to_bits(), b.w.to_bits());
+        }
+        let (rx, rw) = ident.residual_mass();
+        assert!(rx.iter().all(|v| *v == 0.0) && rw == 0.0);
+    }
+
+    #[test]
+    fn compressed_gossip_conserves_total_mass_with_residuals() {
+        for spec in [Compression::TopK { den: 8 }, Compression::Qsgd { bits: 4 }] {
+            let init = random_init(8, 32, 42);
+            let mut eng = PushSumEngine::new(init, 1, false);
+            let (x0, w0) = eng.total_mass_with_losses();
+            let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+            for k in 0..30 {
+                eng.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
+                let (x, w) = eng.total_mass_with_losses();
+                for (a, b) in x.iter().zip(&x0) {
+                    assert!((a - b).abs() < 1e-2, "{spec:?} k={k}: {a} vs {b}");
+                }
+                assert!((w - w0).abs() < 1e-9, "{spec:?} k={k}: w untouched");
+            }
+            // The bank genuinely holds mass mid-run under top-k…
+            if matches!(spec, Compression::TopK { .. }) {
+                let (rx, rw) = eng.residual_mass();
+                assert!(rx.iter().any(|v| v.abs() > 1e-6));
+                assert!(rw > 0.0, "φ-split must bank weight too");
+            }
+            // …and drain re-absorbs it: plain state+in-flight mass is
+            // whole again, with an empty bank.
+            eng.drain();
+            let (rx, rw) = eng.residual_mass();
+            assert!(rx.iter().all(|v| *v == 0.0) && rw == 0.0);
+            let (x1, w1) = eng.total_mass();
+            for (a, b) in x1.iter().zip(&x0) {
+                assert!((a - b).abs() < 1e-2, "{spec:?} post-drain {a} vs {b}");
+            }
+            assert!((w1 - w0).abs() < 1e-9);
+            assert!(eng.sent_count > 0);
+        }
+    }
+
+    #[test]
+    fn compressed_gossip_contracts_consensus_and_preserves_the_mean() {
+        // What each scheme honestly guarantees on pure averaging:
+        // fine-grained quantization (qsgd:6) still converges to the true
+        // average; aggressive sparsification (topk at 1/4 density) keeps
+        // the network mean EXACT (mass conservation) and contracts
+        // consensus substantially, but its error-feedback bank leaves an
+        // approximation floor — the quantified tradeoff the compress-sweep
+        // measures end-to-end.
+        let n = 8;
+        let init = random_init(n, 32, 43);
+        let mut avg = vec![0.0f64; 32];
+        for v in &init {
+            for (a, b) in avg.iter_mut().zip(v) {
+                *a += *b as f64 / n as f64;
+            }
+        }
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+
+        let mut q = PushSumEngine::new(init.clone(), 0, false);
+        for k in 0..300 {
+            q.step_compressed(k, &sched, None, ExecPolicy::Sequential, Compression::Qsgd {
+                bits: 6,
+            });
+        }
+        q.drain();
+        for st in &q.states {
+            for (zi, ai) in st.debiased().iter().zip(&avg) {
+                assert!((*zi as f64 - ai).abs() < 0.1, "qsgd:6: {zi} vs {ai}");
+            }
+        }
+
+        let mut t = PushSumEngine::new(init, 0, false);
+        let before = t.consensus_distance().0;
+        for k in 0..300 {
+            t.step_compressed(k, &sched, None, ExecPolicy::Sequential, Compression::TopK {
+                den: 4,
+            });
+        }
+        t.drain();
+        assert!(
+            t.consensus_distance().0 < 0.35 * before,
+            "topk:4 must contract consensus: {before} → {}",
+            t.consensus_distance().0
+        );
+        for (m, a) in t.mean_x().iter().zip(&avg) {
+            assert!(
+                (*m as f64 - a).abs() < 1e-3,
+                "sparsification must never move the network mean: {m} vs {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn compressed_sharded_step_bit_identical_to_sequential() {
+        use crate::faults::{FaultClock, FaultPlan};
+        let clock = FaultClock::new(
+            FaultPlan::lossless().with_drop(0.15).with_crash(2, 4, Some(11)).with_seed(5),
+        );
+        for spec in [Compression::TopK { den: 4 }, Compression::Qsgd { bits: 4 }] {
+            for shards in [2usize, 3, 7] {
+                let init = random_init(9, 24, 44);
+                let mut seq = PushSumEngine::new(init.clone(), 1, false);
+                let mut par = PushSumEngine::new(init, 1, false);
+                let sched = Schedule::new(TopologyKind::TwoPeerExp, 9);
+                for k in 0..25 {
+                    seq.step_compressed(
+                        k,
+                        &sched,
+                        Some(&clock),
+                        ExecPolicy::Sequential,
+                        spec,
+                    );
+                    par.step_compressed(
+                        k,
+                        &sched,
+                        Some(&clock),
+                        ExecPolicy::parallel(shards),
+                        spec,
+                    );
+                }
+                for (a, b) in seq.states.iter().zip(&par.states) {
+                    assert_eq!(a.x, b.x, "{spec:?} shards={shards}");
+                    assert_eq!(a.w.to_bits(), b.w.to_bits(), "{spec:?} shards={shards}");
+                }
+                let ((rxa, rwa), (rxb, rwb)) = (seq.residual_mass(), par.residual_mass());
+                for (a, b) in rxa.iter().zip(&rxb) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{spec:?} bank x");
+                }
+                assert_eq!(rwa.to_bits(), rwb.to_bits(), "{spec:?} bank w");
+                assert_eq!(seq.sent_count, par.sent_count);
+                assert_eq!(seq.drop_count, par.drop_count);
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!   message buffers (τ-Overlap SGP), the biased variant, and
 //!   mass-conservation accounting — with a sharded parallel execution
 //!   engine ([`gossip::ExecPolicy`]) that is bit-identical to the
-//!   sequential loop at a fixed seed (see ARCHITECTURE.md).
+//!   sequential loop at a fixed seed (see ARCHITECTURE.md), and pluggable
+//!   message compression ([`gossip::Compression`]: top-k / stochastic
+//!   quantization with per-edge error-feedback residuals).
 //! * [`collectives`] — the exact-averaging substrate (ring AllReduce) with
 //!   its α–β cost model, used by the AllReduce-SGD baseline.
 //! * [`net`] — the cluster/network simulator standing in for the paper's
@@ -68,4 +70,4 @@ pub mod topology;
 pub use algorithms::{AlgoParams, DistributedAlgorithm};
 pub use config::TrainConfig;
 pub use coordinator::{Trainer, TrainerBuilder};
-pub use gossip::ExecPolicy;
+pub use gossip::{Compression, ExecPolicy};

@@ -5,6 +5,7 @@
 //!   bench <exp>  regenerate a paper table/figure (all, fig1, table1..5, …)
 //!   faults       robustness sweep under message loss / churn (offline)
 //!   engine-sweep large-N scaling sweep of the parallel execution engine
+//!   compress-sweep compressed-gossip sweep: byte reduction × heterogeneity
 //!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
@@ -19,7 +20,7 @@ use sgp::config::{Fabric, TrainConfig};
 use sgp::coordinator::TrainerBuilder;
 use sgp::experiments;
 use sgp::faults::Crash;
-use sgp::gossip::ExecPolicy;
+use sgp::gossip::{Compression, ExecPolicy};
 use sgp::metrics;
 use sgp::optim::OptimKind;
 use sgp::runtime::Runtime;
@@ -32,16 +33,20 @@ USAGE:
                 [--epochs 10] [--steps-per-epoch 16] [--fabric ethernet|ib]
                 [--tau 1] [--grad-delay 1] [--seed 0] [--adam]
                 [--heterogeneity 0.3] [--engine sequential|parallel]
-                [--shards K]
+                [--shards K] [--compress none|topk:D|qsgd:B]
                 (see `repro algos` for the registered algorithm names;
                 --engine parallel shards the gossip round across K workers
-                — bit-identical to sequential at the same seed)
+                — bit-identical to sequential at the same seed;
+                --compress encodes gossip messages — top 1-in-D coords or
+                B-bit quantized — with per-edge error feedback, and the
+                timing charges the actual encoded bytes)
   repro bench   <all|fig1|table1|table2|table3|table4|table5|fig2|fig3|
                  figd3|figd4|appendix-a> [--fast]
   repro faults  [--drop 0..0.2 | --drop 0,0.05,0.1] [--crash 3@40:80,5@60]
                 [--nodes 16] [--iters 200] [--algos ar-sgd,sgp,...]
                 [--seed 1] [--no-rescue] [--fast]
                 [--engine sequential|parallel] [--shards K]
+                [--compress none|topk:D|qsgd:B]
                 offline robustness sweep: final error / consensus / makespan
                 per algorithm × fault level. --crash uses node@iter[:rejoin]
                 (no :rejoin = permanent leave). Rescue (senders re-absorb
@@ -53,6 +58,13 @@ USAGE:
                 large-N scaling sweep of the gossip execution engine:
                 sequential vs sharded-parallel wall-clock plus a
                 bit-identity check. Writes results/engine_sweep.csv.
+  repro compress-sweep [--schemes topk:4,topk:16,qsgd:8,qsgd:4]
+                [--het 0.25,0.5,0.75] [--nodes 32] [--iters 300]
+                [--dim 256] [--seed 1] [--shards 1,2,7] [--fast]
+                compressed-gossip sweep: wire-byte reduction × gradient
+                heterogeneity for SGP vs the dense baseline, with a
+                cross-shard bit-identity check. Writes
+                results/compress_sweep.csv.
   repro algos
   repro spectral
   repro average [--nodes 32] [--rounds 8]
@@ -65,7 +77,7 @@ USAGE:
 /// `--engine parallel` without `--shards` sizes itself to the machine.
 fn parse_exec(args: &Args) -> Result<ExecPolicy> {
     let shards = args.usize_or("shards", 0)?;
-    match args.get("engine") {
+    match args.value_of("engine")? {
         None => Ok(ExecPolicy::parallel(shards)),
         Some(name) => ExecPolicy::parse(name, shards).ok_or_else(|| {
             anyhow::anyhow!("unknown engine `{name}` (expected sequential|parallel)")
@@ -73,24 +85,55 @@ fn parse_exec(args: &Args) -> Result<ExecPolicy> {
     }
 }
 
+/// Parse a comma-separated integer-list option (`--shards 1,2,7`);
+/// `None` when the option was not given.
+fn parse_usize_list(args: &Args, name: &str) -> Result<Option<Vec<usize>>> {
+    match args.value_of(name)? {
+        None => Ok(None),
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .with_context(|| format!("--{name} `{v}`: not an integer"))
+            })
+            .collect::<Result<Vec<usize>>>()
+            .map(Some),
+    }
+}
+
+/// Parse `--compress none|topk:D|qsgd:B` into a [`Compression`] spec
+/// (identity when absent).
+fn parse_compress(args: &Args) -> Result<Compression> {
+    match args.value_of("compress")? {
+        None => Ok(Compression::Identity),
+        Some(spec) => Compression::parse(spec).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown compression `{spec}` (expected none, topk:D with D ≥ 1, \
+                 or qsgd:B with 2 ≤ B ≤ 16)"
+            )
+        }),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
-    let model = args.str_or("model", "mlp_small");
+    let model = args.str_or("model", "mlp_small")?;
     let nodes = args.usize_or("nodes", 8)?;
     let mut cfg = TrainConfig::imagenet_like(&model, nodes, args.u64_or("seed", 0)?);
     cfg.epochs = args.f64_or("epochs", 10.0)?;
     cfg.steps_per_epoch = args.u64_or("steps-per-epoch", 16)?;
     cfg.heterogeneity = args.f64_or("heterogeneity", 0.3)?;
-    if let Some(f) = args.get("fabric") {
+    if let Some(f) = args.value_of("fabric")? {
         cfg.link = Fabric::parse(f)
             .ok_or_else(|| anyhow::anyhow!("unknown fabric `{f}`"))?
             .link();
     }
-    if args.flag("adam") {
+    if args.flag_strict("adam")? {
         cfg.optim = OptimKind::Adam;
         cfg.lr = sgp::optim::LrSchedule::constant(1e-3);
     }
-    let algo_name = args.str_or("algo", "sgp");
+    let algo_name = args.str_or("algo", "sgp")?;
     if algorithms::spec(&algo_name).is_none() {
         bail!(
             "unknown algorithm `{algo_name}` (known: {})\n{USAGE}",
@@ -99,15 +142,34 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let iters = cfg.total_iters();
     let exec = parse_exec(args)?;
+    let compress = parse_compress(args)?;
     let mut trainer = TrainerBuilder::new(&rt)
         .config(cfg)
         .algorithm(&algo_name)
         .tau(args.u64_or("tau", 1)?)
         .grad_delay(args.u64_or("grad-delay", 1)?)
         .engine(exec)
+        .compressor(compress)
         .build()?;
+    // Only advertise compression where the strategy's messages actually
+    // carry it; exact collectives (AR-SGD) and AD-PSGD ship dense, so a
+    // requested spec is a no-op there — warn instead of misreporting.
+    let compress_note = match (compress.is_identity(), trainer.algo.compresses_gossip()) {
+        (true, _) => String::new(),
+        (false, true) => format!(", {} gossip compression", compress.label()),
+        (false, false) => {
+            eprintln!(
+                "note: {} does not route its exchange through the gossip \
+                 engine; --compress {} is ignored (messages ship dense)",
+                trainer.algo.name(),
+                compress.label()
+            );
+            String::new()
+        }
+    };
     println!(
-        "training {model} with {} on {nodes} nodes ({iters} iters, {} engine)…",
+        "training {model} with {} on {nodes} nodes ({iters} iters, {} \
+         engine{compress_note})…",
         trainer.algo.name(),
         exec.label()
     );
@@ -182,19 +244,20 @@ fn parse_crashes(s: &str) -> Result<Vec<Crash>> {
 }
 
 fn cmd_faults(args: &Args) -> Result<()> {
-    let mut sweep = experiments::FaultSweep::new(args.flag("fast"));
-    if let Some(d) = args.get("drop") {
+    let mut sweep = experiments::FaultSweep::new(args.flag_strict("fast")?);
+    if let Some(d) = args.value_of("drop")? {
         sweep.drops = parse_drops(d)?;
     }
-    if let Some(c) = args.get("crash") {
+    if let Some(c) = args.value_of("crash")? {
         sweep.crashes = parse_crashes(c)?;
     }
     sweep.n = args.usize_or("nodes", sweep.n)?;
     sweep.iters = args.u64_or("iters", sweep.iters)?;
     sweep.seed = args.u64_or("seed", sweep.seed)?;
-    sweep.rescue = !args.flag("no-rescue");
+    sweep.rescue = !args.flag_strict("no-rescue")?;
     sweep.exec = parse_exec(args)?;
-    if let Some(a) = args.get("algos") {
+    sweep.compress = parse_compress(args)?;
+    if let Some(a) = args.value_of("algos")? {
         sweep.algos = a.split(',').map(|s| s.trim().to_string()).collect();
         for name in &sweep.algos {
             if algorithms::spec(name).is_none() {
@@ -232,14 +295,15 @@ fn cmd_algos() {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    let exp_opt = args.value_of("exp")?;
     let exp = args
         .positional
         .first()
         .map(String::as_str)
-        .or_else(|| args.get("exp"))
+        .or(exp_opt)
         .unwrap_or("all")
         .to_string();
-    let fast = args.flag("fast");
+    let fast = args.flag_strict("fast")?;
     match exp.as_str() {
         "appendix-a" => experiments::appendix_a()?,
         "figd4" => experiments::figd4()?,
@@ -263,7 +327,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_engine_sweep(args: &Args) -> Result<()> {
-    let mut sweep = experiments::EngineSweep::new(args.flag("fast"));
+    let mut sweep = experiments::EngineSweep::new(args.flag_strict("fast")?);
     let max_n = args.usize_or("max-n", *sweep.ns.last().unwrap_or(&1024))?;
     if max_n < 2 {
         bail!("--max-n {max_n}: need at least 2 nodes to gossip");
@@ -278,17 +342,50 @@ fn cmd_engine_sweep(args: &Args) -> Result<()> {
     sweep.dim = args.usize_or("dim", sweep.dim)?;
     sweep.steps = args.u64_or("steps", sweep.steps)?;
     sweep.seed = args.u64_or("seed", sweep.seed)?;
-    if let Some(s) = args.get("shards") {
-        sweep.shards = s
-            .split(',')
-            .map(|v| {
-                v.trim()
-                    .parse()
-                    .with_context(|| format!("--shards `{v}`: not an integer"))
-            })
-            .collect::<Result<Vec<usize>>>()?;
+    if let Some(s) = parse_usize_list(args, "shards")? {
+        sweep.shards = s;
     }
     experiments::engine_sweep(&sweep)
+}
+
+fn cmd_compress_sweep(args: &Args) -> Result<()> {
+    let mut sweep = experiments::CompressSweep::new(args.flag_strict("fast")?);
+    if let Some(s) = args.value_of("schemes")? {
+        sweep.schemes = s
+            .split(',')
+            .map(|v| {
+                let v = v.trim();
+                Compression::parse(v)
+                    .filter(|c| !c.is_identity())
+                    .with_context(|| {
+                        format!("--schemes `{v}`: expected topk:D or qsgd:B")
+                    })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(h) = args.value_of("het")? {
+        sweep.hets = h
+            .split(',')
+            .map(|v| {
+                let v = v.trim();
+                let z: f64 = v
+                    .parse()
+                    .with_context(|| format!("--het `{v}`: not a number"))?;
+                if !(0.0..=1.0).contains(&z) {
+                    bail!("--het {z}: heterogeneity must be in [0, 1]");
+                }
+                Ok(z)
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    sweep.n = args.usize_or("nodes", sweep.n)?;
+    sweep.iters = args.u64_or("iters", sweep.iters)?;
+    sweep.dim = args.usize_or("dim", sweep.dim)?;
+    sweep.seed = args.u64_or("seed", sweep.seed)?;
+    if let Some(s) = parse_usize_list(args, "shards")? {
+        sweep.shards = s;
+    }
+    experiments::compress_sweep(&sweep)
 }
 
 fn main() -> Result<()> {
@@ -298,6 +395,7 @@ fn main() -> Result<()> {
         Some("bench") => cmd_bench(&args)?,
         Some("faults") => cmd_faults(&args)?,
         Some("engine-sweep") => cmd_engine_sweep(&args)?,
+        Some("compress-sweep") => cmd_compress_sweep(&args)?,
         Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {

@@ -138,7 +138,10 @@ pub enum CommPattern<'a> {
     PushSum {
         /// The round's out-peer schedule.
         schedule: &'a Schedule,
-        /// Bytes per message.
+        /// Bytes per message **as put on the wire**: strategies running
+        /// compressed gossip charge the encoded size
+        /// ([`crate::gossip::Compression::encoded_bytes`]), not the dense
+        /// payload, so makespans reflect the actual traffic.
         bytes: usize,
         /// Overlap delay τ.
         tau: u64,
@@ -738,6 +741,38 @@ mod tests {
         let m0 = sim.advance_with_faults(&p, &comp, Some(&clock));
         let m1 = sim.advance_with_faults(&p, &comp, Some(&clock)) - m0;
         assert!(m1 > 5.0 * m0, "degraded round {m1} vs clean {m0}");
+    }
+
+    #[test]
+    fn compressed_wire_bytes_shrink_the_pushsum_makespan() {
+        // Byte-accurate link costs: charging the encoded size of a
+        // topk:16 message (≥ 8× smaller) must cut the bandwidth-bound
+        // Ethernet makespan accordingly; identity charges dense bytes.
+        use crate::gossip::Compression;
+        let n = 16;
+        let dim = 25 << 20; // 100 MiB of fp32 → 25 Mi coordinates
+        let run = |spec: Compression| {
+            // Communication-bound round (zero compute) so the ratio of
+            // makespans is the ratio of wire bytes, up to latency.
+            let compute = ComputeModel::deterministic(0.0);
+            average_iteration_time(n, LinkModel::ethernet_10g(), &compute, 50, 3, |_| {
+                OwnedCommPattern::PushSum {
+                    schedule: Schedule::new(TopologyKind::OnePeerExp, n),
+                    bytes: spec.encoded_bytes(dim, MSG),
+                    tau: 0,
+                }
+            })
+        };
+        let dense = run(Compression::Identity);
+        let topk = run(Compression::TopK { den: 16 });
+        let q4 = run(Compression::Qsgd { bits: 4 });
+        assert!(topk < dense * 0.2, "topk {topk} vs dense {dense}");
+        assert!(q4 < dense * 0.2, "qsgd {q4} vs dense {dense}");
+        assert_eq!(
+            Compression::Identity.encoded_bytes(dim, MSG),
+            MSG,
+            "identity charges the dense payload"
+        );
     }
 
     #[test]

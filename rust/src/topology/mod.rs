@@ -194,10 +194,18 @@ impl Schedule {
         let mut p = Mat::zeros(m);
         for (ci, &c) in alive.iter().enumerate() {
             let peers = self.out_peers_among(c, k, alive);
-            let w = 1.0 / (1.0 + peers.len() as f64);
+            // Resolve peer ranks BEFORE weighting: a peer the survivor set
+            // does not know (a schedule round or stale caller naming a
+            // permanently-departed node) is skipped and the column
+            // re-weighted over the peers that remain — the column must
+            // keep summing to 1, never panic mid-sweep.
+            let ranks: Vec<usize> = peers
+                .iter()
+                .filter_map(|r| alive.binary_search(r).ok())
+                .collect();
+            let w = 1.0 / (1.0 + ranks.len() as f64);
             *p.at_mut(ci, ci) += w;
-            for r in &peers {
-                let ri = alive.binary_search(r).expect("peer must be alive");
+            for ri in ranks {
                 *p.at_mut(ri, ci) += w;
             }
         }

@@ -10,7 +10,7 @@
 //! failing case's seed is printed in the assert message.
 
 use sgp::faults::{FaultClock, FaultPlan};
-use sgp::gossip::{ExecPolicy, PushSumEngine};
+use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
 use sgp::net::{CommPattern, ComputeModel, LinkModel, OwnedCommPattern, TimingSim};
 use sgp::rng::Pcg;
 use sgp::topology::{Schedule, TopologyKind};
@@ -208,6 +208,60 @@ fn prop_sharded_timing_sim_bit_identical() {
             let ma = seq.advance(&pat, &comp);
             let mb = par.advance(&pat, &comp);
             assert_eq!(ma.to_bits(), mb.to_bits(), "clean k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_compressed_harness_runs_identical_across_engines() {
+    // The compress-sweep acceptance clause, end-to-end: a compressed run
+    // through the full offline harness (coordinator protocol, gossip with
+    // error-feedback residuals, byte-accurate timing) reports
+    // bit-identical stats at shard counts {1, 2, 7} — with and without a
+    // fault plan in the mix.
+    use sgp::faults::harness::{run_quadratic, FaultRunConfig};
+    for case in 0..4u64 {
+        let mut rng = Pcg::new(24_000 + case);
+        let algo = ["sgp", "osgp", "dpsgd", "dasgd"][rng.below(4)];
+        let spec = if case % 2 == 0 {
+            Compression::TopK { den: 16 }
+        } else {
+            Compression::Qsgd { bits: 4 }
+        };
+        let plan = if rng.f64() < 0.5 {
+            arb_plan(&mut rng, 8, 40, case).with_drop(0.1)
+        } else {
+            FaultPlan::lossless()
+        };
+        let seq_cfg = FaultRunConfig {
+            n: 8,
+            iters: 40,
+            compress: spec,
+            heterogeneity: 0.5,
+            ..Default::default()
+        };
+        let a = run_quadratic(algo, &seq_cfg, &plan).unwrap();
+        for shards in [2usize, 7] {
+            let par_cfg = FaultRunConfig {
+                exec: ExecPolicy::parallel(shards),
+                ..seq_cfg.clone()
+            };
+            let b = run_quadratic(algo, &par_cfg, &plan).unwrap();
+            assert_eq!(
+                a.final_err.to_bits(),
+                b.final_err.to_bits(),
+                "case {case}: {algo} {spec:?} shards={shards} final_err"
+            );
+            assert_eq!(
+                a.consensus.to_bits(),
+                b.consensus.to_bits(),
+                "case {case}: {algo} {spec:?} shards={shards} consensus"
+            );
+            assert_eq!(
+                a.makespan.to_bits(),
+                b.makespan.to_bits(),
+                "case {case}: {algo} {spec:?} shards={shards} makespan"
+            );
         }
     }
 }

@@ -8,7 +8,7 @@
 use sgp::data::{Batch, BigramLm, Blobs};
 use sgp::faults::harness::{run_quadratic, FaultRunConfig};
 use sgp::faults::{Degradation, FaultClock, FaultPlan};
-use sgp::gossip::PushSumEngine;
+use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
 use sgp::model::json::Json;
 use sgp::net::{CommPattern, ComputeModel, LinkModel, TimingSim};
 use sgp::rng::Pcg;
@@ -240,6 +240,107 @@ fn prop_fault_mode_mass_conserved_under_any_plan() {
         for st in &eng.states {
             assert!(st.w > 0.0, "case {case}: w={}", st.w);
             assert!(st.debiased().iter().all(|v| v.is_finite()), "case {case}");
+        }
+    }
+}
+
+/// Draw a random non-identity compression spec.
+fn arb_compression(rng: &mut Pcg) -> Compression {
+    if rng.f64() < 0.5 {
+        Compression::TopK { den: [2u32, 4, 8, 16][rng.below(4)] }
+    } else {
+        Compression::Qsgd { bits: [2u8, 4, 8][rng.below(3)] }
+    }
+}
+
+#[test]
+fn prop_compressed_mass_conserved_across_topologies_and_fault_plans() {
+    // The compression half of the conservation law: with top-k or
+    // quantized messages, error feedback and the φ weight-split, both Σx
+    // and Σw over states + in-flight + per-edge banks + the drop ledger
+    // are invariant — for random topologies, random fault plans (drops,
+    // rescue, churn) and random delays.
+    for case in 0..60u64 {
+        let mut rng = Pcg::new(13_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let d = 1 + rng.below(24);
+        let delay = rng.below(3) as u64;
+        let spec = arb_compression(&mut rng);
+        let faulty = rng.f64() < 0.6;
+        let plan = arb_plan(&mut rng, n, 30, case);
+        let clock = FaultClock::new(plan);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+        let mut eng = PushSumEngine::new(init, delay, false);
+        let (x0, w0) = eng.total_mass_with_losses();
+        let s = Schedule::with_seed(kind, n, case);
+        for k in 0..30 {
+            let fc = faulty.then_some(&clock);
+            eng.step_compressed(k, &s, fc, ExecPolicy::Sequential, spec);
+            let (x, w) = eng.total_mass_with_losses();
+            for (a, b) in x.iter().zip(&x0) {
+                assert!(
+                    (a - b).abs() < 1e-2,
+                    "case {case}: {kind:?} {spec:?} n={n} k={k}: x {a} → {b}"
+                );
+            }
+            assert!((w - w0).abs() < 1e-9, "case {case} {spec:?} k={k}: w");
+        }
+        // Drain re-absorbs the banks: the plain state+in-flight+ledger
+        // mass is whole again and the bank is empty, x and w alike.
+        eng.drain();
+        let (rx, rw) = eng.residual_mass();
+        assert!(rx.iter().all(|v| *v == 0.0) && rw == 0.0, "case {case}");
+        let (x1, w1) = eng.total_mass_with_losses();
+        for (a, b) in x1.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-2, "case {case}: post-drain x {a} → {b}");
+        }
+        assert!((w1 - w0).abs() < 1e-9, "case {case}: post-drain w");
+        for st in &eng.states {
+            assert!(st.w > 0.0 && st.debiased().iter().all(|v| v.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn prop_compressed_parallel_engine_bit_identical_to_sequential() {
+    // The determinism contract extended to compression: at shard counts
+    // {2, 7} a compressed run — with or without a fault plan — is
+    // bit-identical to the sequential engine (states, weights, residual
+    // bank, counters).
+    for case in 0..30u64 {
+        let mut rng = Pcg::new(14_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let d = 1 + rng.below(16);
+        let delay = rng.below(3) as u64;
+        let spec = arb_compression(&mut rng);
+        let faulty = rng.f64() < 0.5;
+        let plan = arb_plan(&mut rng, n, 25, case);
+        let clock = FaultClock::new(plan);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+        let s = Schedule::with_seed(kind, n, case);
+        for shards in [2usize, 7] {
+            let mut seq = PushSumEngine::new(init.clone(), delay, false);
+            let mut par = PushSumEngine::new(init.clone(), delay, false);
+            for k in 0..25 {
+                let fc = faulty.then_some(&clock);
+                seq.step_compressed(k, &s, fc, ExecPolicy::Sequential, spec);
+                par.step_compressed(k, &s, fc, ExecPolicy::parallel(shards), spec);
+            }
+            let tag = format!("case {case}: {kind:?} {spec:?} n={n} shards={shards}");
+            for (a, b) in seq.states.iter().zip(&par.states) {
+                assert_eq!(a.x, b.x, "{tag}: numerator");
+                assert_eq!(a.w.to_bits(), b.w.to_bits(), "{tag}: weight");
+            }
+            let ((rxa, rwa), (rxb, rwb)) =
+                (seq.residual_mass(), par.residual_mass());
+            for (a, b) in rxa.iter().zip(&rxb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: bank x");
+            }
+            assert_eq!(rwa.to_bits(), rwb.to_bits(), "{tag}: bank w");
+            assert_eq!(seq.sent_count, par.sent_count, "{tag}: sent counter");
+            assert_eq!(seq.drop_count, par.drop_count, "{tag}: drop counter");
         }
     }
 }

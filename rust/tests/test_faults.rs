@@ -225,6 +225,62 @@ fn crashed_member_stalls_the_collective_but_not_the_gossip() {
 }
 
 #[test]
+fn prop_crash_then_fire_never_panics_across_strategies() {
+    // Crash-then-fire: random churn plans — permanent leaves included,
+    // crashes landing at any round, several per run — drive every
+    // registered strategy through the full harness. The historical
+    // panics this pins down: `mixing_matrix_among`'s "peer must be
+    // alive" expect and AD-PSGD's "event node is alive" expect, both
+    // reachable in spirit when a schedule round or queued event
+    // references a departed node. Survivor metrics must come back
+    // finite (or the run is allowed to have diverged numerically — but
+    // never to have panicked), and the survivor mixing matrix must stay
+    // column-stochastic at every churn level.
+    let algos = ["sgp", "sgp-2p", "osgp", "dpsgd", "adpsgd", "dasgd", "ar-sgd"];
+    for case in 0..24u64 {
+        let mut rng = Pcg::new(31_000 + case);
+        let n = [4usize, 8, 13][rng.below(3)];
+        let iters = 40u64;
+        let mut plan = FaultPlan::lossless()
+            .with_drop(rng.f64() * 0.2)
+            .with_rescue(rng.f64() < 0.5)
+            .with_seed(case);
+        for _ in 0..1 + rng.below(3) {
+            let node = rng.below(n);
+            let at = rng.next_u64() % iters;
+            // Half the crashes are permanent leaves — the departed-node
+            // case the expects used to be reachable for.
+            let rejoin = (rng.f64() < 0.5).then(|| at + 1 + rng.next_u64() % iters);
+            plan = plan.with_crash(node, at, rejoin);
+        }
+        let algo = algos[rng.below(algos.len())];
+        let cfg = FaultRunConfig { n, iters, dim: 8, ..FaultRunConfig::default() };
+        let s = run_quadratic(algo, &cfg, &plan)
+            .unwrap_or_else(|e| panic!("case {case}: {algo} errored: {e}"));
+        assert!(s.makespan.is_finite(), "case {case}: {algo} makespan");
+
+        // The survivor mixing matrix stays column-stochastic at every
+        // round of the same churn history (the topology half of the fix).
+        let clock = FaultClock::new(plan);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in (0..iters).step_by(7) {
+            let alive = clock.alive(n, k);
+            if alive.is_empty() {
+                continue;
+            }
+            let p = sched.mixing_matrix_among(k, &alive);
+            for c in 0..alive.len() {
+                let sum: f64 = (0..alive.len()).map(|r| p.at(r, c)).sum();
+                assert!(
+                    (sum - 1.0).abs() < 1e-12,
+                    "case {case} k={k}: column {c} sums to {sum}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn membership_hook_default_is_noop_and_trait_object_safe() {
     // The default-implemented hook must be callable through a boxed trait
     // object without the strategy opting in.
