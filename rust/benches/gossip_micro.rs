@@ -5,13 +5,26 @@
 //! critical path relative to gradient compute (see EXPERIMENTS.md §Perf).
 //!
 //! Besides the human-readable report, the run writes machine-readable
-//! `results/BENCH_gossip.json` (override with `BENCH_JSON=<path>`) and the
+//! `results/BENCH_gossip.json` (override with `BENCH_JSON=<path>`), the
 //! execution-engine scaling curve `results/BENCH_engine.json` (override
-//! with `BENCH_ENGINE_JSON=<path>`) — the perf-trajectory artifacts CI and
-//! tooling can diff across commits.
+//! with `BENCH_ENGINE_JSON=<path>`), and the compression curve
+//! `results/BENCH_compress.json` (`BENCH_COMPRESS_JSON=<path>`) — the
+//! perf-trajectory artifacts `repro bench-check` diffs against the
+//! committed baselines under `benchmarks/baselines/`.
+//!
+//! Set `SGP_BENCH_FAST=1` for the CI smoke configuration: smaller time
+//! budgets and fewer sizes per curve. The JSON schema is identical and
+//! every entry a fast run emits keeps its full-run name — fast mode is a
+//! strict **subset** of the full suite — so the perf gate keeps matching
+//! entries by name while the wall-clock stays bounded. Arm the committed
+//! baselines from the same mode CI enforces (`SGP_BENCH_FAST=1`):
+//! baselines recorded from a full run additionally track entries the CI
+//! run never produces, which the gate reports as "gone (ignored)".
+
+use std::time::Duration;
 
 use sgp::algorithms::{AlgoParams, DistributedAlgorithm, RoundCtx, Sgp};
-use sgp::benchkit::{bench, bench_for, black_box, section, JsonReport};
+use sgp::benchkit::{bench_for, black_box, section, JsonReport};
 use sgp::faults::{FaultClock, FaultPlan};
 use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
 use sgp::net::LinkModel;
@@ -26,18 +39,37 @@ fn engine(n: usize, dim: usize, delay: u64) -> PushSumEngine {
 }
 
 fn main() {
+    let fast = std::env::var("SGP_BENCH_FAST")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty());
+    // One knob scales every curve: smaller budgets and fewer sizes in
+    // fast (CI smoke) mode, identical names/schema either way.
+    let budget = if fast {
+        Duration::from_millis(250)
+    } else {
+        Duration::from_secs(2)
+    };
+    let dims: &[(usize, &str)] = if fast {
+        &[(22_026, "mlp-22k")]
+    } else {
+        &[(22_026, "mlp-22k"), (923_904, "lm-924k")]
+    };
     let mut report = JsonReport::new();
 
     section("gossip engine: one step (send+aggregate all nodes)");
-    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+    for &(dim, tag) in dims {
         for n in [8usize, 16] {
             let sched = Schedule::new(TopologyKind::OnePeerExp, n);
             let mut eng = engine(n, dim, 0);
             let mut k = 0u64;
-            report.push(bench(&format!("pushsum_step/1peer/{tag}/n{n}"), || {
-                eng.step(k, &sched);
-                k += 1;
-            }));
+            report.push(bench_for(
+                &format!("pushsum_step/1peer/{tag}/n{n}"),
+                budget,
+                || {
+                    eng.step(k, &sched);
+                    k += 1;
+                },
+            ));
         }
     }
 
@@ -45,14 +77,14 @@ fn main() {
     let sched2 = Schedule::new(TopologyKind::TwoPeerExp, 16);
     let mut eng = engine(16, 22_026, 0);
     let mut k = 0u64;
-    report.push(bench("pushsum_step/2peer/mlp-22k/n16", || {
+    report.push(bench_for("pushsum_step/2peer/mlp-22k/n16", budget, || {
         eng.step(k, &sched2);
         k += 1;
     }));
     let sched1 = Schedule::new(TopologyKind::OnePeerExp, 16);
     let mut eng = engine(16, 22_026, 1);
     let mut k = 0u64;
-    report.push(bench("pushsum_step/1peer-tau1/mlp-22k/n16", || {
+    report.push(bench_for("pushsum_step/1peer-tau1/mlp-22k/n16", budget, || {
         eng.step(k, &sched1);
         k += 1;
     }));
@@ -60,7 +92,7 @@ fn main() {
     section("fault injection: lossy + churn step vs clean step, n=16");
     // The fault layer's overhead budget: a lossy step with churn should
     // stay within a small factor of the clean step at both scales.
-    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+    for &(dim, tag) in dims {
         let sched = Schedule::new(TopologyKind::OnePeerExp, 16);
         let clock = FaultClock::new(
             FaultPlan::lossless()
@@ -70,8 +102,9 @@ fn main() {
         );
         let mut eng = engine(16, dim, 0);
         let mut k = 0u64;
-        report.push(bench(
+        report.push(bench_for(
             &format!("pushsum_step_faulty/5pct-drop/{tag}/n16"),
+            budget,
             || {
                 eng.step_faulty(k % 256, &sched, &clock);
                 k += 1;
@@ -84,15 +117,19 @@ fn main() {
     // work: identical PushSum math, once called directly and once through
     // a `Box<dyn DistributedAlgorithm>` vtable (incl. the schedule clone
     // the owned timing pattern carries).
-    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+    for &(dim, tag) in dims {
         let n = 16;
         let sched = Schedule::new(TopologyKind::OnePeerExp, n);
         let mut eng = engine(n, dim, 0);
         let mut k = 0u64;
-        report.push(bench(&format!("dispatch/direct-engine/{tag}/n{n}"), || {
-            eng.step(k, &sched);
-            k += 1;
-        }));
+        report.push(bench_for(
+            &format!("dispatch/direct-engine/{tag}/n{n}"),
+            budget,
+            || {
+                eng.step(k, &sched);
+                k += 1;
+            },
+        ));
 
         let mut rng = Pcg::new(1);
         let mut params = AlgoParams::new(n, rng.gaussian_vec(dim), OptimKind::Sgd);
@@ -102,37 +139,51 @@ fn main() {
         let link = LinkModel::ethernet_10g();
         let comp = vec![0.1f64; n];
         let mut k = 0u64;
-        report.push(bench(&format!("dispatch/boxed-trait/{tag}/n{n}"), || {
-            let ctx = RoundCtx::new(k, &comp, 4 * dim, &link);
-            black_box(alg.communicate(&ctx));
-            k += 1;
-        }));
+        report.push(bench_for(
+            &format!("dispatch/boxed-trait/{tag}/n{n}"),
+            budget,
+            || {
+                let ctx = RoundCtx::new(k, &comp, 4 * dim, &link);
+                black_box(alg.communicate(&ctx));
+                k += 1;
+            },
+        ));
     }
 
     section("debias + statistics");
+    // Fixed at the lm-924k scale in BOTH modes so fast-mode entries keep
+    // their full-run names (the perf gate matches by name).
     let eng = engine(16, 923_904, 0);
     let mut out = vec![0.0f32; 923_904];
-    report.push(bench("debias_into/lm-924k", || {
+    report.push(bench_for("debias_into/lm-924k", budget, || {
         eng.states[0].debias_into(&mut out);
         black_box(&out);
     }));
-    report.push(bench("consensus_distance/lm-924k/n16", || {
+    report.push(bench_for("consensus_distance/lm-924k/n16", budget, || {
         black_box(eng.consensus_distance());
     }));
-    report.push(bench("total_mass/lm-924k/n16", || {
+    report.push(bench_for("total_mass/lm-924k/n16", budget, || {
         black_box(eng.total_mass());
     }));
 
-    section("execution engine: sequential vs sharded-parallel step scaling");
-    // The engine scaling curve (ISSUE 3 acceptance): one full gossip step
-    // at large N, sequential baseline vs the parallel engine at several
-    // shard counts. Results are bit-identical by construction (the
-    // engine-equivalence suite verifies it); this curve records how much
-    // wall-clock the sharding buys on this machine. Written separately to
-    // results/BENCH_engine.json so perf tooling can track the speedup.
+    section("execution engine: sequential vs pool-sharded step scaling");
+    // The engine scaling curve (ISSUE 3/5 acceptance): one full gossip
+    // step at large N, sequential baseline vs the persistent-pool engine
+    // at several shard counts — N ≥ 1024 is where the pool must deliver
+    // ≥ 2× over the old per-round-spawn design. Results are bit-identical
+    // by construction (the engine-equivalence suite verifies it); this
+    // curve records how much wall-clock the pool buys on this machine.
+    // Written separately to results/BENCH_engine.json so the perf gate
+    // can track the speedup.
     let mut engine_report = JsonReport::new();
-    let budget = std::time::Duration::from_secs(2);
-    for n in [64usize, 256] {
+    let engine_budget = if fast {
+        Duration::from_millis(500)
+    } else {
+        Duration::from_secs(2)
+    };
+    let engine_ns: &[usize] =
+        if fast { &[256, 1024] } else { &[64, 256, 1024, 2048] };
+    for &n in engine_ns {
         let dim = 22_026; // MLP-scale parameters per node
         let sched = Schedule::new(TopologyKind::OnePeerExp, n);
         for shards in [1usize, 2, 4, 8] {
@@ -141,7 +192,7 @@ fn main() {
             let mut k = 0u64;
             engine_report.push(bench_for(
                 &format!("engine_step/mlp-22k/n{n}/shards{shards}"),
-                budget,
+                engine_budget,
                 || {
                     eng.step_exec(k, &sched, None, exec);
                     k += 1;
@@ -159,13 +210,17 @@ fn main() {
 
     section("compression: encode cost + wire bytes per scheme (n=16)");
     // The compression scaling curve (ISSUE 4 acceptance): one full gossip
-    // step per scheme at both parameter scales, with the per-iteration
+    // step per scheme at each parameter scale, with the per-iteration
     // wire bytes attached so the curve pairs CPU cost against byte
     // reduction (compression trades a little encode CPU for a lot of
     // simulated bandwidth). Written to results/BENCH_compress.json.
     let mut compress_report = JsonReport::new();
-    let budget = std::time::Duration::from_secs(1);
-    for (dim, tag) in [(22_026usize, "mlp-22k"), (923_904, "lm-924k")] {
+    let compress_budget = if fast {
+        Duration::from_millis(250)
+    } else {
+        Duration::from_secs(1)
+    };
+    for &(dim, tag) in dims {
         let n = 16;
         let full_bytes = 4 * dim;
         let sched = Schedule::new(TopologyKind::OnePeerExp, n);
@@ -178,7 +233,7 @@ fn main() {
             let mut k = 0u64;
             let stats = bench_for(
                 &format!("compress_step/{}/{tag}/n{n}", spec.label().replace(':', "")),
-                budget,
+                compress_budget,
                 || {
                     eng.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
                     k += 1;

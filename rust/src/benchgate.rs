@@ -1,0 +1,360 @@
+//! CI perf-regression gate: diff freshly produced `results/BENCH_*.json`
+//! microbench reports against committed baselines under
+//! `benchmarks/baselines/`, failing on a configurable throughput
+//! regression — the enforcement mechanism behind the ROADMAP's "make a hot
+//! path measurably faster" clause (`repro bench-check`).
+//!
+//! # Model
+//!
+//! Every microbench entry is `{name, median_ns, …}` ([`crate::benchkit`]'s
+//! schema). Throughput is `1 / median_ns`, so a run **regresses** an entry
+//! when
+//!
+//! ```text
+//! fresh_median_ns > baseline_median_ns / (1 − tol)
+//! ```
+//!
+//! i.e. throughput fell by more than `tol` (default 25%). Entries are
+//! matched by name; entries present on only one side are reported but
+//! never fail the gate (benches come and go as the suite evolves — only a
+//! *measured regression of a tracked entry* fails). An empty or missing
+//! baseline file leaves the gate **unarmed** for that report: the check
+//! warns and passes, and `--update` records the fresh numbers as the new
+//! baseline to arm it.
+//!
+//! # Refreshing baselines
+//!
+//! When a legitimate speedup (or an accepted tradeoff) moves the numbers,
+//! regenerate and commit:
+//!
+//! ```text
+//! SGP_BENCH_FAST=1 cargo bench --bench gossip_micro
+//! cargo run --release --bin repro -- bench-check --update
+//! git add benchmarks/baselines && git commit
+//! ```
+//!
+//! Baselines are machine-dependent by nature; commit numbers produced on
+//! the same class of machine that enforces them (for this repo: the CI
+//! runner), and lean on the tolerance to absorb runner noise.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::print_table;
+use crate::model::json::Json;
+
+/// The report files the gate tracks, relative to both the results and the
+/// baselines directory.
+pub const BENCH_FILES: &[&str] =
+    &["BENCH_gossip.json", "BENCH_engine.json", "BENCH_compress.json"];
+
+/// Configuration of one `repro bench-check` invocation.
+#[derive(Clone, Debug)]
+pub struct BenchCheck {
+    /// Directory holding the freshly produced reports (`results/`).
+    pub results_dir: PathBuf,
+    /// Directory holding the committed baselines
+    /// (`benchmarks/baselines/`).
+    pub baseline_dir: PathBuf,
+    /// Allowed throughput regression per entry before the gate fails
+    /// (0.25 = fail when throughput drops more than 25%).
+    pub tol: f64,
+    /// Record mode: overwrite the baselines with the fresh reports instead
+    /// of diffing.
+    pub update: bool,
+}
+
+impl Default for BenchCheck {
+    fn default() -> Self {
+        Self {
+            results_dir: PathBuf::from("results"),
+            baseline_dir: PathBuf::from("benchmarks/baselines"),
+            tol: 0.25,
+            update: false,
+        }
+    }
+}
+
+/// One compared entry (exposed for the table/diagnostics).
+#[derive(Clone, Debug)]
+struct EntryDiff {
+    file: &'static str,
+    name: String,
+    base_ns: f64,
+    fresh_ns: f64,
+}
+
+impl EntryDiff {
+    /// fresh/base median ratio (> 1 means slower).
+    fn ratio(&self) -> f64 {
+        self.fresh_ns / self.base_ns.max(1e-12)
+    }
+
+    /// Does this entry regress throughput beyond `tol`?
+    fn regressed(&self, tol: f64) -> bool {
+        self.base_ns > 0.0 && self.fresh_ns > self.base_ns / (1.0 - tol).max(1e-9)
+    }
+}
+
+/// Parse one benchkit JSON report into `name → median_ns`.
+fn load_medians(path: &Path) -> Result<BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    let benches = doc
+        .get("benches")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{}: no `benches` array", path.display()))?;
+    let mut out = BTreeMap::new();
+    for b in benches {
+        let name = b
+            .get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{}: entry without `name`", path.display()))?;
+        let median = b
+            .get("median_ns")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("{}: `{name}` without `median_ns`", path.display()))?;
+        out.insert(name.to_string(), median);
+    }
+    Ok(out)
+}
+
+/// Run the gate (or, with `update`, record fresh baselines). Errors when a
+/// tracked entry regresses beyond `cfg.tol`, when the tolerance is
+/// nonsensical, or when a fresh report is missing/unreadable.
+pub fn bench_check(cfg: &BenchCheck) -> Result<()> {
+    if !(0.0..1.0).contains(&cfg.tol) {
+        bail!("--tol {}: tolerance must lie in [0, 1)", cfg.tol);
+    }
+    if cfg.update {
+        std::fs::create_dir_all(&cfg.baseline_dir)?;
+        for &file in BENCH_FILES {
+            let src = cfg.results_dir.join(file);
+            let dst = cfg.baseline_dir.join(file);
+            // Validate before recording — a truncated report must not
+            // become the baseline.
+            load_medians(&src)?;
+            std::fs::copy(&src, &dst)
+                .with_context(|| format!("recording {} → {}", src.display(), dst.display()))?;
+            println!("recorded baseline {}", dst.display());
+        }
+        return Ok(());
+    }
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut offenders: Vec<EntryDiff> = Vec::new();
+    let mut compared = 0usize;
+    let mut unarmed: Vec<&str> = Vec::new();
+    for &file in BENCH_FILES {
+        let fresh = load_medians(&cfg.results_dir.join(file))?;
+        let base_path = cfg.baseline_dir.join(file);
+        if !base_path.exists() {
+            unarmed.push(file);
+            continue;
+        }
+        let base = load_medians(&base_path)?;
+        if base.is_empty() {
+            unarmed.push(file);
+            continue;
+        }
+        for (name, &base_ns) in &base {
+            let Some(&fresh_ns) = fresh.get(name) else {
+                rows.push(vec![
+                    file.to_string(),
+                    name.clone(),
+                    format!("{base_ns:.0}"),
+                    "-".into(),
+                    "-".into(),
+                    "gone (ignored)".into(),
+                ]);
+                continue;
+            };
+            let d = EntryDiff {
+                file,
+                name: name.clone(),
+                base_ns,
+                fresh_ns,
+            };
+            compared += 1;
+            let verdict = if d.regressed(cfg.tol) {
+                "REGRESSED"
+            } else if d.ratio() < 1.0 {
+                "faster"
+            } else {
+                "ok"
+            };
+            rows.push(vec![
+                file.to_string(),
+                name.clone(),
+                format!("{base_ns:.0}"),
+                format!("{fresh_ns:.0}"),
+                format!("{:.2}×", d.ratio()),
+                verdict.into(),
+            ]);
+            if d.regressed(cfg.tol) {
+                offenders.push(d);
+            }
+        }
+        for name in fresh.keys().filter(|n| !base.contains_key(*n)) {
+            rows.push(vec![
+                file.to_string(),
+                name.clone(),
+                "-".into(),
+                "new".into(),
+                "-".into(),
+                "untracked (ignored)".into(),
+            ]);
+        }
+    }
+    print_table(
+        &format!(
+            "bench-check — fresh vs committed baselines (tol = {:.0}% throughput)",
+            cfg.tol * 100.0
+        ),
+        &["report", "bench", "base ns", "fresh ns", "ratio", "verdict"],
+        &rows,
+    );
+    for file in &unarmed {
+        eprintln!(
+            "bench-check: no baseline for {file} under {} — gate unarmed for \
+             this report; run `repro bench-check --update` after a bench run \
+             and commit the result to arm it",
+            cfg.baseline_dir.display()
+        );
+    }
+    if compared == 0 && unarmed.len() == BENCH_FILES.len() {
+        eprintln!(
+            "bench-check: no baselines at all — nothing enforced this run"
+        );
+    }
+    if !offenders.is_empty() {
+        let worst = offenders
+            .iter()
+            .map(|d| format!("{}:{} ({:.2}×)", d.file, d.name, d.ratio()))
+            .collect::<Vec<_>>()
+            .join(", ");
+        bail!(
+            "{} of {} tracked benches regressed more than {:.0}% in \
+             throughput: {worst}. If the slowdown is an accepted tradeoff, \
+             refresh the baselines (`repro bench-check --update`, then \
+             commit benchmarks/baselines/).",
+            offenders.len(),
+            compared,
+            cfg.tol * 100.0
+        );
+    }
+    println!(
+        "bench-check: {} tracked entries within {:.0}% throughput tolerance",
+        compared,
+        cfg.tol * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_report(path: &Path, entries: &[(&str, u64)]) {
+        let mut s = String::from("{\n  \"benches\": [\n");
+        for (i, (name, med)) in entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{name}\", \"iters\": 5, \"mean_ns\": {med}, \
+                 \"median_ns\": {med}, \"p95_ns\": {med}, \"min_ns\": {med}, \
+                 \"max_ns\": {med}}}{}\n",
+                if i + 1 == entries.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, s).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("sgp-benchgate-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cfg_for(root: &Path, tol: f64) -> BenchCheck {
+        BenchCheck {
+            results_dir: root.join("results"),
+            baseline_dir: root.join("baselines"),
+            tol,
+            update: false,
+        }
+    }
+
+    /// Write all three fresh reports with a single shared entry list.
+    fn write_all_fresh(root: &Path, entries: &[(&str, u64)]) {
+        for f in BENCH_FILES {
+            write_report(&root.join("results").join(f), entries);
+        }
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_regression_fails() {
+        let root = tmpdir("gate");
+        write_all_fresh(&root, &[("a/b", 1000), ("c/d", 3000)]);
+        let cfg = cfg_for(&root, 0.25);
+        // Arm the baselines from the fresh run.
+        bench_check(&BenchCheck { update: true, ..cfg.clone() }).unwrap();
+        // Identical numbers: pass.
+        bench_check(&cfg).unwrap();
+        // 20% slower at 25% tolerance: ratio 1.2 < 1/(1-0.25)=1.333 → pass.
+        write_all_fresh(&root, &[("a/b", 1200), ("c/d", 3000)]);
+        bench_check(&cfg).unwrap();
+        // 50% slower: throughput fell 33% > 25% → fail, naming the bench.
+        write_all_fresh(&root, &[("a/b", 1500), ("c/d", 3000)]);
+        let err = bench_check(&cfg).unwrap_err().to_string();
+        assert!(err.contains("a/b"), "{err}");
+        // A tighter tolerance catches the 20% case too.
+        write_all_fresh(&root, &[("a/b", 1200), ("c/d", 3000)]);
+        assert!(bench_check(&cfg_for(&root, 0.05)).is_err());
+        // Faster never fails, at any tolerance.
+        write_all_fresh(&root, &[("a/b", 10), ("c/d", 10)]);
+        bench_check(&cfg_for(&root, 0.01)).unwrap();
+    }
+
+    #[test]
+    fn missing_baselines_warn_but_pass_and_name_mismatches_are_ignored() {
+        let root = tmpdir("unarmed");
+        write_all_fresh(&root, &[("a/b", 1000)]);
+        let cfg = cfg_for(&root, 0.25);
+        // No baselines at all: unarmed, passes.
+        bench_check(&cfg).unwrap();
+        // Baseline tracks an entry the fresh run no longer has (and lacks
+        // one it gained): neither fails the gate.
+        write_report(&root.join("baselines").join(BENCH_FILES[0]), &[("old/gone", 500)]);
+        write_report(&root.join("results").join(BENCH_FILES[0]), &[("new/born", 900)]);
+        bench_check(&cfg).unwrap();
+    }
+
+    #[test]
+    fn update_validates_and_records() {
+        let root = tmpdir("update");
+        let cfg = cfg_for(&root, 0.25);
+        // Fresh reports missing entirely: update errors.
+        assert!(bench_check(&BenchCheck { update: true, ..cfg.clone() }).is_err());
+        write_all_fresh(&root, &[("x/y", 10)]);
+        bench_check(&BenchCheck { update: true, ..cfg.clone() }).unwrap();
+        for f in BENCH_FILES {
+            assert!(root.join("baselines").join(f).exists(), "{f}");
+        }
+        bench_check(&cfg).unwrap();
+    }
+
+    #[test]
+    fn bad_tolerance_is_rejected() {
+        let root = tmpdir("tol");
+        write_all_fresh(&root, &[("a", 1)]);
+        assert!(bench_check(&cfg_for(&root, 1.0)).is_err());
+        assert!(bench_check(&cfg_for(&root, -0.1)).is_err());
+    }
+}

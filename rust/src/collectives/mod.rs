@@ -7,6 +7,7 @@
 use crate::gossip::ExecPolicy;
 use crate::net::LinkModel;
 use crate::rng::Pcg;
+use crate::runtime::pool;
 
 /// Exactly average a set of flat vectors in place (the AllReduce result:
 /// every participant ends with the same mean vector).
@@ -42,10 +43,13 @@ pub fn mean_of(vs: &[Vec<f32>]) -> Vec<f32> {
 }
 
 /// [`mean_of`] under an execution policy: the *coordinates* are
-/// partitioned into contiguous ranges, one scoped worker per range. Every
-/// coordinate still accumulates over the views in the same order as the
-/// sequential loop, so the result is **bit-identical** to [`mean_of`] for
-/// any shard count — the same determinism contract as the gossip engine.
+/// partitioned into contiguous ranges, one persistent-pool worker per
+/// range ([`crate::runtime::pool`]). Every coordinate still accumulates
+/// over the views in the same order as the sequential loop, so the result
+/// is **bit-identical** to [`mean_of`] for any shard count — the same
+/// determinism contract as the gossip engine. (This is an eval-time
+/// helper: the output vector and per-worker partials are allocated per
+/// call, unlike the allocation-free gossip round.)
 pub fn mean_of_exec(vs: &[Vec<f32>], exec: ExecPolicy) -> Vec<f32> {
     let n = vs.len() as f64;
     let dim = vs[0].len();
@@ -54,24 +58,46 @@ pub fn mean_of_exec(vs: &[Vec<f32>], exec: ExecPolicy) -> Vec<f32> {
         return mean_of(vs);
     }
     let chunk = dim.div_ceil(shards);
+    let used = dim.div_ceil(chunk);
     let mut out = vec![0.0f32; dim];
-    std::thread::scope(|scope| {
-        for (ci, dst) in out.chunks_mut(chunk).enumerate() {
-            let lo = ci * chunk;
-            scope.spawn(move || {
-                let mut acc = vec![0.0f64; dst.len()];
-                for v in vs {
-                    for (a, b) in acc.iter_mut().zip(&v[lo..lo + dst.len()]) {
-                        *a += *b as f64;
-                    }
-                }
-                for (o, a) in dst.iter_mut().zip(&acc) {
-                    *o = (a / n) as f32;
-                }
-            });
-        }
-    });
+    let table = MeanTable { out: out.as_mut_ptr(), dim, chunk, vs, n };
+    // SAFETY: shard s writes only coordinates [s·chunk, s·chunk+len) —
+    // disjoint output ranges — and the pool runs each index exactly once.
+    pool::global().run(used, &|s| unsafe { table.run(s) });
     out
+}
+
+/// Raw coordinate-range view of the output vector for the pool workers;
+/// shard `s` writes only its own contiguous range.
+struct MeanTable<'a> {
+    out: *mut f32,
+    dim: usize,
+    chunk: usize,
+    vs: &'a [Vec<f32>],
+    n: f64,
+}
+
+// SAFETY: workers write disjoint output ranges; `vs` is shared read-only.
+unsafe impl Send for MeanTable<'_> {}
+unsafe impl Sync for MeanTable<'_> {}
+
+impl MeanTable<'_> {
+    /// # Safety
+    /// `s·chunk < dim` and each shard index runs on exactly one worker.
+    unsafe fn run(&self, s: usize) {
+        let lo = s * self.chunk;
+        let len = self.chunk.min(self.dim - lo);
+        let dst = std::slice::from_raw_parts_mut(self.out.add(lo), len);
+        let mut acc = vec![0.0f64; len];
+        for v in self.vs {
+            for (a, b) in acc.iter_mut().zip(&v[lo..lo + len]) {
+                *a += *b as f64;
+            }
+        }
+        for (o, a) in dst.iter_mut().zip(&acc) {
+            *o = (a / self.n) as f32;
+        }
+    }
 }
 
 /// Shape of the ring algorithm: `(serial steps, parallel transfers per

@@ -132,10 +132,11 @@ impl<'rt> TrainerBuilder<'rt> {
 
     /// Select the execution engine for the per-round state updates:
     /// [`ExecPolicy::Sequential`] (the default) or a sharded-parallel
-    /// gossip round ([`ExecPolicy::parallel`]). Any policy produces
-    /// bit-identical results at a fixed seed — including under a fault
-    /// plan — so this is purely a wall-clock knob for large-N runs (see
-    /// ARCHITECTURE.md §Determinism).
+    /// gossip round ([`ExecPolicy::parallel`]) on the persistent worker
+    /// pool ([`crate::runtime::pool`]). Any policy produces bit-identical
+    /// results at a fixed seed — including under a fault plan and at any
+    /// pool size — so this is purely a wall-clock knob for large-N runs
+    /// (see ARCHITECTURE.md §Determinism).
     pub fn engine(mut self, exec: ExecPolicy) -> Self {
         self.exec = exec;
         self

@@ -698,13 +698,14 @@ pub fn faults_sweep(sweep: &FaultSweep) -> Result<()> {
 
 /// What `repro engine-sweep` measures: wall-clock of the gossip round loop
 /// at large N — the regime the paper's scaling claim lives in — run once
-/// sequentially and once per shard count, with a built-in bit-identity
-/// check between the two engines. Fully offline (pure gossip, no HLO
-/// artifacts).
+/// sequentially and once per shard count × pool-thread count, with a
+/// built-in bit-identity check between the engines. Fully offline (pure
+/// gossip, no HLO artifacts).
 #[derive(Clone, Debug)]
 pub struct EngineSweep {
     /// Node counts to sweep; the default tops out at the large-N regime
-    /// (1024 nodes) the sequential loop was previously capped below.
+    /// (4096 nodes) where per-iteration gossip cost must stay independent
+    /// of n for the paper's scaling argument to hold.
     pub ns: Vec<usize>,
     /// Parameter dimension per node.
     pub dim: usize,
@@ -712,6 +713,11 @@ pub struct EngineSweep {
     pub steps: u64,
     /// Shard counts to compare against the sequential baseline.
     pub shards: Vec<usize>,
+    /// Worker-pool sizes to sweep (the threads axis). `0` means the
+    /// machine-default global pool; any other value builds a private
+    /// [`crate::runtime::pool::Pool`] of that many workers. Results are
+    /// bit-identical across the whole axis — it moves wall-clock only.
+    pub threads: Vec<usize>,
     /// Seed of the node initialization.
     pub seed: u64,
 }
@@ -720,30 +726,35 @@ impl EngineSweep {
     /// Default sweep shape (`fast` = the CI smoke configuration).
     pub fn new(fast: bool) -> Self {
         Self {
-            ns: if fast { vec![64, 256] } else { vec![64, 256, 1024] },
+            ns: if fast { vec![64, 256] } else { vec![64, 256, 1024, 4096] },
             dim: 1024,
             steps: if fast { 20 } else { 50 },
             shards: vec![2, 4, 8],
+            threads: vec![0],
             seed: 1,
         }
     }
 }
 
-/// Run the engine scaling sweep: per `(n, shards)`, wall-clock of the
-/// parallel round loop vs the sequential baseline, asserting the two
-/// engines end bit-identical (the determinism contract, exercised at
-/// sweep scale). Writes `results/engine_sweep.csv`.
+/// Run the engine scaling sweep: per `(n, threads, shards)`, wall-clock of
+/// the pooled round loop vs the sequential baseline, asserting the engines
+/// end bit-identical (the determinism contract, exercised at sweep scale
+/// across the full thread axis). Writes `results/engine_sweep.csv`.
 pub fn engine_sweep(cfg: &EngineSweep) -> Result<()> {
     use crate::rng::Pcg;
+    use crate::runtime::pool::{self, Pool};
+    use std::sync::Arc;
     let mut rows = Vec::new();
-    let mut divergences: Vec<(usize, usize)> = Vec::new();
-    let mut csv = String::from("n,dim,steps,engine,shards,wall_s,speedup,identical\n");
+    let mut divergences: Vec<(usize, usize, usize)> = Vec::new();
+    let mut csv =
+        String::from("n,dim,steps,engine,shards,threads,wall_s,speedup,identical\n");
     for &n in &cfg.ns {
         let mut rng = Pcg::new(cfg.seed);
         let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(cfg.dim)).collect();
         let sched = Schedule::new(TopologyKind::OnePeerExp, n);
-        let run = |exec: ExecPolicy| -> (f64, PushSumEngine) {
+        let run = |exec: ExecPolicy, pool: Option<Arc<Pool>>| -> (f64, PushSumEngine) {
             let mut eng = PushSumEngine::new(init.clone(), 1, false);
+            eng.set_pool(pool);
             let t0 = std::time::Instant::now();
             for k in 0..cfg.steps {
                 eng.step_exec(k, &sched, None, exec);
@@ -751,44 +762,52 @@ pub fn engine_sweep(cfg: &EngineSweep) -> Result<()> {
             eng.drain();
             (t0.elapsed().as_secs_f64(), eng)
         };
-        let (base_s, base_eng) = run(ExecPolicy::Sequential);
+        let (base_s, base_eng) = run(ExecPolicy::Sequential, None);
         csv.push_str(&format!(
-            "{n},{},{},sequential,1,{base_s:.6},1.000,-\n",
+            "{n},{},{},sequential,1,1,{base_s:.6},1.000,-\n",
             cfg.dim, cfg.steps
         ));
         rows.push(vec![
             n.to_string(),
             "sequential".into(),
+            "1".into(),
             format!("{:.1}ms", base_s * 1e3),
             "1.00×".into(),
             "-".into(),
         ]);
-        for &s in &cfg.shards {
-            if s <= 1 {
-                continue;
+        for &t in &cfg.threads {
+            let pool: Option<Arc<Pool>> =
+                if t == 0 { None } else { Some(Arc::new(Pool::new(t))) };
+            let workers =
+                pool.as_deref().map_or_else(|| pool::global().workers(), Pool::workers);
+            for &s in &cfg.shards {
+                if s <= 1 {
+                    continue;
+                }
+                let exec = ExecPolicy::parallel(s);
+                let (wall, eng) = run(exec, pool.clone());
+                let identical = base_eng
+                    .states
+                    .iter()
+                    .zip(&eng.states)
+                    .all(|(a, b)| a.x == b.x && a.w.to_bits() == b.w.to_bits());
+                if !identical {
+                    divergences.push((n, s, workers));
+                }
+                let speedup = base_s / wall.max(1e-12);
+                csv.push_str(&format!(
+                    "{n},{},{},parallel,{s},{workers},{wall:.6},{speedup:.3},{identical}\n",
+                    cfg.dim, cfg.steps
+                ));
+                rows.push(vec![
+                    n.to_string(),
+                    exec.label(),
+                    workers.to_string(),
+                    format!("{:.1}ms", wall * 1e3),
+                    format!("{speedup:.2}×"),
+                    if identical { "yes".into() } else { "NO".into() },
+                ]);
             }
-            let exec = ExecPolicy::parallel(s);
-            let (wall, eng) = run(exec);
-            let identical = base_eng
-                .states
-                .iter()
-                .zip(&eng.states)
-                .all(|(a, b)| a.x == b.x && a.w.to_bits() == b.w.to_bits());
-            if !identical {
-                divergences.push((n, s));
-            }
-            let speedup = base_s / wall.max(1e-12);
-            csv.push_str(&format!(
-                "{n},{},{},parallel,{s},{wall:.6},{speedup:.3},{identical}\n",
-                cfg.dim, cfg.steps
-            ));
-            rows.push(vec![
-                n.to_string(),
-                exec.label(),
-                format!("{:.1}ms", wall * 1e3),
-                format!("{speedup:.2}×"),
-                if identical { "yes".into() } else { "NO".into() },
-            ]);
         }
     }
     // Emit the artifact and the table even when a divergence was found —
@@ -796,16 +815,16 @@ pub fn engine_sweep(cfg: &EngineSweep) -> Result<()> {
     std::fs::write(results_dir().join("engine_sweep.csv"), csv)?;
     print_table(
         &format!(
-            "Execution engine — sequential vs sharded gossip, dim = {}, {} steps",
+            "Execution engine — sequential vs pool-sharded gossip, dim = {}, {} steps",
             cfg.dim, cfg.steps
         ),
-        &["nodes", "engine", "wall", "speedup", "bit-identical"],
+        &["nodes", "engine", "threads", "wall", "speedup", "bit-identical"],
         &rows,
     );
     anyhow::ensure!(
         divergences.is_empty(),
         "parallel engine diverged from sequential at {divergences:?} \
-         (n, shards) — determinism contract violated"
+         (n, shards, threads) — determinism contract violated"
     );
     Ok(())
 }

@@ -256,7 +256,17 @@ impl FaultClock {
 
     /// Sorted surviving members at iteration `k`.
     pub fn alive(&self, n: usize, k: u64) -> Vec<usize> {
-        (0..n).filter(|&i| !self.is_down(i, k)).collect()
+        let mut out = Vec::new();
+        self.alive_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Self::alive`] into a caller-owned buffer (cleared first) — the
+    /// allocation-free form the gossip hot path uses every fault-mode
+    /// round.
+    pub fn alive_into(&self, n: usize, k: u64, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..n).filter(|&i| !self.is_down(i, k)));
     }
 
     /// Membership transitions occurring exactly at iteration `k`, in plan

@@ -15,9 +15,10 @@
 /// Degree of parallelism for one engine round.
 ///
 /// `Sequential` is the classic single-thread loop; `Parallel { shards }`
-/// partitions the nodes into `shards` contiguous ranges executed on a
-/// fixed pool of scoped worker threads, with a deterministic ordered merge
-/// between the compute and aggregate phases. Both produce identical bits:
+/// partitions the nodes into `shards` contiguous ranges executed on the
+/// persistent worker pool ([`crate::runtime::pool`]), with a
+/// deterministic ordered merge between the compute and aggregate phases.
+/// Both produce identical bits:
 ///
 /// ```
 /// use sgp::gossip::{ExecPolicy, PushSumEngine};
@@ -41,15 +42,17 @@ pub enum ExecPolicy {
     /// One shard, executed inline on the calling thread (the default).
     #[default]
     Sequential,
-    /// Partition state across `shards` contiguous node ranges, one scoped
-    /// worker thread per shard. `shards ≤ 1` degenerates to sequential.
-    ///
-    /// Workers are scoped threads spawned per round (borrow-safe, no
-    /// cross-round state), so each round pays ~2·shards spawns; pick a
-    /// shard count whose per-shard work (≈ `n·dim / shards` elements)
-    /// dwarfs that cost — `repro engine-sweep` measures exactly this
-    /// tradeoff, and small-N/small-dim configurations are often fastest
+    /// Partition state across `shards` contiguous node ranges, executed on
+    /// the **persistent worker pool** ([`crate::runtime::pool`]): shard
+    /// `s` is pinned to worker `s mod W`, and a round costs one barrier
+    /// handoff instead of fresh thread spawns. `shards ≤ 1` degenerates to
     /// sequential.
+    ///
+    /// The handoff is cheap but not free; pick a shard count whose
+    /// per-shard work (≈ `n·dim / shards` elements) dwarfs it —
+    /// `repro engine-sweep` measures exactly this tradeoff (with a
+    /// `--threads` axis for the pool size), and small-N/small-dim
+    /// configurations are often fastest sequential.
     Parallel {
         /// Number of state shards (clamped to ≥ 1 and to the node count).
         shards: usize,

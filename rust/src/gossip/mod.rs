@@ -28,13 +28,32 @@
 //! 3. **aggregate** — each node drains the due messages from *its own*
 //!    mailbox into its state.
 //!
-//! Phases 1 and 3 touch disjoint per-node state, so they shard across a
-//! worker pool ([`ExecPolicy::Parallel`]); phase 2 is a cheap,
-//! deterministic pointer merge on the coordinating thread. Because the
-//! merge reproduces exactly the message ordering of the sequential loop,
-//! **any shard count produces bit-identical state** at a fixed seed —
-//! including under a [`FaultClock`] replay. The contract is locked in by
-//! `rust/tests/engine_equivalence.rs` and documented in ARCHITECTURE.md.
+//! Phases 1 and 3 touch disjoint per-node state, so they shard across the
+//! **persistent worker pool** ([`crate::runtime::pool`]) under
+//! [`ExecPolicy::Parallel`]; phase 2 is a cheap, deterministic pointer
+//! merge on the coordinating thread. Because the merge reproduces exactly
+//! the message ordering of the sequential loop, **any shard count — and
+//! any pool thread count — produces bit-identical state** at a fixed
+//! seed, including under a [`FaultClock`] replay. The contract is locked
+//! in by `rust/tests/engine_equivalence.rs` and documented in
+//! ARCHITECTURE.md.
+//!
+//! # The zero-allocation hot path
+//!
+//! After warm-up (one schedule cycle at steady delay), a dense-path round
+//! performs **zero heap allocations**: message payloads cycle through
+//! per-shard buffer pools, outboxes/mailboxes retain their capacity,
+//! peer lists and top-k index scratch live in per-shard scratch, the
+//! survivor list reuses one engine-owned buffer, and the round is
+//! dispatched to long-lived pool workers instead of freshly spawned
+//! threads. `rust/tests/alloc_regression.rs` pins this with a counting
+//! global allocator for the deterministic permutation schedules (the
+//! exp-graph families every experiment runs on). One sharp edge: payload
+//! buffers are popped from the *sender's* shard pool but recycled into
+//! the *receiver's*, so the guarantee relies on per-shard send/receive
+//! counts balancing each round — true for the permutation topologies,
+//! while `RandomAny`/`RandomExp` under a parallel policy can drift pools
+//! apart and allocate occasionally in steady state.
 //!
 //! # Compressed messages
 //!
@@ -56,10 +75,12 @@ pub use compress::Compression;
 pub use exec::ExecPolicy;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use compress::EdgeBank;
 
 use crate::faults::FaultClock;
+use crate::runtime::pool::{self, Pool};
 use crate::topology::Schedule;
 
 /// Per-sender error-feedback banks, keyed by destination node. A
@@ -125,11 +146,19 @@ struct ShardScratch {
     pool: Vec<Vec<f32>>,
     /// Index scratch for the top-k selection (compression).
     idx: Vec<u32>,
+    /// Out-peer scratch: the schedule fills this in place each node, so
+    /// the hot path never allocates a peer list.
+    peers: Vec<usize>,
 }
 
 impl ShardScratch {
     fn new(dim: usize) -> Self {
-        Self { scale_buf: vec![0.0; dim], pool: Vec::new(), idx: Vec::new() }
+        Self {
+            scale_buf: vec![0.0; dim],
+            pool: Vec::new(),
+            idx: Vec::new(),
+            peers: Vec::new(),
+        }
     }
 }
 
@@ -215,13 +244,14 @@ fn compute_shard(
                 states.iter_mut().zip(residuals.iter_mut()).enumerate()
             {
                 let i = base + off;
-                let peers = ctx.schedule.out_peers(i, k);
-                let w_mix = 1.0 / (1.0 + peers.len() as f64);
+                ctx.schedule.out_peers_into(i, k, &mut scratch.peers);
+                let w_mix = 1.0 / (1.0 + scratch.peers.len() as f64);
                 let wf = w_mix as f32;
                 let msg_w = st.w * w_mix;
-                if peers.len() == 1 {
+                if scratch.peers.len() == 1 {
                     // Dominant (1-peer) case: fused read-scale-write, no
                     // intermediate buffer.
+                    let to = scratch.peers[0];
                     let mut payload = scaled_payload(&mut scratch.pool, ctx.dim, &st.x, wf);
                     let mut mw = msg_w;
                     compress_payload(
@@ -231,21 +261,21 @@ fn compute_shard(
                         &mut scratch.idx,
                         &ctx,
                         i,
-                        peers[0],
+                        to,
                     );
                     out.sent.push(Message {
                         from: i,
-                        to: peers[0],
+                        to,
                         sent_iter: k,
                         deliver_iter: ctx.deliver_at,
                         x: payload,
                         w: mw,
                     });
-                } else if !peers.is_empty() {
+                } else if !scratch.peers.is_empty() {
                     for (b, v) in scratch.scale_buf.iter_mut().zip(&st.x) {
                         *b = v * wf;
                     }
-                    for &j in &peers {
+                    for &j in &scratch.peers {
                         let mut payload = take_buf(&mut scratch.pool, ctx.dim);
                         payload.copy_from_slice(&scratch.scale_buf);
                         let mut mw = msg_w;
@@ -286,12 +316,12 @@ fn compute_shard(
                 if clock.is_down(i, k) {
                     continue;
                 }
-                let peers = ctx.schedule.out_peers_among(i, k, alive);
-                let w_mix = 1.0 / (1.0 + peers.len() as f64);
+                ctx.schedule.out_peers_among_into(i, k, alive, &mut scratch.peers);
+                let w_mix = 1.0 / (1.0 + scratch.peers.len() as f64);
                 let wf = w_mix as f32;
                 let msg_w = st.w * w_mix;
                 let mut rescued = 0usize;
-                for &j in &peers {
+                for &j in &scratch.peers {
                     if clock.drops(i, j, k) {
                         if rescue {
                             // Sender detects the failed send and keeps its
@@ -404,6 +434,71 @@ fn aggregate_shard(
     }
 }
 
+/// Raw, field-wise view of the engine's shardable state for one round —
+/// what a pool worker needs to reconstruct its shard's disjoint `&mut`
+/// slices without any per-round allocation (collecting per-shard borrow
+/// tuples into a `Vec` would put an allocation back on the hot path).
+///
+/// Shard `s` owns nodes `[s·chunk, min((s+1)·chunk, n))` plus scratch and
+/// outbox slot `s`; distinct shards resolve to disjoint memory, and the
+/// pool runs each shard index exactly once per phase, so reconstructing
+/// `&mut` slices per shard is sound.
+struct ShardTable {
+    states: *mut NodeState,
+    residuals: *mut EdgeResiduals,
+    inboxes: *mut Vec<Message>,
+    scratch: *mut ShardScratch,
+    outs: *mut ShardOut,
+    n: usize,
+    chunk: usize,
+}
+
+// SAFETY: the raw pointers target disjoint per-shard ranges (see the type
+// docs); workers never touch another shard's range.
+unsafe impl Send for ShardTable {}
+unsafe impl Sync for ShardTable {}
+
+impl ShardTable {
+    /// Bounds of shard `s` (`lo`, length). `s` must satisfy `s·chunk < n`.
+    fn range(&self, s: usize) -> (usize, usize) {
+        let lo = s * self.chunk;
+        (lo, self.chunk.min(self.n - lo))
+    }
+
+    /// Phase 1 for shard `s`.
+    ///
+    /// # Safety
+    /// `s·chunk < n`, and each shard index must be executed by exactly one
+    /// worker per phase (the pool's contract).
+    unsafe fn compute(&self, s: usize, ctx: StepCtx) {
+        let (lo, len) = self.range(s);
+        compute_shard(
+            lo,
+            std::slice::from_raw_parts_mut(self.states.add(lo), len),
+            std::slice::from_raw_parts_mut(self.residuals.add(lo), len),
+            &mut *self.scratch.add(s),
+            ctx,
+            &mut *self.outs.add(s),
+        );
+    }
+
+    /// Phase 3 for shard `s`.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::compute`].
+    unsafe fn aggregate(&self, s: usize, ctx: StepCtx, biased: bool) {
+        let (lo, len) = self.range(s);
+        aggregate_shard(
+            lo,
+            std::slice::from_raw_parts_mut(self.states.add(lo), len),
+            std::slice::from_raw_parts_mut(self.inboxes.add(lo), len),
+            &mut (*self.scratch.add(s)).pool,
+            ctx,
+            biased,
+        );
+    }
+}
+
 /// The synchronous multi-node PushSum engine.
 ///
 /// ```
@@ -443,6 +538,12 @@ pub struct PushSumEngine {
     /// Per-sender error-feedback residuals (compressed gossip), keyed by
     /// destination. Empty until a non-identity [`Compression`] runs.
     residuals: Vec<EdgeResiduals>,
+    /// Reusable survivor-list buffer (fault mode) — filled in place each
+    /// round instead of allocating.
+    alive_buf: Vec<usize>,
+    /// Explicit worker pool for parallel rounds; `None` dispatches to the
+    /// process-global pool ([`crate::runtime::pool::global`]).
+    pool: Option<Arc<Pool>>,
     /// Cumulative numerator mass lost to dropped messages (fault mode).
     dropped_x: Vec<f64>,
     /// Cumulative push-sum-weight mass lost to dropped messages.
@@ -475,6 +576,8 @@ impl PushSumEngine {
             scratch: vec![ShardScratch::new(dim)],
             outs: vec![ShardOut::default()],
             residuals: (0..n).map(|_| EdgeResiduals::new()).collect(),
+            alive_buf: Vec::new(),
+            pool: None,
             dropped_x: vec![0.0; dim],
             dropped_w: 0.0,
             drop_count: 0,
@@ -492,6 +595,20 @@ impl PushSumEngine {
         while self.outs.len() < shards {
             self.outs.push(ShardOut::default());
         }
+    }
+
+    /// Attach an explicit worker pool for parallel rounds (sweeps and the
+    /// bit-identity tests drive the thread-count axis through this);
+    /// `None` restores the default — the process-global pool. Purely an
+    /// execution knob: results are bit-identical for **any** pool.
+    pub fn set_pool(&mut self, pool: Option<Arc<Pool>>) {
+        self.pool = pool;
+    }
+
+    /// Builder-style [`Self::set_pool`].
+    pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     /// One full gossip step at iteration `k` for all nodes (Alg. 1 l. 5–7 /
@@ -539,7 +656,7 @@ impl PushSumEngine {
     /// no hidden work-size heuristic second-guesses the caller, so tests
     /// can force real sharding at any size and callers pick shard counts
     /// with `repro engine-sweep` (see [`ExecPolicy::Parallel`] on the
-    /// per-round spawn cost).
+    /// barrier-handoff cost of the persistent pool).
     pub fn step_exec(
         &mut self,
         k: u64,
@@ -568,7 +685,12 @@ impl PushSumEngine {
         compress: Compression,
     ) {
         let deliver_at = k + self.delay;
-        let alive: Option<Vec<usize>> = faults.map(|fc| fc.alive(self.n, k));
+        // Survivor list: filled in place into the engine-owned buffer
+        // (moved out for the borrow checker's benefit, moved back below).
+        let mut alive_buf = std::mem::take(&mut self.alive_buf);
+        if let Some(fc) = faults {
+            fc.alive_into(self.n, k, &mut alive_buf);
+        }
         let shards = exec.shards_for(self.n);
         let chunk = self.n.div_ceil(shards);
         let used = self.n.div_ceil(chunk);
@@ -580,16 +702,15 @@ impl PushSumEngine {
             deliver_at,
             dim,
             schedule,
-            faults: match (faults, &alive) {
-                (Some(fc), Some(al)) => Some((fc, al.as_slice())),
-                _ => None,
-            },
+            faults: faults.map(|fc| (fc, alive_buf.as_slice())),
             compress,
         };
 
         // Phase 1 — per-shard local compute + send into the persistent
         // shard outboxes (drained empty by the previous merge, capacity
-        // retained).
+        // retained). Multi-shard rounds dispatch to the persistent worker
+        // pool: no thread spawns, no allocations, shard s pinned to
+        // worker s mod W.
         if used == 1 {
             compute_shard(
                 0,
@@ -600,20 +721,19 @@ impl PushSumEngine {
                 &mut self.outs[0],
             );
         } else {
-            std::thread::scope(|scope| {
-                for (idx, (((states, residuals), scratch), out)) in self
-                    .states
-                    .chunks_mut(chunk)
-                    .zip(self.residuals.chunks_mut(chunk))
-                    .zip(self.scratch.iter_mut())
-                    .zip(self.outs.iter_mut())
-                    .enumerate()
-                {
-                    scope.spawn(move || {
-                        compute_shard(idx * chunk, states, residuals, scratch, ctx, out)
-                    });
-                }
-            });
+            let table = ShardTable {
+                states: self.states.as_mut_ptr(),
+                residuals: self.residuals.as_mut_ptr(),
+                inboxes: self.inboxes.as_mut_ptr(),
+                scratch: self.scratch.as_mut_ptr(),
+                outs: self.outs.as_mut_ptr(),
+                n: self.n,
+                chunk,
+            };
+            let pool = self.pool.as_deref().unwrap_or_else(pool::global);
+            // SAFETY: `used` shard indices all satisfy `s·chunk < n`, and
+            // the pool runs each exactly once (ShardTable's contract).
+            pool.run(used, &|s| unsafe { table.compute(s, ctx) });
         }
 
         // Phase 2 — deterministic ordered merge on the coordinating
@@ -643,7 +763,9 @@ impl PushSumEngine {
             }
         }
 
-        // Phase 3 — per-shard aggregation of deliveries due at k.
+        // Phase 3 — per-shard aggregation of deliveries due at k. The
+        // shard table is rebuilt (pointers re-derived) because the merge
+        // phase held fresh borrows of the same fields.
         if used == 1 {
             aggregate_shard(
                 0,
@@ -654,27 +776,21 @@ impl PushSumEngine {
                 biased,
             );
         } else {
-            std::thread::scope(|scope| {
-                for (idx, ((states, inboxes), scratch)) in self
-                    .states
-                    .chunks_mut(chunk)
-                    .zip(self.inboxes.chunks_mut(chunk))
-                    .zip(self.scratch.iter_mut())
-                    .enumerate()
-                {
-                    scope.spawn(move || {
-                        aggregate_shard(
-                            idx * chunk,
-                            states,
-                            inboxes,
-                            &mut scratch.pool,
-                            ctx,
-                            biased,
-                        )
-                    });
-                }
-            });
+            let table = ShardTable {
+                states: self.states.as_mut_ptr(),
+                residuals: self.residuals.as_mut_ptr(),
+                inboxes: self.inboxes.as_mut_ptr(),
+                scratch: self.scratch.as_mut_ptr(),
+                outs: self.outs.as_mut_ptr(),
+                n: self.n,
+                chunk,
+            };
+            let pool = self.pool.as_deref().unwrap_or_else(pool::global);
+            // SAFETY: as in phase 1 — valid shard indices, one worker per
+            // shard.
+            pool.run(used, &|s| unsafe { table.aggregate(s, ctx, biased) });
         }
+        self.alive_buf = alive_buf;
     }
 
     /// Mass recorded as lost to dropped messages: `(Σ dropped x, Σ dropped w)`.

@@ -31,7 +31,11 @@
 //! * [`data`] — synthetic per-node data shards (Gaussian blobs, Zipf bigram
 //!   LM) with controllable heterogeneity (the paper's ζ²).
 //! * [`runtime`] — the PJRT bridge: loads the HLO-text artifacts emitted by
-//!   `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!   `python/compile/aot.py` and executes them on the CPU PJRT client —
+//!   plus [`runtime::pool`], the persistent worker pool the parallel
+//!   engine dispatches to.
+//! * [`benchgate`] — the CI perf-regression gate behind
+//!   `repro bench-check` (microbench reports vs committed baselines).
 //! * [`algorithms`] — the pluggable [`algorithms::DistributedAlgorithm`]
 //!   trait, one strategy object per method (AR-SGD, SGP, Overlap-SGP,
 //!   D-PSGD, AD-PSGD, DaSGD delayed averaging), and the name-keyed
@@ -49,6 +53,7 @@
 #![warn(missing_docs)]
 
 pub mod algorithms;
+pub mod benchgate;
 pub mod benchkit;
 pub mod cli;
 pub mod collectives;

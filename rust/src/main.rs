@@ -6,6 +6,7 @@
 //!   faults       robustness sweep under message loss / churn (offline)
 //!   engine-sweep large-N scaling sweep of the parallel execution engine
 //!   compress-sweep compressed-gossip sweep: byte reduction × heterogeneity
+//!   bench-check  CI perf gate: fresh BENCH_*.json vs committed baselines
 //!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
@@ -15,6 +16,7 @@
 use anyhow::{bail, Context, Result};
 
 use sgp::algorithms;
+use sgp::benchgate;
 use sgp::cli::Args;
 use sgp::config::{Fabric, TrainConfig};
 use sgp::coordinator::TrainerBuilder;
@@ -53,11 +55,18 @@ USAGE:
                 undelivered push-sum mass) is on by default; --no-rescue
                 surfaces the naive-loss instability (DESIGN.md §Faults).
                 Writes results/faults_sweep.csv.
-  repro engine-sweep [--max-n 1024] [--dim 1024] [--steps 50]
-                [--shards 2,4,8] [--seed 1] [--fast]
+  repro engine-sweep [--max-n 4096] [--dim 1024] [--steps 50]
+                [--shards 2,4,8] [--threads 0,2,4] [--seed 1] [--fast]
                 large-N scaling sweep of the gossip execution engine:
-                sequential vs sharded-parallel wall-clock plus a
-                bit-identity check. Writes results/engine_sweep.csv.
+                sequential vs pool-sharded wall-clock plus a bit-identity
+                check. --threads sweeps the worker-pool size (0 = the
+                machine default). Writes results/engine_sweep.csv.
+  repro bench-check [--results results] [--baselines benchmarks/baselines]
+                [--tol 0.25] [--update]
+                CI perf-regression gate: diff fresh results/BENCH_*.json
+                against committed baselines, failing on a >tol throughput
+                regression of any tracked entry; --update records the
+                fresh numbers as the new baselines.
   repro compress-sweep [--schemes topk:4,topk:16,qsgd:8,qsgd:4]
                 [--het 0.25,0.5,0.75] [--nodes 32] [--iters 300]
                 [--dim 256] [--seed 1] [--shards 1,2,7] [--fast]
@@ -345,7 +354,23 @@ fn cmd_engine_sweep(args: &Args) -> Result<()> {
     if let Some(s) = parse_usize_list(args, "shards")? {
         sweep.shards = s;
     }
+    if let Some(t) = parse_usize_list(args, "threads")? {
+        sweep.threads = t;
+    }
     experiments::engine_sweep(&sweep)
+}
+
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let mut cfg = benchgate::BenchCheck::default();
+    if let Some(d) = args.value_of("results")? {
+        cfg.results_dir = d.into();
+    }
+    if let Some(d) = args.value_of("baselines")? {
+        cfg.baseline_dir = d.into();
+    }
+    cfg.tol = args.f64_or("tol", cfg.tol)?;
+    cfg.update = args.flag_strict("update")?;
+    benchgate::bench_check(&cfg)
 }
 
 fn cmd_compress_sweep(args: &Args) -> Result<()> {
@@ -396,6 +421,7 @@ fn main() -> Result<()> {
         Some("faults") => cmd_faults(&args)?,
         Some("engine-sweep") => cmd_engine_sweep(&args)?,
         Some("compress-sweep") => cmd_compress_sweep(&args)?,
+        Some("bench-check") => cmd_bench_check(&args)?,
         Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {

@@ -25,6 +25,7 @@ use std::collections::VecDeque;
 use crate::collectives;
 use crate::faults::FaultClock;
 use crate::rng::Pcg;
+use crate::runtime::pool;
 use crate::topology::Schedule;
 
 /// An α–β link model with a collective-efficiency factor capturing how far
@@ -170,8 +171,17 @@ pub enum CommPattern<'a> {
 }
 
 /// Below this many nodes per shard the arrival computation stays
-/// sequential: spawning workers costs more than the loop saves.
+/// sequential: the pool's barrier handoff costs more than the loop saves.
 const MIN_NODES_PER_TIMING_SHARD: usize = 64;
+
+/// Per-shard scratch of the sharded arrival computation: the partial
+/// deadline vector plus a peer-list buffer, reused round after round so
+/// the steady-state recursion allocates nothing.
+#[derive(Clone, Debug, Default)]
+struct ArrivalScratch {
+    arrive: Vec<f64>,
+    peers: Vec<usize>,
+}
 
 /// Incremental timing recursion over iterations.
 #[derive(Clone, Debug)]
@@ -189,14 +199,41 @@ pub struct TimingSim {
     /// Worker shards for the per-destination arrival computation (1 =
     /// sequential). Sharding merges partial results with elementwise
     /// `f64::max` — associative and commutative — so every shard count
-    /// produces bit-identical clocks.
+    /// produces bit-identical clocks. Shards execute on the persistent
+    /// worker pool ([`crate::runtime::pool`]).
     shards: usize,
+    /// Recycled deadline vectors (consumed `pending` entries come back
+    /// here instead of being dropped).
+    spare: Vec<Vec<f64>>,
+    /// Per-shard arrival scratch (partials + peer lists).
+    shard_scratch: Vec<ArrivalScratch>,
+    /// Reusable per-round buffers: down mask, send clocks, symmetric
+    /// exchange clocks, survivor list, peer list.
+    down_buf: Vec<bool>,
+    send_buf: Vec<f64>,
+    newt_buf: Vec<f64>,
+    alive_buf: Vec<usize>,
+    peers_buf: Vec<usize>,
 }
 
 impl TimingSim {
     /// A fresh simulator with every node clock at 0 (sequential execution).
     pub fn new(n: usize, link: LinkModel) -> Self {
-        Self { n, link, t: vec![0.0; n], pending: VecDeque::new(), iter: 0, shards: 1 }
+        Self {
+            n,
+            link,
+            t: vec![0.0; n],
+            pending: VecDeque::new(),
+            iter: 0,
+            shards: 1,
+            spare: Vec::new(),
+            shard_scratch: Vec::new(),
+            down_buf: Vec::new(),
+            send_buf: Vec::new(),
+            newt_buf: Vec::new(),
+            alive_buf: Vec::new(),
+            peers_buf: Vec::new(),
+        }
     }
 
     /// Shard the arrival computation across `shards` workers for large-N
@@ -237,10 +274,12 @@ impl TimingSim {
     ) -> f64 {
         assert_eq!(comp.len(), self.n);
         let k = self.iter;
-        let down: Vec<bool> = match faults {
-            Some(fc) => (0..self.n).map(|i| fc.is_down(i, k)).collect(),
-            None => vec![false; self.n],
-        };
+        let mut down = std::mem::take(&mut self.down_buf);
+        down.clear();
+        match faults {
+            Some(fc) => down.extend((0..self.n).map(|i| fc.is_down(i, k))),
+            None => down.resize(self.n, false),
+        }
         if let Some(fc) = faults {
             if k > 0 {
                 // Rejoining nodes sync their clock to the cluster's "now".
@@ -309,11 +348,14 @@ impl TimingSim {
             CommPattern::PushSum { schedule, bytes, tau } => {
                 // Send times: node i transmits right after its local step;
                 // a down node's clock is frozen.
-                let send: Vec<f64> = (0..self.n)
-                    .map(|i| if down[i] { self.t[i] } else { self.t[i] + comp[i] })
-                    .collect();
+                let mut send = std::mem::take(&mut self.send_buf);
+                send.clear();
+                send.extend(
+                    (0..self.n)
+                        .map(|i| if down[i] { self.t[i] } else { self.t[i] + comp[i] }),
+                );
                 // Arrival deadline per destination for messages sent at k
-                // (sharded over senders when configured; bit-identical).
+                // (sharded over pool workers when configured; bit-identical).
                 let cost = link.ptp_time(*bytes);
                 let arrive = self.pushsum_arrivals(k, schedule, &send, cost, faults);
                 self.pending.push_back(arrive);
@@ -335,17 +377,29 @@ impl TimingSim {
                     }
                     self.t[j] = tj;
                 }
+                // Consumed deadline vectors are recycled, not dropped.
+                if let Some(c) = constraint {
+                    self.spare.push(c);
+                }
+                self.send_buf = send;
             }
             CommPattern::Symmetric { schedule, bytes, handshake } => {
-                let send: Vec<f64> = (0..self.n)
-                    .map(|i| if down[i] { self.t[i] } else { self.t[i] + comp[i] })
-                    .collect();
+                let mut send = std::mem::take(&mut self.send_buf);
+                send.clear();
+                send.extend(
+                    (0..self.n)
+                        .map(|i| if down[i] { self.t[i] } else { self.t[i] + comp[i] }),
+                );
                 let cost = handshake * link.ptp_time(*bytes);
-                let mut new_t = send.clone();
+                let mut new_t = std::mem::take(&mut self.newt_buf);
+                new_t.clear();
+                new_t.extend_from_slice(&send);
+                let mut peers = std::mem::take(&mut self.peers_buf);
                 match faults {
                     None => {
                         for i in 0..self.n {
-                            for j in schedule.out_peers(i, k) {
+                            schedule.out_peers_into(i, k, &mut peers);
+                            for &j in &peers {
                                 // Pairwise barrier: both wait for the slower.
                                 let done = send[i].max(send[j]) + cost;
                                 new_t[i] = new_t[i].max(done);
@@ -354,9 +408,11 @@ impl TimingSim {
                         }
                     }
                     Some(fc) => {
-                        let alive = fc.alive(self.n, k);
+                        let mut alive = std::mem::take(&mut self.alive_buf);
+                        fc.alive_into(self.n, k, &mut alive);
                         for &i in &alive {
-                            for j in schedule.out_peers_among(i, k, &alive) {
+                            schedule.out_peers_among_into(i, k, &alive, &mut peers);
+                            for &j in &peers {
                                 // Each dropped direction costs the pair one
                                 // extra handshake attempt.
                                 let attempts = 1
@@ -368,15 +424,20 @@ impl TimingSim {
                                 new_t[j] = new_t[j].max(done);
                             }
                         }
+                        self.alive_buf = alive;
                     }
                 }
+                self.peers_buf = peers;
                 for i in 0..self.n {
                     if !down[i] {
                         self.t[i] = new_t[i];
                     }
                 }
+                self.newt_buf = new_t;
+                self.send_buf = send;
             }
         }
+        self.down_buf = down;
         self.iter += 1;
         self.t.iter().cloned().fold(0.0, f64::max)
     }
@@ -388,12 +449,14 @@ impl TimingSim {
 
     /// Per-destination arrival deadlines for the push-sum messages sent at
     /// `k`. With `shards > 1` and enough nodes, the sender range is
-    /// partitioned across scoped workers and the partial deadline vectors
-    /// are merged with elementwise `f64::max` in shard order — max is
-    /// associative and commutative (and these values are never NaN), so
-    /// every shard count yields the same bits as the sequential fold.
+    /// partitioned across the persistent worker pool and the partial
+    /// deadline vectors are merged with elementwise `f64::max` in shard
+    /// order — max is associative and commutative (and these values are
+    /// never NaN), so every shard count yields the same bits as the
+    /// sequential fold. The returned vector and all scratch are recycled
+    /// buffers: the steady-state round allocates nothing.
     fn pushsum_arrivals(
-        &self,
+        &mut self,
         k: u64,
         schedule: &Schedule,
         send: &[f64],
@@ -401,57 +464,144 @@ impl TimingSim {
         faults: Option<&FaultClock>,
     ) -> Vec<f64> {
         let n = self.n;
-        let alive: Option<Vec<usize>> = faults.map(|fc| fc.alive(n, k));
-        let range_arrivals = |lo: usize, hi: usize| -> Vec<f64> {
-            let mut arrive = vec![0.0f64; n];
-            match (faults, &alive) {
-                (Some(fc), Some(al)) => {
-                    for i in lo..hi {
-                        if fc.is_down(i, k) {
-                            continue;
-                        }
-                        for j in schedule.out_peers_among(i, k, al) {
-                            // A dropped message never constrains its
-                            // destination — the receiver moves on.
-                            if !fc.drops(i, j, k) {
-                                arrive[j] = arrive[j].max(send[i] + cost);
-                            }
-                        }
-                    }
-                }
-                _ => {
-                    for i in lo..hi {
-                        for j in schedule.out_peers(i, k) {
-                            arrive[j] = arrive[j].max(send[i] + cost);
-                        }
-                    }
-                }
-            }
-            arrive
-        };
+        let mut arrive = self.spare.pop().unwrap_or_default();
+        arrive.clear();
+        arrive.resize(n, 0.0);
+        let mut alive = std::mem::take(&mut self.alive_buf);
+        if let Some(fc) = faults {
+            fc.alive_into(n, k, &mut alive);
+        }
         let shards = self.shards.min(n.max(1));
         if shards <= 1 || n < shards * MIN_NODES_PER_TIMING_SHARD {
-            return range_arrivals(0, n);
-        }
-        let chunk = n.div_ceil(shards);
-        let range_arrivals = &range_arrivals;
-        let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..n)
-                .step_by(chunk)
-                .map(|lo| scope.spawn(move || range_arrivals(lo, (lo + chunk).min(n))))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("timing shard worker"))
-                .collect()
-        });
-        let mut arrive = vec![0.0f64; n];
-        for part in partials {
-            for (a, p) in arrive.iter_mut().zip(part) {
-                *a = a.max(p);
+            let mut peers = std::mem::take(&mut self.peers_buf);
+            range_arrivals(
+                0,
+                n,
+                &mut arrive,
+                &mut peers,
+                k,
+                schedule,
+                send,
+                cost,
+                faults,
+                &alive,
+            );
+            self.peers_buf = peers;
+        } else {
+            let chunk = n.div_ceil(shards);
+            let used = n.div_ceil(chunk);
+            while self.shard_scratch.len() < used {
+                self.shard_scratch.push(ArrivalScratch::default());
+            }
+            for sc in self.shard_scratch[..used].iter_mut() {
+                sc.arrive.clear();
+                sc.arrive.resize(n, 0.0);
+            }
+            let table = ArrivalTable {
+                scratch: self.shard_scratch.as_mut_ptr(),
+                n,
+                chunk,
+                k,
+                schedule,
+                send,
+                cost,
+                faults,
+                alive: &alive,
+            };
+            // SAFETY: shard s touches only scratch slot s (disjoint), and
+            // the pool runs each shard index exactly once.
+            pool::global().run(used, &|s| unsafe { table.run(s) });
+            for sc in &self.shard_scratch[..used] {
+                for (a, p) in arrive.iter_mut().zip(&sc.arrive) {
+                    *a = a.max(*p);
+                }
             }
         }
+        self.alive_buf = alive;
         arrive
+    }
+}
+
+/// Arrival deadlines contributed by senders `lo..hi` (shared kernel of the
+/// sequential and sharded paths — one definition, identical bits).
+#[allow(clippy::too_many_arguments)] // internal kernel, flat args beat a builder
+fn range_arrivals(
+    lo: usize,
+    hi: usize,
+    arrive: &mut [f64],
+    peers: &mut Vec<usize>,
+    k: u64,
+    schedule: &Schedule,
+    send: &[f64],
+    cost: f64,
+    faults: Option<&FaultClock>,
+    alive: &[usize],
+) {
+    match faults {
+        Some(fc) => {
+            for i in lo..hi {
+                if fc.is_down(i, k) {
+                    continue;
+                }
+                schedule.out_peers_among_into(i, k, alive, peers);
+                for &j in peers.iter() {
+                    // A dropped message never constrains its destination —
+                    // the receiver moves on.
+                    if !fc.drops(i, j, k) {
+                        arrive[j] = arrive[j].max(send[i] + cost);
+                    }
+                }
+            }
+        }
+        None => {
+            for i in lo..hi {
+                schedule.out_peers_into(i, k, peers);
+                for &j in peers.iter() {
+                    arrive[j] = arrive[j].max(send[i] + cost);
+                }
+            }
+        }
+    }
+}
+
+/// Raw per-shard view of the arrival scratch for the pool workers; shard
+/// `s` resolves to scratch slot `s` only (see `pushsum_arrivals`).
+struct ArrivalTable<'a> {
+    scratch: *mut ArrivalScratch,
+    n: usize,
+    chunk: usize,
+    k: u64,
+    schedule: &'a Schedule,
+    send: &'a [f64],
+    cost: f64,
+    faults: Option<&'a FaultClock>,
+    alive: &'a [usize],
+}
+
+// SAFETY: workers touch disjoint scratch slots; everything else is shared
+// read-only data.
+unsafe impl Send for ArrivalTable<'_> {}
+unsafe impl Sync for ArrivalTable<'_> {}
+
+impl ArrivalTable<'_> {
+    /// # Safety
+    /// `s·chunk < n` and each shard index runs on exactly one worker.
+    unsafe fn run(&self, s: usize) {
+        let lo = s * self.chunk;
+        let hi = (lo + self.chunk).min(self.n);
+        let sc = &mut *self.scratch.add(s);
+        range_arrivals(
+            lo,
+            hi,
+            &mut sc.arrive,
+            &mut sc.peers,
+            self.k,
+            self.schedule,
+            self.send,
+            self.cost,
+            self.faults,
+            self.alive,
+        );
     }
 }
 

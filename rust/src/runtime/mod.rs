@@ -5,6 +5,13 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! Executables are compiled once on first use and cached; Python is never
 //! involved at runtime.
+//!
+//! The runtime layer also owns the [`pool`] submodule: the persistent
+//! worker pool the parallel gossip engine (and the sharded timing /
+//! collective helpers) dispatch to instead of spawning scoped threads per
+//! round.
+
+pub mod pool;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,0 +1,409 @@
+//! Persistent, deterministic worker pool — the execution substrate behind
+//! [`crate::gossip::ExecPolicy::Parallel`].
+//!
+//! The first parallel engine (PR 3) spawned scoped threads per round:
+//! borrow-safe and dependency-free, but ~2·shards thread spawns *every
+//! gossip round* — a fixed tax that dominates exactly in the large-N
+//! regimes (dozens to thousands of nodes) the paper's scaling argument
+//! targets. This pool replaces the per-round spawns with **long-lived
+//! workers** and a per-round barrier handoff:
+//!
+//! * **Long-lived workers.** `Pool::new(threads)` spawns its workers once;
+//!   they park on a condvar between rounds. Dispatching a round is two
+//!   uncontended lock acquisitions and two condvar signals — no thread
+//!   creation, no heap allocation, no channel traffic on the steady path.
+//! * **Epoch handoff.** [`Pool::run`] publishes the round's job (a borrowed
+//!   `Fn(usize)` closure, lifetime-erased) together with a
+//!   bumped epoch counter, wakes the workers, and blocks until every
+//!   worker reports back. Because `run` does not return while any worker
+//!   can still touch the job, the borrow never escapes — the `unsafe`
+//!   lifetime erasure is confined to that window.
+//! * **Shard→worker pinning.** Worker `w` of `W` executes exactly the jobs
+//!   `{ j : j ≡ w (mod W) }`, every round. The assignment is a pure
+//!   function of `(jobs, workers)` — never of scheduling timing — so a
+//!   shard's scratch state is always touched by the same worker and the
+//!   engine's bit-identity contract holds at **any** thread count (the
+//!   values never depend on which worker ran a shard; pinning additionally
+//!   keeps the execution layout reproducible run-to-run for perf work).
+//!
+//! The process-global pool ([`global`]) sizes itself to the machine (or
+//! `SGP_POOL_THREADS`); sweeps and tests that need an explicit thread
+//! count build private pools ([`Pool::new`]) and hand them to the engine
+//! via [`crate::gossip::PushSumEngine::set_pool`].
+
+use std::cell::Cell;
+use std::sync::{Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// Set while the current thread is executing a pool job. A nested
+    /// [`Pool::run`] from a job would deadlock on the dispatch mutex
+    /// (the outer dispatcher waits for this worker, which waits for the
+    /// dispatch lock); this flag turns that silent hang into a panic.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The lifetime-erased job of one round: run shard `j`. The `'static` is
+/// a fiction maintained by the epoch protocol — the reference is only
+/// called while the dispatching [`Pool::run`] keeps the real (shorter)
+/// borrow alive, and the slot is cleared before `run` returns.
+#[derive(Clone, Copy)]
+struct JobPtr(&'static (dyn Fn(usize) + Sync));
+
+/// Shared dispatch state, guarded by one mutex.
+struct Shared {
+    /// Round counter; workers run one scan per observed increment.
+    epoch: u64,
+    /// The published job of the current epoch (`None` outside a round).
+    job: Option<JobPtr>,
+    /// Number of jobs (shards) in the current epoch.
+    jobs: usize,
+    /// Workers that have finished scanning the current epoch.
+    done: usize,
+    /// Set when a job panicked inside a worker this epoch.
+    panicked: bool,
+    /// Set by `Drop` to terminate the workers.
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<Shared>,
+    /// Workers park here between rounds.
+    work_cv: Condvar,
+    /// The dispatching thread parks here until `done == workers`.
+    done_cv: Condvar,
+}
+
+/// Lock with panic-poisoning recovery: a panicked job never leaves the
+/// dispatch state inconsistent (all mutations happen under short critical
+/// sections that cannot panic), so a poisoned mutex is safe to re-enter.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Erase the borrow lifetime of a job reference (identical fat-pointer
+/// layout either side).
+///
+/// # Safety
+/// The caller must guarantee the referent outlives every call made through
+/// the returned reference — [`Pool::run`] does so by blocking until all
+/// workers have finished the epoch.
+unsafe fn erase(f: &(dyn Fn(usize) + Sync)) -> &'static (dyn Fn(usize) + Sync) {
+    std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+}
+
+/// A persistent worker pool with deterministic shard→worker pinning.
+///
+/// ```
+/// use sgp::runtime::pool::Pool;
+/// use std::sync::atomic::{AtomicU64, Ordering};
+///
+/// let pool = Pool::new(3);
+/// let hits = AtomicU64::new(0);
+/// pool.run(8, &|j| {
+///     hits.fetch_add(1u64 << (8 * (j % 8)), Ordering::Relaxed);
+/// });
+/// // Every job ran exactly once, whichever worker was pinned to it.
+/// assert_eq!(hits.load(Ordering::Relaxed), 0x0101_0101_0101_0101);
+/// ```
+pub struct Pool {
+    inner: std::sync::Arc<Inner>,
+    /// Serializes dispatches: two threads driving engines through the same
+    /// (e.g. global) pool take turns round-by-round instead of corrupting
+    /// the epoch protocol. Held for the whole barrier window.
+    dispatch: Mutex<()>,
+    workers: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool of `threads` long-lived workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        let workers = threads.max(1);
+        let inner = std::sync::Arc::new(Inner {
+            state: Mutex::new(Shared {
+                epoch: 0,
+                job: None,
+                jobs: 0,
+                done: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let inner = std::sync::Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("sgp-pool-{w}"))
+                    .spawn(move || worker_loop(&inner, w, workers))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { inner, dispatch: Mutex::new(()), workers, handles }
+    }
+
+    /// Number of workers in this pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `f(0) … f(jobs-1)` across the pool and wait for all of them:
+    /// one barrier handoff, zero heap allocations. Job `j` always runs on
+    /// worker `j % workers` (shard→worker pinning). `jobs == 0` returns
+    /// immediately; `jobs == 1` runs inline on the caller (a single shard
+    /// has nothing to overlap with, and skipping the handoff keeps the
+    /// degenerate case as cheap as a direct call).
+    ///
+    /// Panics (after completing the barrier) if any job panicked.
+    ///
+    /// Not reentrant: a job must never dispatch to any pool (dispatching
+    /// to its own pool would deadlock — the dispatcher waits on the very
+    /// worker that is waiting on the dispatch lock). Nested dispatch from
+    /// a job panics immediately instead of hanging. Concurrent `run`
+    /// calls from different threads are safe — they serialize, round by
+    /// round.
+    pub fn run(&self, jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+        if jobs == 0 {
+            return;
+        }
+        if jobs == 1 {
+            f(0);
+            return;
+        }
+        assert!(
+            !IN_POOL_JOB.get(),
+            "Pool::run dispatched from inside a pool job — nested dispatch \
+             deadlocks; restructure the caller to dispatch from the \
+             coordinating thread"
+        );
+        let _turn = lock(&self.dispatch);
+        // SAFETY: the erased reference is only callable by workers woken
+        // for this epoch, and this call does not return until every worker
+        // has reported done — the real borrow outlives every call.
+        let job = JobPtr(unsafe { erase(f) });
+        {
+            let mut st = lock(&self.inner.state);
+            debug_assert!(st.job.is_none(), "Pool::run is not reentrant");
+            st.job = Some(job);
+            st.jobs = jobs;
+            st.done = 0;
+            st.panicked = false;
+            st.epoch += 1;
+        }
+        self.inner.work_cv.notify_all();
+
+        let mut st = lock(&self.inner.state);
+        while st.done < self.workers {
+            st = self
+                .inner
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        st.job = None;
+        let panicked = st.panicked;
+        drop(st);
+        if panicked {
+            panic!("a pool worker job panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.inner.state);
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One worker's life: wait for a new epoch, run the jobs pinned to this
+/// worker (`j ≡ w mod workers`, ascending), report done, repeat.
+fn worker_loop(inner: &Inner, w: usize, workers: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, jobs) = {
+            let mut st = lock(&inner.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = inner
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            seen = st.epoch;
+            (st.job.expect("epoch published without a job"), st.jobs)
+        };
+        let mut panicked = false;
+        let mut j = w;
+        IN_POOL_JOB.set(true);
+        while j < jobs {
+            // The dispatching `run` call keeps the job's real borrow alive
+            // until every worker (this one included) has incremented `done`.
+            let f = job.0;
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(j)))
+                .is_err()
+            {
+                panicked = true;
+            }
+            j += workers;
+        }
+        IN_POOL_JOB.set(false);
+        let mut st = lock(&inner.state);
+        st.done += 1;
+        st.panicked |= panicked;
+        if st.done == workers {
+            inner.done_cv.notify_one();
+        }
+        drop(st);
+    }
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-global pool every [`crate::gossip::ExecPolicy::Parallel`]
+/// engine round dispatches to unless an explicit pool was attached
+/// ([`crate::gossip::PushSumEngine::set_pool`]). Sized once, lazily, from
+/// `SGP_POOL_THREADS` when set (≥ 1) or the machine's available
+/// parallelism otherwise.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| {
+        let threads = std::env::var("SGP_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+            });
+        Pool::new(threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let pool = Pool::new(4);
+        for jobs in [0usize, 1, 2, 3, 4, 7, 16, 33] {
+            let counts: Vec<AtomicUsize> =
+                (0..jobs).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(jobs, &|j| {
+                counts[j].fetch_add(1, Ordering::Relaxed);
+            });
+            for (j, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "jobs={jobs} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn reusable_across_many_rounds() {
+        let pool = Pool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(5, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pinning_is_stable_across_rounds() {
+        // Job j must land on the same worker every round: record the
+        // executing thread per job and compare across rounds.
+        let pool = Pool::new(3);
+        let round_a: Vec<Mutex<Option<std::thread::ThreadId>>> =
+            (0..7).map(|_| Mutex::new(None)).collect();
+        pool.run(7, &|j| {
+            *round_a[j].lock().unwrap() = Some(std::thread::current().id());
+        });
+        let round_b: Vec<Mutex<Option<std::thread::ThreadId>>> =
+            (0..7).map(|_| Mutex::new(None)).collect();
+        pool.run(7, &|j| {
+            *round_b[j].lock().unwrap() = Some(std::thread::current().id());
+        });
+        for j in 0..7 {
+            let a = round_a[j].lock().unwrap().expect("job ran");
+            let b = round_b[j].lock().unwrap().expect("job ran");
+            assert_eq!(a, b, "job {j} migrated between rounds");
+        }
+        // And jobs j, j+workers share a worker (the pinning rule).
+        let a0 = round_a[0].lock().unwrap().unwrap();
+        let a3 = round_a[3].lock().unwrap().unwrap();
+        let a6 = round_a[6].lock().unwrap().unwrap();
+        assert_eq!(a0, a3);
+        assert_eq!(a3, a6);
+    }
+
+    #[test]
+    fn single_worker_pool_still_completes() {
+        let pool = Pool::new(1);
+        let total = AtomicUsize::new(0);
+        pool.run(9, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn worker_panic_is_reported_not_deadlocked() {
+        let pool = Pool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|j| {
+                if j == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the dispatcher");
+        // The pool is still usable after a failed round.
+        let total = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn nested_dispatch_from_a_job_panics_instead_of_deadlocking() {
+        // A job dispatching to its own pool is a deadlock by construction;
+        // the thread-local guard must turn it into a loud, contained panic
+        // (the worker catches it, the dispatcher re-raises it).
+        let pool = Pool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|_| {
+                pool.run(2, &|_| {});
+            });
+        }));
+        assert!(result.is_err(), "nested dispatch must panic, not hang");
+        // The pool remains usable afterwards.
+        let total = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn global_pool_is_sized_and_reused() {
+        let p1 = global() as *const Pool;
+        let p2 = global() as *const Pool;
+        assert_eq!(p1, p2);
+        assert!(global().workers() >= 1);
+    }
+}

@@ -80,16 +80,26 @@ impl Schedule {
 
     /// Exponential-graph hop offsets: 2^0, 2^1, …, 2^⌊log2(n-1)⌋.
     pub fn exp_offsets(n: usize) -> Vec<usize> {
-        let mut offs = Vec::new();
-        let mut h = 1usize;
-        while h <= n.saturating_sub(1) {
-            offs.push(h);
-            h *= 2;
+        (0..Self::exp_offset_count(n)).map(|j| Self::exp_offset(n, j)).collect()
+    }
+
+    /// Number of exponential-graph hop offsets for `n` nodes (the number
+    /// of powers of two ≤ n−1; 1 for the degenerate n ≤ 1 graph).
+    fn exp_offset_count(n: usize) -> usize {
+        if n <= 1 {
+            1
+        } else {
+            (usize::BITS - (n - 1).leading_zeros()) as usize
         }
-        if offs.is_empty() {
-            offs.push(0);
+    }
+
+    /// The `j`-th exponential-graph hop offset (2^j), allocation-free.
+    fn exp_offset(n: usize, j: usize) -> usize {
+        if n <= 1 {
+            0
+        } else {
+            1usize << j
         }
-        offs
     }
 
     /// Length of the deterministic cycle (number of distinct phases).
@@ -107,38 +117,48 @@ impl Schedule {
     /// Out-neighbours of node `i` at iteration `k` (self-loop NOT included;
     /// every node is implicitly its own in/out-neighbour).
     pub fn out_peers(&self, i: usize, k: u64) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.out_peers_into(i, k, &mut out);
+        out
+    }
+
+    /// [`Self::out_peers`] into a caller-owned buffer (cleared first) —
+    /// the allocation-free form the gossip hot path calls per node per
+    /// round. Exponential-graph offsets are computed arithmetically
+    /// (offset j is 2^j), so no offset table is materialized either.
+    pub fn out_peers_into(&self, i: usize, k: u64, out: &mut Vec<usize>) {
+        out.clear();
         let n = self.n;
         if n <= 1 {
-            return vec![];
+            return;
         }
         match self.kind {
             TopologyKind::OnePeerExp => {
-                let offs = Self::exp_offsets(n);
-                let h = offs[(k as usize) % offs.len()];
-                vec![(i + h) % n]
+                let c = Self::exp_offset_count(n);
+                let h = Self::exp_offset(n, (k as usize) % c);
+                out.push((i + h) % n);
             }
             TopologyKind::TwoPeerExp => {
-                let offs = Self::exp_offsets(n);
-                let a = offs[(k as usize) % offs.len()];
-                let b = offs[(k as usize + 1) % offs.len()];
+                let c = Self::exp_offset_count(n);
+                let a = Self::exp_offset(n, (k as usize) % c);
+                let b = Self::exp_offset(n, (k as usize + 1) % c);
                 let p1 = (i + a) % n;
                 let p2 = (i + b) % n;
-                if p1 == p2 {
-                    vec![p1]
-                } else {
-                    vec![p1, p2]
+                out.push(p1);
+                if p2 != p1 {
+                    out.push(p2);
                 }
             }
-            TopologyKind::Complete => (0..n).filter(|&j| j != i).collect(),
+            TopologyKind::Complete => out.extend((0..n).filter(|&j| j != i)),
             TopologyKind::CompleteCycling => {
                 let h = 1 + (k as usize) % (n - 1);
-                vec![(i + h) % n]
+                out.push((i + h) % n);
             }
             TopologyKind::RandomExp => {
-                let offs = Self::exp_offsets(n);
+                let c = Self::exp_offset_count(n);
                 let mut rng = self.peer_rng(i, k);
-                let h = offs[rng.below(offs.len())];
-                vec![(i + h) % n]
+                let h = Self::exp_offset(n, rng.below(c));
+                out.push((i + h) % n);
             }
             TopologyKind::RandomAny => {
                 let mut rng = self.peer_rng(i, k);
@@ -146,20 +166,18 @@ impl Schedule {
                 if j >= i {
                     j += 1;
                 }
-                vec![j]
+                out.push(j);
             }
-            TopologyKind::Ring => vec![(i + 1) % n],
+            TopologyKind::Ring => out.push((i + 1) % n),
             TopologyKind::BipartiteExp => {
                 // Hypercube matching: pair i ↔ i XOR 2^(k mod log2 n).
                 // Perfect matching when n is a power of two; nodes whose
                 // partner is out of range idle that iteration.
-                let offs = Self::exp_offsets(n);
-                let h = offs[(k as usize) % offs.len()];
+                let c = Self::exp_offset_count(n);
+                let h = Self::exp_offset(n, (k as usize) % c);
                 let j = i ^ h;
                 if j < n && j != i {
-                    vec![j]
-                } else {
-                    vec![]
+                    out.push(j);
                 }
             }
         }
@@ -172,18 +190,38 @@ impl Schedule {
     /// contract of the fault subsystem (DESIGN.md §Faults). Dead or
     /// unknown nodes send to no-one.
     pub fn out_peers_among(&self, i: usize, k: u64, alive: &[usize]) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.out_peers_among_into(i, k, alive, &mut out);
+        out
+    }
+
+    /// [`Self::out_peers_among`] into a caller-owned buffer (cleared
+    /// first) — the allocation-free form used by the fault-mode gossip
+    /// round and timing recursion.
+    pub fn out_peers_among_into(
+        &self,
+        i: usize,
+        k: u64,
+        alive: &[usize],
+        out: &mut Vec<usize>,
+    ) {
         debug_assert!(alive.windows(2).all(|w| w[0] < w[1]), "alive must be sorted");
         if alive.len() == self.n {
-            return self.out_peers(i, k);
+            self.out_peers_into(i, k, out);
+            return;
         }
+        out.clear();
         let Ok(rank) = alive.binary_search(&i) else {
-            return vec![];
+            return;
         };
         if alive.len() <= 1 {
-            return vec![];
+            return;
         }
         let virt = Schedule { kind: self.kind, n: alive.len(), seed: self.seed };
-        virt.out_peers(rank, k).into_iter().map(|r| alive[r]).collect()
+        virt.out_peers_into(rank, k, out);
+        for r in out.iter_mut() {
+            *r = alive[*r];
+        }
     }
 
     /// Column-stochastic mixing matrix over the `alive.len()` survivors

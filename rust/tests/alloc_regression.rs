@@ -1,0 +1,140 @@
+//! Zero-allocation regression test for the gossip hot path: after warm-up,
+//! a dense gossip round must perform **zero heap allocations** — on the
+//! sequential engine, on the pooled parallel engine, and (bonus, banks
+//! warmed) under top-k compression. A counting global allocator makes any
+//! regression (a fresh `Vec` per message, a peer list per node, a spawned
+//! thread per round, a boxed closure per dispatch…) an immediate test
+//! failure instead of a silent perf cliff.
+//!
+//! The whole scenario lives in ONE `#[test]` so no concurrently running
+//! test in this binary can allocate while a steady-state window is being
+//! measured.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
+use sgp::runtime::pool::Pool;
+use sgp::topology::{Schedule, TopologyKind};
+
+/// `System`, with every allocation-path call counted.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Allocation-path calls observed while running `f`.
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    f();
+    ALLOC_CALLS.load(Ordering::SeqCst) - before
+}
+
+fn init(n: usize, dim: usize) -> Vec<Vec<f32>> {
+    use sgp::rng::Pcg;
+    let mut rng = Pcg::new(7);
+    (0..n).map(|_| rng.gaussian_vec(dim)).collect()
+}
+
+#[test]
+fn dense_gossip_round_is_allocation_free_after_warmup() {
+    let n = 16;
+    let dim = 256;
+    // Warm-up horizon: several full schedule cycles so every mailbox,
+    // outbox, payload pool, peer buffer (and, for the compressed case,
+    // every per-edge error-feedback bank) reaches steady capacity.
+    let warm = 6 * Schedule::exp_offsets(n).len() as u64;
+    let measure = 64u64;
+
+    // --- sequential engine, identity compression, τ ∈ {0, 1} ------------
+    for delay in [0u64, 1] {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::TwoPeerExp] {
+            let sched = Schedule::new(kind, n);
+            let mut eng = PushSumEngine::new(init(n, dim), delay, false);
+            let mut k = 0u64;
+            for _ in 0..warm {
+                eng.step(k, &sched);
+                k += 1;
+            }
+            let allocs = allocs_during(|| {
+                for _ in 0..measure {
+                    eng.step(k, &sched);
+                    k += 1;
+                }
+            });
+            assert_eq!(
+                allocs, 0,
+                "sequential dense round allocated ({kind:?}, τ={delay}): \
+                 {allocs} calls over {measure} rounds"
+            );
+        }
+    }
+
+    // --- pooled parallel engine: private pool, several thread counts ----
+    for threads in [1usize, 2, 7] {
+        let pool = Arc::new(Pool::new(threads));
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        let mut eng = PushSumEngine::new(init(n, dim), 1, false);
+        eng.set_pool(Some(pool));
+        let exec = ExecPolicy::parallel(4);
+        let mut k = 0u64;
+        for _ in 0..warm {
+            eng.step_exec(k, &sched, None, exec);
+            k += 1;
+        }
+        let allocs = allocs_during(|| {
+            for _ in 0..measure {
+                eng.step_exec(k, &sched, None, exec);
+                k += 1;
+            }
+        });
+        assert_eq!(
+            allocs, 0,
+            "pooled dense round allocated (threads={threads}): {allocs} \
+             calls over {measure} rounds — the pool handoff or the shard \
+             dispatch put an allocation back on the hot path"
+        );
+    }
+
+    // --- compressed hot path: banks warmed over the full cycle ----------
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let spec = Compression::TopK { den: 4 };
+    let mut eng = PushSumEngine::new(init(n, dim), 0, false);
+    let mut k = 0u64;
+    for _ in 0..warm {
+        eng.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
+        k += 1;
+    }
+    let allocs = allocs_during(|| {
+        for _ in 0..measure {
+            eng.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
+            k += 1;
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "compressed (topk) round allocated: {allocs} calls over {measure} \
+         rounds — scratch or bank state is being reallocated"
+    );
+}

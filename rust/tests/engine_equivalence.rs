@@ -141,6 +141,61 @@ fn prop_parallel_engine_bit_identical_under_fault_replay() {
 }
 
 #[test]
+fn prop_pooled_engine_bit_identical_across_thread_counts() {
+    // The persistent pool's contract (PR 5): at fixed seed the pooled
+    // engine matches the sequential engine bit-for-bit at ANY worker
+    // count — {1, 2, 7} crossed with faults on/off and compression
+    // on/off. Thread counts below, equal to, and above the shard count
+    // all exercise the shard→worker pinning (j ≡ w mod W).
+    use sgp::runtime::pool::Pool;
+    use std::sync::Arc;
+    for case in 0..18u64 {
+        let mut rng = Pcg::new(25_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(16);
+        let delay = rng.below(3) as u64;
+        let faulty = case % 2 == 0;
+        let spec = match case % 3 {
+            0 => Compression::Identity,
+            1 => Compression::TopK { den: 4 },
+            _ => Compression::Qsgd { bits: 4 },
+        };
+        let plan = if faulty {
+            arb_plan(&mut rng, n, 30, case).with_drop(0.15)
+        } else {
+            FaultPlan::lossless()
+        };
+        let clock = FaultClock::new(plan);
+        let faults = if faulty { Some(&clock) } else { None };
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        let mut seq = PushSumEngine::new(init.clone(), delay, false);
+        for k in 0..30 {
+            seq.step_compressed(k, &sched, faults, ExecPolicy::Sequential, spec);
+        }
+        for threads in [1usize, 2, 7] {
+            let tag = format!(
+                "case {case}: {kind:?} n={n} dim={dim} delay={delay} \
+                 faulty={faulty} {spec:?} threads={threads}"
+            );
+            let mut par = PushSumEngine::new(init.clone(), delay, false);
+            par.set_pool(Some(Arc::new(Pool::new(threads))));
+            for k in 0..30 {
+                par.step_compressed(
+                    k,
+                    &sched,
+                    faults,
+                    ExecPolicy::parallel(5),
+                    spec,
+                );
+            }
+            assert_engines_identical(&seq, &par, &tag);
+        }
+    }
+}
+
+#[test]
 fn prop_legacy_step_entrypoints_match_step_exec() {
     // step()/step_faulty() are thin wrappers over the sharded driver; the
     // wrappers and the explicit sequential policy must agree exactly.
