@@ -153,6 +153,15 @@ impl Args {
         }
     }
 
+    /// `u32` option with a default (error names the offending flag) —
+    /// millisecond thresholds and similar wire-width-bounded values.
+    pub fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        match self.value_of(name)? {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
+        }
+    }
+
     /// Float option with a default (error names the offending flag).
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.value_of(name)? {

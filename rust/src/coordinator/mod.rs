@@ -20,6 +20,12 @@
 //! Construction goes through [`TrainerBuilder`]: pick an algorithm by
 //! registry name (plus knobs like τ, gradient delay, topology override) or
 //! inject a custom strategy object.
+//!
+//! This module coordinates *simulated* nodes inside one process. Its
+//! real-socket counterpart is [`crate::net::cluster`]: `repro coord`
+//! plays the role of the builder/loop across OS processes (registration,
+//! rank assignment, membership, audit), with the same seeds, schedules
+//! and compressed share encodings on an actual TCP wire.
 
 use anyhow::{bail, Result};
 

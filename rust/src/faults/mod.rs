@@ -89,6 +89,32 @@ pub enum MembershipEvent {
     },
 }
 
+impl MembershipEvent {
+    /// The node this event is about.
+    pub fn node(&self) -> usize {
+        match *self {
+            Self::Crash { node, .. } | Self::Rejoin { node, .. } | Self::Leave { node, .. } => node,
+        }
+    }
+
+    /// The iteration (simulator) or round (deployment) the event fires at.
+    pub fn at(&self) -> u64 {
+        match *self {
+            Self::Crash { at, .. } | Self::Rejoin { at, .. } | Self::Leave { at, .. } => at,
+        }
+    }
+
+    /// Stable lower-case tag, shared with the deployment coordinator's
+    /// membership event log (`crate::net::cluster::coord`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Crash { .. } => "crash",
+            Self::Rejoin { .. } => "rejoin",
+            Self::Leave { .. } => "leave",
+        }
+    }
+}
+
 /// Declarative fault scenario. `lossless()` is the identity plan — running
 /// any algorithm under it is bit-identical to running without faults.
 ///

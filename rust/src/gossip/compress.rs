@@ -147,6 +147,34 @@ impl Compression {
         matches!(self, Self::Identity)
     }
 
+    /// Stable `(tag, arg)` pair identifying this scheme in the deployment
+    /// wire header ([`crate::net::cluster::wire`]): `0` = identity,
+    /// `1` = top-k (arg = density denominator), `2` = qsgd (arg = bits).
+    /// The inverse is [`Self::from_wire_tag`].
+    pub fn wire_tag(&self) -> (u8, u32) {
+        match *self {
+            Self::Identity => (0, 0),
+            Self::TopK { den } => (1, den),
+            Self::Qsgd { bits } => (2, bits as u32),
+        }
+    }
+
+    /// Decode a wire-header `(tag, arg)` pair back into a spec, enforcing
+    /// the same argument bounds as [`Self::parse`]; `None` for unknown
+    /// tags or out-of-range arguments (a decoder must treat that as a
+    /// malformed frame, never trust it).
+    pub fn from_wire_tag(tag: u8, arg: u32) -> Option<Self> {
+        match tag {
+            0 => Some(Self::Identity),
+            1 => (arg >= 1).then_some(Self::TopK { den: arg }),
+            2 => u8::try_from(arg)
+                .ok()
+                .filter(|b| (2..=16).contains(b))
+                .map(|bits| Self::Qsgd { bits }),
+            _ => None,
+        }
+    }
+
     /// Coordinates kept per message for a `dim`-element share (top-k
     /// density rounded up, never below 1; `dim` for the dense schemes).
     pub fn kept(&self, dim: usize) -> usize {
@@ -335,6 +363,25 @@ mod tests {
         assert_eq!(Compression::parse("topk:x"), None);
         assert_eq!(Compression::TopK { den: 16 }.label(), "topk:16");
         assert_eq!(Compression::parse("topk:16").unwrap().label(), "topk:16");
+    }
+
+    #[test]
+    fn wire_tags_roundtrip_and_reject_bad_args() {
+        for spec in [
+            Compression::Identity,
+            Compression::TopK { den: 1 },
+            Compression::TopK { den: 4096 },
+            Compression::Qsgd { bits: 2 },
+            Compression::Qsgd { bits: 16 },
+        ] {
+            let (tag, arg) = spec.wire_tag();
+            assert_eq!(Compression::from_wire_tag(tag, arg), Some(spec));
+        }
+        assert_eq!(Compression::from_wire_tag(3, 0), None, "unknown tag");
+        assert_eq!(Compression::from_wire_tag(1, 0), None, "topk den 0");
+        assert_eq!(Compression::from_wire_tag(2, 1), None, "qsgd 1 bit");
+        assert_eq!(Compression::from_wire_tag(2, 17), None, "qsgd 17 bits");
+        assert_eq!(Compression::from_wire_tag(2, 1 << 20), None);
     }
 
     #[test]

@@ -18,7 +18,10 @@
 //!   its α–β cost model, used by the AllReduce-SGD baseline.
 //! * [`net`] — the cluster/network simulator standing in for the paper's
 //!   32×DGX-1 testbed: 10 GbE / 100 Gb-IB link models, log-normal straggler
-//!   compute model, and per-algorithm timing recursions.
+//!   compute model, and per-algorithm timing recursions — plus
+//!   [`net::cluster`], the real multi-process deployment (TCP coordinator +
+//!   gossip workers, `repro coord` / `repro worker`) that speaks the
+//!   compressed push-sum shares as its literal wire format.
 //! * [`faults`] — deterministic, seedable fault & churn injection
 //!   ([`faults::FaultPlan`] / [`faults::FaultClock`]): per-link message
 //!   loss, transient link degradation, node crash/rejoin-from-checkpoint

@@ -7,6 +7,8 @@
 //!   engine-sweep large-N scaling sweep of the parallel execution engine
 //!   compress-sweep compressed-gossip sweep: byte reduction × heterogeneity
 //!   bench-check  CI perf gate: fresh BENCH_*.json vs committed baselines
+//!   coord        deployment coordinator: register workers, track liveness
+//!   worker       deployment gossip worker (connects to a coordinator)
 //!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
@@ -23,6 +25,7 @@ use sgp::coordinator::TrainerBuilder;
 use sgp::experiments;
 use sgp::faults::Crash;
 use sgp::gossip::{Compression, ExecPolicy};
+use sgp::net::cluster::{coord, worker, HeartbeatPolicy};
 use sgp::metrics;
 use sgp::optim::OptimKind;
 use sgp::runtime::Runtime;
@@ -74,6 +77,25 @@ USAGE:
                 heterogeneity for SGP vs the dense baseline, with a
                 cross-shard bit-identity check. Writes
                 results/compress_sweep.csv.
+  repro coord   --world N [--bind 127.0.0.1:0] [--rounds 400]
+                [--cooldown rounds/4] [--dim 32] [--seed 1] [--lr 0.05]
+                [--compress none|topk:D|qsgd:B] [--round-ms 2]
+                [--round-timeout-ms 250] [--slow-ms 500] [--dead-ms 2000]
+                [--deadline-s 120] [--port-file PATH] [--log PATH]
+                [--summary PATH]
+                deployment coordinator: waits for N `repro worker`
+                processes, assigns ranks + the peer table, tracks
+                liveness (two thresholds: slow → degraded, silent/EOF →
+                leave), broadcasts membership events, and audits the
+                final reports (consensus spread + push-sum mass ledger).
+                Writes a JSONL membership log and a summary JSON.
+  repro worker  --coord HOST:PORT [--bind 127.0.0.1:0] [--hb-ms 50]
+                [--io-timeout-ms 5000]
+                deployment gossip worker: joins the coordinator, then
+                runs the push-sum loop over TCP, sending compressed
+                shares (the `gossip::Compression` bit-packed encodings)
+                to its schedule peers. All config arrives in the
+                coordinator's Assign message.
   repro algos
   repro spectral
   repro average [--nodes 32] [--rounds 8]
@@ -413,6 +435,85 @@ fn cmd_compress_sweep(args: &Args) -> Result<()> {
     experiments::compress_sweep(&sweep)
 }
 
+fn cmd_coord(args: &Args) -> Result<()> {
+    let world = args.usize_or("world", 4)?;
+    if world < 2 {
+        bail!("--world must be at least 2 (got {world})");
+    }
+    let rounds = args.u64_or("rounds", 400)?;
+    let cooldown = args.u64_or("cooldown", rounds / 4)?;
+    let hb = HeartbeatPolicy {
+        slow_after_ms: args.u64_or("slow-ms", 500)?,
+        dead_after_ms: args.u64_or("dead-ms", 2000)?,
+    };
+    if hb.dead_after_ms <= hb.slow_after_ms {
+        bail!(
+            "--dead-ms ({}) must exceed --slow-ms ({}) — the degraded band \
+             between the two thresholds is the point",
+            hb.dead_after_ms,
+            hb.slow_after_ms
+        );
+    }
+    let cfg = coord::CoordConfig {
+        bind: args.str_or("bind", "127.0.0.1:0")?,
+        world,
+        rounds,
+        cooldown,
+        dim: args.usize_or("dim", 32)?,
+        seed: args.u64_or("seed", 1)?,
+        lr: args.f64_or("lr", 0.05)? as f32,
+        scheme: parse_compress(args)?,
+        round_ms: args.u32_or("round-ms", 2)?,
+        round_timeout_ms: args.u32_or("round-timeout-ms", 250)?,
+        hb,
+        deadline_s: args.u64_or("deadline-s", 120)?,
+        port_file: args.value_of("port-file")?.map(std::path::PathBuf::from),
+        log_path: std::path::PathBuf::from(
+            args.str_or("log", "results/deploy/membership.jsonl")?,
+        ),
+        summary_path: std::path::PathBuf::from(
+            args.str_or("summary", "results/deploy/summary.json")?,
+        ),
+    };
+    let s = coord::run_coordinator(&cfg)?;
+    println!(
+        "deployment complete: {}/{} survivors {:?}, consensus spread {:.3e}, \
+         missing push-sum mass {:.6}, max ledger residual {:.3e}",
+        s.survivors.len(),
+        s.world,
+        s.survivors,
+        s.spread,
+        s.missing_w,
+        s.max_ledger_residual
+    );
+    println!("summary: {}", cfg.summary_path.display());
+    println!("membership log: {}", cfg.log_path.display());
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = worker::WorkerConfig {
+        coord: args.require("coord")?.to_string(),
+        bind: args.str_or("bind", "127.0.0.1:0")?,
+        hb_ms: args.u64_or("hb-ms", 50)?,
+        io_timeout_ms: args.u64_or("io-timeout-ms", 5000)?,
+    };
+    let rep = worker::run_worker(&cfg)?;
+    println!(
+        "worker rank {} finished after {} rounds: w={:.6} recv_w={:.6} \
+         sent_w={:.6} rescued_w={:.6} ({} rescues, {} timeouts)",
+        rep.rank,
+        rep.rounds,
+        rep.done.w,
+        rep.done.recv_w,
+        rep.done.sent_w,
+        rep.done.rescued_w,
+        rep.done.rescues,
+        rep.done.timeouts
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
@@ -422,6 +523,8 @@ fn main() -> Result<()> {
         Some("engine-sweep") => cmd_engine_sweep(&args)?,
         Some("compress-sweep") => cmd_compress_sweep(&args)?,
         Some("bench-check") => cmd_bench_check(&args)?,
+        Some("coord") => cmd_coord(&args)?,
+        Some("worker") => cmd_worker(&args)?,
         Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {

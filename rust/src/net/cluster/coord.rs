@@ -1,0 +1,669 @@
+//! The deployment coordinator behind `repro coord`: worker registration,
+//! rank/world-size assignment, heartbeat-driven membership tracking, and
+//! the end-of-run consensus/ledger audit.
+//!
+//! Control plane only — gossip shares flow worker-to-worker; the
+//! coordinator never touches a payload. Its job:
+//!
+//! 1. **Registration.** Accept TCP connections until `world` workers
+//!    have sent `Join{listen_port}`; ranks are assigned in join order and
+//!    every worker receives an [`Assignment`] carrying the full peer
+//!    address table plus the run configuration (seed, rounds, dimension,
+//!    compression scheme) — one source of truth, so every process draws
+//!    identical quadratic centers and schedules.
+//! 2. **Liveness.** Feed worker heartbeats into the two-threshold
+//!    [`HeartbeatMonitor`]: silence past the slow threshold degrades a
+//!    worker (broadcast — peers wait longer for it), silence past the
+//!    dead threshold (or a closed connection, which is stronger
+//!    evidence) evicts it with a `Leave` membership broadcast — the
+//!    deployment analogue of [`crate::faults::MembershipEvent::Leave`] —
+//!    after which survivors re-index their gossip schedules.
+//! 3. **Audit.** Collect each survivor's [`DoneReport`] and check the
+//!    mass-conservation ledger `w = 1 + w_recv − w_sent` per worker,
+//!    compute the de-biased consensus mean and relative spread, and
+//!    write a machine-readable summary JSON plus a JSONL membership
+//!    event log (the loopback integration test and the CI `deploy-smoke`
+//!    job assert on both).
+//!
+//! Every socket operation and the run as a whole are deadline-bounded:
+//! a wedged worker can degrade the numbers, never hang the coordinator.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::faults::MembershipEvent;
+use crate::gossip::Compression;
+
+use super::heartbeat::{HeartbeatMonitor, HeartbeatPolicy, Transition};
+use super::wire::{self, Assignment, DoneReport, Envelope, Frame, FrameReader, WireEvent};
+
+/// Everything `repro coord` needs for one deployment run.
+#[derive(Clone, Debug)]
+pub struct CoordConfig {
+    /// Listen address (`127.0.0.1:0` = pick a free port).
+    pub bind: String,
+    /// Number of workers to wait for.
+    pub world: usize,
+    /// Total gossip rounds per worker (including the cool-down tail).
+    pub rounds: u64,
+    /// Trailing dense no-gradient rounds (consensus tail).
+    pub cooldown: u64,
+    /// Share dimension.
+    pub dim: usize,
+    /// Shared seed (centers + schedule).
+    pub seed: u64,
+    /// Quadratic step size (0 = pure averaging).
+    pub lr: f32,
+    /// Gossip compression for the gradient phase.
+    pub scheme: Compression,
+    /// Worker pacing: minimum milliseconds per round.
+    pub round_ms: u32,
+    /// Worker patience: milliseconds to wait for one round's expected
+    /// in-neighbour messages.
+    pub round_timeout_ms: u32,
+    /// Heartbeat thresholds (slow vs dead).
+    pub hb: HeartbeatPolicy,
+    /// Hard wall-clock bound on the whole run, seconds.
+    pub deadline_s: u64,
+    /// If set, the bound port is written here (atomically) once the
+    /// listener is up — how spawning harnesses discover the port.
+    pub port_file: Option<PathBuf>,
+    /// Membership event log (JSONL, streamed — survives a kill).
+    pub log_path: PathBuf,
+    /// End-of-run summary JSON.
+    pub summary_path: PathBuf,
+}
+
+impl Default for CoordConfig {
+    fn default() -> Self {
+        Self {
+            bind: "127.0.0.1:0".to_string(),
+            world: 4,
+            rounds: 400,
+            cooldown: 100,
+            dim: 32,
+            seed: 1,
+            lr: 0.05,
+            scheme: Compression::Identity,
+            round_ms: 2,
+            round_timeout_ms: 250,
+            hb: HeartbeatPolicy::default(),
+            deadline_s: 120,
+            port_file: None,
+            log_path: PathBuf::from("results/deploy/membership.jsonl"),
+            summary_path: PathBuf::from("results/deploy/summary.json"),
+        }
+    }
+}
+
+/// One membership-log record (also embedded in the summary JSON).
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    /// Milliseconds since the coordinator started.
+    pub t_ms: u64,
+    /// Event kind (`join`, `assign`, `degraded`, `recovered`, `leave`,
+    /// `done`, `deadline`).
+    pub kind: String,
+    /// Rank the event is about (`u32::MAX` for group-wide events).
+    pub rank: u32,
+}
+
+/// Per-survivor audit row.
+#[derive(Clone, Debug)]
+pub struct WorkerAudit {
+    /// Worker rank.
+    pub rank: u32,
+    /// Its final report.
+    pub report: DoneReport,
+    /// `w − (1 + recv_w − sent_w)` — zero up to f64 round-off when the
+    /// push-sum mass ledger balances.
+    pub ledger_residual: f64,
+}
+
+/// End-of-run audit: consensus + ledger over the survivors.
+#[derive(Clone, Debug)]
+pub struct CoordSummary {
+    /// Port the coordinator listened on.
+    pub port: u16,
+    /// Configured world size.
+    pub world: usize,
+    /// Ranks that finished alive (sent a `Done` report).
+    pub survivors: Vec<u32>,
+    /// De-biased consensus mean over the survivors.
+    pub mean: Vec<f64>,
+    /// Max relative consensus spread `‖z_i − z̄‖ / max(‖z̄‖, ε)`.
+    pub spread: f64,
+    /// Push-sum weight missing from the group: `world − Σ w_i` over
+    /// survivors — ≈ 0 for a clean run, ≈ the dead workers' held mass
+    /// after a kill.
+    pub missing_w: f64,
+    /// Largest per-survivor ledger residual (absolute).
+    pub max_ledger_residual: f64,
+    /// Per-survivor audit rows.
+    pub workers: Vec<WorkerAudit>,
+    /// Membership events in order.
+    pub events: Vec<EventRecord>,
+}
+
+/// Append-and-flush JSONL event log (best-effort: I/O errors degrade to
+/// stderr notes, they never kill the run).
+struct EventLog {
+    file: Option<std::fs::File>,
+}
+
+impl EventLog {
+    fn open(path: &Path) -> Self {
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        match std::fs::File::create(path) {
+            Ok(f) => Self { file: Some(f) },
+            Err(e) => {
+                eprintln!("[coord] cannot open event log {}: {e}", path.display());
+                Self { file: None }
+            }
+        }
+    }
+
+    fn put(&mut self, rec: &EventRecord) {
+        if let Some(f) = self.file.as_mut() {
+            let _ = writeln!(
+                f,
+                "{{\"t_ms\":{},\"kind\":\"{}\",\"rank\":{}}}",
+                rec.t_ms, rec.kind, rec.rank
+            );
+            let _ = f.flush();
+        }
+    }
+}
+
+enum Inbox {
+    Frame(Envelope),
+    Eof,
+}
+
+/// Read frames from one worker's control stream into the channel until
+/// EOF or a decode error (both reported as `Eof` — for liveness they
+/// mean the same thing: this stream is done).
+fn reader_loop(mut stream: TcpStream, rank: usize, tx: mpsc::Sender<(usize, Inbox)>) {
+    let mut fr = FrameReader::new();
+    let mut buf = [0u8; 16 * 1024];
+    'outer: loop {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                fr.extend(&buf[..n]);
+                loop {
+                    match fr.next_frame() {
+                        Ok(None) => break,
+                        Err(_) => break 'outer,
+                        Ok(Some(env)) => {
+                            if tx.send((rank, Inbox::Frame(env))).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let _ = tx.send((rank, Inbox::Eof));
+}
+
+/// Block (bounded) until `Join` arrives on a freshly-accepted stream.
+fn read_join(stream: &mut TcpStream, deadline: Instant) -> Result<u16> {
+    let mut fr = FrameReader::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(env) = fr.next_frame()? {
+            if let Frame::Join { listen_port } = env.msg {
+                return Ok(listen_port);
+            }
+            continue;
+        }
+        if Instant::now() >= deadline {
+            bail!("timed out waiting for a Join on an accepted connection");
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => bail!("worker closed its connection before sending Join"),
+            Ok(n) => fr.extend(&buf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e).context("reading Join"),
+        }
+    }
+}
+
+fn write_port_file(path: &Path, port: u16) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, format!("{port}\n"))
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+fn l2(v: &[f64]) -> f64 {
+    v.iter().map(|a| a * a).sum::<f64>().sqrt()
+}
+
+/// Run the coordinator to completion: register `world` workers, track
+/// liveness, broadcast membership changes, audit the final reports.
+/// Deadline-bounded end to end.
+pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
+    let io_timeout = Duration::from_millis(5000);
+    let start = Instant::now();
+    let now_ms = move || start.elapsed().as_millis() as u64;
+    let mut log = EventLog::open(&cfg.log_path);
+    let mut events: Vec<EventRecord> = Vec::new();
+    let record = |log: &mut EventLog,
+                      events: &mut Vec<EventRecord>,
+                      t_ms: u64,
+                      kind: &str,
+                      rank: u32| {
+        let rec = EventRecord { t_ms, kind: kind.to_string(), rank };
+        log.put(&rec);
+        events.push(rec);
+    };
+
+    let listener =
+        TcpListener::bind(&cfg.bind).with_context(|| format!("binding {}", cfg.bind))?;
+    let port = listener.local_addr()?.port();
+    if let Some(pf) = &cfg.port_file {
+        write_port_file(pf, port)?;
+    }
+    eprintln!("[coord] listening on port {port}, waiting for {} workers", cfg.world);
+
+    // --- Registration: accept until `world` Joins, rank = join order. --
+    listener.set_nonblocking(true)?;
+    let reg_deadline = Instant::now() + Duration::from_secs(60);
+    let mut joined: Vec<(TcpStream, String)> = Vec::new();
+    while joined.len() < cfg.world {
+        match listener.accept() {
+            Ok((mut s, peer)) => {
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                s.set_read_timeout(Some(Duration::from_millis(200)))?;
+                s.set_write_timeout(Some(io_timeout))?;
+                let lp = read_join(&mut s, reg_deadline)?;
+                let rank = joined.len() as u32;
+                let addr = format!("{}:{}", peer.ip(), lp);
+                eprintln!("[coord] rank {rank} joined from {addr}");
+                record(&mut log, &mut events, now_ms(), "join", rank);
+                joined.push((s, addr));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= reg_deadline {
+                    bail!(
+                        "registration timed out with {}/{} workers joined",
+                        joined.len(),
+                        cfg.world
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accepting worker connections"),
+        }
+    }
+
+    // --- Assignment + reader threads. ---------------------------------
+    let peers: Vec<String> = joined.iter().map(|(_, a)| a.clone()).collect();
+    let (tx, rx) = mpsc::channel::<(usize, Inbox)>();
+    let mut streams: Vec<TcpStream> = Vec::with_capacity(cfg.world);
+    let mut frame_buf = Vec::new();
+    for (rank, (stream, _)) in joined.into_iter().enumerate() {
+        let assign = Assignment {
+            rank: rank as u32,
+            world: cfg.world as u32,
+            seed: cfg.seed,
+            rounds: cfg.rounds,
+            cooldown: cfg.cooldown.min(cfg.rounds),
+            dim: cfg.dim as u32,
+            lr: cfg.lr,
+            round_ms: cfg.round_ms,
+            round_timeout_ms: cfg.round_timeout_ms,
+            scheme: cfg.scheme,
+            peers: peers.clone(),
+        };
+        frame_buf.clear();
+        wire::encode_frame(
+            &Envelope {
+                sender: wire::UNASSIGNED,
+                round: 0,
+                scheme: cfg.scheme,
+                msg: Frame::Assign(assign),
+            },
+            &mut frame_buf,
+        );
+        let mut stream = stream;
+        stream
+            .write_all(&frame_buf)
+            .with_context(|| format!("sending Assign to rank {rank}"))?;
+        let rd = stream.try_clone()?;
+        rd.set_read_timeout(None)?;
+        let tx = tx.clone();
+        std::thread::spawn(move || reader_loop(rd, rank, tx));
+        streams.push(stream);
+    }
+    drop(tx);
+    record(&mut log, &mut events, now_ms(), "assign", u32::MAX);
+    eprintln!("[coord] all {} workers assigned; run started", cfg.world);
+
+    // --- Liveness loop: heartbeats in, membership broadcasts out. -----
+    let mut monitor = HeartbeatMonitor::new(cfg.world, cfg.hb, now_ms());
+    let mut last_round = vec![0u64; cfg.world];
+    let mut done: Vec<Option<DoneReport>> = vec![None; cfg.world];
+    let mut dead = vec![false; cfg.world];
+    let run_deadline = start + Duration::from_secs(cfg.deadline_s.max(1));
+    let mut deadline_hit = false;
+
+    let broadcast = |streams: &mut [TcpStream], dead: &[bool], ev: WireEvent| {
+        let mut buf = Vec::new();
+        wire::encode_frame(
+            &Envelope::control(wire::UNASSIGNED, 0, Frame::Membership(ev)),
+            &mut buf,
+        );
+        for (r, s) in streams.iter_mut().enumerate() {
+            if !dead[r] && r as u32 != ev.rank() {
+                let _ = s.write_all(&buf);
+            }
+        }
+    };
+
+    loop {
+        if (0..cfg.world).all(|r| dead[r] || done[r].is_some()) {
+            break;
+        }
+        if Instant::now() >= run_deadline {
+            deadline_hit = true;
+            record(&mut log, &mut events, now_ms(), "deadline", u32::MAX);
+            break;
+        }
+
+        let mut transitions: Vec<Transition> = Vec::new();
+        match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok((rank, Inbox::Frame(env))) => {
+                if let Some(t) = monitor.observe(rank, now_ms()) {
+                    transitions.push(t);
+                }
+                match env.msg {
+                    Frame::Heartbeat => last_round[rank] = env.round,
+                    Frame::Done(d) => {
+                        last_round[rank] = env.round;
+                        eprintln!(
+                            "[coord] rank {rank} done at round {}: w={:.6}",
+                            env.round, d.w
+                        );
+                        record(&mut log, &mut events, now_ms(), "done", rank as u32);
+                        done[rank] = Some(d);
+                    }
+                    _ => {}
+                }
+            }
+            Ok((rank, Inbox::Eof)) => {
+                // A closed control stream is stronger evidence than
+                // silence — unless the worker already reported Done
+                // (normal teardown).
+                if done[rank].is_none() {
+                    if let Some(t) = monitor.mark_dead(rank) {
+                        transitions.push(t);
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        transitions.extend(monitor.sweep(now_ms()));
+
+        for t in transitions {
+            match t {
+                Transition::Degraded(r) if done[r].is_none() && !dead[r] => {
+                    eprintln!("[coord] rank {r} is slow (degraded)");
+                    record(&mut log, &mut events, now_ms(), "degraded", r as u32);
+                    broadcast(
+                        &mut streams,
+                        &dead,
+                        WireEvent::Degraded { rank: r as u32, at: last_round[r] },
+                    );
+                }
+                Transition::Recovered(r) if done[r].is_none() && !dead[r] => {
+                    eprintln!("[coord] rank {r} recovered");
+                    record(&mut log, &mut events, now_ms(), "recovered", r as u32);
+                    broadcast(
+                        &mut streams,
+                        &dead,
+                        WireEvent::Recovered { rank: r as u32, at: last_round[r] },
+                    );
+                }
+                Transition::Dead(r) if done[r].is_none() && !dead[r] => {
+                    dead[r] = true;
+                    // The canonical membership event the simulator's
+                    // fault layer would have scheduled — here it is
+                    // observed instead of injected.
+                    let ev = MembershipEvent::Leave { node: r, at: last_round[r] };
+                    eprintln!(
+                        "[coord] rank {} declared dead at round {} — broadcasting {}",
+                        ev.node(),
+                        ev.at(),
+                        ev.label()
+                    );
+                    record(&mut log, &mut events, now_ms(), ev.label(), r as u32);
+                    broadcast(
+                        &mut streams,
+                        &dead,
+                        WireEvent::Leave { rank: r as u32, at: last_round[r] },
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // --- Teardown + audit. --------------------------------------------
+    {
+        let mut buf = Vec::new();
+        wire::encode_frame(
+            &Envelope::control(wire::UNASSIGNED, 0, Frame::Shutdown),
+            &mut buf,
+        );
+        for (r, s) in streams.iter_mut().enumerate() {
+            if !dead[r] {
+                let _ = s.write_all(&buf);
+            }
+        }
+    }
+
+    if deadline_hit {
+        let missing: Vec<usize> =
+            (0..cfg.world).filter(|&r| !dead[r] && done[r].is_none()).collect();
+        bail!(
+            "run deadline ({}s) exceeded with workers {missing:?} unfinished \
+             (membership log: {})",
+            cfg.deadline_s,
+            cfg.log_path.display()
+        );
+    }
+
+    let mut workers: Vec<WorkerAudit> = Vec::new();
+    for (r, d) in done.iter().enumerate() {
+        let (Some(rep), false) = (d, dead[r]) else { continue };
+        if rep.x.len() != cfg.dim {
+            eprintln!(
+                "[coord] rank {r} reported dim {} != configured {}; excluding",
+                rep.x.len(),
+                cfg.dim
+            );
+            continue;
+        }
+        let ledger_residual = rep.w - (1.0 + rep.recv_w - rep.sent_w);
+        workers.push(WorkerAudit { rank: r as u32, report: rep.clone(), ledger_residual });
+    }
+    if workers.is_empty() {
+        bail!("no surviving worker reported a final state");
+    }
+
+    let m = workers.len() as f64;
+    let mut mean = vec![0.0f64; cfg.dim];
+    for a in &workers {
+        for (acc, v) in mean.iter_mut().zip(&a.report.x) {
+            *acc += *v as f64 / a.report.w / m;
+        }
+    }
+    let mean_norm = l2(&mean).max(1e-12);
+    let spread = workers
+        .iter()
+        .map(|a| {
+            let d: Vec<f64> = a
+                .report
+                .x
+                .iter()
+                .zip(&mean)
+                .map(|(v, mu)| *v as f64 / a.report.w - mu)
+                .collect();
+            l2(&d) / mean_norm
+        })
+        .fold(0.0f64, f64::max);
+    let missing_w = cfg.world as f64 - workers.iter().map(|a| a.report.w).sum::<f64>();
+    let max_ledger_residual =
+        workers.iter().map(|a| a.ledger_residual.abs()).fold(0.0f64, f64::max);
+
+    let summary = CoordSummary {
+        port,
+        world: cfg.world,
+        survivors: workers.iter().map(|a| a.rank).collect(),
+        mean,
+        spread,
+        missing_w,
+        max_ledger_residual,
+        workers,
+        events,
+    };
+    write_summary(&cfg.summary_path, &summary)?;
+    eprintln!(
+        "[coord] audit: survivors={:?} spread={:.3e} missing_w={:.6} \
+         max_ledger_residual={:.3e}",
+        summary.survivors, summary.spread, summary.missing_w, summary.max_ledger_residual
+    );
+    Ok(summary)
+}
+
+/// Render the summary as JSON (exponent-form floats, machine-parseable
+/// by the repo's own `model::json` reader).
+fn write_summary(path: &Path, s: &CoordSummary) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"port\": {},\n", s.port));
+    out.push_str(&format!("  \"world\": {},\n", s.world));
+    let surv: Vec<String> = s.survivors.iter().map(|r| r.to_string()).collect();
+    out.push_str(&format!("  \"survivors\": [{}],\n", surv.join(",")));
+    out.push_str(&format!("  \"spread\": {:e},\n", s.spread));
+    out.push_str(&format!("  \"missing_w\": {:e},\n", s.missing_w));
+    out.push_str(&format!(
+        "  \"max_ledger_residual\": {:e},\n",
+        s.max_ledger_residual
+    ));
+    let mean: Vec<String> = s.mean.iter().map(|v| format!("{v:e}")).collect();
+    out.push_str(&format!("  \"mean\": [{}],\n", mean.join(",")));
+    out.push_str("  \"workers\": [\n");
+    for (i, a) in s.workers.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"rank\":{},\"w\":{:e},\"recv_w\":{:e},\"sent_w\":{:e},\
+             \"rescued_w\":{:e},\"rescues\":{},\"timeouts\":{},\
+             \"ledger_residual\":{:e}}}{}\n",
+            a.rank,
+            a.report.w,
+            a.report.recv_w,
+            a.report.sent_w,
+            a.report.rescued_w,
+            a.report.rescues,
+            a.report.timeouts,
+            a.ledger_residual,
+            if i + 1 < s.workers.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"events\": [\n");
+    for (i, e) in s.events.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"t_ms\":{},\"kind\":\"{}\",\"rank\":{}}}{}\n",
+            e.t_ms,
+            e.kind,
+            e.rank,
+            if i + 1 < s.events.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_json_roundtrips_through_the_repo_parser() {
+        let dir = std::env::temp_dir().join(format!("sgp_coord_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("summary.json");
+        let s = CoordSummary {
+            port: 41234,
+            world: 4,
+            survivors: vec![0, 1, 3],
+            mean: vec![1.25, -0.5],
+            spread: 3.2e-5,
+            missing_w: 0.75,
+            max_ledger_residual: 1e-12,
+            workers: vec![WorkerAudit {
+                rank: 0,
+                report: DoneReport {
+                    w: 1.5,
+                    recv_w: 2.0,
+                    sent_w: 1.5,
+                    rescued_w: 0.0,
+                    rescues: 0,
+                    timeouts: 1,
+                    x: vec![1.0, 2.0],
+                },
+                ledger_residual: 0.0,
+            }],
+            events: vec![EventRecord { t_ms: 12, kind: "leave".into(), rank: 2 }],
+        };
+        write_summary(&path, &s).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::model::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("world").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(j.get("survivors").and_then(|v| v.as_arr()).unwrap().len(), 3);
+        let spread = j.get("spread").and_then(|v| v.as_f64()).unwrap();
+        assert!((spread - 3.2e-5).abs() < 1e-12, "{spread}");
+        let ws = j.get("workers").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(ws[0].get("rank").and_then(|v| v.as_usize()), Some(0));
+        let evs = j.get("events").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(evs[0].get("kind").and_then(|v| v.as_str()), Some("leave"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn port_file_is_written_atomically_with_a_trailing_newline() {
+        let dir = std::env::temp_dir().join(format!("sgp_portfile_{}", std::process::id()));
+        let path = dir.join("port");
+        write_port_file(&path, 40999).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "40999\n");
+        assert!(!path.with_extension("tmp").exists(), "tmp renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,213 @@
+//! Two-threshold heartbeat tracking for the deployment coordinator:
+//! distinguishing a **slow** worker (degraded — keep it in the schedule,
+//! give its peers more patience) from a **dead** one (membership event,
+//! survivor re-indexing).
+//!
+//! A single timeout cannot make that distinction: set it tight and a GC
+//! pause evicts a healthy worker (push-sum mass gone for nothing), set it
+//! loose and every real crash stalls the survivors for the whole window.
+//! The monitor therefore runs two clocks per worker:
+//!
+//! ```text
+//!             silence < slow_after        → Healthy
+//! slow_after ≤ silence < dead_after       → Degraded  (recoverable)
+//!             silence ≥ dead_after        → Dead      (absorbing)
+//! ```
+//!
+//! `Degraded` is fully recoverable: a heartbeat arriving between the two
+//! thresholds flips the worker straight back to `Healthy` and emits
+//! [`Transition::Recovered`] so the coordinator can broadcast the
+//! all-clear. `Dead` is absorbing — a late heartbeat from an evicted
+//! worker is ignored (its mass has already been written off and the
+//! survivor schedules re-indexed; an un-leave would fork the group view).
+//!
+//! The monitor is pure state over caller-supplied millisecond timestamps
+//! — no `Instant`, no wall clock — so the edge cases (recovery between
+//! the thresholds, late beacons after eviction) are unit-testable without
+//! sleeping.
+
+/// The two silence thresholds, in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct HeartbeatPolicy {
+    /// Silence after which a worker is declared slow (degraded).
+    pub slow_after_ms: u64,
+    /// Silence after which a worker is declared dead. Must exceed
+    /// `slow_after_ms` for the degraded band to exist.
+    pub dead_after_ms: u64,
+}
+
+impl Default for HeartbeatPolicy {
+    fn default() -> Self {
+        Self { slow_after_ms: 500, dead_after_ms: 2000 }
+    }
+}
+
+/// Liveness verdict for one worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Heartbeats arriving within the slow threshold.
+    Healthy,
+    /// Silent past `slow_after_ms` but not yet written off: stays in the
+    /// gossip schedule, peers wait longer for its messages.
+    Degraded,
+    /// Silent past `dead_after_ms` (or its connection closed): evicted.
+    /// Absorbing — late beacons do not resurrect it.
+    Dead,
+}
+
+/// A state change produced by [`HeartbeatMonitor::observe`] /
+/// [`HeartbeatMonitor::sweep`]; the coordinator turns these into
+/// membership broadcasts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transition {
+    /// Healthy → Degraded (crossed the slow threshold).
+    Degraded(usize),
+    /// Degraded → Healthy (beacon arrived before the dead threshold).
+    Recovered(usize),
+    /// → Dead (crossed the dead threshold, or connection closed).
+    Dead(usize),
+}
+
+/// Per-worker two-threshold liveness state over injected timestamps.
+#[derive(Clone, Debug)]
+pub struct HeartbeatMonitor {
+    policy: HeartbeatPolicy,
+    last_seen_ms: Vec<u64>,
+    health: Vec<Health>,
+}
+
+impl HeartbeatMonitor {
+    /// A monitor for `n` workers, all healthy and last seen at `now_ms`.
+    pub fn new(n: usize, policy: HeartbeatPolicy, now_ms: u64) -> Self {
+        debug_assert!(policy.dead_after_ms > policy.slow_after_ms);
+        Self {
+            policy,
+            last_seen_ms: vec![now_ms; n],
+            health: vec![Health::Healthy; n],
+        }
+    }
+
+    /// Current verdict for `rank`.
+    pub fn health(&self, rank: usize) -> Health {
+        self.health[rank]
+    }
+
+    /// Record a heartbeat from `rank` at `now_ms`. Returns
+    /// `Some(Transition::Recovered)` when this beacon pulls the worker
+    /// back from the degraded band; `None` otherwise (including beacons
+    /// from already-dead workers, which are ignored — dead is absorbing).
+    pub fn observe(&mut self, rank: usize, now_ms: u64) -> Option<Transition> {
+        match self.health[rank] {
+            Health::Dead => None,
+            state => {
+                self.last_seen_ms[rank] = now_ms;
+                if state == Health::Degraded {
+                    self.health[rank] = Health::Healthy;
+                    Some(Transition::Recovered(rank))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Declare `rank` dead immediately (connection closed / EOF) —
+    /// stronger evidence than silence, so it bypasses the thresholds.
+    /// Returns the transition unless the worker was already dead.
+    pub fn mark_dead(&mut self, rank: usize) -> Option<Transition> {
+        if self.health[rank] == Health::Dead {
+            None
+        } else {
+            self.health[rank] = Health::Dead;
+            Some(Transition::Dead(rank))
+        }
+    }
+
+    /// Advance the clocks to `now_ms` and collect every threshold
+    /// crossing (in rank order): Healthy workers past `slow_after_ms`
+    /// degrade, any non-dead worker past `dead_after_ms` dies.
+    pub fn sweep(&mut self, now_ms: u64) -> Vec<Transition> {
+        let mut out = Vec::new();
+        for rank in 0..self.health.len() {
+            let silence = now_ms.saturating_sub(self.last_seen_ms[rank]);
+            match self.health[rank] {
+                Health::Dead => {}
+                _ if silence >= self.policy.dead_after_ms => {
+                    self.health[rank] = Health::Dead;
+                    out.push(Transition::Dead(rank));
+                }
+                Health::Healthy if silence >= self.policy.slow_after_ms => {
+                    self.health[rank] = Health::Degraded;
+                    out.push(Transition::Degraded(rank));
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> HeartbeatPolicy {
+        HeartbeatPolicy { slow_after_ms: 100, dead_after_ms: 300 }
+    }
+
+    #[test]
+    fn a_worker_that_recovers_between_the_thresholds_is_not_evicted() {
+        // The satellite's edge case: silence crosses the slow threshold,
+        // the worker degrades — then a beacon lands *before* the dead
+        // threshold and it must come back as Recovered, not Leave.
+        let mut m = HeartbeatMonitor::new(2, policy(), 0);
+        assert_eq!(m.sweep(150), vec![Transition::Degraded(0), Transition::Degraded(1)]);
+        assert_eq!(m.health(0), Health::Degraded);
+        // Rank 0 revives at t=250 (inside the 100..300 band).
+        assert_eq!(m.observe(0, 250), Some(Transition::Recovered(0)));
+        assert_eq!(m.health(0), Health::Healthy);
+        // Rank 1 stays silent and dies at the dead threshold; rank 0,
+        // freshly observed, survives the same sweep.
+        assert_eq!(m.sweep(310), vec![Transition::Dead(1)]);
+        assert_eq!(m.health(0), Health::Healthy);
+        assert_eq!(m.health(1), Health::Dead);
+    }
+
+    #[test]
+    fn silence_past_the_dead_threshold_skips_straight_to_dead() {
+        // A sweep that only runs after the dead threshold must not emit a
+        // spurious Degraded first.
+        let mut m = HeartbeatMonitor::new(1, policy(), 0);
+        assert_eq!(m.sweep(1000), vec![Transition::Dead(0)]);
+    }
+
+    #[test]
+    fn dead_is_absorbing_even_for_late_beacons() {
+        let mut m = HeartbeatMonitor::new(1, policy(), 0);
+        assert_eq!(m.sweep(400), vec![Transition::Dead(0)]);
+        assert_eq!(m.observe(0, 401), None, "late beacon ignored");
+        assert_eq!(m.health(0), Health::Dead);
+        assert_eq!(m.sweep(800), vec![], "no repeated death events");
+        assert_eq!(m.mark_dead(0), None, "EOF after death is idempotent");
+    }
+
+    #[test]
+    fn steady_heartbeats_keep_everyone_healthy() {
+        let mut m = HeartbeatMonitor::new(3, policy(), 0);
+        for t in (50..1000).step_by(50) {
+            for r in 0..3 {
+                assert_eq!(m.observe(r, t), None);
+            }
+            assert_eq!(m.sweep(t), vec![]);
+        }
+        assert!((0..3).all(|r| m.health(r) == Health::Healthy));
+    }
+
+    #[test]
+    fn eof_marks_dead_immediately() {
+        let mut m = HeartbeatMonitor::new(2, policy(), 0);
+        assert_eq!(m.mark_dead(1), Some(Transition::Dead(1)));
+        assert_eq!(m.health(1), Health::Dead);
+        assert_eq!(m.health(0), Health::Healthy);
+    }
+}

@@ -1,0 +1,33 @@
+//! Real multi-process deployment: a TCP coordinator plus gossip workers
+//! speaking the compressed push-sum wire protocol.
+//!
+//! Everything else in this crate *simulates* the cluster ([`super::TimingSim`]
+//! stays the default path — it is deterministic and fast). This subsystem is
+//! the one place where the same algorithm runs over actual sockets:
+//!
+//! * [`wire`] — the length-framed, CRC-checked wire format. Payloads are the
+//!   bit-packed encodings of [`crate::gossip::Compression`] shares, so the
+//!   bytes saved by top-k / QSGD in the simulator are the bytes saved on the
+//!   wire.
+//! * [`coord`] — `repro coord`: registration, rank assignment, heartbeat
+//!   tracking, membership broadcasts, and the end-of-run consensus + ledger
+//!   audit.
+//! * [`worker`] — `repro worker`: the per-process push-sum gossip loop with
+//!   error-feedback banks, rescue-mode mass re-absorption on failed sends,
+//!   and survivor schedule re-indexing on membership events.
+//! * [`heartbeat`] — the two-threshold (slow vs dead) liveness monitor.
+//!
+//! Determinism caveat: unlike the simulator, real sockets deliver messages
+//! with arbitrary timing, so runs are *not* bit-reproducible — correctness
+//! is asserted through invariants (mass conservation, consensus spread)
+//! rather than byte-identical trajectories. See ARCHITECTURE.md
+//! ("Deployment layer") for the process diagram and header layout.
+
+pub mod coord;
+pub mod heartbeat;
+pub mod wire;
+pub mod worker;
+
+pub use coord::{run_coordinator, CoordConfig, CoordSummary};
+pub use heartbeat::{Health, HeartbeatMonitor, HeartbeatPolicy, Transition};
+pub use worker::{run_worker, WorkerConfig, WorkerReport};

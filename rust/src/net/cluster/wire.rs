@@ -1,0 +1,1094 @@
+//! Length-framed wire protocol for the real (multi-process) deployment:
+//! a versioned frame header plus byte-level encoders/decoders for the
+//! compressed push-sum payloads of [`crate::gossip::Compression`].
+//!
+//! # Frame layout
+//!
+//! Every frame is a 4-byte little-endian body length followed by the
+//! body; the body is a fixed 25-byte header, the payload, and a trailing
+//! CRC-32 over everything before it:
+//!
+//! ```text
+//! u32 body_len            # bytes that follow (header + payload + crc)
+//! ── body ───────────────────────────────────────────────────────────
+//! u16 magic   = 0x5347    # "SG"
+//! u8  version = 1
+//! u8  kind                # frame kind (join / assign / push / …)
+//! u32 sender              # rank of the sender (u32::MAX = unassigned)
+//! u64 round               # gossip round the frame belongs to
+//! u8  scheme_tag          # Compression::wire_tag().0
+//! u32 scheme_arg          # Compression::wire_tag().1
+//! u32 payload_len
+//! ..  payload             # kind-specific, see Frame
+//! u32 crc                 # CRC-32 (IEEE) of body[..len-4]
+//! ```
+//!
+//! The header is deliberately fixed-size so a reader can validate magic /
+//! version / kind before trusting any length, and `body_len` is bounded
+//! by [`MAX_BODY_BYTES`] so a corrupted length prefix can never trigger
+//! an unbounded allocation.
+//!
+//! # Share encoding (the compressed payload bytes)
+//!
+//! [`encode_share`] / [`decode_share`] are the byte-level realization of
+//! the bit-packed format that [`crate::gossip::Compression::encoded_bytes`]
+//! charges in the simulator:
+//!
+//! * identity — `dim` little-endian fp32 values;
+//! * top-k — `u32 count | u32 idx_bits | count × idx_bits-bit packed
+//!   indices (ascending) | count × fp32 values`, where `idx_bits =
+//!   ⌈log2 dim⌉` (min 1) and only coordinates with a non-zero bit
+//!   pattern ship (so `count ≤ kept(dim)` after top-k selection);
+//! * qsgd — `f32 scale | u32 count(= dim) | dim × bits-bit packed
+//!   symbols`, each symbol a sign bit plus a `bits−1`-bit magnitude
+//!   level; the decoder computes `±(level / levels) · scale` with the
+//!   exact arithmetic of the simulator's quantizer, so decoding the
+//!   bytes of an already-quantized share is bit-identical
+//!   (`decode ∘ encode` is idempotent).
+//!
+//! All multi-byte integers are little-endian; bit-packing is LSB-first
+//! within the byte stream. Decoders validate every length, index bound,
+//! ordering and the CRC — malformed bytes produce a [`WireError`], never
+//! a panic (pinned by `rust/tests/wire_roundtrip.rs`).
+
+use crate::gossip::Compression;
+
+/// Frame magic: "SG" little-endian.
+pub const MAGIC: u16 = 0x5347;
+/// Wire-protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed body-header size in bytes (everything before the payload).
+pub const HEADER_BYTES: usize = 25;
+/// Upper bound on one frame body — a corrupted length prefix errors
+/// instead of allocating gigabytes.
+pub const MAX_BODY_BYTES: usize = 64 << 20;
+/// Sender value of frames sent before a rank was assigned.
+pub const UNASSIGNED: u32 = u32::MAX;
+
+/// Errors produced by the framed codec. Every malformed input maps to a
+/// variant here — the decoders never panic on wire bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Body did not start with [`MAGIC`].
+    BadMagic(u16),
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Unknown frame kind byte.
+    BadKind(u8),
+    /// CRC mismatch (bit corruption somewhere in the body).
+    BadCrc {
+        /// CRC computed over the received body.
+        computed: u32,
+        /// CRC carried by the frame.
+        carried: u32,
+    },
+    /// Length prefix exceeds [`MAX_BODY_BYTES`] or undershoots the
+    /// fixed header.
+    BadLength(usize),
+    /// Unknown compression scheme tag/argument in the header.
+    BadScheme {
+        /// Scheme tag byte.
+        tag: u8,
+        /// Scheme argument.
+        arg: u32,
+    },
+    /// Payload bytes inconsistent with the frame kind (short buffer,
+    /// out-of-range index, bad count, …). The string names the check.
+    BadPayload(&'static str),
+    /// A stream ended with a partial frame still buffered.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::BadMagic(m) => write!(f, "bad frame magic {m:#06x}"),
+            Self::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            Self::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            Self::BadCrc { computed, carried } => {
+                write!(f, "crc mismatch: computed {computed:#010x}, frame carries {carried:#010x}")
+            }
+            Self::BadLength(n) => write!(f, "implausible frame body length {n}"),
+            Self::BadScheme { tag, arg } => {
+                write!(f, "unknown compression scheme tag {tag} arg {arg}")
+            }
+            Self::BadPayload(what) => write!(f, "malformed payload: {what}"),
+            Self::TrailingBytes(n) => {
+                write!(f, "stream ended mid-frame with {n} bytes buffered")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// CRC-32 (IEEE 802.3, reflected) nibble table.
+const CRC_TABLE: [u32; 16] = {
+    let mut t = [0u32; 16];
+    let mut i = 0;
+    while i < 16 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 4 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+};
+
+/// CRC-32 (IEEE) of `bytes` — the checksum every frame carries.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xF) as usize] ^ (c >> 4);
+        c = CRC_TABLE[((c ^ ((b as u32) >> 4)) & 0xF) as usize] ^ (c >> 4);
+    }
+    !c
+}
+
+// Frame-kind bytes.
+const K_JOIN: u8 = 1;
+const K_ASSIGN: u8 = 2;
+const K_HEARTBEAT: u8 = 3;
+const K_MEMBERSHIP: u8 = 4;
+const K_PUSH: u8 = 5;
+const K_DONE: u8 = 6;
+const K_SHUTDOWN: u8 = 7;
+
+/// A membership event as broadcast by the coordinator: the wire-level
+/// mirror of [`crate::faults::MembershipEvent`], restricted to what a
+/// live deployment can actually observe (plus the degraded/recovered
+/// pair of the two-threshold heartbeat monitor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireEvent {
+    /// Worker declared dead: remove it from every survivor's schedule.
+    Leave {
+        /// Rank of the dead worker.
+        rank: u32,
+        /// Last gossip round the coordinator heard from it.
+        at: u64,
+    },
+    /// Worker is slow but alive: keep it in the schedule, wait longer.
+    Degraded {
+        /// Rank of the slow worker.
+        rank: u32,
+        /// Round at which it was declared slow.
+        at: u64,
+    },
+    /// A degraded worker caught up again: normal patience applies.
+    Recovered {
+        /// Rank of the recovered worker.
+        rank: u32,
+        /// Round at which it recovered.
+        at: u64,
+    },
+}
+
+impl WireEvent {
+    /// The rank the event is about.
+    pub fn rank(&self) -> u32 {
+        match *self {
+            Self::Leave { rank, .. }
+            | Self::Degraded { rank, .. }
+            | Self::Recovered { rank, .. } => rank,
+        }
+    }
+
+    /// Short lowercase label (`"leave"`, `"degraded"`, `"recovered"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Leave { .. } => "leave",
+            Self::Degraded { .. } => "degraded",
+            Self::Recovered { .. } => "recovered",
+        }
+    }
+}
+
+/// Everything a worker needs to run, pushed by the coordinator after all
+/// registrations arrived (the rank/world assignment of the tentpole).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    /// This worker's rank in `0..world`.
+    pub rank: u32,
+    /// Total number of workers.
+    pub world: u32,
+    /// Shared seed: quadratic centers, topology schedule.
+    pub seed: u64,
+    /// Total gossip rounds (gradient phase + dense cool-down).
+    pub rounds: u64,
+    /// Rounds of the trailing dense cool-down (no gradient, identity
+    /// compression) that flushes error-feedback banks and drives the
+    /// survivors to consensus.
+    pub cooldown: u64,
+    /// Share dimension.
+    pub dim: u32,
+    /// Step size of the local quadratic objective (0 disables the
+    /// gradient entirely — pure push-sum averaging).
+    pub lr: f32,
+    /// Pacing: minimum milliseconds per gossip round.
+    pub round_ms: u32,
+    /// Read patience: milliseconds a worker waits for one round's
+    /// expected in-neighbour messages before moving on.
+    pub round_timeout_ms: u32,
+    /// Gossip compression spec for the gradient phase.
+    pub scheme: Compression,
+    /// Gossip listen addresses of all workers, indexed by rank.
+    pub peers: Vec<String>,
+}
+
+/// Final report a worker sends the coordinator after draining: its
+/// push-sum state plus the mass-conservation ledger counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DoneReport {
+    /// Final push-sum weight (after re-absorbing banks).
+    pub w: f64,
+    /// Total push-sum weight received from peers.
+    pub recv_w: f64,
+    /// Total push-sum weight successfully sent to peers.
+    pub sent_w: f64,
+    /// Weight of failed sends re-absorbed locally (rescue mode).
+    pub rescued_w: f64,
+    /// Number of rescued (failed) sends.
+    pub rescues: u32,
+    /// Number of rounds that timed out waiting for an expected peer.
+    pub timeouts: u32,
+    /// Final numerator vector (biased; the consensus view is `x / w`).
+    pub x: Vec<f32>,
+}
+
+/// One decoded frame body (the `kind`-specific part).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker → coordinator: register; `listen_port` is the worker's
+    /// gossip listener on its source address.
+    Join {
+        /// TCP port the worker's gossip listener is bound to.
+        listen_port: u16,
+    },
+    /// Coordinator → worker: rank/world assignment plus the run config.
+    Assign(Assignment),
+    /// Worker → coordinator: liveness beacon; the envelope round carries
+    /// the worker's current gossip round.
+    Heartbeat,
+    /// Coordinator → workers: membership change broadcast.
+    Membership(WireEvent),
+    /// Worker → worker: one push-sum share. `share` is the bit-packed
+    /// payload of [`encode_share`] under the envelope's scheme.
+    Push {
+        /// Push-sum weight share riding with the numerator (exact, never
+        /// lossily encoded — 8 bytes against the compressed payload).
+        w: f64,
+        /// Encoded numerator share bytes.
+        share: Vec<u8>,
+    },
+    /// Worker → coordinator: final state + ledger.
+    Done(DoneReport),
+    /// Coordinator → worker: run is over, exit cleanly.
+    Shutdown,
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Self::Join { .. } => K_JOIN,
+            Self::Assign(_) => K_ASSIGN,
+            Self::Heartbeat => K_HEARTBEAT,
+            Self::Membership(_) => K_MEMBERSHIP,
+            Self::Push { .. } => K_PUSH,
+            Self::Done(_) => K_DONE,
+            Self::Shutdown => K_SHUTDOWN,
+        }
+    }
+}
+
+/// A frame plus its routing header: who sent it and for which round.
+/// The compression scheme of `Push`/`Assign` frames rides in the header's
+/// scheme fields and surfaces here as [`Envelope::scheme`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    /// Sender rank ([`UNASSIGNED`] before assignment).
+    pub sender: u32,
+    /// Gossip round the frame belongs to (0 where meaningless).
+    pub round: u64,
+    /// Compression scheme of the payload (identity for control frames).
+    pub scheme: Compression,
+    /// The decoded frame body.
+    pub msg: Frame,
+}
+
+impl Envelope {
+    /// A control envelope (identity scheme) from `sender` at `round`.
+    pub fn control(sender: u32, round: u64, msg: Frame) -> Self {
+        Self { sender, round, scheme: Compression::Identity, msg }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Little-endian write helpers.
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    put_u16(out, b.len().min(u16::MAX as usize) as u16);
+    out.extend_from_slice(&b[..b.len().min(u16::MAX as usize)]);
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, off: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or(WireError::BadPayload("payload shorter than a field"))?;
+        let s = &self.b[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| WireError::BadPayload("address is not utf-8"))
+    }
+    fn done(&self) -> Result<(), WireError> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(WireError::BadPayload("payload longer than its frame kind"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame encode / decode.
+
+/// Append the full wire bytes of `env` (length prefix included) to `out`.
+pub fn encode_frame(env: &Envelope, out: &mut Vec<u8>) {
+    let mut payload = Vec::new();
+    match &env.msg {
+        Frame::Join { listen_port } => put_u16(&mut payload, *listen_port),
+        Frame::Assign(a) => {
+            put_u32(&mut payload, a.rank);
+            put_u32(&mut payload, a.world);
+            put_u64(&mut payload, a.seed);
+            put_u64(&mut payload, a.rounds);
+            put_u64(&mut payload, a.cooldown);
+            put_u32(&mut payload, a.dim);
+            put_f32(&mut payload, a.lr);
+            put_u32(&mut payload, a.round_ms);
+            put_u32(&mut payload, a.round_timeout_ms);
+            put_u32(&mut payload, a.peers.len() as u32);
+            for p in &a.peers {
+                put_str(&mut payload, p);
+            }
+        }
+        Frame::Heartbeat | Frame::Shutdown => {}
+        Frame::Membership(ev) => {
+            let (code, rank, at) = match *ev {
+                WireEvent::Leave { rank, at } => (0u8, rank, at),
+                WireEvent::Degraded { rank, at } => (1, rank, at),
+                WireEvent::Recovered { rank, at } => (2, rank, at),
+            };
+            payload.push(code);
+            put_u32(&mut payload, rank);
+            put_u64(&mut payload, at);
+        }
+        Frame::Push { w, share } => {
+            put_f64(&mut payload, *w);
+            payload.extend_from_slice(share);
+        }
+        Frame::Done(d) => {
+            put_f64(&mut payload, d.w);
+            put_f64(&mut payload, d.recv_w);
+            put_f64(&mut payload, d.sent_w);
+            put_f64(&mut payload, d.rescued_w);
+            put_u32(&mut payload, d.rescues);
+            put_u32(&mut payload, d.timeouts);
+            put_u32(&mut payload, d.x.len() as u32);
+            for &v in &d.x {
+                put_f32(&mut payload, v);
+            }
+        }
+    }
+
+    // Assign frames carry the gradient-phase scheme; Push frames carry
+    // the scheme their share bytes were encoded under.
+    let scheme = match &env.msg {
+        Frame::Assign(a) => a.scheme,
+        _ => env.scheme,
+    };
+    let (tag, arg) = scheme.wire_tag();
+
+    let body_len = HEADER_BYTES + payload.len() + 4;
+    put_u32(out, body_len as u32);
+    let body_start = out.len();
+    put_u16(out, MAGIC);
+    out.push(VERSION);
+    out.push(env.msg.kind());
+    put_u32(out, env.sender);
+    put_u64(out, env.round);
+    out.push(tag);
+    put_u32(out, arg);
+    put_u32(out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    let crc = crc32(&out[body_start..]);
+    put_u32(out, crc);
+}
+
+fn decode_body(body: &[u8]) -> Result<Envelope, WireError> {
+    debug_assert!(body.len() >= HEADER_BYTES + 4, "caller checks the length");
+    let crc_off = body.len() - 4;
+    let carried = u32::from_le_bytes(body[crc_off..].try_into().unwrap());
+    let mut c = Cursor::new(&body[..crc_off]);
+    let magic = c.u16()?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let kind = c.u8()?;
+    let sender = c.u32()?;
+    let round = c.u64()?;
+    let tag = c.u8()?;
+    let arg = c.u32()?;
+    let payload_len = c.u32()? as usize;
+    // Validate the CRC before interpreting the payload: a flipped bit in
+    // any header field or the payload must surface as corruption, not as
+    // a semantically different (but well-formed) frame.
+    let computed = crc32(&body[..crc_off]);
+    if computed != carried {
+        return Err(WireError::BadCrc { computed, carried });
+    }
+    if payload_len != crc_off - HEADER_BYTES {
+        return Err(WireError::BadPayload("payload length disagrees with frame length"));
+    }
+    let scheme =
+        Compression::from_wire_tag(tag, arg).ok_or(WireError::BadScheme { tag, arg })?;
+    let mut p = Cursor::new(c.take(payload_len)?);
+
+    let msg = match kind {
+        K_JOIN => Frame::Join { listen_port: p.u16()? },
+        K_ASSIGN => {
+            let rank = p.u32()?;
+            let world = p.u32()?;
+            let seed = p.u64()?;
+            let rounds = p.u64()?;
+            let cooldown = p.u64()?;
+            let dim = p.u32()?;
+            let lr = p.f32()?;
+            let round_ms = p.u32()?;
+            let round_timeout_ms = p.u32()?;
+            let n = p.u32()? as usize;
+            if n > (1 << 20) {
+                return Err(WireError::BadPayload("implausible peer count"));
+            }
+            let mut peers = Vec::with_capacity(n);
+            for _ in 0..n {
+                peers.push(p.str()?);
+            }
+            Frame::Assign(Assignment {
+                rank,
+                world,
+                seed,
+                rounds,
+                cooldown,
+                dim,
+                lr,
+                round_ms,
+                round_timeout_ms,
+                scheme,
+                peers,
+            })
+        }
+        K_HEARTBEAT => Frame::Heartbeat,
+        K_MEMBERSHIP => {
+            let code = p.u8()?;
+            let rank = p.u32()?;
+            let at = p.u64()?;
+            Frame::Membership(match code {
+                0 => WireEvent::Leave { rank, at },
+                1 => WireEvent::Degraded { rank, at },
+                2 => WireEvent::Recovered { rank, at },
+                _ => return Err(WireError::BadPayload("unknown membership event code")),
+            })
+        }
+        K_PUSH => {
+            let w = p.f64()?;
+            let share = p.take(payload_len - 8)?.to_vec();
+            Frame::Push { w, share }
+        }
+        K_DONE => {
+            let w = p.f64()?;
+            let recv_w = p.f64()?;
+            let sent_w = p.f64()?;
+            let rescued_w = p.f64()?;
+            let rescues = p.u32()?;
+            let timeouts = p.u32()?;
+            let n = p.u32()? as usize;
+            if n > MAX_BODY_BYTES / 4 {
+                return Err(WireError::BadPayload("implausible state dimension"));
+            }
+            let mut x = Vec::with_capacity(n);
+            for _ in 0..n {
+                x.push(p.f32()?);
+            }
+            Frame::Done(DoneReport { w, recv_w, sent_w, rescued_w, rescues, timeouts, x })
+        }
+        K_SHUTDOWN => Frame::Shutdown,
+        other => return Err(WireError::BadKind(other)),
+    };
+    p.done()?;
+    Ok(Envelope { sender, round, scheme, msg })
+}
+
+/// Incremental frame parser: feed it bytes in arbitrary chunks (however
+/// the socket delivered them) and pull complete frames out. Framing is a
+/// pure function of the byte stream — any split of the same bytes yields
+/// the same frame sequence (pinned by the round-trip fuzz tests).
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    /// An empty reader.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes from the stream.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Try to parse the next complete frame. `Ok(None)` means "need more
+    /// bytes"; errors are sticky in the sense that the caller should drop
+    /// the connection (resynchronizing a corrupted length-framed stream
+    /// is not attempted).
+    pub fn next_frame(&mut self) -> Result<Option<Envelope>, WireError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let body_len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if body_len < HEADER_BYTES + 4 || body_len > MAX_BODY_BYTES {
+            return Err(WireError::BadLength(body_len));
+        }
+        if self.buf.len() < 4 + body_len {
+            return Ok(None);
+        }
+        let env = decode_body(&self.buf[4..4 + body_len])?;
+        self.buf.drain(..4 + body_len);
+        Ok(Some(env))
+    }
+
+    /// Bytes currently buffered (a partial frame, if non-zero).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Assert the stream ended cleanly: errors with
+    /// [`WireError::TrailingBytes`] if a partial frame is still buffered
+    /// (the truncated-stream case of the fuzz suite).
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.buf.is_empty() {
+            Ok(())
+        } else {
+            Err(WireError::TrailingBytes(self.buf.len()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Share (compressed payload) byte codecs.
+
+/// LSB-first bit-packer: append `vals`, `bits` bits each, to `out`.
+fn pack_bits(out: &mut Vec<u8>, vals: impl Iterator<Item = u32>, bits: u32) {
+    debug_assert!((1..=32).contains(&bits));
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for v in vals {
+        debug_assert!(bits == 32 || v < (1u32 << bits));
+        acc |= (v as u64) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+}
+
+/// Inverse of [`pack_bits`]: read `count` values of `bits` bits each.
+/// `None` if `bytes` is too short.
+fn unpack_bits(bytes: &[u8], bits: u32, count: usize) -> Option<Vec<u32>> {
+    debug_assert!((1..=32).contains(&bits));
+    let need = (count as u64 * bits as u64).div_ceil(8) as usize;
+    if bytes.len() < need {
+        return None;
+    }
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    let mut vals = Vec::with_capacity(count);
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut it = bytes.iter();
+    for _ in 0..count {
+        while nbits < bits {
+            acc |= (*it.next()? as u64) << nbits;
+            nbits += 8;
+        }
+        vals.push((acc & mask) as u32);
+        acc >>= bits;
+        nbits -= bits;
+    }
+    Some(vals)
+}
+
+/// Bits per packed top-k index for a `dim`-coordinate share:
+/// `⌈log2 dim⌉`, min 1 — the same count
+/// [`Compression::encoded_bytes`] charges.
+fn index_bits(dim: usize) -> u32 {
+    let d = dim.max(2) as u64;
+    (u64::BITS - (d - 1).leading_zeros()).max(1)
+}
+
+/// QSGD magnitude levels for a `bits`-bit symbol (sign included) — the
+/// same alphabet as the simulator's quantizer.
+fn qsgd_levels(bits: u8) -> u32 {
+    ((1u32 << bits.saturating_sub(1)) - 1).max(1)
+}
+
+/// Encode one share under `spec` into `out` (cleared first). The input
+/// is expected to be the post-compression payload (what
+/// `Compression::apply` produced): top-k shares are mostly zero, qsgd
+/// shares are already on the quantization grid — for such inputs
+/// [`decode_share`] reproduces the values bit-exactly.
+pub fn encode_share(spec: Compression, x: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    match spec {
+        Compression::Identity => {
+            out.reserve(4 * x.len());
+            for &v in x {
+                put_f32(out, v);
+            }
+        }
+        Compression::TopK { .. } => {
+            // Ship every coordinate with a non-zero bit pattern (so an
+            // explicit -0.0 survives); after top-k selection that is at
+            // most `kept(dim)` entries.
+            let nz: Vec<u32> = (0..x.len() as u32)
+                .filter(|&i| x[i as usize].to_bits() != 0)
+                .collect();
+            put_u32(out, nz.len() as u32);
+            let bits = index_bits(x.len());
+            put_u32(out, bits);
+            pack_bits(out, nz.iter().copied(), bits);
+            for &i in &nz {
+                put_f32(out, x[i as usize]);
+            }
+        }
+        Compression::Qsgd { bits } => {
+            let levels = qsgd_levels(bits);
+            let scale = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let scale = if scale.is_finite() { scale } else { 0.0 };
+            put_f32(out, scale);
+            put_u32(out, x.len() as u32);
+            let lf = levels as f32;
+            let sym = x.iter().map(|&v| {
+                let sign = v.is_sign_negative() as u32;
+                let level = if scale > 0.0 {
+                    ((v.abs() / scale * lf).round() as u32).min(levels)
+                } else {
+                    0
+                };
+                sign | (level << 1)
+            });
+            pack_bits(out, sym, bits as u32);
+        }
+    }
+}
+
+/// Decode one `dim`-coordinate share encoded by [`encode_share`] under
+/// `spec`. Validates every length, bound and ordering; malformed bytes
+/// error, they never panic or read out of bounds.
+pub fn decode_share(
+    spec: Compression,
+    dim: usize,
+    bytes: &[u8],
+) -> Result<Vec<f32>, WireError> {
+    match spec {
+        Compression::Identity => {
+            if bytes.len() != 4 * dim {
+                return Err(WireError::BadPayload("identity share length != 4·dim"));
+            }
+            let mut c = Cursor::new(bytes);
+            (0..dim).map(|_| c.f32()).collect()
+        }
+        Compression::TopK { .. } => {
+            let mut c = Cursor::new(bytes);
+            let count = c.u32()? as usize;
+            let bits = c.u32()?;
+            if count > dim {
+                return Err(WireError::BadPayload("top-k count exceeds dim"));
+            }
+            if bits != index_bits(dim) {
+                return Err(WireError::BadPayload("top-k index width disagrees with dim"));
+            }
+            let packed = (count as u64 * bits as u64).div_ceil(8) as usize;
+            let idx = unpack_bits(c.take(packed)?, bits, count)
+                .ok_or(WireError::BadPayload("top-k index block too short"))?;
+            let mut x = vec![0.0f32; dim];
+            let mut prev: Option<u32> = None;
+            for &i in &idx {
+                if i as usize >= dim {
+                    return Err(WireError::BadPayload("top-k index out of range"));
+                }
+                if prev.is_some_and(|p| p >= i) {
+                    return Err(WireError::BadPayload("top-k indices not ascending"));
+                }
+                prev = Some(i);
+                x[i as usize] = c.f32()?;
+            }
+            c.done()?;
+            Ok(x)
+        }
+        Compression::Qsgd { bits } => {
+            let mut c = Cursor::new(bytes);
+            let scale = c.f32()?;
+            if !scale.is_finite() || scale < 0.0 {
+                return Err(WireError::BadPayload("qsgd scale not finite"));
+            }
+            let count = c.u32()? as usize;
+            if count != dim {
+                return Err(WireError::BadPayload("qsgd count != dim"));
+            }
+            let levels = qsgd_levels(bits);
+            let lf = levels as f32;
+            let sym = unpack_bits(c.take(c.b.len() - c.off)?, bits as u32, dim)
+                .ok_or(WireError::BadPayload("qsgd symbol block too short"))?;
+            let x = sym
+                .iter()
+                .map(|&s| {
+                    let level = s >> 1;
+                    if level > levels {
+                        return Err(WireError::BadPayload("qsgd level out of range"));
+                    }
+                    // Exact mirror of the simulator's dequantization
+                    // arithmetic — decoding an already-quantized share is
+                    // bit-identical.
+                    let q = level as f32 / lf * scale;
+                    Ok(if s & 1 != 0 { -q } else { q })
+                })
+                .collect::<Result<Vec<f32>, WireError>>()?;
+            Ok(x)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_reference_vector() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        let frames = vec![
+            Envelope::control(UNASSIGNED, 0, Frame::Join { listen_port: 40123 }),
+            Envelope::control(0, 7, Frame::Heartbeat),
+            Envelope::control(
+                0,
+                9,
+                Frame::Membership(WireEvent::Leave { rank: 2, at: 9 }),
+            ),
+            Envelope::control(
+                0,
+                9,
+                Frame::Membership(WireEvent::Degraded { rank: 1, at: 4 }),
+            ),
+            Envelope::control(
+                0,
+                10,
+                Frame::Membership(WireEvent::Recovered { rank: 1, at: 10 }),
+            ),
+            Envelope::control(3, 99, Frame::Shutdown),
+            Envelope::control(
+                2,
+                100,
+                Frame::Done(DoneReport {
+                    w: 1.25,
+                    recv_w: 3.5,
+                    sent_w: 3.75,
+                    rescued_w: 0.25,
+                    rescues: 1,
+                    timeouts: 2,
+                    x: vec![1.0, -2.5, 0.0],
+                }),
+            ),
+        ];
+        let mut bytes = Vec::new();
+        for f in &frames {
+            encode_frame(f, &mut bytes);
+        }
+        let mut r = FrameReader::new();
+        r.extend(&bytes);
+        for f in &frames {
+            assert_eq!(r.next_frame().unwrap().as_ref(), Some(f));
+        }
+        assert_eq!(r.next_frame().unwrap(), None);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn assign_roundtrips_with_scheme_in_the_header() {
+        let a = Assignment {
+            rank: 3,
+            world: 4,
+            seed: 42,
+            rounds: 400,
+            cooldown: 100,
+            dim: 32,
+            lr: 0.05,
+            round_ms: 2,
+            round_timeout_ms: 250,
+            scheme: Compression::TopK { den: 4 },
+            peers: vec!["127.0.0.1:5000".into(), "127.0.0.1:5001".into()],
+        };
+        let env = Envelope {
+            sender: UNASSIGNED,
+            round: 0,
+            scheme: a.scheme,
+            msg: Frame::Assign(a.clone()),
+        };
+        let mut bytes = Vec::new();
+        encode_frame(&env, &mut bytes);
+        let mut r = FrameReader::new();
+        r.extend(&bytes);
+        let got = r.next_frame().unwrap().unwrap();
+        assert_eq!(got.scheme, Compression::TopK { den: 4 });
+        assert_eq!(got.msg, Frame::Assign(a));
+    }
+
+    #[test]
+    fn corrupted_bytes_error_and_never_panic() {
+        let env = Envelope {
+            sender: 1,
+            round: 5,
+            scheme: Compression::Qsgd { bits: 4 },
+            msg: Frame::Push { w: 0.5, share: vec![1, 2, 3, 4, 5, 6, 7, 8, 9] },
+        };
+        let mut bytes = Vec::new();
+        encode_frame(&env, &mut bytes);
+        // Flip every single byte position in turn: each variant must
+        // decode to an error or (for length-prefix bytes) a partial
+        // frame — never panic, never mis-decode silently as the original.
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            let mut r = FrameReader::new();
+            r.extend(&bad);
+            match r.next_frame() {
+                Ok(Some(env2)) => assert_ne!(env2, env, "flip at {i} must not be silent"),
+                Ok(None) | Err(_) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_streams_are_incomplete_not_panics() {
+        let env = Envelope::control(0, 1, Frame::Heartbeat);
+        let mut bytes = Vec::new();
+        encode_frame(&env, &mut bytes);
+        for cut in 0..bytes.len() {
+            let mut r = FrameReader::new();
+            r.extend(&bytes[..cut]);
+            assert_eq!(r.next_frame().unwrap(), None, "cut at {cut}");
+            if cut > 0 {
+                assert!(matches!(r.finish(), Err(WireError::TrailingBytes(_))));
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut r = FrameReader::new();
+        r.extend(&(u32::MAX).to_le_bytes());
+        assert!(matches!(r.next_frame(), Err(WireError::BadLength(_))));
+        let mut r = FrameReader::new();
+        r.extend(&3u32.to_le_bytes());
+        assert!(matches!(r.next_frame(), Err(WireError::BadLength(3))));
+    }
+
+    #[test]
+    fn identity_share_roundtrips_exactly() {
+        let x = vec![1.5f32, -2.25, 0.0, -0.0, f32::MIN_POSITIVE];
+        let mut b = Vec::new();
+        encode_share(Compression::Identity, &x, &mut b);
+        assert_eq!(b.len(), 4 * x.len());
+        let y = decode_share(Compression::Identity, x.len(), &b).unwrap();
+        for (a, c) in x.iter().zip(&y) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn topk_share_roundtrips_sparse_vectors_exactly() {
+        let spec = Compression::TopK { den: 4 };
+        let mut x = vec![0.0f32; 37];
+        x[0] = 3.5;
+        x[9] = -1.25;
+        x[36] = -0.0; // negative zero has a non-zero bit pattern: ships.
+        let mut b = Vec::new();
+        encode_share(spec, &x, &mut b);
+        let y = decode_share(spec, x.len(), &b).unwrap();
+        assert_eq!(x.len(), y.len());
+        for (a, c) in x.iter().zip(&y) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn topk_decoder_rejects_bad_indices() {
+        let spec = Compression::TopK { den: 2 };
+        let mut x = vec![0.0f32; 8];
+        x[1] = 1.0;
+        x[5] = 2.0;
+        let mut b = Vec::new();
+        encode_share(spec, &x, &mut b);
+        // Claim a different dim: the index width disagrees.
+        assert!(decode_share(spec, 1024, &b).is_err());
+        // Truncate the value block.
+        assert!(decode_share(spec, 8, &b[..b.len() - 1]).is_err());
+        // Corrupt the count upward.
+        let mut bad = b.clone();
+        bad[0] = 200;
+        assert!(decode_share(spec, 8, &bad).is_err());
+    }
+
+    #[test]
+    fn qsgd_decode_encode_is_idempotent() {
+        use crate::rng::Pcg;
+        let spec = Compression::Qsgd { bits: 4 };
+        let mut rng = Pcg::new(11);
+        for _ in 0..50 {
+            let x = rng.gaussian_vec(33);
+            let mut b1 = Vec::new();
+            encode_share(spec, &x, &mut b1);
+            let d1 = decode_share(spec, x.len(), &b1).unwrap();
+            let mut b2 = Vec::new();
+            encode_share(spec, &d1, &mut b2);
+            let d2 = decode_share(spec, x.len(), &b2).unwrap();
+            for (a, c) in d1.iter().zip(&d2) {
+                assert_eq!(a.to_bits(), c.to_bits(), "grid points must be fixed");
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_share_bytes_match_the_simulator_accounting_scale() {
+        // `bits` bits per coordinate plus the fixed header: the real
+        // byte stream stays within a header's worth of the simulator's
+        // `encoded_bytes` charge (which models an 8-byte header).
+        let dim = 1024usize;
+        let x = vec![0.5f32; dim];
+        for bits in [2u8, 4, 8] {
+            let spec = Compression::Qsgd { bits };
+            let mut b = Vec::new();
+            encode_share(spec, &x, &mut b);
+            let packed = (dim * bits as usize).div_ceil(8);
+            assert_eq!(b.len(), 8 + packed);
+        }
+    }
+
+    #[test]
+    fn qsgd_decoder_rejects_malformed_symbols() {
+        let spec = Compression::Qsgd { bits: 3 };
+        let x = vec![1.0f32, -0.5, 0.25, 0.0];
+        let mut b = Vec::new();
+        encode_share(spec, &x, &mut b);
+        assert!(decode_share(spec, 8, &b).is_err(), "count mismatch");
+        assert!(decode_share(spec, 4, &b[..b.len() - 1]).is_err(), "truncated");
+        let mut bad = b.clone();
+        bad[0..4].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(decode_share(spec, 4, &bad).is_err(), "non-finite scale");
+    }
+
+    #[test]
+    fn negative_zero_survives_qsgd_roundtrip() {
+        let spec = Compression::Qsgd { bits: 4 };
+        let x = vec![-0.0f32, 1.0];
+        let mut b = Vec::new();
+        encode_share(spec, &x, &mut b);
+        let y = decode_share(spec, 2, &b).unwrap();
+        assert!(y[0] == 0.0 && y[0].is_sign_negative(), "sign bit shipped");
+        assert_eq!(y[1], 1.0, "max coordinate is exact");
+    }
+
+    #[test]
+    fn bit_packing_roundtrips_all_widths() {
+        for bits in 1..=32u32 {
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let vals: Vec<u32> =
+                (0..17u32).map(|i| i.wrapping_mul(0x9E37_79B9) & mask).collect();
+            let mut out = Vec::new();
+            pack_bits(&mut out, vals.iter().copied(), bits);
+            assert_eq!(out.len(), (vals.len() as u64 * bits as u64).div_ceil(8) as usize);
+            let back = unpack_bits(&out, bits, vals.len()).unwrap();
+            assert_eq!(back, vals);
+            assert!(unpack_bits(&out[..out.len() - 1], bits, vals.len()).is_none());
+        }
+    }
+}

@@ -1,0 +1,720 @@
+//! The gossip worker process behind `repro worker`: one rank of a real
+//! multi-process push-sum deployment, speaking the framed wire protocol
+//! of [`super::wire`] over loopback/LAN TCP.
+//!
+//! The worker runs the same round protocol as the in-process trainer
+//! ([`crate::coordinator::Trainer`]) and the offline quadratic harness
+//! ([`crate::faults::harness`]) — membership events, a local gradient
+//! step on the de-biased view, one push-sum gossip exchange — except the
+//! "communicate" phase is real sockets instead of [`crate::net::TimingSim`]:
+//!
+//! 1. apply membership events broadcast by the coordinator (Leave ⇒
+//!    drop the rank from the sorted alive set — subsequent schedules are
+//!    re-indexed among survivors via
+//!    [`crate::topology::Schedule::out_peers_among_into`]);
+//! 2. for the gradient phase, take one SGD step on the node-local
+//!    quadratic `f_i(x) = ½‖x − c_i‖²` (centers drawn exactly like the
+//!    offline harness, so a deployed run is comparable to
+//!    `run_quadratic` at the same seed);
+//! 3. compress each outgoing share with the assigned
+//!    [`Compression`] spec (per-edge error-feedback banks, φ-split
+//!    weight — the same `apply` the simulator uses), encode it with
+//!    [`wire::encode_share`] and push it framed to the round's
+//!    out-neighbours;
+//! 4. wait (bounded) for the expected in-neighbour messages and absorb
+//!    every arrived share with round ≤ k.
+//!
+//! **Rescue mode is real**: a failed send (peer crashed, connection
+//! reset) re-absorbs the encoded `(x, w)` share into the sender's own
+//! state instead of losing it, exactly like the simulator's rescue path —
+//! so each worker maintains the mass-conservation ledger
+//! `w_final = 1 + w_received − w_sent` to f64 round-off, kill or no kill.
+//!
+//! The run ends with a dense **cool-down**: the last `cooldown` rounds
+//! skip the gradient and ship identity-coded shares (error-feedback
+//! banks are flushed to their peers at the boundary), which drives the
+//! survivors to consensus — push-sum averaging contracts geometrically
+//! once the gradient forcing stops. After a short linger for stragglers
+//! the worker drains any remaining bank mass into its own state and
+//! reports a [`DoneReport`] to the coordinator.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::gossip::compress::EdgeBank;
+use crate::gossip::Compression;
+use crate::rng::Pcg;
+use crate::topology::{Schedule, TopologyKind};
+
+use super::wire::{
+    self, Assignment, DoneReport, Envelope, Frame, FrameReader, WireEvent, UNASSIGNED,
+};
+
+/// Knobs of one worker process (everything else arrives in the
+/// coordinator's [`Assignment`]).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Coordinator address (`host:port`).
+    pub coord: String,
+    /// Bind address for the gossip listener (`127.0.0.1:0` = any port).
+    pub bind: String,
+    /// Heartbeat period in milliseconds.
+    pub hb_ms: u64,
+    /// Per-connection read/write timeout in milliseconds — every socket
+    /// operation is bounded, so a wedged peer cannot hang the run.
+    pub io_timeout_ms: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            coord: "127.0.0.1:7000".to_string(),
+            bind: "127.0.0.1:0".to_string(),
+            hb_ms: 50,
+            io_timeout_ms: 5000,
+        }
+    }
+}
+
+/// What a finished worker hands back to its caller (the CLI prints it).
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    /// Rank this worker was assigned.
+    pub rank: u32,
+    /// Rounds actually run.
+    pub rounds: u64,
+    /// The final state + ledger also sent to the coordinator.
+    pub done: DoneReport,
+}
+
+/// One received (not yet absorbed) push-sum message.
+struct PushMsg {
+    from: u32,
+    round: u64,
+    scheme: Compression,
+    w: f64,
+    share: Vec<u8>,
+}
+
+/// Shared state the socket reader threads feed and the round loop
+/// consumes, with a condvar for bounded waits.
+#[derive(Default)]
+struct Mailbox {
+    msgs: Vec<PushMsg>,
+    events: Vec<WireEvent>,
+    shutdown: bool,
+    coord_closed: bool,
+}
+
+type Shared = Arc<(Mutex<Mailbox>, Condvar)>;
+
+/// Lazily-connected, timeout-bounded gossip send links to peer workers.
+struct Links {
+    peers: Vec<String>,
+    conns: HashMap<usize, TcpStream>,
+    timeout: Duration,
+}
+
+impl Links {
+    fn new(peers: Vec<String>, timeout: Duration) -> Self {
+        Self { peers, conns: HashMap::new(), timeout }
+    }
+
+    /// Write one frame to `peer`, connecting on first use. Any error
+    /// invalidates the cached connection (the next send re-dials).
+    fn send(&mut self, peer: usize, bytes: &[u8]) -> std::io::Result<()> {
+        if !self.conns.contains_key(&peer) {
+            let addr: SocketAddr = self.peers[peer].parse().map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidInput, "bad peer address")
+            })?;
+            let s = TcpStream::connect_timeout(&addr, self.timeout)?;
+            s.set_nodelay(true)?;
+            s.set_write_timeout(Some(self.timeout))?;
+            self.conns.insert(peer, s);
+        }
+        let res = self.conns.get_mut(&peer).unwrap().write_all(bytes);
+        if res.is_err() {
+            self.conns.remove(&peer);
+        }
+        res
+    }
+}
+
+/// Feed a socket into the shared mailbox until EOF/error. `from_coord`
+/// routes membership/shutdown control frames; gossip connections only
+/// ever contribute `Push` frames.
+fn reader_loop(mut stream: TcpStream, shared: Shared, from_coord: bool) {
+    let mut fr = FrameReader::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                fr.extend(&buf[..n]);
+                loop {
+                    match fr.next_frame() {
+                        Ok(None) => break,
+                        Err(_) => {
+                            // Corrupted stream: drop the connection. The
+                            // sender's ledger treats the write as sent;
+                            // the coordinator's global accounting
+                            // surfaces the loss.
+                            notify(&shared, |mb| {
+                                if from_coord {
+                                    mb.coord_closed = true;
+                                }
+                            });
+                            return;
+                        }
+                        Ok(Some(env)) => match env.msg {
+                            Frame::Push { w, share } => notify(&shared, |mb| {
+                                mb.msgs.push(PushMsg {
+                                    from: env.sender,
+                                    round: env.round,
+                                    scheme: env.scheme,
+                                    w,
+                                    share,
+                                });
+                            }),
+                            Frame::Membership(ev) => {
+                                notify(&shared, |mb| mb.events.push(ev))
+                            }
+                            Frame::Shutdown => notify(&shared, |mb| mb.shutdown = true),
+                            _ => {}
+                        },
+                    }
+                }
+            }
+        }
+    }
+    if from_coord {
+        notify(&shared, |mb| mb.coord_closed = true);
+    }
+}
+
+fn notify(shared: &Shared, f: impl FnOnce(&mut Mailbox)) {
+    let (lock, cv) = &**shared;
+    let mut mb = lock.lock().unwrap();
+    f(&mut mb);
+    cv.notify_all();
+}
+
+/// Connect to the coordinator, retrying for up to `total` (the
+/// coordinator may still be binding when the worker starts).
+fn connect_retry(addr: &str, total: Duration, each: Duration) -> Result<TcpStream> {
+    let sock: SocketAddr =
+        addr.parse().with_context(|| format!("bad coordinator address `{addr}`"))?;
+    let deadline = Instant::now() + total;
+    loop {
+        match TcpStream::connect_timeout(&sock, each) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to coordinator {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Block until the coordinator's `Assign` arrives on `stream` (bounded).
+fn read_assignment(stream: &mut TcpStream, deadline: Instant) -> Result<Assignment> {
+    let mut fr = FrameReader::new();
+    let mut buf = [0u8; 4096];
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    loop {
+        if let Some(env) = fr.next_frame()? {
+            if let Frame::Assign(a) = env.msg {
+                return Ok(a);
+            }
+            continue; // ignore anything else pre-assignment
+        }
+        if Instant::now() >= deadline {
+            bail!("timed out waiting for the coordinator's rank assignment");
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => bail!("coordinator closed the connection before assigning a rank"),
+            Ok(n) => fr.extend(&buf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e).context("reading rank assignment"),
+        }
+    }
+}
+
+/// Sorted-vec removal; no-op if absent.
+fn remove_rank(alive: &mut Vec<usize>, rank: usize) {
+    if let Ok(i) = alive.binary_search(&rank) {
+        alive.remove(i);
+    }
+}
+
+/// The expected in-neighbours of `me` at round `k` under the survivor
+/// schedule: every alive rank whose re-indexed out-peer set contains
+/// `me`.
+fn in_peers(
+    sched: &Schedule,
+    me: usize,
+    k: u64,
+    alive: &[usize],
+    scratch: &mut Vec<usize>,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    for &i in alive {
+        if i == me {
+            continue;
+        }
+        sched.out_peers_among_into(i, k, alive, scratch);
+        if scratch.contains(&me) {
+            out.push(i);
+        }
+    }
+}
+
+/// Run one worker to completion: register, gossip, drain, report. All
+/// socket operations are timeout-bounded, so the call terminates even if
+/// peers or the coordinator die at any point.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
+    let io_timeout = Duration::from_millis(cfg.io_timeout_ms.max(100));
+
+    // Gossip listener first: its port rides in the Join registration.
+    let listener =
+        TcpListener::bind(&cfg.bind).with_context(|| format!("binding {}", cfg.bind))?;
+    let listen_port = listener.local_addr()?.port();
+
+    let mut coord =
+        connect_retry(&cfg.coord, Duration::from_secs(15), Duration::from_millis(500))?;
+    coord.set_nodelay(true)?;
+    coord.set_write_timeout(Some(io_timeout))?;
+
+    let mut out_buf = Vec::new();
+    wire::encode_frame(
+        &Envelope::control(UNASSIGNED, 0, Frame::Join { listen_port }),
+        &mut out_buf,
+    );
+    coord.write_all(&out_buf).context("sending Join")?;
+
+    let a = read_assignment(&mut coord, Instant::now() + Duration::from_secs(120))?;
+    let rank = a.rank as usize;
+    let world = a.world as usize;
+    let dim = a.dim as usize;
+    if rank >= world || a.peers.len() != world || dim == 0 {
+        bail!("malformed assignment: rank {rank}, world {world}, {} peers", a.peers.len());
+    }
+    eprintln!(
+        "[worker {rank}] assigned: world={world} rounds={} cooldown={} dim={dim} \
+         scheme={} peers on {:?}",
+        a.rounds,
+        a.cooldown,
+        a.scheme.label(),
+        a.peers
+    );
+
+    let shared: Shared = Arc::new((Mutex::new(Mailbox::default()), Condvar::new()));
+
+    // Reader threads: gossip acceptor (one reader per inbound peer
+    // connection) and the coordinator control stream.
+    {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { break };
+                let _ = stream.set_nodelay(true);
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || reader_loop(stream, shared, false));
+            }
+        });
+    }
+    {
+        let shared = Arc::clone(&shared);
+        let coord_read = coord.try_clone().context("cloning coordinator stream")?;
+        coord_read.set_read_timeout(None)?;
+        std::thread::spawn(move || reader_loop(coord_read, shared, true));
+    }
+
+    // Heartbeat thread: a liveness beacon every `hb_ms` carrying the
+    // current round (the coordinator's two-threshold monitor feeds on
+    // these; see super::heartbeat).
+    let round_now = Arc::new(AtomicU64::new(0));
+    let coord_w = Arc::new(Mutex::new(coord));
+    {
+        let round_now = Arc::clone(&round_now);
+        let coord_w = Arc::clone(&coord_w);
+        let my_rank = a.rank;
+        let hb_ms = cfg.hb_ms.max(5);
+        std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            loop {
+                std::thread::sleep(Duration::from_millis(hb_ms));
+                let k = round_now.load(Ordering::Relaxed);
+                buf.clear();
+                wire::encode_frame(&Envelope::control(my_rank, k, Frame::Heartbeat), &mut buf);
+                if coord_w.lock().unwrap().write_all(&buf).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+
+    // --- Node state: exactly the offline harness's objective. ---------
+    let mut rng = Pcg::new(a.seed);
+    let centers: Vec<Vec<f32>> = (0..world).map(|_| rng.gaussian_vec(dim)).collect();
+    let center = centers[rank].clone();
+    let mut x = vec![0.0f32; dim];
+    let mut w = 1.0f64;
+
+    let sched = Schedule::with_seed(TopologyKind::OnePeerExp, world, a.seed);
+    let mut alive: Vec<usize> = (0..world).collect();
+    let mut degraded = vec![false; world];
+    let mut banks: HashMap<usize, EdgeBank> = HashMap::new();
+    let mut idx_scratch: Vec<u32> = Vec::new();
+    let mut links = Links::new(a.peers.clone(), io_timeout);
+
+    let mut recv_w = 0.0f64;
+    let mut sent_w = 0.0f64;
+    let mut rescued_w = 0.0f64;
+    let mut rescues = 0u32;
+    let mut timeouts = 0u32;
+
+    let grad_rounds = a.rounds.saturating_sub(a.cooldown);
+    let round_timeout = Duration::from_millis(a.round_timeout_ms.max(1) as u64);
+    let round_pace = Duration::from_millis(a.round_ms as u64);
+
+    let mut outs: Vec<usize> = Vec::new();
+    let mut scratch: Vec<usize> = Vec::new();
+    let mut expected: Vec<usize> = Vec::new();
+    let mut frame_buf: Vec<u8> = Vec::new();
+    let mut share_buf: Vec<u8> = Vec::new();
+    let mut evicted = false;
+    let mut rounds_run = 0u64;
+
+    'rounds: for k in 0..a.rounds {
+        round_now.store(k, Ordering::Relaxed);
+        let round_start = Instant::now();
+
+        // 1. Membership events (and control-plane state) first.
+        {
+            let (lock, _) = &*shared;
+            let mut mb = lock.lock().unwrap();
+            if mb.shutdown {
+                break 'rounds;
+            }
+            if mb.coord_closed {
+                bail!("[worker {rank}] coordinator connection lost at round {k}");
+            }
+            let events = std::mem::take(&mut mb.events);
+            drop(mb);
+            for ev in events {
+                let r = ev.rank() as usize;
+                if r >= world {
+                    continue; // refuse out-of-range ranks outright
+                }
+                match ev {
+                    WireEvent::Leave { .. } => {
+                        if r == rank {
+                            // The coordinator wrote us off (we were too
+                            // slow): stop pushing mass the survivors
+                            // will refuse anyway.
+                            evicted = true;
+                            break 'rounds;
+                        }
+                        remove_rank(&mut alive, r);
+                        eprintln!("[worker {rank}] peer {r} left; {} survivors", alive.len());
+                    }
+                    WireEvent::Degraded { .. } => degraded[r] = true,
+                    WireEvent::Recovered { .. } => degraded[r] = false,
+                }
+            }
+        }
+
+        // 2. Gradient phase: one SGD step (same update as the offline
+        // harness's optimizer, weight decay included) on the de-biased
+        // view z = x / w.
+        if k < grad_rounds && a.lr > 0.0 {
+            let wf32 = w as f32;
+            for (xi, ci) in x.iter_mut().zip(&center) {
+                let z = *xi / wf32;
+                let g = z - ci;
+                *xi -= a.lr * (g + 1e-4 * *xi);
+            }
+        }
+
+        // Cool-down boundary: flush every error-feedback bank to its
+        // edge's peer as a dense push, so the withheld mass mixes
+        // instead of sitting out the consensus tail.
+        let scheme_k =
+            if k < grad_rounds { a.scheme } else { Compression::Identity };
+        if k == grad_rounds && !a.scheme.is_identity() {
+            for (&peer, bank) in banks.iter_mut() {
+                if bank.w == 0.0 && bank.x.iter().all(|v| *v == 0.0) {
+                    continue;
+                }
+                share_buf.clear();
+                wire::encode_share(Compression::Identity, &bank.x, &mut share_buf);
+                frame_buf.clear();
+                wire::encode_frame(
+                    &Envelope {
+                        sender: a.rank,
+                        round: k,
+                        scheme: Compression::Identity,
+                        msg: Frame::Push { w: bank.w, share: share_buf.clone() },
+                    },
+                    &mut frame_buf,
+                );
+                if links.send(peer, &frame_buf).is_ok() {
+                    sent_w += bank.w;
+                } else {
+                    for (xi, bi) in x.iter_mut().zip(&bank.x) {
+                        *xi += bi;
+                    }
+                    w += bank.w;
+                    rescued_w += bank.w;
+                    rescues += 1;
+                }
+                bank.x.fill(0.0);
+                bank.w = 0.0;
+            }
+        }
+
+        // 3. Push: compress, encode, frame, send — failed sends rescue
+        // their mass back into the local state.
+        sched.out_peers_among_into(rank, k, &alive, &mut outs);
+        let wf = 1.0 / (outs.len() as f64 + 1.0);
+        let wf32 = wf as f32;
+        let mut rescued_this_round: Vec<(Vec<f32>, f64)> = Vec::new();
+        for &peer in &outs {
+            let mut payload: Vec<f32> = x.iter().map(|v| v * wf32).collect();
+            let mut msg_w = w * wf;
+            if !scheme_k.is_identity() {
+                let bank =
+                    banks.entry(peer).or_insert_with(|| EdgeBank::new(dim));
+                scheme_k.apply(
+                    &mut payload,
+                    &mut msg_w,
+                    bank,
+                    &mut idx_scratch,
+                    k,
+                    rank,
+                    peer,
+                );
+            }
+            share_buf.clear();
+            wire::encode_share(scheme_k, &payload, &mut share_buf);
+            frame_buf.clear();
+            wire::encode_frame(
+                &Envelope {
+                    sender: a.rank,
+                    round: k,
+                    scheme: scheme_k,
+                    msg: Frame::Push { w: msg_w, share: share_buf.clone() },
+                },
+                &mut frame_buf,
+            );
+            match links.send(peer, &frame_buf) {
+                Ok(()) => sent_w += msg_w,
+                Err(e) => {
+                    eprintln!("[worker {rank}] round {k}: send to {peer} failed ({e}); rescuing");
+                    rescued_this_round.push((payload, msg_w));
+                }
+            }
+        }
+        // Keep the self share, then re-absorb any rescued mass (after
+        // the scale: rescued shares were already cut out of x·wf).
+        for xi in x.iter_mut() {
+            *xi *= wf32;
+        }
+        w *= wf;
+        for (payload, msg_w) in rescued_this_round {
+            for (xi, pi) in x.iter_mut().zip(&payload) {
+                *xi += pi;
+            }
+            w += msg_w;
+            rescued_w += msg_w;
+            rescues += 1;
+        }
+
+        // 4. Receive: bounded wait for this round's expected
+        // in-neighbours, then absorb everything that has arrived for
+        // rounds ≤ k (later frames stay queued for their round).
+        in_peers(&sched, rank, k, &alive, &mut scratch, &mut expected);
+        let patience = if expected.iter().any(|&p| degraded[p]) { 4 } else { 1 };
+        let deadline = Instant::now() + round_timeout * patience;
+        let complete = {
+            let (lock, cv) = &*shared;
+            let mut mb = lock.lock().unwrap();
+            loop {
+                let all = expected.iter().all(|&p| {
+                    mb.msgs.iter().any(|m| m.from as usize == p && m.round == k)
+                });
+                if all || mb.shutdown || mb.coord_closed {
+                    break all;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break false;
+                }
+                let (g, _) = cv.wait_timeout(mb, deadline - now).unwrap();
+                mb = g;
+            }
+        };
+        if !complete && !expected.is_empty() {
+            timeouts += 1;
+        }
+        absorb_up_to(&shared, k, &alive, dim, &mut x, &mut w, &mut recv_w, rank);
+
+        rounds_run = k + 1;
+        let elapsed = round_start.elapsed();
+        if elapsed < round_pace {
+            std::thread::sleep(round_pace - elapsed);
+        }
+    }
+
+    // Linger for stragglers (in-flight last-round shares of slightly
+    // slower peers), then drain outstanding bank mass into the local
+    // state — the deployment mirror of `PushSumEngine::drain`.
+    if !evicted {
+        std::thread::sleep(round_timeout.max(Duration::from_millis(250)) * 2);
+        absorb_up_to(&shared, a.rounds, &alive, dim, &mut x, &mut w, &mut recv_w, rank);
+    }
+    for bank in banks.values_mut() {
+        for (xi, bi) in x.iter_mut().zip(&bank.x) {
+            *xi += bi;
+        }
+        w += bank.w;
+        bank.x.fill(0.0);
+        bank.w = 0.0;
+    }
+
+    let done = DoneReport {
+        w,
+        recv_w,
+        sent_w,
+        rescued_w,
+        rescues,
+        timeouts,
+        x: x.clone(),
+    };
+    let ledger_residual = w - (1.0 + recv_w - sent_w);
+    eprintln!(
+        "[worker {rank}] done after {rounds_run} rounds: w={w:.6} recv_w={recv_w:.6} \
+         sent_w={sent_w:.6} rescued_w={rescued_w:.6} ledger_residual={ledger_residual:.3e}"
+    );
+
+    frame_buf.clear();
+    wire::encode_frame(
+        &Envelope::control(a.rank, rounds_run, Frame::Done(done.clone())),
+        &mut frame_buf,
+    );
+    coord_w
+        .lock()
+        .unwrap()
+        .write_all(&frame_buf)
+        .context("sending Done report")?;
+
+    // Wait (bounded) for the coordinator's Shutdown so late peers can
+    // still reach our listener while the group finishes.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    {
+        let (lock, cv) = &*shared;
+        let mut mb = lock.lock().unwrap();
+        while !mb.shutdown && !mb.coord_closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = cv.wait_timeout(mb, deadline - now).unwrap();
+            mb = g;
+        }
+    }
+
+    Ok(WorkerReport { rank: a.rank, rounds: rounds_run, done })
+}
+
+/// Absorb every queued message with round ≤ `k` from senders still in
+/// the alive set (mass from written-off ranks is refused — their ledger
+/// left the group with them).
+#[allow(clippy::too_many_arguments)] // flat hot-path call, mirrors Compression::apply
+fn absorb_up_to(
+    shared: &Shared,
+    k: u64,
+    alive: &[usize],
+    dim: usize,
+    x: &mut [f32],
+    w: &mut f64,
+    recv_w: &mut f64,
+    rank: usize,
+) {
+    let ready: Vec<PushMsg> = {
+        let (lock, _) = &**shared;
+        let mut mb = lock.lock().unwrap();
+        let msgs = std::mem::take(&mut mb.msgs);
+        let (ready, later): (Vec<_>, Vec<_>) =
+            msgs.into_iter().partition(|m| m.round <= k);
+        mb.msgs = later;
+        ready
+    };
+    for m in ready {
+        if alive.binary_search(&(m.from as usize)).is_err() {
+            continue;
+        }
+        match wire::decode_share(m.scheme, dim, &m.share) {
+            Ok(vals) => {
+                for (xi, vi) in x.iter_mut().zip(&vals) {
+                    *xi += vi;
+                }
+                *w += m.w;
+                *recv_w += m.w;
+            }
+            Err(e) => {
+                eprintln!(
+                    "[worker {rank}] dropping malformed share from {} round {}: {e}",
+                    m.from, m.round
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_peers_matches_the_survivor_schedule() {
+        let sched = Schedule::with_seed(TopologyKind::OnePeerExp, 4, 1);
+        let alive = vec![0usize, 1, 3];
+        let (mut scratch, mut out) = (Vec::new(), Vec::new());
+        for k in 0..16u64 {
+            // The 1-peer exponential schedule is a permutation among the
+            // survivors: everyone alive has exactly one in-peer.
+            for &me in &alive {
+                in_peers(&sched, me, k, &alive, &mut scratch, &mut out);
+                assert_eq!(out.len(), 1, "round {k} rank {me}: {out:?}");
+                assert!(alive.contains(&out[0]));
+                assert_ne!(out[0], me);
+            }
+        }
+    }
+
+    #[test]
+    fn remove_rank_keeps_the_vec_sorted() {
+        let mut alive = vec![0usize, 1, 2, 3];
+        remove_rank(&mut alive, 2);
+        assert_eq!(alive, vec![0, 1, 3]);
+        remove_rank(&mut alive, 2);
+        assert_eq!(alive, vec![0, 1, 3], "double-leave is a no-op");
+        remove_rank(&mut alive, 0);
+        remove_rank(&mut alive, 3);
+        remove_rank(&mut alive, 1);
+        assert!(alive.is_empty());
+    }
+}

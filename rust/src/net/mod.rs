@@ -19,6 +19,13 @@
 //! [`TimingSim`] implements these recursions incrementally so the trainer
 //! can attach simulated wall-clock to a real training run, and timing-only
 //! sweeps (Fig. 1c/d, Fig. D.4) can run them standalone.
+//!
+//! The [`cluster`] submodule is the exception to "simulated": it deploys
+//! the same push-sum gossip over real TCP sockets (`repro coord` /
+//! `repro worker`), reusing the compressed share encodings as the literal
+//! on-the-wire format.
+
+pub mod cluster;
 
 use std::collections::VecDeque;
 

@@ -1,0 +1,314 @@
+//! End-to-end loopback deployment tests: spawn a real `repro coord`
+//! process plus `repro worker` processes on 127.0.0.1, exchange
+//! compressed push-sum shares over actual TCP sockets, and audit the
+//! coordinator's summary:
+//!
+//! * survivors reach consensus (relative spread ≤ 1e-3, driven by the
+//!   dense cool-down tail),
+//! * the push-sum mass ledger balances per worker (`w = 1 + recv − sent`
+//!   to f64 round-off) and globally (missing mass ≈ 0, or ≈ the killed
+//!   worker's held mass),
+//! * killing a worker mid-run produces the coordinator's `leave`
+//!   membership event, survivor schedule re-indexing, and a final error
+//!   that agrees with the in-process simulator at the same seed.
+//!
+//! The two-worker test is the CI `deploy-smoke` target (filtered by the
+//! string `two_workers`). Both tests are bounded: every socket operation
+//! in the binaries carries a timeout and the coordinator enforces an
+//! overall deadline, so a regression fails loudly instead of hanging.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use sgp::faults::harness::{run_quadratic, FaultRunConfig};
+use sgp::faults::FaultPlan;
+use sgp::model::json::Json;
+use sgp::rng::Pcg;
+
+const BIN: &str = env!("CARGO_BIN_EXE_repro");
+
+/// Kill the child on drop so a failed assertion cannot leak processes.
+struct Reaper(Child);
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sgp_deploy_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn wait_for<F: FnMut() -> bool>(what: &str, timeout: Duration, mut ready: F) {
+    let deadline = Instant::now() + timeout;
+    while !ready() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn read_port(dir: &Path) -> u16 {
+    let path = dir.join("port");
+    wait_for("coordinator port file", Duration::from_secs(30), || path.exists());
+    std::fs::read_to_string(&path).unwrap().trim().parse().unwrap()
+}
+
+fn spawn_coord(dir: &Path, world: usize, rounds: u64, cooldown: u64, seed: u64) -> Reaper {
+    let child = Command::new(BIN)
+        .args([
+            "coord",
+            "--world",
+            &world.to_string(),
+            "--rounds",
+            &rounds.to_string(),
+            "--cooldown",
+            &cooldown.to_string(),
+            "--dim",
+            "32",
+            "--seed",
+            &seed.to_string(),
+            "--lr",
+            "0.05",
+            "--compress",
+            "topk:4",
+            "--round-ms",
+            "1",
+            "--round-timeout-ms",
+            "1000",
+            "--slow-ms",
+            "2000",
+            "--dead-ms",
+            "10000",
+            "--deadline-s",
+            "90",
+        ])
+        .arg("--port-file")
+        .arg(dir.join("port"))
+        .arg("--log")
+        .arg(dir.join("membership.jsonl"))
+        .arg("--summary")
+        .arg(dir.join("summary.json"))
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawning coordinator");
+    Reaper(child)
+}
+
+/// Count `join` records in the coordinator's membership log.
+fn joins_logged(dir: &Path) -> usize {
+    log_events(dir).iter().filter(|(kind, _)| kind == "join").count()
+}
+
+/// Spawn one worker and wait until the coordinator has logged its join —
+/// ranks are assigned in join order, so serializing the joins pins the
+/// spawn-index ↔ rank correspondence the kill test relies on.
+fn spawn_worker_ranked(dir: &Path, port: u16, rank: usize) -> Reaper {
+    let w = spawn_worker(port);
+    wait_for("worker join", Duration::from_secs(30), || joins_logged(dir) > rank);
+    w
+}
+
+fn spawn_worker(port: u16) -> Reaper {
+    let child = Command::new(BIN)
+        .args(["worker", "--coord", &format!("127.0.0.1:{port}"), "--hb-ms", "50"])
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawning worker");
+    Reaper(child)
+}
+
+/// Wait (bounded) for the coordinator to exit successfully, then parse
+/// its summary JSON.
+fn finish(mut coord: Reaper, dir: &Path) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(100);
+    let status = loop {
+        if let Some(s) = coord.0.try_wait().unwrap() {
+            break s;
+        }
+        assert!(Instant::now() < deadline, "coordinator did not exit in time");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "coordinator exited with {status}");
+    let text = std::fs::read_to_string(dir.join("summary.json")).expect("summary written");
+    Json::parse(&text).expect("summary parses")
+}
+
+fn log_events(dir: &Path) -> Vec<(String, u64)> {
+    std::fs::read_to_string(dir.join("membership.jsonl"))
+        .unwrap_or_default()
+        .lines()
+        .filter_map(|l| Json::parse(l).ok())
+        .map(|j| {
+            (
+                j.get("kind").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                j.get("rank").and_then(|v| v.as_f64()).unwrap_or(-1.0) as u64,
+            )
+        })
+        .collect()
+}
+
+fn f64_field(j: &Json, name: &str) -> f64 {
+    j.get(name)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("summary field `{name}` missing"))
+}
+
+fn f64_vec(j: &Json, name: &str) -> Vec<f64> {
+    j.get(name)
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("summary array `{name}` missing"))
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect()
+}
+
+/// Quadratic centers exactly as both the workers and the fault harness
+/// draw them (`Pcg::new(seed)`, one `gaussian_vec(dim)` per rank).
+fn centers(seed: u64, world: usize, dim: usize) -> Vec<Vec<f32>> {
+    let mut rng = Pcg::new(seed);
+    (0..world).map(|_| rng.gaussian_vec(dim)).collect()
+}
+
+fn mean_of(centers: &[Vec<f32>], ranks: &[usize]) -> Vec<f64> {
+    let dim = centers[0].len();
+    let mut m = vec![0.0f64; dim];
+    for &r in ranks {
+        for (mi, v) in m.iter_mut().zip(&centers[r]) {
+            *mi += *v as f64 / ranks.len() as f64;
+        }
+    }
+    m
+}
+
+fn dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+#[test]
+fn loopback_two_workers_reach_consensus_with_balanced_ledger() {
+    let dir = tmp_dir("two");
+    let seed = 11;
+    let coord = spawn_coord(&dir, 2, 240, 80, seed);
+    let port = read_port(&dir);
+    let _w0 = spawn_worker(port);
+    let _w1 = spawn_worker(port);
+    let summary = finish(coord, &dir);
+
+    let survivors = summary.get("survivors").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(survivors.len(), 2, "both workers must finish");
+    assert!(
+        f64_field(&summary, "spread") <= 1e-3,
+        "consensus spread {} > 1e-3",
+        f64_field(&summary, "spread")
+    );
+    assert!(
+        f64_field(&summary, "missing_w").abs() < 1e-6,
+        "no-fault run must conserve all push-sum mass (missing {})",
+        f64_field(&summary, "missing_w")
+    );
+    assert!(
+        f64_field(&summary, "max_ledger_residual") < 1e-6,
+        "per-worker ledger must balance"
+    );
+
+    // The deployed consensus sits at the optimum of the joint quadratic
+    // (the mean of both centers), up to the O(lr) + weight-decay floor.
+    let cs = centers(seed, 2, 32);
+    let opt = mean_of(&cs, &[0, 1]);
+    let mean = f64_vec(&summary, "mean");
+    assert!(
+        dist(&mean, &opt) < 0.05,
+        "deployed consensus is {} away from the quadratic optimum",
+        dist(&mean, &opt)
+    );
+}
+
+#[test]
+fn loopback_kill_one_of_four_workers_matches_the_simulator() {
+    let dir = tmp_dir("kill");
+    let seed = 7;
+    let world = 4;
+    let rounds = 500;
+    let cooldown = 150;
+    let coord = spawn_coord(&dir, world, rounds, cooldown, seed);
+    let port = read_port(&dir);
+    let mut workers: Vec<Reaper> =
+        (0..world).map(|r| spawn_worker_ranked(&dir, port, r)).collect();
+
+    // Kill rank 2 shortly after the run starts.
+    let log = dir.join("membership.jsonl");
+    wait_for("assignment broadcast", Duration::from_secs(60), || {
+        std::fs::read_to_string(&log).unwrap_or_default().contains("assign")
+    });
+    std::thread::sleep(Duration::from_millis(250));
+    workers[2].0.kill().expect("killing worker 2");
+
+    let summary = finish(coord, &dir);
+    drop(workers);
+
+    let survivors: Vec<u64> = summary
+        .get("survivors")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u64)
+        .collect();
+    assert_eq!(survivors, vec![0, 1, 3], "rank 2 was killed; the rest must finish");
+    assert!(
+        log_events(&dir).iter().any(|(kind, rank)| kind == "leave" && *rank == 2),
+        "the kill must surface as a `leave` membership event"
+    );
+
+    let spread = f64_field(&summary, "spread");
+    assert!(spread <= 1e-3, "survivor consensus spread {spread} > 1e-3");
+    let missing = f64_field(&summary, "missing_w");
+    assert!(
+        (0.05..3.5).contains(&missing),
+        "missing mass {missing} should be the killed worker's held share"
+    );
+    assert!(
+        f64_field(&summary, "max_ledger_residual") < 1e-6,
+        "survivor ledgers must balance"
+    );
+
+    // Survivors must settle at the surviving centers' mean (push-sum
+    // renormalizes after the write-off) ...
+    let cs = centers(seed, world, 32);
+    let mean = f64_vec(&summary, "mean");
+    let surv_opt = mean_of(&cs, &[0, 1, 3]);
+    assert!(
+        dist(&mean, &surv_opt) < 0.1,
+        "deployed consensus is {} away from the survivors' optimum",
+        dist(&mean, &surv_opt)
+    );
+
+    // ... which must agree with the in-process simulator under the same
+    // seed and an equivalent permanent-leave fault plan. `final_err`
+    // measures distance from the *full* 4-center optimum in both cases,
+    // and is dominated by the same survivor-vs-full offset.
+    let sim = run_quadratic(
+        "sgp",
+        &FaultRunConfig {
+            n: world,
+            iters: rounds - cooldown,
+            dim: 32,
+            lr: 0.05,
+            seed,
+            ..Default::default()
+        },
+        &FaultPlan::lossless().with_crash(2, (rounds - cooldown) / 3, None),
+    )
+    .expect("simulator run");
+    let full_opt = mean_of(&cs, &[0, 1, 2, 3]);
+    let deployed_err = dist(&mean, &full_opt);
+    assert!(
+        (deployed_err - sim.final_err).abs() <= 0.15 * sim.final_err.max(1.0),
+        "deployed final error {deployed_err} disagrees with the simulator's {}",
+        sim.final_err
+    );
+}

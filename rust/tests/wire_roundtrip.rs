@@ -1,0 +1,284 @@
+//! Property-style fuzzing of the deployment wire protocol (the
+//! proptest idiom, hand-rolled on the repo's seeded `Pcg` since the
+//! offline build vendors no fuzzing crate):
+//!
+//! * arbitrary frame sequences encode → split across arbitrary
+//!   read-chunk boundaries → decode to the identical sequence;
+//! * arbitrary single-bit corruption is *detected* (decode errors, never
+//!   panics, never silently yields the original sequence);
+//! * truncated streams decode a prefix and report the partial tail;
+//! * the share codecs are exact on post-compression payloads
+//!   (identity/top-k) and idempotent on arbitrary floats (qsgd).
+
+use sgp::gossip::Compression;
+use sgp::net::cluster::wire::{
+    decode_share, encode_frame, encode_share, Assignment, DoneReport, Envelope, Frame,
+    FrameReader, WireError, WireEvent,
+};
+use sgp::rng::Pcg;
+
+fn random_scheme(rng: &mut Pcg) -> Compression {
+    match rng.below(4) {
+        0 => Compression::Identity,
+        1 => Compression::TopK { den: 1 + rng.below(64) as u32 },
+        2 => Compression::Qsgd { bits: 2 + rng.below(15) as u8 },
+        _ => Compression::Identity,
+    }
+}
+
+fn random_f32_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| match rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE,
+            _ => (rng.f32() - 0.5) * 2e3,
+        })
+        .collect()
+}
+
+fn random_frame(rng: &mut Pcg) -> Envelope {
+    let sender = rng.next_u32();
+    let round = rng.next_u64() >> 16;
+    match rng.below(7) {
+        0 => Envelope::control(sender, round, Frame::Join {
+            listen_port: rng.next_u32() as u16,
+        }),
+        1 => {
+            let scheme = random_scheme(rng);
+            let peers = (0..rng.below(6))
+                .map(|i| format!("10.0.0.{i}:{}", 4000 + rng.below(1000)))
+                .collect();
+            Envelope {
+                sender,
+                round,
+                scheme,
+                msg: Frame::Assign(Assignment {
+                    rank: rng.next_u32() % 64,
+                    world: 1 + rng.next_u32() % 64,
+                    seed: rng.next_u64(),
+                    rounds: rng.next_u64() >> 32,
+                    cooldown: rng.next_u64() >> 40,
+                    dim: rng.next_u32() % 4096,
+                    lr: rng.f32(),
+                    round_ms: rng.next_u32() % 1000,
+                    round_timeout_ms: rng.next_u32() % 10_000,
+                    scheme,
+                    peers,
+                }),
+            }
+        }
+        2 => Envelope::control(sender, round, Frame::Heartbeat),
+        3 => {
+            let rank = rng.next_u32() % 64;
+            let at = rng.next_u64() >> 32;
+            let ev = match rng.below(3) {
+                0 => WireEvent::Leave { rank, at },
+                1 => WireEvent::Degraded { rank, at },
+                _ => WireEvent::Recovered { rank, at },
+            };
+            Envelope::control(sender, round, Frame::Membership(ev))
+        }
+        4 => {
+            let scheme = random_scheme(rng);
+            let share = (0..rng.below(256)).map(|_| rng.next_u32() as u8).collect();
+            Envelope {
+                sender,
+                round,
+                scheme,
+                msg: Frame::Push { w: rng.f64(), share },
+            }
+        }
+        5 => Envelope::control(
+            sender,
+            round,
+            Frame::Done(DoneReport {
+                w: rng.f64() * 4.0,
+                recv_w: rng.f64() * 8.0,
+                sent_w: rng.f64() * 8.0,
+                rescued_w: rng.f64(),
+                rescues: rng.next_u32() % 100,
+                timeouts: rng.next_u32() % 100,
+                x: random_f32_vec(rng, rng.below(64)),
+            }),
+        ),
+        _ => Envelope::control(sender, round, Frame::Shutdown),
+    }
+}
+
+fn encode_stream(frames: &[Envelope]) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    for f in frames {
+        encode_frame(f, &mut bytes);
+    }
+    bytes
+}
+
+/// Feed `bytes` to a FrameReader in random chunks, draining frames as
+/// they complete. Returns the decoded frames and the first error, if any.
+fn decode_chunked(
+    rng: &mut Pcg,
+    bytes: &[u8],
+) -> (Vec<Envelope>, Option<WireError>, FrameReader) {
+    let mut fr = FrameReader::new();
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < bytes.len() {
+        let chunk = 1 + rng.below(97).min(bytes.len() - off - 1);
+        fr.extend(&bytes[off..off + chunk]);
+        off += chunk;
+        loop {
+            match fr.next_frame() {
+                Ok(Some(env)) => out.push(env),
+                Ok(None) => break,
+                Err(e) => return (out, Some(e), fr),
+            }
+        }
+    }
+    (out, None, fr)
+}
+
+#[test]
+fn arbitrary_frames_survive_arbitrary_chunk_boundaries() {
+    for case in 0..30u64 {
+        let mut rng = Pcg::with_stream(0xf7a3_0001, case);
+        let frames: Vec<Envelope> = (0..1 + rng.below(40)).map(|_| random_frame(&mut rng)).collect();
+        let bytes = encode_stream(&frames);
+        let (decoded, err, fr) = decode_chunked(&mut rng, &bytes);
+        assert!(err.is_none(), "case {case}: unexpected error {err:?}");
+        assert_eq!(decoded, frames, "case {case}");
+        fr.finish().expect("no partial frame at clean end of stream");
+    }
+}
+
+#[test]
+fn single_bit_corruption_is_always_detected_and_never_panics() {
+    let mut rng = Pcg::with_stream(0xf7a3_0002, 0);
+    let frames: Vec<Envelope> = (0..6).map(|_| random_frame(&mut rng)).collect();
+    let bytes = encode_stream(&frames);
+    // Every byte, one flipped bit (rotating through bit positions).
+    for (i, _) in bytes.iter().enumerate() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 1 << (i % 8);
+        let (decoded, err, fr) = decode_chunked(&mut rng, &bad);
+        let clean = err.is_none() && fr.finish().is_ok() && decoded == frames;
+        assert!(
+            !clean,
+            "flipping bit {} of byte {i} went completely undetected",
+            i % 8
+        );
+    }
+}
+
+#[test]
+fn truncated_streams_decode_a_prefix_and_flag_the_partial_tail() {
+    let mut rng = Pcg::with_stream(0xf7a3_0003, 0);
+    let frames: Vec<Envelope> = (0..5).map(|_| random_frame(&mut rng)).collect();
+    let bytes = encode_stream(&frames);
+    for cut in 0..bytes.len() {
+        let mut fr = FrameReader::new();
+        fr.extend(&bytes[..cut]);
+        let mut decoded = Vec::new();
+        loop {
+            match fr.next_frame() {
+                Ok(Some(env)) => decoded.push(env),
+                Ok(None) => break,
+                Err(e) => panic!("cut {cut}: truncation must starve, not error ({e})"),
+            }
+        }
+        assert!(decoded.len() <= frames.len());
+        assert_eq!(&frames[..decoded.len()], &decoded[..], "cut {cut}: prefix mismatch");
+        if fr.buffered() > 0 {
+            assert!(
+                matches!(fr.finish(), Err(WireError::TrailingBytes(_))),
+                "cut {cut}: partial tail not flagged"
+            );
+        }
+    }
+}
+
+#[test]
+fn identity_and_topk_share_codecs_are_bit_exact() {
+    for case in 0..40u64 {
+        let mut rng = Pcg::with_stream(0xf7a3_0004, case);
+        let dim = 1 + rng.below(300);
+
+        let dense = random_f32_vec(&mut rng, dim);
+        let mut buf = Vec::new();
+        encode_share(Compression::Identity, &dense, &mut buf);
+        let back = decode_share(Compression::Identity, dim, &buf).unwrap();
+        assert!(dense.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        // Top-k payloads are mostly-zero vectors (what `apply` emits).
+        let spec = Compression::TopK { den: 1 + rng.below(16) as u32 };
+        let mut sparse = vec![0.0f32; dim];
+        for _ in 0..rng.below(dim + 1) {
+            let i = rng.below(dim);
+            sparse[i] = (rng.f32() - 0.5) * 100.0;
+        }
+        if dim > 1 {
+            sparse[rng.below(dim)] = -0.0; // explicit negative zero must survive
+        }
+        encode_share(spec, &sparse, &mut buf);
+        let back = decode_share(spec, dim, &buf).unwrap();
+        assert!(
+            sparse.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "case {case}: top-k share not bit-exact"
+        );
+    }
+}
+
+#[test]
+fn qsgd_share_codec_is_idempotent_on_arbitrary_floats() {
+    // QSGD is lossy on arbitrary input, but decode∘encode must be a
+    // projection: once a vector is on the quantization grid, another
+    // trip through the codec is the identity.
+    for case in 0..40u64 {
+        let mut rng = Pcg::with_stream(0xf7a3_0005, case);
+        let dim = 1 + rng.below(200);
+        let bits = 2 + rng.below(15) as u8;
+        let spec = Compression::Qsgd { bits };
+        let x = random_f32_vec(&mut rng, dim);
+
+        let mut b1 = Vec::new();
+        encode_share(spec, &x, &mut b1);
+        let y = decode_share(spec, dim, &b1).unwrap();
+        let mut b2 = Vec::new();
+        encode_share(spec, &y, &mut b2);
+        let z = decode_share(spec, dim, &b2).unwrap();
+        assert!(
+            y.iter().zip(&z).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "case {case}: qsgd decode∘encode is not idempotent"
+        );
+        assert_eq!(b1.len(), b2.len(), "case {case}: byte footprint changed");
+    }
+}
+
+#[test]
+fn corrupted_share_payloads_error_out_cleanly() {
+    let mut rng = Pcg::with_stream(0xf7a3_0006, 0);
+    let dim = 64;
+    for spec in [
+        Compression::Identity,
+        Compression::TopK { den: 4 },
+        Compression::Qsgd { bits: 6 },
+    ] {
+        let x = random_f32_vec(&mut rng, dim);
+        let mut buf = Vec::new();
+        encode_share(spec, &x, &mut buf);
+        // Truncations: must error (or, if still decodable, stay in-bounds).
+        for cut in 0..buf.len() {
+            let _ = decode_share(spec, dim, &buf[..cut]); // must not panic
+        }
+        // Random byte corruption: must not panic; result is either an
+        // error or a dim-length vector (bounds always hold).
+        for _ in 0..200 {
+            let mut bad = buf.clone();
+            let i = rng.below(bad.len());
+            bad[i] ^= 1 << rng.below(8);
+            if let Ok(v) = decode_share(spec, dim, &bad) {
+                assert_eq!(v.len(), dim);
+            }
+        }
+    }
+}
