@@ -1136,7 +1136,10 @@ fn push_report_row(
 
 /// Sanity check for Theorems 1–2 trends: SGP on a synthetic least-squares
 /// objective — mean gradient norm decays and consensus error vanishes.
-pub fn convergence_demo(n: usize, iters: u64) -> Result<()> {
+/// With `trace` set, an [`crate::obs::EngineObs`] recorder rides along
+/// and an `"engine"` JSONL trace (per-round counters, phase timers,
+/// bytes-per-edge) is written there for `repro trace`.
+pub fn convergence_demo(n: usize, iters: u64, trace: Option<&std::path::Path>) -> Result<()> {
     use crate::gossip::PushSumEngine;
     use crate::rng::Pcg;
     let d = 32;
@@ -1151,6 +1154,10 @@ pub fn convergence_demo(n: usize, iters: u64) -> Result<()> {
     }
     let mut engine =
         PushSumEngine::new(vec![rng.gaussian_vec(d); n].to_vec(), 0, false);
+    if trace.is_some() {
+        let cap = iters.min(4096) as usize;
+        engine.set_obs(Some(Box::new(crate::obs::EngineObs::new(n, cap))));
+    }
     let sched = Schedule::new(TopologyKind::OnePeerExp, n);
     let gamma = (n as f64 / iters as f64).sqrt().min(0.5) as f32;
     let mut rows = Vec::new();
@@ -1183,6 +1190,10 @@ pub fn convergence_demo(n: usize, iters: u64) -> Result<()> {
         &["iter", "‖∇f(x̄)‖ (≈‖x̄−x*‖)", "consensus dist"],
         &rows,
     );
+    if let (Some(path), Some(obs)) = (trace, engine.take_obs()) {
+        crate::obs::trace::write_engine_trace(path, &obs, iters)?;
+        println!("engine trace written to {}", path.display());
+    }
     Ok(())
 }
 

@@ -53,6 +53,12 @@ pub struct FaultRunConfig {
     /// are used untouched), so existing sweeps and their regression
     /// baselines are unchanged.
     pub heterogeneity: f64,
+    /// When set, attach a [`crate::obs::TimingObs`] recorder to the
+    /// timing simulator and write a `"sim"` JSONL trace here after the
+    /// run (per-iteration makespans, straggler counts) for `repro
+    /// trace`. `None` (the default) records nothing — the numbers above
+    /// are unaffected either way.
+    pub trace: Option<std::path::PathBuf>,
 }
 
 impl Default for FaultRunConfig {
@@ -69,6 +75,7 @@ impl Default for FaultRunConfig {
             exec: ExecPolicy::Sequential,
             compress: Compression::Identity,
             heterogeneity: 1.0,
+            trace: None,
         }
     }
 }
@@ -143,6 +150,10 @@ pub fn run_quadratic(
     let clock = FaultClock::new(plan.clone());
     let mut timing = TimingSim::new(cfg.n, cfg.link.clone());
     timing.set_shards(cfg.exec.shards_for(cfg.n));
+    if cfg.trace.is_some() {
+        let cap = cfg.iters.min(4096) as usize;
+        timing.set_obs(Some(Box::new(crate::obs::TimingObs::new(cfg.n, cap))));
+    }
     let mut comp_rng = Pcg::new(cfg.seed ^ 0xfa17);
     let mut view = vec![0.0f32; cfg.dim];
 
@@ -214,6 +225,10 @@ pub fn run_quadratic(
         })
         .sum::<f64>()
         / m;
+    if let (Some(path), Some(obs)) = (cfg.trace.as_deref(), timing.take_obs()) {
+        crate::obs::trace::write_sim_trace(path, &obs, cfg.iters)?;
+    }
+
     Ok(FaultRunStats {
         algo: algo.name(),
         final_err,

@@ -76,10 +76,12 @@ pub use exec::ExecPolicy;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use compress::EdgeBank;
 
 use crate::faults::FaultClock;
+use crate::obs::{EngineObs, ObsSink, RoundRecord};
 use crate::runtime::pool::{self, Pool};
 use crate::topology::Schedule;
 
@@ -499,6 +501,20 @@ impl ShardTable {
     }
 }
 
+/// Elapsed nanoseconds since `mark`, resetting it for the next span
+/// (0 and a no-op when observability is off — `mark` is `None`).
+/// `Instant` reads are vDSO `clock_gettime` calls: no allocation.
+fn lap_ns(mark: &mut Option<Instant>) -> u64 {
+    match mark {
+        Some(t) => {
+            let ns = t.elapsed().as_nanos() as u64;
+            *t = Instant::now();
+            ns
+        }
+        None => 0,
+    }
+}
+
 /// The synchronous multi-node PushSum engine.
 ///
 /// ```
@@ -557,6 +573,12 @@ pub struct PushSumEngine {
     /// sends never transmit). Multiply by
     /// [`Compression::encoded_bytes`] for total wire traffic.
     pub sent_count: u64,
+    /// Optional observability recorder ([`Self::set_obs`]): per-round
+    /// counters, per-edge traffic, and phase span timers. Boxed so an
+    /// un-instrumented engine pays one pointer; all recorder storage is
+    /// pre-allocated, so the instrumented hot path stays allocation-free
+    /// (`rust/tests/alloc_regression.rs` runs with it attached).
+    obs: Option<Box<EngineObs>>,
 }
 
 impl PushSumEngine {
@@ -583,6 +605,7 @@ impl PushSumEngine {
             drop_count: 0,
             rescue_count: 0,
             sent_count: 0,
+            obs: None,
         }
     }
 
@@ -609,6 +632,26 @@ impl PushSumEngine {
     pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {
         self.pool = Some(pool);
         self
+    }
+
+    /// Attach (or detach, with `None`) an observability recorder. Size it
+    /// with [`EngineObs::new`] for this engine's node count; while
+    /// attached, every round records counters, per-edge traffic, and
+    /// phase timers into it. Purely observational: attaching a recorder
+    /// never changes engine results.
+    pub fn set_obs(&mut self, obs: Option<Box<EngineObs>>) {
+        self.obs = obs;
+    }
+
+    /// Detach and return the recorder (e.g. to write a trace with
+    /// [`crate::obs::trace::write_engine_trace`]).
+    pub fn take_obs(&mut self) -> Option<Box<EngineObs>> {
+        self.obs.take()
+    }
+
+    /// Borrow the attached recorder, if any.
+    pub fn obs(&self) -> Option<&EngineObs> {
+        self.obs.as_deref()
     }
 
     /// One full gossip step at iteration `k` for all nodes (Alg. 1 l. 5–7 /
@@ -706,6 +749,22 @@ impl PushSumEngine {
             compress,
         };
 
+        // Observability preamble (one branch when disabled). The recorder
+        // is moved out of the engine so the merge loop can feed it while
+        // other fields are borrowed; everything recorded below is
+        // pre-allocated scalar work — the hot path stays allocation-free.
+        let mut obs = self.obs.take();
+        let obs_on = obs.is_some();
+        let per_msg_bytes =
+            if obs_on { compress.encoded_bytes(dim, dim * 4) as u64 } else { 0 };
+        let (sent0, drop0, resc0) = (self.sent_count, self.drop_count, self.rescue_count);
+        let pool_wait0 = if obs_on && used > 1 {
+            Some(self.pool.as_deref().unwrap_or_else(pool::global).dispatch_stats().1)
+        } else {
+            None
+        };
+        let mut mark = if obs_on { Some(Instant::now()) } else { None };
+
         // Phase 1 — per-shard local compute + send into the persistent
         // shard outboxes (drained empty by the previous merge, capacity
         // retained). Multi-shard rounds dispatch to the persistent worker
@@ -735,6 +794,7 @@ impl PushSumEngine {
             // the pool runs each exactly once (ShardTable's contract).
             pool.run(used, &|s| unsafe { table.compute(s, ctx) });
         }
+        let compute_ns = lap_ns(&mut mark);
 
         // Phase 2 — deterministic ordered merge on the coordinating
         // thread: shards hold contiguous ascending node ranges, so
@@ -749,9 +809,15 @@ impl PushSumEngine {
             self.rescue_count += self.outs[idx].rescue_count;
             self.outs[idx].rescue_count = 0;
             for msg in self.outs[idx].sent.drain(..) {
+                if let Some(o) = obs.as_deref_mut() {
+                    o.on_send(msg.from, msg.to, per_msg_bytes);
+                }
                 self.inboxes[msg.to].push(msg);
             }
             for msg in self.outs[idx].dropped.drain(..) {
+                if let Some(o) = obs.as_deref_mut() {
+                    o.on_drop(msg.from, msg.to, per_msg_bytes);
+                }
                 for (d, v) in self.dropped_x.iter_mut().zip(&msg.x) {
                     *d += *v as f64;
                 }
@@ -762,6 +828,7 @@ impl PushSumEngine {
                 self.scratch[msg.from / chunk].pool.push(msg.x);
             }
         }
+        let merge_ns = lap_ns(&mut mark);
 
         // Phase 3 — per-shard aggregation of deliveries due at k. The
         // shard table is rebuilt (pointers re-derived) because the merge
@@ -791,6 +858,51 @@ impl PushSumEngine {
             pool.run(used, &|s| unsafe { table.aggregate(s, ctx, biased) });
         }
         self.alive_buf = alive_buf;
+
+        // Round record: counter deltas + phase spans + bank mass. Every
+        // term is a scalar walk over pre-allocated storage.
+        if let Some(o) = obs.as_deref_mut() {
+            let aggregate_ns = lap_ns(&mut mark);
+            let (mut bank_l1, mut bank_w) = (0.0f64, 0.0f64);
+            if !compress.is_identity() {
+                for res in &self.residuals {
+                    for bank in res.values() {
+                        for v in &bank.x {
+                            bank_l1 += (*v as f64).abs();
+                        }
+                        bank_w += bank.w;
+                    }
+                }
+            }
+            // The pool's run-time counter is process-wide (the global
+            // pool is shared), so the delta is an upper bound when other
+            // engines dispatch concurrently.
+            let pool_wait_ns = match pool_wait0 {
+                Some(w0) => self
+                    .pool
+                    .as_deref()
+                    .unwrap_or_else(pool::global)
+                    .dispatch_stats()
+                    .1
+                    .saturating_sub(w0),
+                None => 0,
+            };
+            let msgs = self.sent_count - sent0;
+            o.on_round(&RoundRecord {
+                k,
+                msgs,
+                dropped: self.drop_count - drop0,
+                rescued: self.rescue_count - resc0,
+                wire_bytes: msgs * per_msg_bytes,
+                bank_l1,
+                bank_w,
+                compute_ns,
+                merge_ns,
+                aggregate_ns,
+                pool_wait_ns,
+            });
+        }
+        self.obs = obs;
     }
 
     /// Mass recorded as lost to dropped messages: `(Σ dropped x, Σ dropped w)`.

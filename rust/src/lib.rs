@@ -47,6 +47,12 @@
 //!   strategy-agnostic training loop.
 //! * [`metrics`] — loss/consensus/throughput series and CSV emitters for
 //!   regenerating every table and figure in the paper.
+//! * [`obs`] — the unified observability layer: zero-allocation
+//!   ring-buffered recorders ([`obs::ObsSink`]) threaded through the
+//!   gossip engine, timing simulator, worker pool, and the real
+//!   deployment; a versioned JSONL trace schema ([`obs::trace`]); and
+//!   the `repro trace` analyzer ([`obs::analyze`] — straggler ranking,
+//!   bytes-per-edge, mass-ledger reconciliation).
 //!
 //! See ARCHITECTURE.md for the layer diagram and the determinism
 //! contract, DESIGN.md for the module map, the trait API contract, and
@@ -69,6 +75,7 @@ pub mod gossip;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod rng;
 pub mod runtime;

@@ -9,6 +9,7 @@
 //!   bench-check  CI perf gate: fresh BENCH_*.json vs committed baselines
 //!   coord        deployment coordinator: register workers, track liveness
 //!   worker       deployment gossip worker (connects to a coordinator)
+//!   trace        analyze a JSONL observability trace (any source)
 //!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
@@ -82,24 +83,34 @@ USAGE:
                 [--compress none|topk:D|qsgd:B] [--round-ms 2]
                 [--round-timeout-ms 250] [--slow-ms 500] [--dead-ms 2000]
                 [--deadline-s 120] [--port-file PATH] [--log PATH]
-                [--summary PATH]
+                [--summary PATH] [--verbose]
                 deployment coordinator: waits for N `repro worker`
                 processes, assigns ranks + the peer table, tracks
                 liveness (two thresholds: slow → degraded, silent/EOF →
                 leave), broadcasts membership events, and audits the
                 final reports (consensus spread + push-sum mass ledger).
-                Writes a JSONL membership log and a summary JSON.
+                Writes a JSONL sgp-trace membership log and a summary
+                JSON, and answers plaintext Prometheus scrapes (`GET
+                /metrics`) on its listen port while running. --verbose
+                mirrors the structured events to stderr.
   repro worker  --coord HOST:PORT [--bind 127.0.0.1:0] [--hb-ms 50]
-                [--io-timeout-ms 5000]
+                [--io-timeout-ms 5000] [--trace PATH] [--verbose]
                 deployment gossip worker: joins the coordinator, then
                 runs the push-sum loop over TCP, sending compressed
                 shares (the `gossip::Compression` bit-packed encodings)
                 to its schedule peers. All config arrives in the
-                coordinator's Assign message.
+                coordinator's Assign message. --trace writes this
+                worker's JSONL sgp-trace (per-peer traffic, ledger).
+  repro trace   <FILE>
+                analyze a JSONL sgp-trace from any surface (engine, sim,
+                coord, worker): per-node summaries, straggler ranking,
+                bytes-per-edge matrix, round-latency histogram, and a
+                recomputed push-sum mass-ledger reconciliation (exits
+                non-zero if the trace disagrees with itself by > 1e-9).
   repro algos
   repro spectral
   repro average [--nodes 32] [--rounds 8]
-  repro convergence [--nodes 16] [--iters 2000]
+  repro convergence [--nodes 16] [--iters 2000] [--trace PATH]
   repro inspect
 ";
 
@@ -474,6 +485,7 @@ fn cmd_coord(args: &Args) -> Result<()> {
         summary_path: std::path::PathBuf::from(
             args.str_or("summary", "results/deploy/summary.json")?,
         ),
+        verbose: args.flag_strict("verbose")?,
     };
     let s = coord::run_coordinator(&cfg)?;
     println!(
@@ -497,6 +509,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         bind: args.str_or("bind", "127.0.0.1:0")?,
         hb_ms: args.u64_or("hb-ms", 50)?,
         io_timeout_ms: args.u64_or("io-timeout-ms", 5000)?,
+        verbose: args.flag_strict("verbose")?,
+        trace: args.value_of("trace")?.map(std::path::PathBuf::from),
     };
     let rep = worker::run_worker(&cfg)?;
     println!(
@@ -514,6 +528,18 @@ fn cmd_worker(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = match args.value_of("file")? {
+        Some(p) => p,
+        None => args
+            .positional
+            .first()
+            .map(String::as_str)
+            .context("usage: repro trace <FILE> (a JSONL sgp-trace)")?,
+    };
+    sgp::obs::analyze::run(std::path::Path::new(path))
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
@@ -525,6 +551,7 @@ fn main() -> Result<()> {
         Some("bench-check") => cmd_bench_check(&args)?,
         Some("coord") => cmd_coord(&args)?,
         Some("worker") => cmd_worker(&args)?,
+        Some("trace") => cmd_trace(&args)?,
         Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {
@@ -538,6 +565,7 @@ fn main() -> Result<()> {
         Some("convergence") => experiments::convergence_demo(
             args.usize_or("nodes", 16)?,
             args.u64_or("iters", 2000)?,
+            args.value_of("trace")?.map(std::path::Path::new),
         )?,
         Some("inspect") => {
             let rt = Runtime::open_default()?;

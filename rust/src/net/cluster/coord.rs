@@ -28,6 +28,7 @@
 //! Every socket operation and the run as a whole are deadline-bounded:
 //! a wedged worker can degrade the numbers, never hang the coordinator.
 
+use std::fmt::Write as _;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
@@ -38,8 +39,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::faults::MembershipEvent;
 use crate::gossip::Compression;
+use crate::obs::trace::{TraceWriter, GLOBAL_RANK, SUMMARY_SCHEMA_VERSION};
 
-use super::heartbeat::{HeartbeatMonitor, HeartbeatPolicy, Transition};
+use super::heartbeat::{Health, HeartbeatMonitor, HeartbeatPolicy, Transition};
 use super::wire::{self, Assignment, DoneReport, Envelope, Frame, FrameReader, WireEvent};
 
 /// Everything `repro coord` needs for one deployment run.
@@ -73,10 +75,14 @@ pub struct CoordConfig {
     /// If set, the bound port is written here (atomically) once the
     /// listener is up — how spawning harnesses discover the port.
     pub port_file: Option<PathBuf>,
-    /// Membership event log (JSONL, streamed — survives a kill).
+    /// Membership event log (JSONL, streamed — survives a kill). The
+    /// format is the versioned [`crate::obs::trace`] schema, readable by
+    /// `repro trace`.
     pub log_path: PathBuf,
     /// End-of-run summary JSON.
     pub summary_path: PathBuf,
+    /// Mirror structured events as human-readable stderr lines.
+    pub verbose: bool,
 }
 
 impl Default for CoordConfig {
@@ -97,6 +103,7 @@ impl Default for CoordConfig {
             port_file: None,
             log_path: PathBuf::from("results/deploy/membership.jsonl"),
             summary_path: PathBuf::from("results/deploy/summary.json"),
+            verbose: false,
         }
     }
 }
@@ -107,10 +114,13 @@ pub struct EventRecord {
     /// Milliseconds since the coordinator started.
     pub t_ms: u64,
     /// Event kind (`join`, `assign`, `degraded`, `recovered`, `leave`,
-    /// `done`, `deadline`).
+    /// `done`, `deadline`, `dim_mismatch`, `audit`).
     pub kind: String,
     /// Rank the event is about (`u32::MAX` for group-wide events).
     pub rank: u32,
+    /// Gossip round the event refers to (the rank's last reported round
+    /// for liveness events, 0 during registration).
+    pub round: u64,
 }
 
 /// Per-survivor audit row.
@@ -150,34 +160,15 @@ pub struct CoordSummary {
     pub events: Vec<EventRecord>,
 }
 
-/// Append-and-flush JSONL event log (best-effort: I/O errors degrade to
-/// stderr notes, they never kill the run).
-struct EventLog {
-    file: Option<std::fs::File>,
-}
-
-impl EventLog {
-    fn open(path: &Path) -> Self {
-        if let Some(dir) = path.parent() {
-            let _ = std::fs::create_dir_all(dir);
-        }
-        match std::fs::File::create(path) {
-            Ok(f) => Self { file: Some(f) },
-            Err(e) => {
-                eprintln!("[coord] cannot open event log {}: {e}", path.display());
-                Self { file: None }
-            }
-        }
-    }
-
-    fn put(&mut self, rec: &EventRecord) {
-        if let Some(f) = self.file.as_mut() {
-            let _ = writeln!(
-                f,
-                "{{\"t_ms\":{},\"kind\":\"{}\",\"rank\":{}}}",
-                rec.t_ms, rec.kind, rec.rank
-            );
-            let _ = f.flush();
+/// Open the streamed JSONL event log as an [`crate::obs::trace`] writer
+/// (best-effort: I/O errors degrade to a stderr note and a disabled
+/// writer, they never kill the run).
+fn open_event_log(path: &Path, world: usize, rounds: u64) -> TraceWriter {
+    match TraceWriter::create(path, "coord", world, rounds) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("[coord] cannot open event log {}: {e}", path.display());
+            TraceWriter::disabled()
         }
     }
 }
@@ -263,16 +254,17 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
     let io_timeout = Duration::from_millis(5000);
     let start = Instant::now();
     let now_ms = move || start.elapsed().as_millis() as u64;
-    let mut log = EventLog::open(&cfg.log_path);
+    let mut log = open_event_log(&cfg.log_path, cfg.world, cfg.rounds);
     let mut events: Vec<EventRecord> = Vec::new();
-    let record = |log: &mut EventLog,
+    let record = |log: &mut TraceWriter,
                       events: &mut Vec<EventRecord>,
                       t_ms: u64,
                       kind: &str,
-                      rank: u32| {
-        let rec = EventRecord { t_ms, kind: kind.to_string(), rank };
-        log.put(&rec);
-        events.push(rec);
+                      rank: u32,
+                      round: u64,
+                      extras: &[(&str, f64)]| {
+        log.event(t_ms, kind, rank, round, extras);
+        events.push(EventRecord { t_ms, kind: kind.to_string(), rank, round });
     };
 
     let listener =
@@ -281,7 +273,9 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
     if let Some(pf) = &cfg.port_file {
         write_port_file(pf, port)?;
     }
-    eprintln!("[coord] listening on port {port}, waiting for {} workers", cfg.world);
+    if cfg.verbose {
+        eprintln!("[coord] listening on port {port}, waiting for {} workers", cfg.world);
+    }
 
     // --- Registration: accept until `world` Joins, rank = join order. --
     listener.set_nonblocking(true)?;
@@ -297,8 +291,10 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
                 let lp = read_join(&mut s, reg_deadline)?;
                 let rank = joined.len() as u32;
                 let addr = format!("{}:{}", peer.ip(), lp);
-                eprintln!("[coord] rank {rank} joined from {addr}");
-                record(&mut log, &mut events, now_ms(), "join", rank);
+                if cfg.verbose {
+                    eprintln!("[coord] rank {rank} joined from {addr}");
+                }
+                record(&mut log, &mut events, now_ms(), "join", rank, 0, &[]);
                 joined.push((s, addr));
             }
             Err(e)
@@ -358,8 +354,10 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
         streams.push(stream);
     }
     drop(tx);
-    record(&mut log, &mut events, now_ms(), "assign", u32::MAX);
-    eprintln!("[coord] all {} workers assigned; run started", cfg.world);
+    record(&mut log, &mut events, now_ms(), "assign", GLOBAL_RANK, 0, &[]);
+    if cfg.verbose {
+        eprintln!("[coord] all {} workers assigned; run started", cfg.world);
+    }
 
     // --- Liveness loop: heartbeats in, membership broadcasts out. -----
     let mut monitor = HeartbeatMonitor::new(cfg.world, cfg.hb, now_ms());
@@ -388,8 +386,17 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
         }
         if Instant::now() >= run_deadline {
             deadline_hit = true;
-            record(&mut log, &mut events, now_ms(), "deadline", u32::MAX);
+            record(&mut log, &mut events, now_ms(), "deadline", GLOBAL_RANK, 0, &[]);
             break;
+        }
+
+        // The registration listener doubles as a plaintext Prometheus
+        // endpoint for the rest of the run: any connection accepted here
+        // that opens with `GET ` receives a `/metrics` snapshot.
+        if let Ok((stream, _)) = listener.accept() {
+            let body =
+                metrics_body(cfg.world, now_ms(), events.len(), &monitor, &dead, &done, &last_round);
+            serve_metrics(stream, &body);
         }
 
         let mut transitions: Vec<Transition> = Vec::new();
@@ -402,11 +409,31 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
                     Frame::Heartbeat => last_round[rank] = env.round,
                     Frame::Done(d) => {
                         last_round[rank] = env.round;
-                        eprintln!(
-                            "[coord] rank {rank} done at round {}: w={:.6}",
-                            env.round, d.w
+                        if cfg.verbose {
+                            eprintln!(
+                                "[coord] rank {rank} done at round {}: w={:.6}",
+                                env.round, d.w
+                            );
+                        }
+                        // The full ledger rides in the trace so `repro
+                        // trace` can re-derive the audit offline.
+                        record(
+                            &mut log,
+                            &mut events,
+                            now_ms(),
+                            "done",
+                            rank as u32,
+                            env.round,
+                            &[
+                                ("w", d.w),
+                                ("recv_w", d.recv_w),
+                                ("sent_w", d.sent_w),
+                                ("rescued_w", d.rescued_w),
+                                ("rescues", d.rescues as f64),
+                                ("timeouts", d.timeouts as f64),
+                                ("ledger_residual", d.w - (1.0 + d.recv_w - d.sent_w)),
+                            ],
                         );
-                        record(&mut log, &mut events, now_ms(), "done", rank as u32);
                         done[rank] = Some(d);
                     }
                     _ => {}
@@ -430,8 +457,10 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
         for t in transitions {
             match t {
                 Transition::Degraded(r) if done[r].is_none() && !dead[r] => {
-                    eprintln!("[coord] rank {r} is slow (degraded)");
-                    record(&mut log, &mut events, now_ms(), "degraded", r as u32);
+                    if cfg.verbose {
+                        eprintln!("[coord] rank {r} is slow (degraded)");
+                    }
+                    record(&mut log, &mut events, now_ms(), "degraded", r as u32, last_round[r], &[]);
                     broadcast(
                         &mut streams,
                         &dead,
@@ -439,8 +468,10 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
                     );
                 }
                 Transition::Recovered(r) if done[r].is_none() && !dead[r] => {
-                    eprintln!("[coord] rank {r} recovered");
-                    record(&mut log, &mut events, now_ms(), "recovered", r as u32);
+                    if cfg.verbose {
+                        eprintln!("[coord] rank {r} recovered");
+                    }
+                    record(&mut log, &mut events, now_ms(), "recovered", r as u32, last_round[r], &[]);
                     broadcast(
                         &mut streams,
                         &dead,
@@ -453,13 +484,15 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
                     // fault layer would have scheduled — here it is
                     // observed instead of injected.
                     let ev = MembershipEvent::Leave { node: r, at: last_round[r] };
-                    eprintln!(
-                        "[coord] rank {} declared dead at round {} — broadcasting {}",
-                        ev.node(),
-                        ev.at(),
-                        ev.label()
-                    );
-                    record(&mut log, &mut events, now_ms(), ev.label(), r as u32);
+                    if cfg.verbose {
+                        eprintln!(
+                            "[coord] rank {} declared dead at round {} — broadcasting {}",
+                            ev.node(),
+                            ev.at(),
+                            ev.label()
+                        );
+                    }
+                    record(&mut log, &mut events, now_ms(), ev.label(), r as u32, ev.at(), &[]);
                     broadcast(
                         &mut streams,
                         &dead,
@@ -500,10 +533,21 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
     for (r, d) in done.iter().enumerate() {
         let (Some(rep), false) = (d, dead[r]) else { continue };
         if rep.x.len() != cfg.dim {
-            eprintln!(
-                "[coord] rank {r} reported dim {} != configured {}; excluding",
-                rep.x.len(),
-                cfg.dim
+            if cfg.verbose {
+                eprintln!(
+                    "[coord] rank {r} reported dim {} != configured {}; excluding",
+                    rep.x.len(),
+                    cfg.dim
+                );
+            }
+            record(
+                &mut log,
+                &mut events,
+                now_ms(),
+                "dim_mismatch",
+                r as u32,
+                last_round[r],
+                &[("got", rep.x.len() as f64), ("want", cfg.dim as f64)],
             );
             continue;
         }
@@ -539,6 +583,22 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
     let max_ledger_residual =
         workers.iter().map(|a| a.ledger_residual.abs()).fold(0.0f64, f64::max);
 
+    record(
+        &mut log,
+        &mut events,
+        now_ms(),
+        "audit",
+        GLOBAL_RANK,
+        cfg.rounds,
+        &[
+            ("world", cfg.world as f64),
+            ("survivors", workers.len() as f64),
+            ("missing_w", missing_w),
+            ("max_ledger_residual", max_ledger_residual),
+            ("spread", spread),
+        ],
+    );
+
     let summary = CoordSummary {
         port,
         world: cfg.world,
@@ -551,12 +611,79 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
         events,
     };
     write_summary(&cfg.summary_path, &summary)?;
-    eprintln!(
-        "[coord] audit: survivors={:?} spread={:.3e} missing_w={:.6} \
-         max_ledger_residual={:.3e}",
-        summary.survivors, summary.spread, summary.missing_w, summary.max_ledger_residual
-    );
+    if cfg.verbose {
+        eprintln!(
+            "[coord] audit: survivors={:?} spread={:.3e} missing_w={:.6} \
+             max_ledger_residual={:.3e}",
+            summary.survivors, summary.spread, summary.missing_w, summary.max_ledger_residual
+        );
+    }
     Ok(summary)
+}
+
+/// Render the current run state as a plaintext Prometheus exposition.
+/// Health encoding: 0 = healthy, 1 = degraded, 2 = dead, and a separate
+/// `sgp_worker_done` flag once a rank's final report is in.
+fn metrics_body(
+    world: usize,
+    uptime_ms: u64,
+    events_total: usize,
+    monitor: &HeartbeatMonitor,
+    dead: &[bool],
+    done: &[Option<DoneReport>],
+    last_round: &[u64],
+) -> String {
+    let mut b = String::new();
+    b.push_str("# TYPE sgp_coord_world gauge\n");
+    let _ = writeln!(b, "sgp_coord_world {world}");
+    b.push_str("# TYPE sgp_coord_uptime_ms counter\n");
+    let _ = writeln!(b, "sgp_coord_uptime_ms {uptime_ms}");
+    b.push_str("# TYPE sgp_coord_events_total counter\n");
+    let _ = writeln!(b, "sgp_coord_events_total {events_total}");
+    b.push_str("# TYPE sgp_worker_health gauge\n");
+    for r in 0..world {
+        let h = if dead[r] {
+            2
+        } else {
+            match monitor.health(r) {
+                Health::Healthy => 0,
+                Health::Degraded => 1,
+                Health::Dead => 2,
+            }
+        };
+        let _ = writeln!(b, "sgp_worker_health{{rank=\"{r}\"}} {h}");
+    }
+    b.push_str("# TYPE sgp_worker_last_round gauge\n");
+    for (r, k) in last_round.iter().enumerate() {
+        let _ = writeln!(b, "sgp_worker_last_round{{rank=\"{r}\"}} {k}");
+    }
+    b.push_str("# TYPE sgp_worker_done gauge\n");
+    for (r, d) in done.iter().enumerate() {
+        let _ = writeln!(b, "sgp_worker_done{{rank=\"{r}\"}} {}", u8::from(d.is_some()));
+    }
+    b
+}
+
+/// Answer one connection on the coordinator's listener: anything opening
+/// with `GET ` receives the metrics snapshot as an HTTP/1.1 response;
+/// everything else is dropped. Both directions are timeout-bounded so a
+/// wedged scraper cannot stall the liveness loop by more than ~100 ms.
+fn serve_metrics(mut stream: TcpStream, body: &str) {
+    // The listener is nonblocking (registration + scrape polling share
+    // it); the accepted stream must block, bounded by the timeouts below.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let mut buf = [0u8; 512];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    if buf[..n].starts_with(b"GET ") {
+        let resp = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let _ = stream.write_all(resp.as_bytes());
+    }
 }
 
 /// Render the summary as JSON (exponent-form floats, machine-parseable
@@ -567,6 +694,7 @@ fn write_summary(path: &Path, s: &CoordSummary) -> Result<()> {
     }
     let mut out = String::new();
     out.push_str("{\n");
+    out.push_str(&format!("  \"schema_version\": {SUMMARY_SCHEMA_VERSION},\n"));
     out.push_str(&format!("  \"port\": {},\n", s.port));
     out.push_str(&format!("  \"world\": {},\n", s.world));
     let surv: Vec<String> = s.survivors.iter().map(|r| r.to_string()).collect();
@@ -600,10 +728,11 @@ fn write_summary(path: &Path, s: &CoordSummary) -> Result<()> {
     out.push_str("  \"events\": [\n");
     for (i, e) in s.events.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"t_ms\":{},\"kind\":\"{}\",\"rank\":{}}}{}\n",
+            "    {{\"t_ms\":{},\"kind\":\"{}\",\"rank\":{},\"round\":{}}}{}\n",
             e.t_ms,
             e.kind,
             e.rank,
+            e.round,
             if i + 1 < s.events.len() { "," } else { "" }
         ));
     }
@@ -641,11 +770,16 @@ mod tests {
                 },
                 ledger_residual: 0.0,
             }],
-            events: vec![EventRecord { t_ms: 12, kind: "leave".into(), rank: 2 }],
+            events: vec![EventRecord { t_ms: 12, kind: "leave".into(), rank: 2, round: 57 }],
         };
         write_summary(&path, &s).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::model::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            j.get("schema_version").and_then(|v| v.as_usize()),
+            Some(SUMMARY_SCHEMA_VERSION as usize),
+            "downstream parsers key on the summary schema version"
+        );
         assert_eq!(j.get("world").and_then(|v| v.as_usize()), Some(4));
         assert_eq!(j.get("survivors").and_then(|v| v.as_arr()).unwrap().len(), 3);
         let spread = j.get("spread").and_then(|v| v.as_f64()).unwrap();
@@ -654,6 +788,7 @@ mod tests {
         assert_eq!(ws[0].get("rank").and_then(|v| v.as_usize()), Some(0));
         let evs = j.get("events").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(evs[0].get("kind").and_then(|v| v.as_str()), Some("leave"));
+        assert_eq!(evs[0].get("round").and_then(|v| v.as_usize()), Some(57));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -41,6 +41,7 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -49,6 +50,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::gossip::compress::EdgeBank;
 use crate::gossip::Compression;
+use crate::obs::trace::TraceWriter;
 use crate::rng::Pcg;
 use crate::topology::{Schedule, TopologyKind};
 
@@ -69,6 +71,12 @@ pub struct WorkerConfig {
     /// Per-connection read/write timeout in milliseconds — every socket
     /// operation is bounded, so a wedged peer cannot hang the run.
     pub io_timeout_ms: u64,
+    /// Mirror structured events as human-readable stderr lines.
+    pub verbose: bool,
+    /// Optional JSONL trace output ([`crate::obs::trace`] schema,
+    /// source `"worker"`): per-edge byte/message counters, send
+    /// failures, membership observations, and the final ledger.
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for WorkerConfig {
@@ -78,6 +86,8 @@ impl Default for WorkerConfig {
             bind: "127.0.0.1:0".to_string(),
             hb_ms: 50,
             io_timeout_ms: 5000,
+            verbose: false,
+            trace: None,
         }
     }
 }
@@ -280,6 +290,56 @@ fn in_peers(
     }
 }
 
+/// Worker-side observability: the optional trace writer plus
+/// pre-allocated per-peer wire counters (payload bytes and message
+/// counts, both directions). One instance per run, created right after
+/// the assignment fixes `world`.
+struct Telemetry {
+    verbose: bool,
+    trace: TraceWriter,
+    start: Instant,
+    sent_msgs: Vec<u64>,
+    sent_bytes: Vec<u64>,
+    recv_msgs: Vec<u64>,
+    recv_bytes: Vec<u64>,
+    malformed: u64,
+}
+
+impl Telemetry {
+    fn new(cfg: &WorkerConfig, rank: u32, world: usize, rounds: u64) -> Self {
+        let trace = match &cfg.trace {
+            None => TraceWriter::disabled(),
+            Some(path) => match TraceWriter::create(path, "worker", world, rounds) {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("[worker {rank}] cannot open trace {}: {e}", path.display());
+                    TraceWriter::disabled()
+                }
+            },
+        };
+        Self {
+            verbose: cfg.verbose,
+            trace,
+            start: Instant::now(),
+            sent_msgs: vec![0; world],
+            sent_bytes: vec![0; world],
+            recv_msgs: vec![0; world],
+            recv_bytes: vec![0; world],
+            malformed: 0,
+        }
+    }
+
+    fn event(&mut self, kind: &str, rank: u32, round: u64, extras: &[(&str, f64)]) {
+        let t_ms = self.start.elapsed().as_millis() as u64;
+        self.trace.event(t_ms, kind, rank, round, extras);
+    }
+
+    fn on_sent(&mut self, peer: usize, frame_bytes: usize) {
+        self.sent_msgs[peer] += 1;
+        self.sent_bytes[peer] += frame_bytes as u64;
+    }
+}
+
 /// Run one worker to completion: register, gossip, drain, report. All
 /// socket operations are timeout-bounded, so the call terminates even if
 /// peers or the coordinator die at any point.
@@ -310,13 +370,22 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
     if rank >= world || a.peers.len() != world || dim == 0 {
         bail!("malformed assignment: rank {rank}, world {world}, {} peers", a.peers.len());
     }
-    eprintln!(
-        "[worker {rank}] assigned: world={world} rounds={} cooldown={} dim={dim} \
-         scheme={} peers on {:?}",
-        a.rounds,
-        a.cooldown,
-        a.scheme.label(),
-        a.peers
+    let mut tel = Telemetry::new(cfg, a.rank, world, a.rounds);
+    if tel.verbose {
+        eprintln!(
+            "[worker {rank}] assigned: world={world} rounds={} cooldown={} dim={dim} \
+             scheme={} peers on {:?}",
+            a.rounds,
+            a.cooldown,
+            a.scheme.label(),
+            a.peers
+        );
+    }
+    tel.event(
+        "assigned",
+        a.rank,
+        0,
+        &[("cooldown", a.cooldown as f64), ("dim", dim as f64)],
     );
 
     let shared: Shared = Arc::new((Mutex::new(Mailbox::default()), Condvar::new()));
@@ -428,7 +497,18 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
                             break 'rounds;
                         }
                         remove_rank(&mut alive, r);
-                        eprintln!("[worker {rank}] peer {r} left; {} survivors", alive.len());
+                        if tel.verbose {
+                            eprintln!(
+                                "[worker {rank}] peer {r} left; {} survivors",
+                                alive.len()
+                            );
+                        }
+                        tel.event(
+                            "peer_leave",
+                            r as u32,
+                            k,
+                            &[("survivors", alive.len() as f64)],
+                        );
                     }
                     WireEvent::Degraded { .. } => degraded[r] = true,
                     WireEvent::Recovered { .. } => degraded[r] = false,
@@ -472,7 +552,9 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
                 );
                 if links.send(peer, &frame_buf).is_ok() {
                     sent_w += bank.w;
+                    tel.on_sent(peer, frame_buf.len());
                 } else {
+                    tel.event("send_failed", peer as u32, k, &[("w", bank.w)]);
                     for (xi, bi) in x.iter_mut().zip(&bank.x) {
                         *xi += bi;
                     }
@@ -520,9 +602,17 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
                 &mut frame_buf,
             );
             match links.send(peer, &frame_buf) {
-                Ok(()) => sent_w += msg_w,
+                Ok(()) => {
+                    sent_w += msg_w;
+                    tel.on_sent(peer, frame_buf.len());
+                }
                 Err(e) => {
-                    eprintln!("[worker {rank}] round {k}: send to {peer} failed ({e}); rescuing");
+                    if tel.verbose {
+                        eprintln!(
+                            "[worker {rank}] round {k}: send to {peer} failed ({e}); rescuing"
+                        );
+                    }
+                    tel.event("send_failed", peer as u32, k, &[("w", msg_w)]);
                     rescued_this_round.push((payload, msg_w));
                 }
             }
@@ -569,7 +659,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
         if !complete && !expected.is_empty() {
             timeouts += 1;
         }
-        absorb_up_to(&shared, k, &alive, dim, &mut x, &mut w, &mut recv_w, rank);
+        absorb_up_to(&shared, k, &alive, dim, &mut x, &mut w, &mut recv_w, rank, &mut tel);
 
         rounds_run = k + 1;
         let elapsed = round_start.elapsed();
@@ -583,7 +673,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
     // state — the deployment mirror of `PushSumEngine::drain`.
     if !evicted {
         std::thread::sleep(round_timeout.max(Duration::from_millis(250)) * 2);
-        absorb_up_to(&shared, a.rounds, &alive, dim, &mut x, &mut w, &mut recv_w, rank);
+        absorb_up_to(&shared, a.rounds, &alive, dim, &mut x, &mut w, &mut recv_w, rank, &mut tel);
     }
     for bank in banks.values_mut() {
         for (xi, bi) in x.iter_mut().zip(&bank.x) {
@@ -604,9 +694,39 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
         x: x.clone(),
     };
     let ledger_residual = w - (1.0 + recv_w - sent_w);
-    eprintln!(
-        "[worker {rank}] done after {rounds_run} rounds: w={w:.6} recv_w={recv_w:.6} \
-         sent_w={sent_w:.6} rescued_w={rescued_w:.6} ledger_residual={ledger_residual:.3e}"
+    if tel.verbose {
+        eprintln!(
+            "[worker {rank}] done after {rounds_run} rounds: w={w:.6} recv_w={recv_w:.6} \
+             sent_w={sent_w:.6} rescued_w={rescued_w:.6} ledger_residual={ledger_residual:.3e}"
+        );
+    }
+    for peer in 0..world {
+        if tel.sent_msgs[peer] > 0 || tel.recv_msgs[peer] > 0 {
+            let extras = [
+                ("to", peer as f64),
+                ("sent_msgs", tel.sent_msgs[peer] as f64),
+                ("sent_bytes", tel.sent_bytes[peer] as f64),
+                ("recv_msgs", tel.recv_msgs[peer] as f64),
+                ("recv_bytes", tel.recv_bytes[peer] as f64),
+            ];
+            tel.event("edge", a.rank, rounds_run, &extras);
+        }
+    }
+    tel.event(
+        "done",
+        a.rank,
+        rounds_run,
+        &[
+            ("w", w),
+            ("recv_w", recv_w),
+            ("sent_w", sent_w),
+            ("rescued_w", rescued_w),
+            ("rescues", rescues as f64),
+            ("timeouts", timeouts as f64),
+            ("malformed", tel.malformed as f64),
+            ("evicted", u8::from(evicted) as f64),
+            ("ledger_residual", ledger_residual),
+        ],
     );
 
     frame_buf.clear();
@@ -652,6 +772,7 @@ fn absorb_up_to(
     w: &mut f64,
     recv_w: &mut f64,
     rank: usize,
+    tel: &mut Telemetry,
 ) {
     let ready: Vec<PushMsg> = {
         let (lock, _) = &**shared;
@@ -673,12 +794,21 @@ fn absorb_up_to(
                 }
                 *w += m.w;
                 *recv_w += m.w;
+                let from = m.from as usize;
+                if from < tel.recv_msgs.len() {
+                    tel.recv_msgs[from] += 1;
+                    tel.recv_bytes[from] += m.share.len() as u64;
+                }
             }
             Err(e) => {
-                eprintln!(
-                    "[worker {rank}] dropping malformed share from {} round {}: {e}",
-                    m.from, m.round
-                );
+                tel.malformed += 1;
+                tel.event("malformed_share", m.from, m.round, &[]);
+                if tel.verbose {
+                    eprintln!(
+                        "[worker {rank}] dropping malformed share from {} round {}: {e}",
+                        m.from, m.round
+                    );
+                }
             }
         }
     }

@@ -31,6 +31,7 @@ use std::collections::VecDeque;
 
 use crate::collectives;
 use crate::faults::FaultClock;
+use crate::obs::{ObsSink, TimingObs};
 use crate::rng::Pcg;
 use crate::runtime::pool;
 use crate::topology::Schedule;
@@ -221,6 +222,11 @@ pub struct TimingSim {
     newt_buf: Vec<f64>,
     alive_buf: Vec<usize>,
     peers_buf: Vec<usize>,
+    /// Optional observability recorder ([`Self::set_obs`]): per-iteration
+    /// makespan + straggler identity. Pre-allocated; recording is a
+    /// scalar argmax scan per advance, so the hot path stays
+    /// allocation-free.
+    obs: Option<Box<TimingObs>>,
 }
 
 impl TimingSim {
@@ -240,6 +246,7 @@ impl TimingSim {
             newt_buf: Vec::new(),
             alive_buf: Vec::new(),
             peers_buf: Vec::new(),
+            obs: None,
         }
     }
 
@@ -247,6 +254,20 @@ impl TimingSim {
     /// sweeps. Bit-identical to sequential for every value (max-merge).
     pub fn set_shards(&mut self, shards: usize) {
         self.shards = shards.max(1);
+    }
+
+    /// Attach (or detach, with `None`) an observability recorder. While
+    /// attached, every [`Self::advance_with_faults`] records the
+    /// iteration's makespan and straggler (argmax node clock). Purely
+    /// observational: simulated times are unchanged.
+    pub fn set_obs(&mut self, obs: Option<Box<TimingObs>>) {
+        self.obs = obs;
+    }
+
+    /// Detach and return the recorder (e.g. to write a trace with
+    /// [`crate::obs::trace::write_sim_trace`]).
+    pub fn take_obs(&mut self) -> Option<Box<TimingObs>> {
+        self.obs.take()
     }
 
     /// Advance one iteration given sampled compute times; returns the
@@ -445,6 +466,16 @@ impl TimingSim {
             }
         }
         self.down_buf = down;
+        if let Some(o) = self.obs.as_deref_mut() {
+            let (mut slowest, mut makespan) = (0usize, f64::NEG_INFINITY);
+            for (i, &ti) in self.t.iter().enumerate() {
+                if ti > makespan {
+                    makespan = ti;
+                    slowest = i;
+                }
+            }
+            o.on_iter(k, makespan.max(0.0), slowest);
+        }
         self.iter += 1;
         self.t.iter().cloned().fold(0.0, f64::max)
     }

@@ -1,0 +1,589 @@
+//! The `repro trace` analyzer: offline summaries over a parsed trace.
+//!
+//! Reads one JSONL trace (any source — `engine`, `sim`, `coord`,
+//! `worker`) and prints per-node summaries: a straggler ranking by
+//! phase latency or degraded-span count, a bytes-per-edge matrix,
+//! drop/rescue totals, and a round-latency histogram. For coordinator
+//! and worker traces it additionally **re-derives the push-sum mass
+//! ledger** from the raw `done`/`audit` events — `w = 1 + recv_w −
+//! sent_w` per node, `missing_w = world − Σ w` over clean survivors —
+//! and fails (non-zero CLI exit) when the recomputed numbers drift from
+//! the logged ones by more than [`TOL`]. Because the trace writer
+//! round-trips every float exactly, a healthy trace reconciles to 0.0.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::trace::{TraceEvent, TraceFile};
+use crate::metrics::print_table;
+
+/// Reconciliation tolerance: recomputed ledger quantities must match
+/// the logged ones to within this absolute error.
+pub const TOL: f64 = 1e-9;
+
+/// Load `path`, print the per-source summary, and verify ledger
+/// consistency where the source carries mass accounting.
+pub fn run(path: &Path) -> Result<()> {
+    let tf = TraceFile::load(path)?;
+    println!(
+        "trace {} — source {:?} v{} world {} rounds {} ({} events)",
+        path.display(),
+        tf.meta.source,
+        tf.meta.version,
+        tf.meta.world.map_or_else(|| "?".to_string(), |w| w.to_string()),
+        tf.meta.rounds.map_or_else(|| "?".to_string(), |r| r.to_string()),
+        tf.events.len()
+    );
+    match tf.meta.source.as_str() {
+        "coord" => analyze_coord(&tf),
+        "worker" => analyze_worker(&tf),
+        "engine" => analyze_engine(&tf),
+        "sim" => analyze_sim(&tf),
+        other => {
+            println!("unknown source {other:?} — listing event kinds only");
+            print_kind_counts(&tf);
+            Ok(())
+        }
+    }
+}
+
+fn print_kind_counts(tf: &TraceFile) {
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for ev in &tf.events {
+        *counts.entry(ev.kind.as_str()).or_insert(0) += 1;
+    }
+    let rows: Vec<Vec<String>> =
+        counts.iter().map(|(k, c)| vec![k.to_string(), c.to_string()]).collect();
+    print_table("event kinds", &["kind", "count"], &rows);
+}
+
+/// 8-bucket linear histogram over the finite samples.
+fn print_histogram(title: &str, unit: &str, vals: &[f64]) {
+    let finite: Vec<f64> = vals.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return;
+    }
+    let min = finite.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = finite.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    println!("\n## {title} ({} samples, {unit})", finite.len());
+    if max <= min {
+        println!("  all samples = {min:.3}");
+        return;
+    }
+    const BUCKETS: usize = 8;
+    let width = (max - min) / BUCKETS as f64;
+    let mut counts = [0usize; BUCKETS];
+    for v in &finite {
+        let idx = (((v - min) / width) as usize).min(BUCKETS - 1);
+        counts[idx] += 1;
+    }
+    let peak = counts.iter().copied().max().unwrap_or(1).max(1);
+    for (i, c) in counts.iter().enumerate() {
+        let lo = min + i as f64 * width;
+        let hi = lo + width;
+        let bar = "#".repeat(((c * 40).div_ceil(peak)).min(40));
+        println!("  [{lo:>12.3}, {hi:>12.3})  {c:>6}  {bar}");
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct EdgeStat {
+    msgs: u64,
+    bytes: u64,
+}
+
+/// Bytes-per-edge: full from×to matrix up to 16 nodes, top-10 edges by
+/// bytes above that.
+fn print_edges(edges: &BTreeMap<(u32, u32), EdgeStat>) {
+    if edges.is_empty() {
+        return;
+    }
+    let mut nodes: Vec<u32> = edges.keys().flat_map(|&(a, b)| [a, b]).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let total_msgs: u64 = edges.values().map(|e| e.msgs).sum();
+    let total_bytes: u64 = edges.values().map(|e| e.bytes).sum();
+    if nodes.len() <= 16 {
+        let mut header: Vec<String> = vec!["bytes from\\to".to_string()];
+        header.extend(nodes.iter().map(|n| n.to_string()));
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let rows: Vec<Vec<String>> = nodes
+            .iter()
+            .map(|&from| {
+                let mut row = vec![from.to_string()];
+                row.extend(nodes.iter().map(|&to| {
+                    edges
+                        .get(&(from, to))
+                        .filter(|e| e.msgs > 0 || e.bytes > 0)
+                        .map_or_else(|| ".".to_string(), |e| e.bytes.to_string())
+                }));
+                row
+            })
+            .collect();
+        print_table("bytes per edge", &header_refs, &rows);
+    } else {
+        let mut top: Vec<(&(u32, u32), &EdgeStat)> = edges.iter().collect();
+        top.sort_by(|a, b| b.1.bytes.cmp(&a.1.bytes));
+        let rows: Vec<Vec<String>> = top
+            .iter()
+            .take(10)
+            .map(|((from, to), e)| {
+                vec![from.to_string(), to.to_string(), e.msgs.to_string(), e.bytes.to_string()]
+            })
+            .collect();
+        print_table(
+            &format!("heaviest edges (top 10 of {})", edges.len()),
+            &["from", "to", "msgs", "bytes"],
+            &rows,
+        );
+    }
+    println!("total over {} edges: {total_msgs} msgs, {total_bytes} bytes", edges.len());
+}
+
+#[derive(Default)]
+struct RankStat<'a> {
+    joins: u64,
+    degraded: u64,
+    recovered: u64,
+    leave: Option<u64>,
+    dim_mismatch: bool,
+    done: Option<&'a TraceEvent>,
+}
+
+/// Coordinator trace: per-rank liveness/ledger table, straggler ranking
+/// by average ms/round, killed-rank detection (a `leave` with no
+/// `done`), and reconciliation of every `done` ledger plus the final
+/// `audit` against a from-scratch recomputation.
+fn analyze_coord(tf: &TraceFile) -> Result<()> {
+    let world = tf.meta.world.unwrap_or_else(|| {
+        tf.events.iter().filter_map(|e| e.rank).map(|r| r as usize + 1).max().unwrap_or(0)
+    });
+    let mut ranks: Vec<RankStat> = (0..world).map(|_| RankStat::default()).collect();
+    let mut assign_t: Option<u64> = None;
+    let mut audit: Option<&TraceEvent> = None;
+    let mut deadline = false;
+    for ev in &tf.events {
+        match (ev.kind.as_str(), ev.rank) {
+            ("assign", _) => assign_t = assign_t.or(Some(ev.t_ms)),
+            ("audit", _) => audit = Some(ev),
+            ("deadline", _) => deadline = true,
+            (kind, Some(r)) if (r as usize) < world => {
+                let st = &mut ranks[r as usize];
+                match kind {
+                    "join" => st.joins += 1,
+                    "degraded" => st.degraded += 1,
+                    "recovered" => st.recovered += 1,
+                    "leave" => st.leave = Some(ev.round.unwrap_or(0)),
+                    "dim_mismatch" => st.dim_mismatch = true,
+                    "done" => st.done = Some(ev),
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let rows: Vec<Vec<String>> = ranks
+        .iter()
+        .enumerate()
+        .map(|(r, st)| {
+            let (round, w, resid, ms) = match st.done {
+                Some(d) => {
+                    let round = d.round.unwrap_or(0);
+                    let ms = assign_t
+                        .filter(|_| round > 0)
+                        .map(|a| d.t_ms.saturating_sub(a) as f64 / round as f64);
+                    (
+                        round.to_string(),
+                        d.num("w").map_or_else(|| "-".to_string(), |w| format!("{w:.6}")),
+                        d.num("ledger_residual")
+                            .map_or_else(|| "-".to_string(), |x| format!("{x:.3e}")),
+                        ms.map_or_else(|| "-".to_string(), |m| format!("{m:.2}")),
+                    )
+                }
+                None => ("-".to_string(), "-".to_string(), "-".to_string(), "-".to_string()),
+            };
+            vec![
+                r.to_string(),
+                st.joins.to_string(),
+                st.degraded.to_string(),
+                st.recovered.to_string(),
+                st.leave.map_or_else(|| "-".to_string(), |k| k.to_string()),
+                round,
+                w,
+                resid,
+                ms,
+            ]
+        })
+        .collect();
+    print_table(
+        "per-rank summary",
+        &[
+            "rank",
+            "joins",
+            "degraded",
+            "recovered",
+            "leave@round",
+            "done@round",
+            "w",
+            "ledger_residual",
+            "ms/round",
+        ],
+        &rows,
+    );
+
+    let mut lat: Vec<(usize, f64)> = ranks
+        .iter()
+        .enumerate()
+        .filter_map(|(r, st)| {
+            let d = st.done?;
+            let round = d.round?;
+            if round == 0 {
+                return None;
+            }
+            Some((r, d.t_ms.saturating_sub(assign_t?) as f64 / round as f64))
+        })
+        .collect();
+    lat.sort_by(|a, b| b.1.total_cmp(&a.1));
+    if !lat.is_empty() {
+        println!("\nstraggler ranking (avg ms/round, slowest first):");
+        for (r, ms) in &lat {
+            println!("  rank {r}: {ms:.2} ms/round ({} degraded spans)", ranks[*r].degraded);
+        }
+        let samples: Vec<f64> = lat.iter().map(|(_, m)| *m).collect();
+        print_histogram("round latency", "ms/round", &samples);
+    }
+
+    let rescued_w: f64 = ranks.iter().filter_map(|st| st.done?.num("rescued_w")).sum();
+    let rescues: f64 = ranks.iter().filter_map(|st| st.done?.num("rescues")).sum();
+    let timeouts: f64 = ranks.iter().filter_map(|st| st.done?.num("timeouts")).sum();
+    println!(
+        "\ndrop/rescue totals: {} recv timeouts, {} bank rescues carrying w={rescued_w:.6}",
+        timeouts as u64, rescues as u64
+    );
+
+    let killed: Vec<usize> = ranks
+        .iter()
+        .enumerate()
+        .filter(|(_, st)| st.leave.is_some() && st.done.is_none())
+        .map(|(r, _)| r)
+        .collect();
+    if killed.is_empty() {
+        println!("killed ranks (leave without done): none");
+    } else {
+        println!("killed ranks (leave without done): {killed:?}");
+    }
+    if deadline {
+        println!("NOTE: the run deadline fired before every worker reported");
+    }
+
+    // --- Ledger reconciliation against the raw events. -----------------
+    // Mirrors run_coordinator's audit exactly: a rank counts as a clean
+    // survivor iff it reported `done`, was never declared dead (`leave`),
+    // and passed the dim check — summed in ascending rank order so the
+    // floating-point result is bit-identical to the coordinator's.
+    let mut max_resid = 0.0f64;
+    let mut sum_w = 0.0f64;
+    let mut included = 0usize;
+    for (r, st) in ranks.iter().enumerate() {
+        let Some(d) = st.done else { continue };
+        let (w, recv_w, sent_w, logged) = match (
+            d.num("w"),
+            d.num("recv_w"),
+            d.num("sent_w"),
+            d.num("ledger_residual"),
+        ) {
+            (Some(a), Some(b), Some(c), Some(l)) => (a, b, c, l),
+            _ => bail!("rank {r}: done event is missing ledger fields"),
+        };
+        let recomputed = w - (1.0 + recv_w - sent_w);
+        if (recomputed - logged).abs() > TOL {
+            bail!(
+                "rank {r}: ledger residual mismatch — logged {logged:e}, \
+                 recomputed w-(1+recv_w-sent_w) = {recomputed:e}"
+            );
+        }
+        if st.leave.is_none() && !st.dim_mismatch {
+            included += 1;
+            sum_w += w;
+            max_resid = max_resid.max(recomputed.abs());
+        }
+    }
+    if let Some(a) = audit {
+        let logged_missing = a.num("missing_w").context("audit event has no missing_w")?;
+        let logged_max =
+            a.num("max_ledger_residual").context("audit event has no max_ledger_residual")?;
+        if let Some(s) = a.num("survivors").map(|s| s as usize) {
+            if s != included {
+                bail!("audit says {s} survivors, trace has {included} clean done events");
+            }
+        }
+        let missing = world as f64 - sum_w;
+        if (missing - logged_missing).abs() > TOL {
+            bail!(
+                "missing mass mismatch — audit logged {logged_missing:e}, \
+                 recomputed from done events {missing:e}"
+            );
+        }
+        if (max_resid - logged_max).abs() > TOL {
+            bail!(
+                "max ledger residual mismatch — audit logged {logged_max:e}, \
+                 recomputed {max_resid:e}"
+            );
+        }
+        println!(
+            "ledger reconciliation: OK (survivors {included}, missing_w {missing:.6}, \
+             max residual {max_resid:.3e})"
+        );
+    } else if included > 0 {
+        println!(
+            "ledger reconciliation: OK ({included} done events self-consistent; \
+             no audit event to cross-check — incomplete run?)"
+        );
+    } else {
+        println!("ledger reconciliation: no done events to check");
+    }
+    Ok(())
+}
+
+/// Worker trace: per-peer traffic matrix, error counters, and the
+/// node's own `done` ledger rechecked against `w = 1 + recv_w − sent_w`.
+fn analyze_worker(tf: &TraceFile) -> Result<()> {
+    let mut edges: BTreeMap<(u32, u32), EdgeStat> = BTreeMap::new();
+    let mut send_failed = 0u64;
+    let mut malformed = 0u64;
+    let mut peer_leaves = 0u64;
+    let mut done: Option<&TraceEvent> = None;
+    for ev in &tf.events {
+        match ev.kind.as_str() {
+            "edge" => {
+                if let (Some(from), Some(to)) = (ev.rank, ev.num("to")) {
+                    let e = edges.entry((from, to as u32)).or_default();
+                    e.msgs += ev.num("sent_msgs").unwrap_or(0.0) as u64;
+                    e.bytes += ev.num("sent_bytes").unwrap_or(0.0) as u64;
+                }
+            }
+            "send_failed" => send_failed += 1,
+            "malformed_share" => malformed += 1,
+            "peer_leave" => peer_leaves += 1,
+            "done" => done = Some(ev),
+            _ => {}
+        }
+    }
+    print_kind_counts(tf);
+    print_edges(&edges);
+    println!(
+        "\nerrors: {send_failed} failed sends, {malformed} malformed shares, \
+         {peer_leaves} peer-leave notifications"
+    );
+    match done {
+        Some(d) => {
+            let (w, recv_w, sent_w, logged) = match (
+                d.num("w"),
+                d.num("recv_w"),
+                d.num("sent_w"),
+                d.num("ledger_residual"),
+            ) {
+                (Some(a), Some(b), Some(c), Some(l)) => (a, b, c, l),
+                _ => bail!("done event is missing ledger fields"),
+            };
+            let recomputed = w - (1.0 + recv_w - sent_w);
+            if (recomputed - logged).abs() > TOL {
+                bail!(
+                    "ledger residual mismatch — logged {logged:e}, recomputed {recomputed:e}"
+                );
+            }
+            println!(
+                "ledger reconciliation: OK (w {w:.6}, residual {recomputed:.3e}, \
+                 rescued_w {:.6})",
+                d.num("rescued_w").unwrap_or(0.0)
+            );
+        }
+        None => println!("ledger reconciliation: no done event (worker killed mid-run?)"),
+    }
+    Ok(())
+}
+
+/// Engine trace: phase-latency profile over the retained ring of
+/// rounds, drop/rescue totals, round-latency histogram, and the
+/// bytes-per-edge matrix when edge tracking was on.
+fn analyze_engine(tf: &TraceFile) -> Result<()> {
+    let mut edges: BTreeMap<(u32, u32), EdgeStat> = BTreeMap::new();
+    let mut round_ms: Vec<f64> = Vec::new();
+    let phases = ["compute_ns", "merge_ns", "aggregate_ns", "pool_wait_ns"];
+    let mut sums = [0.0f64; 4];
+    let mut maxs = [0.0f64; 4];
+    let mut totals: Option<&TraceEvent> = None;
+    let mut n_rounds = 0usize;
+    for ev in &tf.events {
+        match ev.kind.as_str() {
+            "round" => {
+                n_rounds += 1;
+                let mut total = 0.0;
+                for (i, p) in phases.iter().enumerate() {
+                    let v = ev.num(p).unwrap_or(0.0);
+                    sums[i] += v;
+                    maxs[i] = maxs[i].max(v);
+                    if i < 3 {
+                        total += v; // pool wait overlaps the phases; not additive
+                    }
+                }
+                round_ms.push(total / 1e6);
+            }
+            "edge" => {
+                if let (Some(from), Some(to)) = (ev.rank, ev.num("to")) {
+                    let e = edges.entry((from, to as u32)).or_default();
+                    e.msgs += ev.num("msgs").unwrap_or(0.0) as u64;
+                    e.bytes += ev.num("bytes").unwrap_or(0.0) as u64;
+                }
+            }
+            "totals" => totals = Some(ev),
+            _ => {}
+        }
+    }
+    if n_rounds > 0 {
+        let rows: Vec<Vec<String>> = phases
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                vec![
+                    p.trim_end_matches("_ns").to_string(),
+                    format!("{:.1}", sums[i] / n_rounds as f64 / 1e3),
+                    format!("{:.1}", maxs[i] / 1e3),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("phase latency over last {n_rounds} rounds"),
+            &["phase", "mean µs", "max µs"],
+            &rows,
+        );
+        print_histogram("round latency", "ms", &round_ms);
+    }
+    print_edges(&edges);
+    if let Some(t) = totals {
+        println!(
+            "\nwhole-run totals: {} rounds, {} msgs ({} bytes on the wire), \
+             {} dropped, {} rescued",
+            t.num("rounds").unwrap_or(0.0) as u64,
+            t.num("msgs").unwrap_or(0.0) as u64,
+            t.num("wire_bytes").unwrap_or(0.0) as u64,
+            t.num("dropped").unwrap_or(0.0) as u64,
+            t.num("rescued").unwrap_or(0.0) as u64,
+        );
+    }
+    Ok(())
+}
+
+/// Timing-simulator trace: straggler ranking by slowest-node counts and
+/// an iteration-latency histogram from consecutive makespan deltas.
+fn analyze_sim(tf: &TraceFile) -> Result<()> {
+    let mut stragglers: Vec<(u32, u64)> = Vec::new();
+    let mut makespans: Vec<f64> = Vec::new();
+    let mut total_iters = 0u64;
+    for ev in &tf.events {
+        match ev.kind.as_str() {
+            "straggler" => {
+                if let (Some(r), Some(c)) = (ev.rank, ev.num("count")) {
+                    stragglers.push((r, c as u64));
+                }
+            }
+            "iter" => makespans.push(ev.num("makespan_s").unwrap_or(f64::NAN)),
+            "totals" => total_iters = ev.num("iters").unwrap_or(0.0) as u64,
+            _ => {}
+        }
+    }
+    stragglers.sort_by(|a, b| b.1.cmp(&a.1));
+    if !stragglers.is_empty() {
+        println!("\nstraggler ranking (iterations as the slowest node, whole run):");
+        for (r, c) in &stragglers {
+            println!("  rank {r}: {c}");
+        }
+    }
+    // The sim clock is cumulative, so consecutive deltas are per-iter
+    // latencies; the ring start has no predecessor and is skipped.
+    let deltas: Vec<f64> = makespans
+        .windows(2)
+        .map(|w| (w[1] - w[0]) * 1000.0)
+        .filter(|d| *d >= 0.0)
+        .collect();
+    print_histogram("iteration latency", "ms", &deltas);
+    println!("\nwhole-run totals: {total_iters} iterations simulated");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceWriter;
+
+    fn coord_trace(dir: &std::path::Path, break_residual: bool) -> std::path::PathBuf {
+        let path = dir.join("coord.jsonl");
+        let mut w = TraceWriter::create(&path, "coord", 4, 50).unwrap();
+        w.event(1, "join", 0, 0, &[]);
+        w.event(1, "join", 1, 0, &[]);
+        w.event(1, "join", 2, 0, &[]);
+        w.event(1, "join", 3, 0, &[]);
+        w.event(2, "assign", u32::MAX, 0, &[]);
+        w.event(90, "leave", 2, 17, &[]);
+        for r in [0u32, 1, 3] {
+            let (recv_w, sent_w) = (1.25 + r as f64 * 0.01, 1.5);
+            let w_final = 1.0 + recv_w - sent_w;
+            let logged = if break_residual && r == 1 { 0.5 } else { 0.0 };
+            w.event(
+                200 + r as u64,
+                "done",
+                r,
+                50,
+                &[
+                    ("w", w_final),
+                    ("recv_w", recv_w),
+                    ("sent_w", sent_w),
+                    ("rescued_w", 0.1),
+                    ("rescues", 1.0),
+                    ("timeouts", 2.0),
+                    ("ledger_residual", logged),
+                ],
+            );
+        }
+        let sum_w = (1.0 + 1.25 - 1.5) + (1.0 + 1.26 - 1.5) + (1.0 + 1.28 - 1.5);
+        w.event(
+            210,
+            "audit",
+            u32::MAX,
+            50,
+            &[
+                ("world", 4.0),
+                ("survivors", 3.0),
+                ("missing_w", 4.0 - sum_w),
+                ("max_ledger_residual", 0.0),
+                ("spread", 1e-8),
+            ],
+        );
+        path
+    }
+
+    #[test]
+    fn coord_reconciliation_accepts_consistent_and_rejects_corrupt() {
+        let dir = std::env::temp_dir().join(format!("sgp_analyze_{}", std::process::id()));
+        let good = coord_trace(&dir, false);
+        run(&good).expect("consistent trace reconciles");
+        let bad = coord_trace(&dir, true);
+        let err = run(&bad).expect_err("corrupted ledger_residual must fail");
+        assert!(err.to_string().contains("ledger residual mismatch"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn histogram_and_edges_handle_degenerate_input() {
+        print_histogram("empty", "ms", &[]);
+        print_histogram("constant", "ms", &[1.0, 1.0, 1.0]);
+        print_histogram("nan-only", "ms", &[f64::NAN]);
+        print_edges(&BTreeMap::new());
+        let mut edges = BTreeMap::new();
+        edges.insert((0u32, 1u32), EdgeStat { msgs: 3, bytes: 300 });
+        print_edges(&edges);
+    }
+}

@@ -1,0 +1,395 @@
+//! Unified observability: structured tracing, per-node/per-edge gossip
+//! metrics, and hot-path phase profiling across the simulator and the
+//! real deployment.
+//!
+//! Three pieces, one schema:
+//!
+//! * **Recorders** (this module) — [`ObsSink`], the event-sink trait the
+//!   runtime surfaces call into, plus two concrete ring-buffered
+//!   implementations: [`EngineObs`] (attached to
+//!   [`crate::gossip::PushSumEngine`] via `set_obs`) and [`TimingObs`]
+//!   (attached to [`crate::net::TimingSim`]). Every counter is
+//!   pre-allocated at construction — per-node arrays, a flat per-edge
+//!   matrix, a fixed-capacity round ring — so recording on the gossip
+//!   hot path performs **zero heap allocations** after warm-up
+//!   (`rust/tests/alloc_regression.rs` runs with an `EngineObs`
+//!   attached).
+//! * **Trace schema** ([`trace`]) — the versioned JSONL format every
+//!   surface emits (engine/sim recorders, the deployment coordinator's
+//!   membership log, worker-side traces) and the parser built on the
+//!   repo's own [`crate::model::json`] reader.
+//! * **Analysis** ([`analyze`]) — the `repro trace` report: per-node
+//!   summaries, straggler ranking, bytes-per-edge matrix, mass-ledger
+//!   reconciliation, and a round-latency histogram.
+//!
+//! # Zero-allocation constraints
+//!
+//! The engine's merge phase runs with an `EngineObs` borrowed out of the
+//! engine (`Option<Box<_>>::take`, a move, not a clone); per-message
+//! recording is two array index bumps, and the per-round record is a
+//! `Copy` struct written into a pre-filled ring slot (oldest overwritten
+//! once full). Phase timers use [`std::time::Instant`] (vDSO
+//! `clock_gettime` — no allocation) and are only read when a sink is
+//! attached, so an un-instrumented engine pays a single branch per round.
+
+pub mod analyze;
+pub mod trace;
+
+/// The three phases of one sharded gossip round (see
+/// ARCHITECTURE.md §3): parallel compute+send, the deterministic ordered
+/// merge, parallel aggregate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Phase 1 — per-shard local compute + send into shard outboxes.
+    Compute,
+    /// Phase 2 — ordered merge on the coordinating thread.
+    Merge,
+    /// Phase 3 — per-shard aggregation of due deliveries.
+    Aggregate,
+}
+
+impl Phase {
+    /// Stable lowercase label used in trace output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Merge => "merge",
+            Phase::Aggregate => "aggregate",
+        }
+    }
+}
+
+/// One gossip round's observed counters and span timers. Plain `Copy`
+/// data: writing a record is a slot assignment, never an allocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRecord {
+    /// Iteration index the round ran at.
+    pub k: u64,
+    /// Messages put on the wire this round (delivered + dropped; rescued
+    /// sends never transmit).
+    pub msgs: u64,
+    /// Messages dropped into the loss ledger this round.
+    pub dropped: u64,
+    /// Messages rescued (re-absorbed at the sender) this round.
+    pub rescued: u64,
+    /// Encoded wire bytes for this round's messages
+    /// (`msgs × Compression::encoded_bytes`).
+    pub wire_bytes: u64,
+    /// ℓ1 norm of all error-feedback bank numerators after the round
+    /// (0 under identity compression).
+    pub bank_l1: f64,
+    /// Push-sum weight held across all error-feedback banks after the
+    /// round.
+    pub bank_w: f64,
+    /// Wall nanoseconds of the compute+send phase.
+    pub compute_ns: u64,
+    /// Wall nanoseconds of the ordered merge phase.
+    pub merge_ns: u64,
+    /// Wall nanoseconds of the aggregate phase.
+    pub aggregate_ns: u64,
+    /// Nanoseconds the coordinating thread spent blocked in pool
+    /// dispatch/barrier handoffs this round (0 on the sequential path).
+    pub pool_wait_ns: u64,
+}
+
+/// The event-sink interface the runtime surfaces call into. Every method
+/// takes plain scalars or a borrowed `Copy` record and defaults to a
+/// no-op, so implementations choose what to retain and callers pay
+/// nothing for events a sink ignores. Implementations must not allocate
+/// in these callbacks — they run on the gossip hot path under the
+/// zero-allocation regression gate.
+pub trait ObsSink {
+    /// One gossip round completed.
+    fn on_round(&mut self, rec: &RoundRecord) {
+        let _ = rec;
+    }
+
+    /// One message entered a mailbox (merge phase): `from → to`,
+    /// `wire_bytes` encoded bytes.
+    fn on_send(&mut self, from: usize, to: usize, wire_bytes: u64) {
+        let _ = (from, to, wire_bytes);
+    }
+
+    /// One message was dropped into the loss ledger (merge phase).
+    fn on_drop(&mut self, from: usize, to: usize, wire_bytes: u64) {
+        let _ = (from, to, wire_bytes);
+    }
+
+    /// One timing-simulator iteration advanced: the makespan after it and
+    /// the node whose clock is the new maximum (the straggler).
+    fn on_iter(&mut self, k: u64, makespan_s: f64, slowest: usize) {
+        let _ = (k, makespan_s, slowest);
+    }
+}
+
+/// Per-edge tracking is a dense `n × n` matrix; above this node count it
+/// is skipped (per-node counters remain) so attaching observability to a
+/// large-N sweep engine cannot allocate hundreds of megabytes.
+pub const MAX_EDGE_TRACK_NODES: usize = 512;
+
+/// Ring-buffered recorder for [`crate::gossip::PushSumEngine`]: per-node
+/// send/receive/drop counters, a per-edge byte/message matrix (for
+/// `n ≤` [`MAX_EDGE_TRACK_NODES`]), and the last `cap` [`RoundRecord`]s.
+/// All storage is allocated in [`EngineObs::new`]; recording never
+/// allocates.
+#[derive(Clone, Debug)]
+pub struct EngineObs {
+    n: usize,
+    /// Messages sent per source node (whole run).
+    sent_msgs: Vec<u64>,
+    /// Messages received per destination node (whole run).
+    recv_msgs: Vec<u64>,
+    /// Messages dropped per source node (whole run).
+    drop_msgs: Vec<u64>,
+    /// Flat `n × n` wire-byte matrix (`from * n + to`); empty when edge
+    /// tracking is disabled.
+    edge_bytes: Vec<u64>,
+    /// Flat `n × n` message-count matrix; empty when edge tracking is
+    /// disabled.
+    edge_msgs: Vec<u64>,
+    /// Fixed-capacity round ring (pre-filled; oldest overwritten).
+    ring: Vec<RoundRecord>,
+    head: usize,
+    len: usize,
+    /// Whole-run totals (survive ring wrap-around).
+    total_rounds: u64,
+    total_msgs: u64,
+    total_dropped: u64,
+    total_rescued: u64,
+    total_wire_bytes: u64,
+}
+
+impl EngineObs {
+    /// A recorder for `n` nodes keeping the most recent `cap` round
+    /// records (`cap` is clamped to ≥ 1). This is the only allocating
+    /// call; everything after is index arithmetic.
+    pub fn new(n: usize, cap: usize) -> Self {
+        let cap = cap.max(1);
+        let edges = if n <= MAX_EDGE_TRACK_NODES { n * n } else { 0 };
+        Self {
+            n,
+            sent_msgs: vec![0; n],
+            recv_msgs: vec![0; n],
+            drop_msgs: vec![0; n],
+            edge_bytes: vec![0; edges],
+            edge_msgs: vec![0; edges],
+            ring: vec![RoundRecord::default(); cap],
+            head: 0,
+            len: 0,
+            total_rounds: 0,
+            total_msgs: 0,
+            total_dropped: 0,
+            total_rescued: 0,
+            total_wire_bytes: 0,
+        }
+    }
+
+    /// Node count this recorder was sized for.
+    pub fn nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the per-edge matrix is being tracked
+    /// (`n ≤` [`MAX_EDGE_TRACK_NODES`]).
+    pub fn tracks_edges(&self) -> bool {
+        !self.edge_msgs.is_empty()
+    }
+
+    /// Wire bytes recorded on the edge `from → to` (0 when edge tracking
+    /// is disabled).
+    pub fn edge_bytes(&self, from: usize, to: usize) -> u64 {
+        if self.tracks_edges() { self.edge_bytes[from * self.n + to] } else { 0 }
+    }
+
+    /// Messages recorded on the edge `from → to` (0 when edge tracking is
+    /// disabled).
+    pub fn edge_msgs(&self, from: usize, to: usize) -> u64 {
+        if self.tracks_edges() { self.edge_msgs[from * self.n + to] } else { 0 }
+    }
+
+    /// Per-node `(sent, received, dropped)` message counts.
+    pub fn node_counts(&self, node: usize) -> (u64, u64, u64) {
+        (self.sent_msgs[node], self.recv_msgs[node], self.drop_msgs[node])
+    }
+
+    /// Whole-run totals `(rounds, msgs, dropped, rescued, wire_bytes)` —
+    /// these survive ring wrap-around.
+    pub fn totals(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.total_rounds,
+            self.total_msgs,
+            self.total_dropped,
+            self.total_rescued,
+            self.total_wire_bytes,
+        )
+    }
+
+    /// The retained round records, oldest first (at most `cap`).
+    pub fn rounds(&self) -> impl Iterator<Item = &RoundRecord> {
+        let cap = self.ring.len();
+        (0..self.len).map(move |i| &self.ring[(self.head + i) % cap])
+    }
+}
+
+impl ObsSink for EngineObs {
+    fn on_round(&mut self, rec: &RoundRecord) {
+        let cap = self.ring.len();
+        if self.len < cap {
+            self.ring[(self.head + self.len) % cap] = *rec;
+            self.len += 1;
+        } else {
+            self.ring[self.head] = *rec;
+            self.head = (self.head + 1) % cap;
+        }
+        self.total_rounds += 1;
+        self.total_msgs += rec.msgs;
+        self.total_dropped += rec.dropped;
+        self.total_rescued += rec.rescued;
+        self.total_wire_bytes += rec.wire_bytes;
+    }
+
+    fn on_send(&mut self, from: usize, to: usize, wire_bytes: u64) {
+        self.sent_msgs[from] += 1;
+        self.recv_msgs[to] += 1;
+        if !self.edge_msgs.is_empty() {
+            let e = from * self.n + to;
+            self.edge_msgs[e] += 1;
+            self.edge_bytes[e] += wire_bytes;
+        }
+    }
+
+    fn on_drop(&mut self, from: usize, to: usize, wire_bytes: u64) {
+        // A dropped message was on the wire: it counts for the sender and
+        // the edge, but never reached the receiver.
+        self.sent_msgs[from] += 1;
+        self.drop_msgs[from] += 1;
+        if !self.edge_msgs.is_empty() {
+            let e = from * self.n + to;
+            self.edge_msgs[e] += 1;
+            self.edge_bytes[e] += wire_bytes;
+        }
+    }
+}
+
+/// One observed timing-simulator iteration (`Copy`, ring-stored).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterStat {
+    /// Iteration index.
+    pub k: u64,
+    /// Simulated makespan (max node clock) after the iteration, seconds.
+    pub makespan_s: f64,
+    /// Node whose clock is the maximum — the iteration's straggler.
+    pub slowest: u32,
+}
+
+/// Ring-buffered recorder for [`crate::net::TimingSim`]: the last `cap`
+/// per-iteration makespans plus a whole-run per-node straggler count
+/// (how often each node's clock was the round maximum). Pre-allocated;
+/// recording never allocates.
+#[derive(Clone, Debug)]
+pub struct TimingObs {
+    ring: Vec<IterStat>,
+    head: usize,
+    len: usize,
+    /// Per-node count of iterations where this node was the slowest.
+    slowest_counts: Vec<u64>,
+    total_iters: u64,
+}
+
+impl TimingObs {
+    /// A recorder for `n` nodes keeping the most recent `cap` iteration
+    /// stats (`cap` clamped to ≥ 1).
+    pub fn new(n: usize, cap: usize) -> Self {
+        Self {
+            ring: vec![IterStat::default(); cap.max(1)],
+            head: 0,
+            len: 0,
+            slowest_counts: vec![0; n],
+            total_iters: 0,
+        }
+    }
+
+    /// Iterations recorded over the whole run.
+    pub fn total_iters(&self) -> u64 {
+        self.total_iters
+    }
+
+    /// Per-node straggler counts (iterations where the node's clock was
+    /// the maximum).
+    pub fn slowest_counts(&self) -> &[u64] {
+        &self.slowest_counts
+    }
+
+    /// The retained iteration stats, oldest first.
+    pub fn iters(&self) -> impl Iterator<Item = &IterStat> {
+        let cap = self.ring.len();
+        (0..self.len).map(move |i| &self.ring[(self.head + i) % cap])
+    }
+}
+
+impl ObsSink for TimingObs {
+    fn on_iter(&mut self, k: u64, makespan_s: f64, slowest: usize) {
+        let rec = IterStat { k, makespan_s, slowest: slowest as u32 };
+        let cap = self.ring.len();
+        if self.len < cap {
+            self.ring[(self.head + self.len) % cap] = rec;
+            self.len += 1;
+        } else {
+            self.ring[self.head] = rec;
+            self.head = (self.head + 1) % cap;
+        }
+        if slowest < self.slowest_counts.len() {
+            self.slowest_counts[slowest] += 1;
+        }
+        self.total_iters += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_obs_ring_overwrites_oldest_and_totals_survive() {
+        let mut o = EngineObs::new(4, 3);
+        for k in 0..5u64 {
+            o.on_round(&RoundRecord { k, msgs: 1, wire_bytes: 10, ..Default::default() });
+        }
+        let ks: Vec<u64> = o.rounds().map(|r| r.k).collect();
+        assert_eq!(ks, vec![2, 3, 4], "ring keeps the newest cap records");
+        let (rounds, msgs, _, _, bytes) = o.totals();
+        assert_eq!((rounds, msgs, bytes), (5, 5, 50), "totals cover all rounds");
+    }
+
+    #[test]
+    fn engine_obs_edge_matrix_and_node_counts() {
+        let mut o = EngineObs::new(3, 8);
+        o.on_send(0, 1, 100);
+        o.on_send(0, 1, 100);
+        o.on_send(2, 0, 100);
+        o.on_drop(1, 2, 100);
+        assert_eq!(o.edge_msgs(0, 1), 2);
+        assert_eq!(o.edge_bytes(0, 1), 200);
+        assert_eq!(o.node_counts(0), (2, 1, 0));
+        assert_eq!(o.node_counts(1), (1, 2, 1), "drops count as sent, not received");
+    }
+
+    #[test]
+    fn edge_tracking_disables_above_the_cap() {
+        let o = EngineObs::new(MAX_EDGE_TRACK_NODES + 1, 4);
+        assert!(!o.tracks_edges());
+        assert_eq!(o.edge_bytes(0, 1), 0);
+    }
+
+    #[test]
+    fn timing_obs_counts_stragglers() {
+        let mut o = TimingObs::new(3, 2);
+        o.on_iter(0, 1.0, 2);
+        o.on_iter(1, 2.0, 2);
+        o.on_iter(2, 3.0, 0);
+        assert_eq!(o.slowest_counts(), &[1, 0, 2]);
+        assert_eq!(o.total_iters(), 3);
+        let ks: Vec<u64> = o.iters().map(|s| s.k).collect();
+        assert_eq!(ks, vec![1, 2]);
+    }
+}

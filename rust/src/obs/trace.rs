@@ -1,0 +1,438 @@
+//! The versioned JSONL trace schema shared by every runtime surface.
+//!
+//! A trace file is newline-delimited JSON. The **first line is a meta
+//! record** identifying the schema and the run:
+//!
+//! ```json
+//! {"schema":"sgp-trace","v":1,"source":"coord","world":4,"rounds":500}
+//! ```
+//!
+//! Every following line is an **event**: `t_ms` (milliseconds since the
+//! source started), `kind` (a fixed identifier — see the taxonomy in
+//! ARCHITECTURE.md §6), `rank` (the node the event is about;
+//! `4294967295` = `u32::MAX` marks run-global events), `round` (the
+//! gossip round it refers to), plus kind-specific numeric fields.
+//! Numbers are written exactly: integral values as integers, everything
+//! else in shortest-round-trip `{:e}` form, non-finite values as `null`
+//! (the repo's [`crate::model::json`] parser rejects bare `NaN`). The
+//! reader maps `null` back to `NaN`, so a parsed trace reproduces the
+//! emitted `f64` bit patterns.
+//!
+//! Versioning: `v` is bumped whenever an existing field changes meaning
+//! or type. Adding a new event kind or a new numeric field is *not* a
+//! version bump — readers ignore fields they don't know. The parser in
+//! this module rejects any version other than [`TRACE_SCHEMA_VERSION`].
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{EngineObs, TimingObs};
+use crate::model::json::Json;
+
+/// Version of the JSONL trace schema this build emits and accepts.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Version of the coordinator's `summary.json` schema (`schema_version`
+/// field). Tracked separately from the trace schema: the summary is a
+/// single document with its own shape.
+pub const SUMMARY_SCHEMA_VERSION: u64 = 1;
+
+/// Rank value marking an event that is about the run, not one node.
+pub const GLOBAL_RANK: u32 = u32::MAX;
+
+/// Render a float for the trace: integral values as integers (exact for
+/// |v| ≤ 2⁵³), everything else in shortest-round-trip `{:e}` form,
+/// non-finite as `null`.
+fn push_num(out: &mut String, v: f64) {
+    if !v.is_finite() {
+        out.push_str("null");
+    } else if v.fract() == 0.0 && v.abs() <= 9.0e15 && !(v == 0.0 && v.is_sign_negative()) {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v:e}");
+    }
+}
+
+/// Escape a string for a JSON literal (kinds/sources are plain
+/// identifiers, but the writer stays safe for arbitrary input).
+fn push_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Line-buffered JSONL trace writer. Every [`TraceWriter::event`] call
+/// writes one complete line and flushes it, so a SIGKILLed process
+/// leaves a readable prefix. A disabled writer ([`TraceWriter::disabled`]
+/// or one whose file failed to open) swallows events, letting call sites
+/// emit unconditionally.
+pub struct TraceWriter {
+    file: Option<BufWriter<File>>,
+    line: String,
+}
+
+impl TraceWriter {
+    /// Create `path` (and its parent directory) and write the meta line.
+    pub fn create(path: &Path, source: &str, world: usize, rounds: u64) -> io::Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut w = Self { file: Some(BufWriter::new(File::create(path)?)), line: String::new() };
+        w.line.clear();
+        w.line.push_str("{\"schema\":\"sgp-trace\",\"v\":");
+        let _ = write!(w.line, "{TRACE_SCHEMA_VERSION},\"source\":");
+        push_str(&mut w.line, source);
+        let _ = write!(w.line, ",\"world\":{world},\"rounds\":{rounds}}}");
+        w.write_line()?;
+        Ok(w)
+    }
+
+    /// A writer that discards everything (no file, no I/O).
+    pub fn disabled() -> Self {
+        Self { file: None, line: String::new() }
+    }
+
+    /// Whether events are actually being written.
+    pub fn is_enabled(&self) -> bool {
+        self.file.is_some()
+    }
+
+    /// Append one event line. `rank == GLOBAL_RANK` marks a run-global
+    /// event; `extras` are kind-specific numeric fields (non-finite
+    /// values are written as `null`). Write errors disable the writer
+    /// (first error is reported on stderr) — tracing must never take
+    /// down the run it observes.
+    pub fn event(&mut self, t_ms: u64, kind: &str, rank: u32, round: u64, extras: &[(&str, f64)]) {
+        if self.file.is_none() {
+            return;
+        }
+        let mut s = std::mem::take(&mut self.line);
+        s.clear();
+        let _ = write!(s, "{{\"t_ms\":{t_ms},\"kind\":");
+        push_str(&mut s, kind);
+        let _ = write!(s, ",\"rank\":{rank},\"round\":{round}");
+        for (key, v) in extras {
+            s.push(',');
+            push_str(&mut s, key);
+            s.push(':');
+            push_num(&mut s, *v);
+        }
+        s.push('}');
+        self.line = s;
+        if let Err(e) = self.write_line() {
+            eprintln!("trace: write failed ({e}); disabling trace output");
+            self.file = None;
+        }
+    }
+
+    fn write_line(&mut self) -> io::Result<()> {
+        if let Some(f) = self.file.as_mut() {
+            f.write_all(self.line.as_bytes())?;
+            f.write_all(b"\n")?;
+            f.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// The parsed meta (first) line of a trace file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    /// Which surface emitted the trace (`"engine"`, `"sim"`, `"coord"`,
+    /// `"worker"`).
+    pub source: String,
+    /// Schema version (always [`TRACE_SCHEMA_VERSION`] after parsing).
+    pub version: u64,
+    /// Number of nodes in the run, when the source knew it.
+    pub world: Option<usize>,
+    /// Planned round/iteration count, when the source knew it.
+    pub rounds: Option<u64>,
+}
+
+/// One parsed trace event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Milliseconds since the source started.
+    pub t_ms: u64,
+    /// Event kind identifier.
+    pub kind: String,
+    /// Node the event is about (`None` for run-global events).
+    pub rank: Option<u32>,
+    /// Gossip round the event refers to.
+    pub round: Option<u64>,
+    /// Kind-specific numeric fields (JSON `null` parses to `NaN`).
+    pub num: BTreeMap<String, f64>,
+}
+
+impl TraceEvent {
+    /// Kind-specific numeric field lookup.
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.num.get(key).copied()
+    }
+}
+
+/// A fully parsed and validated trace.
+#[derive(Clone, Debug)]
+pub struct TraceFile {
+    /// The meta line.
+    pub meta: TraceMeta,
+    /// Events in file order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceFile {
+    /// Read and parse `path`, validating schema version and id ranges.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing trace {}", path.display()))
+    }
+
+    /// Parse trace text: the first non-empty line must be an
+    /// `sgp-trace` v[`TRACE_SCHEMA_VERSION`] meta record; every later
+    /// non-empty line must be an event whose `rank` is `< world` and
+    /// whose `round` is `≤ rounds` (when the meta declared them).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let (meta_no, meta_line) = match lines.next() {
+            Some(x) => x,
+            None => bail!("empty trace: no meta line"),
+        };
+        let mv = Json::parse(meta_line)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", meta_no + 1))?;
+        match mv.get("schema").and_then(Json::as_str) {
+            Some("sgp-trace") => {}
+            Some(other) => bail!("line {}: unknown schema {other:?}", meta_no + 1),
+            None => bail!("line {}: not an sgp-trace meta line (missing \"schema\")", meta_no + 1),
+        }
+        let version = mv
+            .get("v")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("line {}: meta has no version field \"v\"", meta_no + 1))?
+            as u64;
+        if version != TRACE_SCHEMA_VERSION {
+            bail!(
+                "line {}: unsupported trace schema version {version} (this build reads v{TRACE_SCHEMA_VERSION})",
+                meta_no + 1
+            );
+        }
+        let meta = TraceMeta {
+            source: mv.get("source").and_then(Json::as_str).unwrap_or("unknown").to_string(),
+            version,
+            world: mv.get("world").and_then(Json::as_usize),
+            rounds: mv.get("rounds").and_then(Json::as_f64).map(|r| r as u64),
+        };
+
+        let mut events = Vec::new();
+        for (no, line) in lines {
+            let v = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", no + 1))?;
+            let obj = v
+                .as_obj()
+                .with_context(|| format!("line {}: event is not a JSON object", no + 1))?;
+            let kind = v
+                .get("kind")
+                .and_then(Json::as_str)
+                .with_context(|| format!("line {}: event has no \"kind\"", no + 1))?
+                .to_string();
+            let t_ms = v
+                .get("t_ms")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("line {}: event has no numeric \"t_ms\"", no + 1))?
+                as u64;
+            let rank = match v.get("rank").and_then(Json::as_f64) {
+                None => None,
+                Some(r) if r as u32 == GLOBAL_RANK => None,
+                Some(r) => {
+                    let r = r as u32;
+                    if let Some(world) = meta.world {
+                        if (r as usize) >= world {
+                            bail!("line {}: rank {r} out of range (world {world})", no + 1);
+                        }
+                    }
+                    Some(r)
+                }
+            };
+            let round = v.get("round").and_then(Json::as_f64).map(|r| r as u64);
+            if let (Some(r), Some(max)) = (round, meta.rounds) {
+                if r > max {
+                    bail!("line {}: round {r} out of range (rounds {max})", no + 1);
+                }
+            }
+            let mut num = BTreeMap::new();
+            for (key, val) in obj {
+                if matches!(key.as_str(), "t_ms" | "kind" | "rank" | "round") {
+                    continue;
+                }
+                match val {
+                    Json::Num(x) => {
+                        num.insert(key.clone(), *x);
+                    }
+                    Json::Null => {
+                        num.insert(key.clone(), f64::NAN);
+                    }
+                    _ => {} // readers ignore fields they don't know
+                }
+            }
+            events.push(TraceEvent { t_ms, kind, rank, round, num });
+        }
+        Ok(Self { meta, events })
+    }
+}
+
+/// Write an engine run's recorder out as a trace (source `"engine"`):
+/// one `round` event per retained [`super::RoundRecord`] (counters, bank
+/// norms, phase timers), one `edge` event per active edge, and a
+/// run-global `totals` event. `rounds` is the number of iterations the
+/// run executed.
+pub fn write_engine_trace(path: &Path, obs: &EngineObs, rounds: u64) -> Result<()> {
+    let n = obs.nodes();
+    let mut w = TraceWriter::create(path, "engine", n, rounds)
+        .with_context(|| format!("creating trace {}", path.display()))?;
+    let mut t_ns: u64 = 0;
+    for rec in obs.rounds() {
+        t_ns += rec.compute_ns + rec.merge_ns + rec.aggregate_ns;
+        w.event(
+            t_ns / 1_000_000,
+            "round",
+            GLOBAL_RANK,
+            rec.k,
+            &[
+                ("msgs", rec.msgs as f64),
+                ("dropped", rec.dropped as f64),
+                ("rescued", rec.rescued as f64),
+                ("wire_bytes", rec.wire_bytes as f64),
+                ("bank_l1", rec.bank_l1),
+                ("bank_w", rec.bank_w),
+                ("compute_ns", rec.compute_ns as f64),
+                ("merge_ns", rec.merge_ns as f64),
+                ("aggregate_ns", rec.aggregate_ns as f64),
+                ("pool_wait_ns", rec.pool_wait_ns as f64),
+            ],
+        );
+    }
+    if obs.tracks_edges() {
+        for from in 0..n {
+            for to in 0..n {
+                let msgs = obs.edge_msgs(from, to);
+                if msgs > 0 {
+                    w.event(
+                        t_ns / 1_000_000,
+                        "edge",
+                        from as u32,
+                        rounds,
+                        &[
+                            ("to", to as f64),
+                            ("msgs", msgs as f64),
+                            ("bytes", obs.edge_bytes(from, to) as f64),
+                        ],
+                    );
+                }
+            }
+        }
+    }
+    let (total_rounds, msgs, dropped, rescued, wire_bytes) = obs.totals();
+    w.event(
+        t_ns / 1_000_000,
+        "totals",
+        GLOBAL_RANK,
+        rounds,
+        &[
+            ("rounds", total_rounds as f64),
+            ("msgs", msgs as f64),
+            ("dropped", dropped as f64),
+            ("rescued", rescued as f64),
+            ("wire_bytes", wire_bytes as f64),
+        ],
+    );
+    Ok(())
+}
+
+/// Write a timing-simulator recorder out as a trace (source `"sim"`):
+/// one `iter` event per retained [`super::IterStat`] (rank = that
+/// iteration's straggler), one `straggler` event per node with its
+/// whole-run slowest count, and a run-global `totals` event.
+pub fn write_sim_trace(path: &Path, obs: &TimingObs, iters: u64) -> Result<()> {
+    let n = obs.slowest_counts().len();
+    let mut w = TraceWriter::create(path, "sim", n, iters)
+        .with_context(|| format!("creating trace {}", path.display()))?;
+    for st in obs.iters() {
+        w.event(
+            (st.makespan_s * 1000.0) as u64,
+            "iter",
+            st.slowest,
+            st.k,
+            &[("makespan_s", st.makespan_s)],
+        );
+    }
+    let last_ms = obs
+        .iters()
+        .last()
+        .map(|st| (st.makespan_s * 1000.0) as u64)
+        .unwrap_or(0);
+    for (node, count) in obs.slowest_counts().iter().enumerate() {
+        if *count > 0 {
+            w.event(last_ms, "straggler", node as u32, iters, &[("count", *count as f64)]);
+        }
+    }
+    w.event(last_ms, "totals", GLOBAL_RANK, iters, &[("iters", obs.total_iters() as f64)]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip_with_special_values() {
+        let dir = std::env::temp_dir().join(format!("sgp_trace_rt_{}", std::process::id()));
+        let path = dir.join("t.jsonl");
+        let mut w = TraceWriter::create(&path, "engine", 4, 10).unwrap();
+        w.event(5, "round", GLOBAL_RANK, 3, &[("a", 1.5), ("b", f64::NAN), ("c", -3.0)]);
+        w.event(6, "edge", 2, 10, &[("bytes", 1e18)]);
+        drop(w);
+        let tf = TraceFile::load(&path).unwrap();
+        assert_eq!(tf.meta.source, "engine");
+        assert_eq!(tf.meta.world, Some(4));
+        assert_eq!(tf.events.len(), 2);
+        assert_eq!(tf.events[0].rank, None);
+        assert_eq!(tf.events[0].round, Some(3));
+        assert_eq!(tf.events[0].num("a"), Some(1.5));
+        assert!(tf.events[0].num("b").unwrap().is_nan(), "null maps back to NaN");
+        assert_eq!(tf.events[1].rank, Some(2));
+        assert_eq!(tf.events[1].num("bytes"), Some(1e18));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parser_rejects_bad_version_rank_and_round() {
+        let bad_version = "{\"schema\":\"sgp-trace\",\"v\":99,\"source\":\"x\"}\n";
+        assert!(TraceFile::parse(bad_version).is_err());
+        let bad_rank = "{\"schema\":\"sgp-trace\",\"v\":1,\"source\":\"x\",\"world\":2,\"rounds\":5}\n\
+                        {\"t_ms\":0,\"kind\":\"join\",\"rank\":2,\"round\":0}\n";
+        assert!(TraceFile::parse(bad_rank).is_err());
+        let bad_round = "{\"schema\":\"sgp-trace\",\"v\":1,\"source\":\"x\",\"world\":2,\"rounds\":5}\n\
+                         {\"t_ms\":0,\"kind\":\"join\",\"rank\":0,\"round\":6}\n";
+        assert!(TraceFile::parse(bad_round).is_err());
+        assert!(TraceFile::parse("{\"v\":1}\n").is_err(), "meta must carry the schema tag");
+        assert!(TraceFile::parse("").is_err(), "empty trace is an error");
+    }
+}

@@ -32,7 +32,9 @@
 //! via [`crate::gossip::PushSumEngine::set_pool`].
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 thread_local! {
     /// Set while the current thread is executing a pool job. A nested
@@ -113,6 +115,12 @@ pub struct Pool {
     dispatch: Mutex<()>,
     workers: usize,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Barrier dispatches completed (multi-job rounds only — inline
+    /// `jobs ≤ 1` calls never touch the barrier).
+    dispatches: AtomicU64,
+    /// Total nanoseconds the dispatching threads spent inside the
+    /// barrier window (publish → all workers done), cumulative.
+    run_ns: AtomicU64,
 }
 
 impl Pool {
@@ -140,12 +148,29 @@ impl Pool {
                     .expect("spawning pool worker")
             })
             .collect();
-        Self { inner, dispatch: Mutex::new(()), workers, handles }
+        Self {
+            inner,
+            dispatch: Mutex::new(()),
+            workers,
+            handles,
+            dispatches: AtomicU64::new(0),
+            run_ns: AtomicU64::new(0),
+        }
     }
 
     /// Number of workers in this pool.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Observability counters: `(dispatches, total_barrier_ns)` — how many
+    /// multi-job rounds this pool has dispatched and the cumulative wall
+    /// time its dispatching threads spent in the barrier window. Both are
+    /// monotone (relaxed atomics), so callers diff two snapshots to meter
+    /// a span; on a shared (e.g. global) pool the diff upper-bounds the
+    /// caller's own share.
+    pub fn dispatch_stats(&self) -> (u64, u64) {
+        (self.dispatches.load(Ordering::Relaxed), self.run_ns.load(Ordering::Relaxed))
     }
 
     /// Execute `f(0) … f(jobs-1)` across the pool and wait for all of them:
@@ -178,6 +203,7 @@ impl Pool {
              coordinating thread"
         );
         let _turn = lock(&self.dispatch);
+        let t0 = Instant::now();
         // SAFETY: the erased reference is only callable by workers woken
         // for this epoch, and this call does not return until every worker
         // has reported done — the real borrow outlives every call.
@@ -204,6 +230,8 @@ impl Pool {
         st.job = None;
         let panicked = st.panicked;
         drop(st);
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.run_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         if panicked {
             panic!("a pool worker job panicked");
         }
@@ -397,6 +425,22 @@ mod tests {
             total.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn dispatch_stats_count_multi_job_rounds_only() {
+        let pool = Pool::new(2);
+        let (d0, ns0) = pool.dispatch_stats();
+        assert_eq!((d0, ns0), (0, 0), "fresh pool starts at zero");
+        pool.run(0, &|_| {});
+        pool.run(1, &|_| {});
+        assert_eq!(pool.dispatch_stats().0, 0, "inline paths skip the barrier");
+        for _ in 0..3 {
+            pool.run(4, &|_| {});
+        }
+        let (d, ns) = pool.dispatch_stats();
+        assert_eq!(d, 3, "one dispatch per multi-job round");
+        assert!(ns > 0, "barrier wall time accumulates");
     }
 
     #[test]

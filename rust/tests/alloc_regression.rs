@@ -9,12 +9,18 @@
 //! The whole scenario lives in ONE `#[test]` so no concurrently running
 //! test in this binary can allocate while a steady-state window is being
 //! measured.
+//!
+//! Every engine below runs with an [`EngineObs`] recorder attached: the
+//! observability layer is part of the hot path's zero-alloc contract
+//! (ring slots are `Copy`, counters are pre-sized, timers are vDSO
+//! clock reads), so it must be ON while the window is measured.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
+use sgp::obs::EngineObs;
 use sgp::runtime::pool::Pool;
 use sgp::topology::{Schedule, TopologyKind};
 
@@ -72,6 +78,7 @@ fn dense_gossip_round_is_allocation_free_after_warmup() {
         for kind in [TopologyKind::OnePeerExp, TopologyKind::TwoPeerExp] {
             let sched = Schedule::new(kind, n);
             let mut eng = PushSumEngine::new(init(n, dim), delay, false);
+            eng.set_obs(Some(Box::new(EngineObs::new(n, 64))));
             let mut k = 0u64;
             for _ in 0..warm {
                 eng.step(k, &sched);
@@ -96,6 +103,7 @@ fn dense_gossip_round_is_allocation_free_after_warmup() {
         let pool = Arc::new(Pool::new(threads));
         let sched = Schedule::new(TopologyKind::OnePeerExp, n);
         let mut eng = PushSumEngine::new(init(n, dim), 1, false);
+        eng.set_obs(Some(Box::new(EngineObs::new(n, 64))));
         eng.set_pool(Some(pool));
         let exec = ExecPolicy::parallel(4);
         let mut k = 0u64;
@@ -121,6 +129,7 @@ fn dense_gossip_round_is_allocation_free_after_warmup() {
     let sched = Schedule::new(TopologyKind::OnePeerExp, n);
     let spec = Compression::TopK { den: 4 };
     let mut eng = PushSumEngine::new(init(n, dim), 0, false);
+    eng.set_obs(Some(Box::new(EngineObs::new(n, 64))));
     let mut k = 0u64;
     for _ in 0..warm {
         eng.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);

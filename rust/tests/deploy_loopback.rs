@@ -311,4 +311,29 @@ fn loopback_kill_one_of_four_workers_matches_the_simulator() {
         "deployed final error {deployed_err} disagrees with the simulator's {}",
         sim.final_err
     );
+
+    // `repro trace` over the membership log must identify the killed
+    // rank from its heartbeat/membership transitions (a `leave` with no
+    // `done`) and reconcile the dropped mass against the coordinator's
+    // ledger audit to 1e-9.
+    let out = Command::new(BIN)
+        .arg("trace")
+        .arg(&log)
+        .output()
+        .expect("running repro trace");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "repro trace failed ({}):\n{stdout}\n{stderr}",
+        out.status
+    );
+    assert!(
+        stdout.contains("killed ranks") && stdout.contains("[2]"),
+        "trace analysis must single out the killed rank:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("ledger reconciliation: OK"),
+        "trace analysis must reconcile the mass ledger:\n{stdout}"
+    );
 }

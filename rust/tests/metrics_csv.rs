@@ -1,0 +1,130 @@
+//! Regression tests for the `metrics::RunResult` CSV emitters: exact
+//! headers (the plotting pipeline keys on column names), row counts, a
+//! numeric round-trip through `f64::parse` within the emitters' fixed
+//! precision, and NaN handling (an empty run's NaN loss must emit a
+//! token `f64::parse` accepts, not poison the file).
+
+use std::path::PathBuf;
+
+use sgp::metrics::{EvalRecord, IterRecord, RunResult};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sgp_metrics_csv_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn eval(iter: u64, val_loss: f64, consensus: f64) -> EvalRecord {
+    EvalRecord {
+        iter,
+        epoch: iter as f64 / 16.0,
+        sim_time_s: iter as f64 * 0.25,
+        val_loss,
+        val_metric: 0.5,
+        node_metric_min: 0.4,
+        node_metric_mean: 0.5,
+        node_metric_max: 0.6,
+        consensus_mean: consensus,
+        consensus_min: consensus * 0.5,
+        consensus_max: consensus * 2.0,
+    }
+}
+
+#[test]
+fn csv_headers_and_row_counts_are_exact() {
+    let dir = tmp_dir("headers");
+    let mut r = RunResult { label: "hdr".into(), ..Default::default() };
+    for i in 0..3 {
+        r.iters.push(IterRecord {
+            iter: i,
+            epoch: i as f64 / 16.0,
+            train_loss: 2.0 - i as f64 * 0.5,
+            sim_time_s: i as f64 * 0.25,
+            lr: 0.1,
+        });
+    }
+    r.evals.push(eval(0, 2.0, 1e-3));
+    r.evals.push(eval(2, 1.0, 1e-4));
+    r.write_csv(&dir).unwrap();
+
+    let iters = std::fs::read_to_string(dir.join("hdr_iters.csv")).unwrap();
+    let mut lines = iters.lines();
+    assert_eq!(lines.next(), Some("iter,epoch,train_loss,sim_time_s,lr"));
+    assert_eq!(lines.count(), 3, "one row per IterRecord");
+
+    let evals = std::fs::read_to_string(dir.join("hdr_evals.csv")).unwrap();
+    let mut lines = evals.lines();
+    assert_eq!(
+        lines.next(),
+        Some(
+            "iter,epoch,sim_time_s,val_loss,val_metric,node_min,node_mean,node_max,\
+             consensus_mean,consensus_min,consensus_max"
+        )
+    );
+    assert_eq!(lines.count(), 2, "one row per EvalRecord");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn csv_rows_round_trip_within_emitter_precision() {
+    let dir = tmp_dir("roundtrip");
+    let mut r = RunResult { label: "rt".into(), ..Default::default() };
+    r.iters.push(IterRecord {
+        iter: 41,
+        epoch: 2.5625,
+        train_loss: 0.123456,
+        sim_time_s: 10.25,
+        lr: 0.0125,
+    });
+    r.evals.push(eval(41, 0.654321, 3.25e-5));
+    r.write_csv(&dir).unwrap();
+
+    let iters = std::fs::read_to_string(dir.join("rt_iters.csv")).unwrap();
+    let row: Vec<f64> =
+        iters.lines().nth(1).unwrap().split(',').map(|c| c.parse().unwrap()).collect();
+    assert_eq!(row[0], 41.0);
+    assert!((row[1] - 2.5625).abs() < 5e-5, "epoch at {{:.4}} precision");
+    assert!((row[2] - 0.123456).abs() < 5e-7, "train_loss at {{:.6}} precision");
+    assert!((row[3] - 10.25).abs() < 5e-5);
+    assert!((row[4] - 0.0125).abs() < 5e-7);
+
+    let evals = std::fs::read_to_string(dir.join("rt_evals.csv")).unwrap();
+    let row: Vec<f64> =
+        evals.lines().nth(1).unwrap().split(',').map(|c| c.parse().unwrap()).collect();
+    assert_eq!(row.len(), 11, "evals row matches the 11-column header");
+    assert!((row[3] - 0.654321).abs() < 5e-7);
+    // Consensus columns use {:.6e}: relative, not absolute, precision.
+    assert!((row[8] - 3.25e-5).abs() / 3.25e-5 < 1e-6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn csv_nan_cells_stay_parseable() {
+    let dir = tmp_dir("nan");
+    let mut r = RunResult { label: "nan".into(), ..Default::default() };
+    r.iters.push(IterRecord {
+        iter: 0,
+        epoch: 0.0,
+        train_loss: f64::NAN,
+        sim_time_s: 0.0,
+        lr: 0.1,
+    });
+    r.evals.push(eval(0, f64::NAN, f64::NAN));
+    r.write_csv(&dir).unwrap();
+
+    for file in ["nan_iters.csv", "nan_evals.csv"] {
+        let text = std::fs::read_to_string(dir.join(file)).unwrap();
+        let row = text.lines().nth(1).unwrap();
+        assert_eq!(row.lines().count(), 1, "{file}: NaN must not break the row structure");
+        for cell in row.split(',') {
+            let v: f64 = cell
+                .parse()
+                .unwrap_or_else(|e| panic!("{file}: cell `{cell}` unparseable: {e}"));
+            let _ = v; // NaN parses to NaN; finite cells parse to themselves
+        }
+    }
+    let text = std::fs::read_to_string(dir.join("nan_iters.csv")).unwrap();
+    let loss_cell = text.lines().nth(1).unwrap().split(',').nth(2).unwrap();
+    assert!(loss_cell.parse::<f64>().unwrap().is_nan(), "NaN loss must read back as NaN");
+    std::fs::remove_dir_all(&dir).ok();
+}

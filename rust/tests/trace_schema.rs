@@ -1,0 +1,187 @@
+//! Property tests for the JSONL trace schema (`sgp::obs::trace`):
+//! every event the writer emits parses back bit-exactly (seeded
+//! generative sweep in the repo's proptest idiom — generate → check →
+//! report the counterexample seed), id-range validation rejects
+//! out-of-range ranks/rounds, and the real recorders (engine + timing
+//! simulator) produce traces the `repro trace` analyzer accepts.
+
+use std::path::PathBuf;
+
+use sgp::faults::harness::{run_quadratic, FaultRunConfig};
+use sgp::faults::FaultPlan;
+use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
+use sgp::obs::trace::{TraceFile, TraceWriter, GLOBAL_RANK};
+use sgp::obs::{analyze, EngineObs};
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sgp_trace_prop_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Draw one extras value covering the writer's three encodings: the
+/// integer fast path, exponent form, and `null` for non-finite.
+fn arb_value(rng: &mut Pcg) -> f64 {
+    match rng.below(8) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => -0.0,
+        3 => (rng.below(2_000_001) as f64) - 1_000_000.0, // integer path
+        4 => 9.0e15,                                      // integer-path boundary
+        5 => rng.gaussian() * 1e18,                       // exponent form, huge
+        6 => rng.gaussian() * 1e-18,                      // exponent form, tiny
+        _ => rng.gaussian(),
+    }
+}
+
+#[test]
+fn every_emitted_event_parses_back_bit_exactly() {
+    let dir = tmp_dir("roundtrip");
+    let keys = ["w", "recv_w", "bytes", "count", "makespan_s"];
+    for case in 0..50u64 {
+        let mut rng = Pcg::new(31_000 + case);
+        let world = 1 + rng.below(64);
+        let rounds = rng.below(1000) as u64;
+        let n_events = rng.below(40);
+        let path = dir.join(format!("case_{case}.jsonl"));
+        let mut w = TraceWriter::create(&path, "engine", world, rounds).unwrap();
+
+        let mut expect: Vec<(u64, u32, u64, Vec<(usize, f64)>)> = Vec::new();
+        for _ in 0..n_events {
+            let rank =
+                if rng.below(4) == 0 { GLOBAL_RANK } else { rng.below(world) as u32 };
+            let round = if rounds == 0 { 0 } else { rng.below(rounds as usize + 1) as u64 };
+            let t_ms = rng.below(1 << 20) as u64;
+            let extras: Vec<(usize, f64)> =
+                (0..rng.below(4)).map(|i| (i, arb_value(&mut rng))).collect();
+            let named: Vec<(&str, f64)> =
+                extras.iter().map(|(i, v)| (keys[*i], *v)).collect();
+            w.event(t_ms, "round", rank, round, &named);
+            expect.push((t_ms, rank, round, extras));
+        }
+        drop(w);
+
+        let tf = TraceFile::load(&path).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(tf.meta.world, Some(world), "case {case}");
+        assert_eq!(tf.events.len(), expect.len(), "case {case}");
+        for (ev, (t_ms, rank, round, extras)) in tf.events.iter().zip(&expect) {
+            assert_eq!(ev.t_ms, *t_ms, "case {case}");
+            let want_rank = if *rank == GLOBAL_RANK { None } else { Some(*rank) };
+            assert_eq!(ev.rank, want_rank, "case {case}");
+            assert_eq!(ev.round, Some(*round), "case {case}");
+            for (i, orig) in extras {
+                let got = ev.num(keys[*i]).unwrap_or_else(|| {
+                    panic!("case {case}: extras key {} lost", keys[*i])
+                });
+                if orig.is_finite() {
+                    assert_eq!(
+                        got.to_bits(),
+                        orig.to_bits(),
+                        "case {case}: {} = {orig:?} came back as {got:?}",
+                        keys[*i]
+                    );
+                } else {
+                    // Non-finite values are written as JSON null and read
+                    // back as NaN (the repo parser rejects bare NaN/inf).
+                    assert!(got.is_nan(), "case {case}: non-finite must read as NaN");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parser_enforces_rank_and_round_ranges() {
+    for case in 0..30u64 {
+        let mut rng = Pcg::new(32_000 + case);
+        let world = 1 + rng.below(16);
+        let rounds = rng.below(500) as u64;
+        let meta = format!(
+            "{{\"schema\":\"sgp-trace\",\"v\":1,\"source\":\"x\",\
+             \"world\":{world},\"rounds\":{rounds}}}"
+        );
+        let bad_rank = world + rng.below(10);
+        let text = format!(
+            "{meta}\n{{\"t_ms\":0,\"kind\":\"e\",\"rank\":{bad_rank},\"round\":0}}\n"
+        );
+        let err = TraceFile::parse(&text).expect_err("rank ≥ world must be rejected");
+        assert!(err.to_string().contains("rank"), "case {case}: {err}");
+
+        let bad_round = rounds + 1 + rng.below(10) as u64;
+        let text = format!(
+            "{meta}\n{{\"t_ms\":0,\"kind\":\"e\",\"rank\":0,\"round\":{bad_round}}}\n"
+        );
+        let err = TraceFile::parse(&text).expect_err("round > rounds must be rejected");
+        assert!(err.to_string().contains("round"), "case {case}: {err}");
+
+        // In-range boundary values must pass.
+        let text = format!(
+            "{meta}\n{{\"t_ms\":0,\"kind\":\"e\",\"rank\":{},\"round\":{rounds}}}\n",
+            world - 1
+        );
+        TraceFile::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}"));
+    }
+}
+
+#[test]
+fn engine_recorder_trace_loads_and_analyzes() {
+    let dir = tmp_dir("engine");
+    let n = 8;
+    let iters = 30u64;
+    let mut rng = Pcg::new(9);
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(16)).collect();
+    let mut eng = PushSumEngine::new(init, 0, false);
+    eng.set_obs(Some(Box::new(EngineObs::new(n, 16))));
+    let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+    let spec = Compression::TopK { den: 4 };
+    for k in 0..iters {
+        eng.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
+    }
+    let obs = eng.take_obs().expect("recorder must come back out");
+    let (rounds, msgs, _, _, wire_bytes) = obs.totals();
+    assert_eq!(rounds, iters, "every round must be recorded");
+    assert_eq!(msgs, iters * n as u64, "one-peer topology sends n messages per round");
+    assert!(wire_bytes > 0, "compressed bytes must be charged");
+
+    let path = dir.join("engine.jsonl");
+    sgp::obs::trace::write_engine_trace(&path, &obs, iters).unwrap();
+    let tf = TraceFile::load(&path).unwrap();
+    assert_eq!(tf.meta.source, "engine");
+    assert!(tf.events.iter().filter(|e| e.kind == "round").count() == 16, "ring cap");
+    assert!(tf.events.iter().any(|e| e.kind == "edge"), "edge matrix rides along");
+    analyze::run(&path).expect("analyzer accepts its own schema");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sim_harness_trace_loads_and_analyzes() {
+    let dir = tmp_dir("sim");
+    let path = dir.join("sim.jsonl");
+    let cfg = FaultRunConfig {
+        n: 8,
+        iters: 40,
+        trace: Some(path.clone()),
+        ..Default::default()
+    };
+    run_quadratic("sgp", &cfg, &FaultPlan::lossless().with_drop(0.05)).unwrap();
+    let tf = TraceFile::load(&path).unwrap();
+    assert_eq!(tf.meta.source, "sim");
+    assert_eq!(tf.meta.world, Some(8));
+    assert_eq!(
+        tf.events.iter().filter(|e| e.kind == "iter").count(),
+        40,
+        "one iter event per simulated round"
+    );
+    let straggler_total: f64 = tf
+        .events
+        .iter()
+        .filter(|e| e.kind == "straggler")
+        .filter_map(|e| e.num("count"))
+        .sum();
+    assert_eq!(straggler_total as u64, 40, "straggler counts partition the iterations");
+    analyze::run(&path).expect("analyzer accepts sim traces");
+    std::fs::remove_dir_all(&dir).ok();
+}
