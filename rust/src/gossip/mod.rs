@@ -759,7 +759,11 @@ impl PushSumEngine {
             if obs_on { compress.encoded_bytes(dim, dim * 4) as u64 } else { 0 };
         let (sent0, drop0, resc0) = (self.sent_count, self.drop_count, self.rescue_count);
         let pool_wait0 = if obs_on && used > 1 {
-            Some(self.pool.as_deref().unwrap_or_else(pool::global).dispatch_stats().1)
+            let p = self.pool.as_deref().unwrap_or_else(pool::global);
+            // Dispatch timing is pay-per-use: unobserved engines leave
+            // the pool's barrier path free of clock reads entirely.
+            p.set_metered(true);
+            Some(p.dispatch_stats().1)
         } else {
             None
         };

@@ -206,27 +206,70 @@ fn reader_loop(mut stream: TcpStream, rank: usize, tx: mpsc::Sender<(usize, Inbo
     let _ = tx.send((rank, Inbox::Eof));
 }
 
-/// Block (bounded) until `Join` arrives on a freshly-accepted stream.
-fn read_join(stream: &mut TcpStream, deadline: Instant) -> Result<u16> {
+/// What one freshly-accepted registration-phase connection turned out
+/// to be.
+enum RegConn {
+    /// A worker `Join` carrying its gossip listen port.
+    Join(u16),
+    /// An HTTP scrape (`GET …`) — the caller serves a metrics snapshot.
+    Scrape,
+    /// Closed, timed out, or sent garbage before completing a Join.
+    Stray,
+}
+
+/// Classify one accepted registration-phase connection. The listener
+/// doubles as the `/metrics` endpoint, so what connects here may be a
+/// worker, a Prometheus scraper, or a stray socket — the first four
+/// bytes decide (a framed `Join` starts with a small little-endian
+/// length prefix, never the ASCII `GET `). The wait is bounded by the
+/// **per-connection** `deadline` and every non-Join outcome is reported
+/// to the caller, never propagated as an error: a scraper or a wedged
+/// socket must not abort registration or eat the global window.
+fn classify_reg_conn(stream: &mut TcpStream, deadline: Instant) -> RegConn {
     let mut fr = FrameReader::new();
     let mut buf = [0u8; 4096];
+    let mut head = [0u8; 4];
+    let mut head_len = 0usize;
+    let mut sniffed = false;
     loop {
-        if let Some(env) = fr.next_frame()? {
-            if let Frame::Join { listen_port } = env.msg {
-                return Ok(listen_port);
+        if sniffed {
+            match fr.next_frame() {
+                Ok(Some(env)) => {
+                    if let Frame::Join { listen_port } = env.msg {
+                        return RegConn::Join(listen_port);
+                    }
+                    continue; // ignore anything else pre-join
+                }
+                Ok(None) => {}
+                Err(_) => return RegConn::Stray,
             }
-            continue;
         }
         if Instant::now() >= deadline {
-            bail!("timed out waiting for a Join on an accepted connection");
+            return RegConn::Stray;
         }
         match stream.read(&mut buf) {
-            Ok(0) => bail!("worker closed its connection before sending Join"),
-            Ok(n) => fr.extend(&buf[..n]),
+            Ok(0) => return RegConn::Stray,
+            Ok(n) => {
+                if sniffed {
+                    fr.extend(&buf[..n]);
+                } else {
+                    let take = (4 - head_len).min(n);
+                    head[head_len..head_len + take].copy_from_slice(&buf[..take]);
+                    head_len += take;
+                    if head_len == 4 {
+                        if head == *b"GET " {
+                            return RegConn::Scrape;
+                        }
+                        sniffed = true;
+                        fr.extend(&head);
+                        fr.extend(&buf[take..n]);
+                    }
+                }
+            }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut => {}
-            Err(e) => return Err(e).context("reading Join"),
+            Err(_) => return RegConn::Stray,
         }
     }
 }
@@ -278,6 +321,11 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
     }
 
     // --- Registration: accept until `world` Joins, rank = join order. --
+    // The listener is also the `/metrics` endpoint, so a scraper may
+    // connect before the workers do: each accepted connection is
+    // classified (Join / scrape / stray) under its own short deadline —
+    // only a completed Join consumes a rank, and nothing a non-worker
+    // does can abort registration or exhaust the global window.
     listener.set_nonblocking(true)?;
     let reg_deadline = Instant::now() + Duration::from_secs(60);
     let mut joined: Vec<(TcpStream, String)> = Vec::new();
@@ -288,14 +336,31 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
                 s.set_nodelay(true)?;
                 s.set_read_timeout(Some(Duration::from_millis(200)))?;
                 s.set_write_timeout(Some(io_timeout))?;
-                let lp = read_join(&mut s, reg_deadline)?;
-                let rank = joined.len() as u32;
-                let addr = format!("{}:{}", peer.ip(), lp);
-                if cfg.verbose {
-                    eprintln!("[coord] rank {rank} joined from {addr}");
+                let conn_deadline =
+                    (Instant::now() + Duration::from_secs(5)).min(reg_deadline);
+                match classify_reg_conn(&mut s, conn_deadline) {
+                    RegConn::Join(lp) => {
+                        let rank = joined.len() as u32;
+                        let addr = format!("{}:{}", peer.ip(), lp);
+                        if cfg.verbose {
+                            eprintln!("[coord] rank {rank} joined from {addr}");
+                        }
+                        record(&mut log, &mut events, now_ms(), "join", rank, 0, &[]);
+                        joined.push((s, addr));
+                    }
+                    RegConn::Scrape => {
+                        let body = reg_metrics_body(cfg.world, joined.len(), now_ms());
+                        std::thread::spawn(move || write_http_ok(s, &body));
+                    }
+                    RegConn::Stray => {
+                        if cfg.verbose {
+                            eprintln!(
+                                "[coord] dropping stray connection from {peer} \
+                                 during registration"
+                            );
+                        }
+                    }
                 }
-                record(&mut log, &mut events, now_ms(), "join", rank, 0, &[]);
-                joined.push((s, addr));
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -392,11 +457,15 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
 
         // The registration listener doubles as a plaintext Prometheus
         // endpoint for the rest of the run: any connection accepted here
-        // that opens with `GET ` receives a `/metrics` snapshot.
+        // that opens with `GET ` receives a `/metrics` snapshot. The
+        // snapshot is rendered here (cheap string build) but all socket
+        // I/O happens on a throwaway thread — a slow or reconnect-looping
+        // scraper must never delay heartbeat processing, or it could
+        // push healthy workers over the slow/dead thresholds itself.
         if let Ok((stream, _)) = listener.accept() {
             let body =
                 metrics_body(cfg.world, now_ms(), events.len(), &monitor, &dead, &done, &last_round);
-            serve_metrics(stream, &body);
+            std::thread::spawn(move || serve_metrics(stream, &body));
         }
 
         let mut transitions: Vec<Transition> = Vec::new();
@@ -664,26 +733,48 @@ fn metrics_body(
     b
 }
 
+/// The reduced metrics snapshot served while registration is still in
+/// progress, before any per-worker state exists: world size, uptime,
+/// and join progress.
+fn reg_metrics_body(world: usize, joined: usize, uptime_ms: u64) -> String {
+    let mut b = String::new();
+    b.push_str("# TYPE sgp_coord_world gauge\n");
+    let _ = writeln!(b, "sgp_coord_world {world}");
+    b.push_str("# TYPE sgp_coord_uptime_ms counter\n");
+    let _ = writeln!(b, "sgp_coord_uptime_ms {uptime_ms}");
+    b.push_str("# TYPE sgp_coord_joined gauge\n");
+    let _ = writeln!(b, "sgp_coord_joined {joined}");
+    b
+}
+
 /// Answer one connection on the coordinator's listener: anything opening
 /// with `GET ` receives the metrics snapshot as an HTTP/1.1 response;
-/// everything else is dropped. Both directions are timeout-bounded so a
-/// wedged scraper cannot stall the liveness loop by more than ~100 ms.
+/// everything else is dropped. Runs on a throwaway thread (never on the
+/// liveness loop), with both directions timeout-bounded so a wedged
+/// scraper leaks at most one short-lived thread.
 fn serve_metrics(mut stream: TcpStream, body: &str) {
     // The listener is nonblocking (registration + scrape polling share
     // it); the accepted stream must block, bounded by the timeouts below.
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
     let mut buf = [0u8; 512];
     let n = stream.read(&mut buf).unwrap_or(0);
     if buf[..n].starts_with(b"GET ") {
-        let resp = format!(
-            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
-             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-            body.len()
-        );
-        let _ = stream.write_all(resp.as_bytes());
+        write_http_ok(stream, body);
     }
+}
+
+/// Write `body` as a complete `HTTP/1.1 200` plaintext response
+/// (write-timeout-bounded, errors swallowed — the scraper retries).
+fn write_http_ok(mut stream: TcpStream, body: &str) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
 }
 
 /// Render the summary as JSON (exponent-form floats, machine-parseable
@@ -790,6 +881,57 @@ mod tests {
         assert_eq!(evs[0].get("kind").and_then(|v| v.as_str()), Some("leave"));
         assert_eq!(evs[0].get("round").and_then(|v| v.as_usize()), Some(57));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn registration_classifies_scrapes_strays_and_joins() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let accept_configured = |l: &TcpListener| {
+            let (s, _) = l.accept().unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+            s
+        };
+
+        // A Prometheus scrape must be recognized, not parsed as a frame
+        // (its `GET ` opener would otherwise read as a ~542 MB length
+        // prefix and the decode error used to abort the coordinator).
+        let mut scraper = TcpStream::connect(addr).unwrap();
+        scraper.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut s = accept_configured(&l);
+        let deadline = Instant::now() + Duration::from_secs(1);
+        assert!(matches!(classify_reg_conn(&mut s, deadline), RegConn::Scrape));
+
+        // Non-frame garbage is a stray, reported rather than propagated.
+        let mut garbage = TcpStream::connect(addr).unwrap();
+        garbage.write_all(&[0xff, 0xff, 0xff, 0xff, 1, 2, 3]).unwrap();
+        let mut s = accept_configured(&l);
+        let deadline = Instant::now() + Duration::from_secs(1);
+        assert!(matches!(classify_reg_conn(&mut s, deadline), RegConn::Stray));
+
+        // A silent connection burns only its own deadline, not the
+        // caller's whole registration window.
+        let _silent = TcpStream::connect(addr).unwrap();
+        let mut s = accept_configured(&l);
+        let t0 = Instant::now();
+        let deadline = Instant::now() + Duration::from_millis(200);
+        assert!(matches!(classify_reg_conn(&mut s, deadline), RegConn::Stray));
+        assert!(t0.elapsed() < Duration::from_secs(2), "bounded by the per-conn deadline");
+
+        // A framed Join still registers, listen port intact.
+        let mut worker = TcpStream::connect(addr).unwrap();
+        let mut buf = Vec::new();
+        wire::encode_frame(
+            &Envelope::control(wire::UNASSIGNED, 0, Frame::Join { listen_port: 4242 }),
+            &mut buf,
+        );
+        worker.write_all(&buf).unwrap();
+        let mut s = accept_configured(&l);
+        let deadline = Instant::now() + Duration::from_secs(1);
+        match classify_reg_conn(&mut s, deadline) {
+            RegConn::Join(port) => assert_eq!(port, 4242),
+            _ => panic!("a framed Join must classify as a worker"),
+        }
     }
 
     #[test]

@@ -22,6 +22,15 @@
 //! or type. Adding a new event kind or a new numeric field is *not* a
 //! version bump — readers ignore fields they don't know. The parser in
 //! this module rejects any version other than [`TRACE_SCHEMA_VERSION`].
+//!
+//! Range safety: the parser hard-fails on `rank ≥ world` or
+//! `round > rounds`, and some emit sites (the cluster worker and
+//! coordinator) log ranks/rounds that arrive straight off the wire — a
+//! single garbage frame must not render a whole trace unparseable. The
+//! writer therefore enforces the parser's invariants itself: an
+//! out-of-range rank is written as [`GLOBAL_RANK`] and an out-of-range
+//! round as `0`, with the raw wire values preserved in `raw_rank` /
+//! `raw_round` numeric fields.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -86,6 +95,10 @@ fn push_str(out: &mut String, s: &str) {
 pub struct TraceWriter {
     file: Option<BufWriter<File>>,
     line: String,
+    /// The meta line's `world`/`rounds` — the bounds the parser will
+    /// enforce, so [`TraceWriter::event`] clamps against them.
+    world: usize,
+    rounds: u64,
 }
 
 impl TraceWriter {
@@ -96,7 +109,12 @@ impl TraceWriter {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        let mut w = Self { file: Some(BufWriter::new(File::create(path)?)), line: String::new() };
+        let mut w = Self {
+            file: Some(BufWriter::new(File::create(path)?)),
+            line: String::new(),
+            world,
+            rounds,
+        };
         w.line.clear();
         w.line.push_str("{\"schema\":\"sgp-trace\",\"v\":");
         let _ = write!(w.line, "{TRACE_SCHEMA_VERSION},\"source\":");
@@ -108,7 +126,7 @@ impl TraceWriter {
 
     /// A writer that discards everything (no file, no I/O).
     pub fn disabled() -> Self {
-        Self { file: None, line: String::new() }
+        Self { file: None, line: String::new(), world: 0, rounds: 0 }
     }
 
     /// Whether events are actually being written.
@@ -121,10 +139,21 @@ impl TraceWriter {
     /// values are written as `null`). Write errors disable the writer
     /// (first error is reported on stderr) — tracing must never take
     /// down the run it observes.
+    ///
+    /// Ranks/rounds outside the meta line's declared bounds (possible at
+    /// emit sites that log values straight off the wire) are clamped to
+    /// `GLOBAL_RANK`/`0` with the raw values carried in `raw_rank` /
+    /// `raw_round`, so one garbage frame cannot make the file violate
+    /// the parser's range checks.
     pub fn event(&mut self, t_ms: u64, kind: &str, rank: u32, round: u64, extras: &[(&str, f64)]) {
         if self.file.is_none() {
             return;
         }
+        let raw_rank =
+            (rank != GLOBAL_RANK && rank as usize >= self.world).then_some(rank);
+        let raw_round = (round > self.rounds).then_some(round);
+        let rank = if raw_rank.is_some() { GLOBAL_RANK } else { rank };
+        let round = if raw_round.is_some() { 0 } else { round };
         let mut s = std::mem::take(&mut self.line);
         s.clear();
         let _ = write!(s, "{{\"t_ms\":{t_ms},\"kind\":");
@@ -135,6 +164,12 @@ impl TraceWriter {
             push_str(&mut s, key);
             s.push(':');
             push_num(&mut s, *v);
+        }
+        if let Some(r) = raw_rank {
+            let _ = write!(s, ",\"raw_rank\":{r}");
+        }
+        if let Some(r) = raw_round {
+            let _ = write!(s, ",\"raw_round\":{r}");
         }
         s.push('}');
         self.line = s;
@@ -419,6 +454,31 @@ mod tests {
         assert!(tf.events[0].num("b").unwrap().is_nan(), "null maps back to NaN");
         assert_eq!(tf.events[1].rank, Some(2));
         assert_eq!(tf.events[1].num("bytes"), Some(1e18));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_clamps_out_of_range_wire_values_so_the_trace_still_parses() {
+        let dir = std::env::temp_dir().join(format!("sgp_trace_clamp_{}", std::process::id()));
+        let path = dir.join("t.jsonl");
+        let mut w = TraceWriter::create(&path, "worker", 4, 100).unwrap();
+        // A garbage frame's sender/round logged straight off the wire.
+        w.event(1, "malformed_share", 9000, 7_000_000, &[("w", 0.5)]);
+        // Boundary values must NOT be clamped.
+        w.event(2, "done", 3, 100, &[]);
+        w.event(3, "audit", GLOBAL_RANK, 100, &[]);
+        drop(w);
+        let tf = TraceFile::load(&path).unwrap();
+        assert_eq!(tf.events.len(), 3);
+        assert_eq!(tf.events[0].rank, None, "out-of-range rank clamps to global");
+        assert_eq!(tf.events[0].round, Some(0), "out-of-range round clamps to 0");
+        assert_eq!(tf.events[0].num("raw_rank"), Some(9000.0));
+        assert_eq!(tf.events[0].num("raw_round"), Some(7_000_000.0));
+        assert_eq!(tf.events[0].num("w"), Some(0.5), "extras survive the clamp");
+        assert_eq!(tf.events[1].rank, Some(3));
+        assert_eq!(tf.events[1].round, Some(100));
+        assert_eq!(tf.events[1].num("raw_rank"), None, "in-range events carry no raw fields");
+        assert_eq!(tf.events[2].rank, None, "GLOBAL_RANK passes through unclamped");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -32,7 +32,7 @@
 //! via [`crate::gossip::PushSumEngine::set_pool`].
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
@@ -116,11 +116,18 @@ pub struct Pool {
     workers: usize,
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Barrier dispatches completed (multi-job rounds only — inline
-    /// `jobs ≤ 1` calls never touch the barrier).
+    /// `jobs ≤ 1` calls never touch the barrier). Only counted while
+    /// [`Pool::set_metered`] is on.
     dispatches: AtomicU64,
     /// Total nanoseconds the dispatching threads spent inside the
-    /// barrier window (publish → all workers done), cumulative.
+    /// barrier window (publish → all workers done), cumulative. Only
+    /// accumulated while [`Pool::set_metered`] is on.
     run_ns: AtomicU64,
+    /// Gates the barrier-window timing: an `Instant::now()` pair plus
+    /// two atomic adds per dispatch is a small but real tax on the hot
+    /// path the perf gate guards, so it is paid only when an observer
+    /// has asked for [`Pool::dispatch_stats`].
+    metered: AtomicBool,
 }
 
 impl Pool {
@@ -155,6 +162,7 @@ impl Pool {
             handles,
             dispatches: AtomicU64::new(0),
             run_ns: AtomicU64::new(0),
+            metered: AtomicBool::new(false),
         }
     }
 
@@ -168,9 +176,20 @@ impl Pool {
     /// time its dispatching threads spent in the barrier window. Both are
     /// monotone (relaxed atomics), so callers diff two snapshots to meter
     /// a span; on a shared (e.g. global) pool the diff upper-bounds the
-    /// caller's own share.
+    /// caller's own share. Counted only while metering is enabled
+    /// ([`Pool::set_metered`]) — observers enable it before their first
+    /// snapshot.
     pub fn dispatch_stats(&self) -> (u64, u64) {
         (self.dispatches.load(Ordering::Relaxed), self.run_ns.load(Ordering::Relaxed))
+    }
+
+    /// Enable (or disable) dispatch metering. Off by default so the
+    /// barrier hot path pays no clock reads or atomic adds when nothing
+    /// reads [`Pool::dispatch_stats`]; an engine with an observability
+    /// recorder attached turns it on. On a shared pool metering stays on
+    /// for every concurrent user once any observer enables it.
+    pub fn set_metered(&self, on: bool) {
+        self.metered.store(on, Ordering::Relaxed);
     }
 
     /// Execute `f(0) … f(jobs-1)` across the pool and wait for all of them:
@@ -203,7 +222,7 @@ impl Pool {
              coordinating thread"
         );
         let _turn = lock(&self.dispatch);
-        let t0 = Instant::now();
+        let t0 = self.metered.load(Ordering::Relaxed).then(Instant::now);
         // SAFETY: the erased reference is only callable by workers woken
         // for this epoch, and this call does not return until every worker
         // has reported done — the real borrow outlives every call.
@@ -230,8 +249,10 @@ impl Pool {
         st.job = None;
         let panicked = st.panicked;
         drop(st);
-        self.dispatches.fetch_add(1, Ordering::Relaxed);
-        self.run_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            self.dispatches.fetch_add(1, Ordering::Relaxed);
+            self.run_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         if panicked {
             panic!("a pool worker job panicked");
         }
@@ -428,10 +449,13 @@ mod tests {
     }
 
     #[test]
-    fn dispatch_stats_count_multi_job_rounds_only() {
+    fn dispatch_stats_count_multi_job_rounds_only_when_metered() {
         let pool = Pool::new(2);
         let (d0, ns0) = pool.dispatch_stats();
         assert_eq!((d0, ns0), (0, 0), "fresh pool starts at zero");
+        pool.run(4, &|_| {});
+        assert_eq!(pool.dispatch_stats(), (0, 0), "unmetered dispatches are free");
+        pool.set_metered(true);
         pool.run(0, &|_| {});
         pool.run(1, &|_| {});
         assert_eq!(pool.dispatch_stats().0, 0, "inline paths skip the barrier");
@@ -439,8 +463,11 @@ mod tests {
             pool.run(4, &|_| {});
         }
         let (d, ns) = pool.dispatch_stats();
-        assert_eq!(d, 3, "one dispatch per multi-job round");
+        assert_eq!(d, 3, "one dispatch per metered multi-job round");
         assert!(ns > 0, "barrier wall time accumulates");
+        pool.set_metered(false);
+        pool.run(4, &|_| {});
+        assert_eq!(pool.dispatch_stats().0, 3, "metering can be switched back off");
     }
 
     #[test]
