@@ -155,6 +155,19 @@ impl JsonReport {
     }
 }
 
+/// Peak resident set size of the current process in bytes (the `VmHWM`
+/// high-water mark from `/proc/self/status`). `None` where procfs is
+/// unavailable (non-Linux) — callers must treat the measurement as
+/// best-effort. Note the kernel never lowers the mark, so per-phase
+/// readings in one process are cumulative maxima: measure configurations
+/// in ascending memory order for meaningful curves.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// Prevent the optimizer from discarding a value (std::hint::black_box is
 /// stable; thin alias so benches read uniformly).
 #[inline]
@@ -171,6 +184,13 @@ pub fn section(title: &str) {
 mod tests {
     use super::*;
     use crate::model::json::Json;
+
+    #[test]
+    fn peak_rss_is_positive_where_procfs_exists() {
+        if let Some(bytes) = peak_rss_bytes() {
+            assert!(bytes > 0);
+        }
+    }
 
     #[test]
     fn json_report_is_parseable_and_complete() {

@@ -830,6 +830,171 @@ pub fn engine_sweep(cfg: &EngineSweep) -> Result<()> {
 }
 
 // ===========================================================================
+// Event-engine scale sweep: nodes vs wall-clock and peak RSS, offline
+// ===========================================================================
+
+/// What `repro scale-sweep` measures: wall-clock per configuration and
+/// process peak RSS as the node count grows toward 10^6, for the sparse
+/// [`crate::gossip::EventEngine`] in its quiescent (all nodes cold on the
+/// shared template) and active (a perturbed hot set spreading along gossip
+/// edges) modes, with a dense-engine reference at the node counts where
+/// dense state still fits comfortably. Fully offline (pure gossip on the
+/// quadratic-harness parameter shape, no HLO artifacts).
+///
+/// Writes `results/BENCH_event.json` — deliberately *outside* the
+/// `bench-check` perf gate: absolute wall-clock and RSS at 10^6 nodes are
+/// too machine-bound to gate, but the curves are the artifact reviewers
+/// diff by eye. In that file, `bytes_per_iter` on the event entries
+/// carries the **peak-RSS reading in bytes** after that node count ran
+/// (the kernel's high-water mark is cumulative, which is why the sweep
+/// runs in ascending `n` order).
+#[derive(Clone, Debug)]
+pub struct ScaleSweep {
+    /// Node counts to sweep, ascending; the default tops out at 2^20.
+    pub ns: Vec<usize>,
+    /// Parameter dimension per node.
+    pub dim: usize,
+    /// Gossip ticks per measured run.
+    pub steps: u64,
+    /// Nodes perturbed to seed the hot set of the active curve.
+    pub active: usize,
+    /// Largest node count the dense reference engine runs at.
+    pub dense_cap: usize,
+    /// Seed of the perturbation magnitudes.
+    pub seed: u64,
+}
+
+impl ScaleSweep {
+    /// Default sweep shape (`fast` = the CI smoke configuration).
+    pub fn new(fast: bool) -> Self {
+        Self {
+            ns: if fast {
+                vec![256, 4096]
+            } else {
+                vec![1024, 16_384, 262_144, 1_048_576]
+            },
+            dim: if fast { 32 } else { 64 },
+            steps: if fast { 16 } else { 64 },
+            active: if fast { 8 } else { 64 },
+            dense_cap: if fast { 256 } else { 4096 },
+            seed: 1,
+        }
+    }
+}
+
+/// Run the event-engine scale sweep (see [`ScaleSweep`]): per node count,
+/// the quiescent and active sparse-engine wall-clocks (asserting zero
+/// materialization on the quiescent curve — the cold-template fixed point
+/// checked at every scale), a sequential dense reference at small N, and
+/// the peak-RSS curve. Fails if the process high-water mark exceeds 8 GiB
+/// — the acceptance bound that makes "million-node simulation" a tested
+/// claim rather than a slogan. Writes `results/BENCH_event.json`.
+pub fn scale_sweep(cfg: &ScaleSweep) -> Result<()> {
+    use crate::benchkit::{bench_for, fmt, peak_rss_bytes, JsonReport};
+    use crate::gossip::EventEngine;
+    use crate::rng::Pcg;
+    use std::time::Duration;
+
+    const RSS_CAP_BYTES: u64 = 8 << 30;
+    anyhow::ensure!(
+        cfg.ns.windows(2).all(|w| w[0] < w[1]),
+        "scale-sweep node counts must be ascending (peak RSS is cumulative)"
+    );
+    let budget = Duration::from_millis(if cfg.steps <= 16 { 200 } else { 600 });
+    // 0.25 splits and recombines bit-exactly, so the all-cold graph is a
+    // fixed point and the quiescent curve measures pure engine overhead.
+    let template = || vec![0.25f32; cfg.dim];
+    let mut report = JsonReport::new();
+    let mut rows = Vec::new();
+    for &n in &cfg.ns {
+        anyhow::ensure!(n >= 2, "scale-sweep needs at least 2 nodes (got {n})");
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+
+        // Quiescent: every node cold. A tick must do no per-node work.
+        let mut materialized = usize::MAX;
+        let quiescent = bench_for(&format!("event/quiescent/n={n}"), budget, || {
+            let mut eng = EventEngine::with_template(template(), n, 0, false);
+            for k in 0..cfg.steps {
+                eng.step(k, &sched, None, Compression::Identity);
+            }
+            materialized = eng.materialized();
+        });
+        anyhow::ensure!(
+            materialized == 0,
+            "quiescent sweep materialized {materialized} nodes at n = {n} — \
+             the cold-template fixed point broke"
+        );
+
+        // Active: perturb a small hot set and let activity spread along
+        // the gossip edges it actually excites.
+        let mut rng = Pcg::new(cfg.seed);
+        let active = cfg.active.min(n);
+        let stride = (n / active).max(1);
+        let mut hot = 0usize;
+        let active_stats = bench_for(&format!("event/active/n={n}"), budget, || {
+            let mut eng = EventEngine::with_template(template(), n, 0, false);
+            for j in 0..active {
+                eng.state_mut(j * stride).x[0] += rng.gaussian() as f32;
+            }
+            for k in 0..cfg.steps {
+                eng.step(k, &sched, None, Compression::Identity);
+            }
+            hot = eng.materialized();
+        });
+
+        // Dense reference: the same workload on the dense engine, only
+        // where materializing n states is still cheap.
+        let dense_wall = if n <= cfg.dense_cap {
+            let init: Vec<Vec<f32>> = (0..n).map(|_| template()).collect();
+            let d = bench_for(&format!("event/dense_ref/n={n}"), budget, || {
+                let mut eng = PushSumEngine::new(init.clone(), 0, false);
+                for k in 0..cfg.steps {
+                    eng.step_exec(k, &sched, None, ExecPolicy::Sequential);
+                }
+            });
+            let wall = fmt(d.median);
+            report.push(d);
+            wall
+        } else {
+            "-".to_string()
+        };
+
+        let rss = peak_rss_bytes().unwrap_or(0);
+        anyhow::ensure!(
+            rss < RSS_CAP_BYTES,
+            "peak RSS {rss} bytes at n = {n} exceeds the 8 GiB sparse-engine \
+             budget"
+        );
+        rows.push(vec![
+            n.to_string(),
+            fmt(quiescent.median),
+            fmt(active_stats.median),
+            hot.to_string(),
+            dense_wall,
+            if rss == 0 {
+                "n/a".into()
+            } else {
+                format!("{:.1} MiB", rss as f64 / (1 << 20) as f64)
+            },
+        ]);
+        report.push(quiescent.with_bytes(rss));
+        report.push(active_stats.with_bytes(rss));
+    }
+    let out = results_dir().join("BENCH_event.json");
+    report.write(&out)?;
+    print_table(
+        &format!(
+            "Event-engine scaling — dim = {}, {} ticks, {} perturbed nodes",
+            cfg.dim, cfg.steps, cfg.active
+        ),
+        &["nodes", "quiescent", "active", "hot after", "dense ref", "peak RSS"],
+        &rows,
+    );
+    println!("bench report: {}", out.display());
+    Ok(())
+}
+
+// ===========================================================================
 // Compression sweep: wire-byte reduction × heterogeneity, offline
 // ===========================================================================
 

@@ -333,6 +333,28 @@ impl FaultClock {
         !self.events_at(k).is_empty()
     }
 
+    /// Monotone membership-epoch counter: the number of crash/rejoin
+    /// boundaries at iterations `≤ k`. Equal epochs at two iterations
+    /// guarantee identical alive sets over the whole interval (membership
+    /// only changes at a boundary), which makes the value a sound
+    /// invalidation key for [`crate::topology::PeerMemo`]. With
+    /// overlapping crash windows the count can tick on a *suppressed*
+    /// event, costing at most one spurious memo rebuild — safe, where a
+    /// missed rebuild would not be. Allocation-free, unlike
+    /// [`Self::events_at`], so engines may call it every round.
+    pub fn membership_epoch(&self, k: u64) -> u64 {
+        let mut epoch = 0u64;
+        for c in &self.plan.crashes {
+            if c.at <= k {
+                epoch += 1;
+            }
+            if c.rejoin.is_some_and(|r| r <= k) {
+                epoch += 1;
+            }
+        }
+        epoch
+    }
+
     /// Effective drop probability a collective over the `alive` members
     /// sees: the mean directed-link drop probability across survivor
     /// pairs. Collectives stripe chunks over every link, so per-link
@@ -457,6 +479,34 @@ mod tests {
         assert_eq!(c.events_at(20), vec![MembershipEvent::Rejoin { node: 3, at: 20 }]);
         assert_eq!(c.alive(8, 16), vec![0, 1, 2, 4, 6, 7]);
         assert!(c.membership_changed_at(10) && !c.membership_changed_at(11));
+    }
+
+    #[test]
+    fn membership_epoch_ticks_exactly_at_boundaries() {
+        let c = FaultClock::new(
+            FaultPlan::lossless()
+                .with_crash(3, 10, Some(20))
+                .with_crash(5, 15, None),
+        );
+        let epochs: Vec<u64> = (0..25).map(|k| c.membership_epoch(k)).collect();
+        // Boundaries at k = 10 (crash), 15 (leave), 20 (rejoin).
+        assert_eq!(epochs[9], 0);
+        assert_eq!(epochs[10], 1);
+        assert_eq!(epochs[14], 1);
+        assert_eq!(epochs[15], 2);
+        assert_eq!(epochs[19], 2);
+        assert_eq!(epochs[20], 3);
+        assert_eq!(epochs[24], 3);
+        // Monotone, and constant between boundaries: a sound memo key.
+        assert!(epochs.windows(2).all(|w| w[0] <= w[1]));
+        for k in 0..24u64 {
+            let changed = c.membership_changed_at(k + 1);
+            assert_eq!(
+                epochs[k as usize] != epochs[k as usize + 1],
+                changed,
+                "k={k}"
+            );
+        }
     }
 
     #[test]

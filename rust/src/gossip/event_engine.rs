@@ -1,0 +1,794 @@
+//! Event-driven push-sum execution: arrival scheduling for the dense
+//! engine, and a sparse million-node engine over the same contract.
+//!
+//! Two layers share this module (ARCHITECTURE.md §7):
+//!
+//! 1. **[`ArrivalFlow`]** — the arrival scheduler behind
+//!    [`ExecPolicy::Event`](super::ExecPolicy::Event) on the dense
+//!    [`PushSumEngine`]: a priority queue ([`EventQueue`]) of delivery
+//!    notifications popped in `(deliver_iter, send order)` so the
+//!    aggregate phase visits **only nodes with due mail** instead of
+//!    walking all N mailboxes. Mailboxes remain the source of truth — the
+//!    queue carries `(time, destination)` notifications, never payloads —
+//!    which is what makes the mode bit-identical to the sequential and
+//!    pooled engines under *any* delay, fault plan, and compression spec
+//!    (see the ordering argument on [`aggregate_event`]).
+//!
+//! 2. **[`EventEngine`]** — the sparse engine for N ≥ 10⁶ simulation:
+//!    per-node state lives in a slab of lazily materialized boxes, every
+//!    unmaterialized ("cold") node aliases one shared template state, and
+//!    shares off cold nodes are delta-encoded against that template so a
+//!    quiescent node costs **zero work per virtual tick** — cold→cold
+//!    traffic is elided entirely as a bit-exact fixed point of the
+//!    mixing. The moment the run leaves the provably-exact regime
+//!    (faults, compression, delay, a non-permutation schedule), the
+//!    engine materializes every node into a dense [`PushSumEngine`] and
+//!    keeps stepping under [`ExecPolicy::Event`](super::ExecPolicy::Event)
+//!    — same state bits, same results, different cost model.
+//!
+//! # Why the cold fixed point is exact
+//!
+//! Under a unit-shift permutation schedule
+//! ([`Schedule::unit_permutation_shift`]) every node has out-degree 1, so
+//! the uniform mixing weight is exactly ½ in both `f32` and `f64`. A node
+//! whose state equals the template and whose in-neighbour is also cold
+//! computes `x·½ + x·½` per coordinate and `w·½ + w·½` for the weight.
+//! For every normal (and zero) float, halving is exact and the two halves
+//! re-add to the original bit pattern, so the node's state is unchanged —
+//! verified per template at construction (`halving_safe`; subnormal or
+//! non-finite templates fall back to the dense path rather than risk
+//! drift).
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use super::{
+    drain_due, lap_ns, take_buf, Compression, ExecPolicy, Message, NodeState,
+    PushSumEngine, StepCtx,
+};
+use crate::faults::FaultClock;
+use crate::obs::{EngineObs, ObsSink, RoundRecord};
+use crate::sim::EventQueue;
+use crate::topology::Schedule;
+
+/// Arrival scheduler for [`ExecPolicy::Event`](super::ExecPolicy::Event)
+/// rounds of the dense engine: a priority queue of `(deliver_iter, to)`
+/// delivery notifications plus the bookkeeping needed to honor fault
+/// semantics (mail for a crashed node parks until it rejoins).
+///
+/// All storage is pre-sized at construction; the steady-state round path
+/// (note → pop → drain) performs no heap allocation once the queue has
+/// grown to the run's in-flight high-water mark (pinned by
+/// `rust/tests/alloc_regression.rs`).
+pub(crate) struct ArrivalFlow {
+    /// Pending delivery notifications: payload = destination node.
+    queue: EventQueue<usize>,
+    /// Scratch: nodes with due mail this round, deduplicated.
+    due: Vec<usize>,
+    /// Per-node dedup stamp (`round` counter value when last marked due).
+    due_mark: Vec<u64>,
+    /// Nodes that were down when their mail came due — revisited every
+    /// round until they rejoin.
+    parked: Vec<usize>,
+    /// Membership flag for `parked` (O(1) dedup).
+    is_parked: Vec<bool>,
+    /// Monotone round counter for `due_mark` stamps.
+    round: u64,
+}
+
+impl ArrivalFlow {
+    /// A scheduler for `n` nodes, seeded with one notification per message
+    /// already sitting in `inboxes` (so switching an engine into event
+    /// mode mid-run loses no mail).
+    pub(crate) fn new(n: usize, inboxes: &[Vec<Message>]) -> Self {
+        let mut flow = Self {
+            queue: EventQueue::with_capacity(2 * n),
+            due: Vec::with_capacity(n),
+            due_mark: vec![0; n],
+            parked: Vec::with_capacity(n.min(1024)),
+            is_parked: vec![false; n],
+            round: 0,
+        };
+        for inbox in inboxes {
+            for msg in inbox {
+                flow.note_send(msg.deliver_iter, msg.to);
+            }
+        }
+        flow
+    }
+
+    /// Record one sent message: its destination will be visited by the
+    /// aggregate pass of round `deliver` (or parked if down then).
+    pub(crate) fn note_send(&mut self, deliver: u64, to: usize) {
+        self.queue.push(deliver as f64, to);
+    }
+
+    /// Forget all pending notifications and rewind the virtual clock —
+    /// called by [`PushSumEngine::drain`], which force-delivers the
+    /// mailboxes the notifications referred to.
+    pub(crate) fn clear(&mut self) {
+        self.queue.clear();
+        self.due.clear();
+        self.parked.clear();
+        self.due_mark.iter_mut().for_each(|m| *m = 0);
+        self.is_parked.iter_mut().for_each(|p| *p = false);
+        self.round = 0;
+    }
+}
+
+/// The event-mode aggregate phase: pop every delivery notification due at
+/// `ctx.k`, then run [`drain_due`] over exactly the mailboxes named —
+/// plus any mailbox parked for a crashed node that has since rejoined.
+///
+/// Bit-identity argument: `aggregate_shard` walks all N nodes and runs
+/// the same `drain_due` per mailbox, but a mailbox with no due mail is a
+/// pure no-op under it — no state change, no reordering (the swap-remove
+/// scan only permutes survivors when it removes something). So visiting
+/// only the notified mailboxes applies identical operations in an
+/// identical per-mailbox order, and cross-node order is immaterial
+/// because aggregation touches no shared state. Fault semantics match
+/// because a notification for a down node parks (its mailbox holds, as
+/// dense) and fires on the first round the node is back up — exactly the
+/// round dense aggregation would first drain it again.
+pub(super) fn aggregate_event(
+    flow: &mut ArrivalFlow,
+    states: &mut [NodeState],
+    inboxes: &mut [Vec<Message>],
+    pool: &mut Vec<Vec<f32>>,
+    ctx: StepCtx,
+    biased: bool,
+) {
+    let k = ctx.k;
+    flow.round += 1;
+    let stamp = flow.round;
+    flow.due.clear();
+    while flow.queue.peek_time().is_some_and(|t| t <= k as f64) {
+        let to = flow.queue.pop().expect("peeked event exists").payload;
+        if let Some((clock, _)) = ctx.faults {
+            if clock.is_down(to, k) {
+                if !flow.is_parked[to] {
+                    flow.is_parked[to] = true;
+                    flow.parked.push(to);
+                }
+                continue;
+            }
+        }
+        if flow.due_mark[to] != stamp {
+            flow.due_mark[to] = stamp;
+            flow.due.push(to);
+        }
+    }
+    // Parked mail fires on the first round its node is back up. (With no
+    // fault clock every node counts as up — a plan can end mid-crash and
+    // a later faultless round must still deliver.)
+    let mut i = 0;
+    while i < flow.parked.len() {
+        let node = flow.parked[i];
+        if ctx.faults.is_some_and(|(clock, _)| clock.is_down(node, k)) {
+            i += 1;
+            continue;
+        }
+        flow.is_parked[node] = false;
+        flow.parked.swap_remove(i);
+        if flow.due_mark[node] != stamp {
+            flow.due_mark[node] = stamp;
+            flow.due.push(node);
+        }
+    }
+    for &node in &flow.due {
+        drain_due(&mut states[node], &mut inboxes[node], k, pool);
+    }
+    if biased {
+        for st in states.iter_mut() {
+            st.w = 1.0;
+        }
+    }
+}
+
+/// One in-flight share of the sparse fast path. The numerator buffer is
+/// dense (`dim` floats) but recycled through the engine's pool; shares
+/// off *cold* nodes are never enqueued at all — they are applied as
+/// template deltas at the receiver (`x += template·½`), the degenerate
+/// (and dominant) delta encoding.
+#[derive(Debug, PartialEq)]
+struct SparseShare {
+    /// Destination node.
+    to: usize,
+    /// Pre-weighted numerator share.
+    x: Vec<f32>,
+    /// Pre-weighted push-sum-weight share.
+    w: f64,
+}
+
+/// The sparse fast-path core: a slab of materialized ("hot") nodes over a
+/// shared cold template, and the arrival queue their shares flow through.
+struct SparseCore {
+    /// Lazily materialized per-node state; `None` = cold (≡ template).
+    nodes: Vec<Option<Box<NodeState>>>,
+    /// Materialized node set, iterated in ascending order each tick.
+    hot: BTreeSet<usize>,
+    /// In-flight shares (drained empty within every tick — the fast path
+    /// runs at delay 0).
+    queue: EventQueue<SparseShare>,
+    /// Recycled share buffers (zero-alloc steady state).
+    pool: Vec<Vec<f32>>,
+    /// Physical messages sent (cold→cold elided traffic never counts).
+    sent: u64,
+}
+
+/// Sparse event-driven push-sum engine for very large N.
+///
+/// Construct with [`EventEngine::with_template`] for the sparse regime —
+/// all N nodes start cold at a shared template state, cost nothing until
+/// touched, and are materialized on first activity (an inbound share, or
+/// a direct perturbation via [`EventEngine::state_mut`]) — or with
+/// [`EventEngine::from_init`] for heterogeneous initial states, which is
+/// simply the dense engine under
+/// [`ExecPolicy::Event`](super::ExecPolicy::Event).
+///
+/// The fast path runs while every exactness precondition holds (no fault
+/// clock, identity compression, delay 0, a unit-permutation schedule
+/// tick, halving-safe template); the first step outside that regime
+/// materializes all nodes into a dense [`PushSumEngine`] — transplanting
+/// states, counters, and the observability recorder — and every later
+/// step routes through it. Results are bit-identical to a dense engine
+/// started from the fully-materialized initial state either way
+/// (`rust/tests/event_engine_equivalence.rs`).
+///
+/// ```
+/// use sgp::gossip::EventEngine;
+/// use sgp::topology::{Schedule, TopologyKind};
+///
+/// // A million cold nodes cost no per-tick work and no per-node memory.
+/// let mut eng = EventEngine::with_template(vec![0.0f32; 4], 1_000_000, 0, false);
+/// let sched = Schedule::new(TopologyKind::OnePeerExp, 1_000_000);
+/// for k in 0..8 {
+///     eng.step(k, &sched, None, sgp::gossip::Compression::Identity);
+/// }
+/// assert_eq!(eng.materialized(), 0);
+///
+/// // Perturb one node: activity (and memory) spreads only along the
+/// // gossip edges it actually excites.
+/// eng.state_mut(17).x[0] = 1.0;
+/// eng.step(8, &sched, None, sgp::gossip::Compression::Identity);
+/// assert_eq!(eng.materialized(), 2);
+/// ```
+pub struct EventEngine {
+    /// Number of logical nodes.
+    n: usize,
+    /// Parameter dimension.
+    dim: usize,
+    /// Overlap delay τ (fast path requires 0).
+    delay: u64,
+    /// Table-4 ablation: freeze w ≡ 1.
+    biased: bool,
+    /// The shared cold state every unmaterialized node aliases.
+    template: NodeState,
+    /// Whether `template` survives ½-split-and-recombine bit-exactly.
+    halving_safe: bool,
+    /// Fast-path state; `None` after materialization.
+    sparse: Option<SparseCore>,
+    /// Dense escape hatch; `Some` after the first step outside the
+    /// fast-path regime (runs under `ExecPolicy::Event`).
+    dense: Option<PushSumEngine>,
+    /// Observability recorder while sparse (moves into `dense` on
+    /// materialization).
+    obs: Option<Box<EngineObs>>,
+}
+
+/// Whether splitting `v` in half and re-adding reproduces `v` bit-exactly
+/// (true for every normal float and ±0; false for subnormals that lose a
+/// bit, and for non-finite values).
+fn halving_exact_f32(v: f32) -> bool {
+    let h = v * 0.5f32;
+    h + h == v && (h != 0.0 || v == 0.0)
+}
+
+impl EventEngine {
+    /// A sparse engine of `n` cold nodes sharing `template_x` (all
+    /// push-sum weights start at 1). `delay`/`biased` as on
+    /// [`PushSumEngine::new`]; note the sparse fast path only runs at
+    /// `delay == 0` — a delayed engine materializes on its first step.
+    pub fn with_template(template_x: Vec<f32>, n: usize, delay: u64, biased: bool) -> Self {
+        assert!(n > 0, "need at least one node");
+        let dim = template_x.len();
+        let template = NodeState::new(template_x);
+        let halving_safe =
+            template.x.iter().copied().all(halving_exact_f32) && template.w == 1.0;
+        Self {
+            n,
+            dim,
+            delay,
+            biased,
+            template,
+            halving_safe,
+            sparse: Some(SparseCore {
+                nodes: (0..n).map(|_| None).collect(),
+                hot: BTreeSet::new(),
+                queue: EventQueue::new(),
+                pool: Vec::new(),
+                sent: 0,
+            }),
+            dense: None,
+            obs: None,
+        }
+    }
+
+    /// An engine over heterogeneous per-node initial numerators: every
+    /// node is hot from the start, so this is exactly the dense engine
+    /// stepping under [`ExecPolicy::Event`](super::ExecPolicy::Event).
+    pub fn from_init(init: Vec<Vec<f32>>, delay: u64, biased: bool) -> Self {
+        assert!(!init.is_empty(), "need at least one node");
+        let n = init.len();
+        let dim = init[0].len();
+        let template = NodeState::new(vec![0.0; dim]);
+        Self {
+            n,
+            dim,
+            delay,
+            biased,
+            template,
+            halving_safe: false,
+            sparse: None,
+            dense: Some(PushSumEngine::new(init, delay, biased)),
+            obs: None,
+        }
+    }
+
+    /// Number of logical nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Parameter dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of nodes holding materialized (per-node) state: the hot set
+    /// while sparse, all `n` after the dense fall-off.
+    pub fn materialized(&self) -> usize {
+        match &self.sparse {
+            Some(core) => core.hot.len(),
+            None => self.n,
+        }
+    }
+
+    /// Whether the engine is still on the sparse fast path.
+    pub fn is_sparse(&self) -> bool {
+        self.sparse.is_some()
+    }
+
+    /// Physical messages sent so far (cold→cold fixed-point traffic is
+    /// elided, never sent, and never counted).
+    pub fn sent_count(&self) -> u64 {
+        match (&self.sparse, &self.dense) {
+            (Some(core), _) => core.sent,
+            (None, Some(eng)) => eng.sent_count,
+            (None, None) => unreachable!("engine is sparse or dense"),
+        }
+    }
+
+    /// Node `i`'s state: the template if cold, its own state if hot.
+    pub fn node_state(&self, i: usize) -> &NodeState {
+        match &self.sparse {
+            Some(core) => core.nodes[i].as_deref().unwrap_or(&self.template),
+            None => &self.dense.as_ref().expect("dense after fall-off").states[i],
+        }
+    }
+
+    /// Mutable access to node `i`'s state, materializing it (with an
+    /// exact template copy) if cold — the perturbation entry point: touch
+    /// a node between ticks and activity spreads from it.
+    pub fn state_mut(&mut self, i: usize) -> &mut NodeState {
+        match &mut self.sparse {
+            Some(core) => {
+                if core.nodes[i].is_none() {
+                    core.nodes[i] = Some(Box::new(self.template.clone()));
+                    core.hot.insert(i);
+                }
+                core.nodes[i].as_deref_mut().expect("just materialized")
+            }
+            None => {
+                &mut self.dense.as_mut().expect("dense after fall-off").states[i]
+            }
+        }
+    }
+
+    /// Attach (or detach) an observability recorder — forwarded to the
+    /// dense engine once materialized; purely observational either way.
+    pub fn set_obs(&mut self, obs: Option<Box<EngineObs>>) {
+        match &mut self.dense {
+            Some(eng) => eng.set_obs(obs),
+            None => self.obs = obs,
+        }
+    }
+
+    /// Detach and return the recorder, if any.
+    pub fn take_obs(&mut self) -> Option<Box<EngineObs>> {
+        match &mut self.dense {
+            Some(eng) => eng.take_obs(),
+            None => self.obs.take(),
+        }
+    }
+
+    /// Borrow the attached recorder, if any.
+    pub fn obs(&self) -> Option<&EngineObs> {
+        match &self.dense {
+            Some(eng) => eng.obs(),
+            None => self.obs.as_deref(),
+        }
+    }
+
+    /// One gossip tick at iteration `k`: the sparse fast path when every
+    /// exactness precondition holds, otherwise the dense engine under
+    /// [`ExecPolicy::Event`](super::ExecPolicy::Event) (materializing all
+    /// nodes on the first such step).
+    pub fn step(
+        &mut self,
+        k: u64,
+        schedule: &Schedule,
+        faults: Option<&FaultClock>,
+        compress: Compression,
+    ) {
+        assert_eq!(schedule.n, self.n, "schedule sized for a different n");
+        if self.sparse.is_some() {
+            let fast = faults.is_none()
+                && compress.is_identity()
+                && self.delay == 0
+                && self.halving_safe;
+            match (fast, schedule.unit_permutation_shift(k)) {
+                (true, Some(h)) => {
+                    self.sparse_tick(k, h);
+                    return;
+                }
+                _ => self.materialize_dense(),
+            }
+        }
+        self.dense
+            .as_mut()
+            .expect("dense after fall-off")
+            .step_compressed(k, schedule, faults, ExecPolicy::Event, compress);
+    }
+
+    /// The sparse tick under unit shift `h`: hot nodes emit and self-scale
+    /// (phase 1), hot nodes with a cold in-neighbour absorb the template
+    /// delta (phase 2 — evaluated before any materialization so coldness
+    /// means cold *at tick start*, matching what the elided sender held),
+    /// then queued shares deliver, materializing cold receivers (phase 3).
+    /// Under a permutation every node has in-degree 1, so each hot node
+    /// receives exactly one in-share — via phase 2 xor phase 3 — and the
+    /// per-node operation order (scale, then add) is exactly the dense
+    /// engine's.
+    fn sparse_tick(&mut self, k: u64, h: usize) {
+        let core = self.sparse.as_mut().expect("checked by caller");
+        let (n, dim) = (self.n, self.dim);
+        let wf = 0.5f32;
+        let w_mix = 0.5f64;
+        let obs_on = self.obs.is_some();
+        let per_msg_bytes = if obs_on { (dim * 4) as u64 } else { 0 };
+        let mut mark = if obs_on { Some(Instant::now()) } else { None };
+        let sent0 = core.sent;
+
+        // Phase 1 — every hot node emits its pre-weighted share and keeps
+        // its self-loop half. Cold nodes' sends are the template fixed
+        // point: elided entirely.
+        for &i in &core.hot {
+            let st = core.nodes[i].as_deref_mut().expect("hot nodes are materialized");
+            let mut payload = take_buf(&mut core.pool, dim);
+            for (p, v) in payload.iter_mut().zip(&st.x) {
+                *p = v * wf;
+            }
+            let to = (i + h) % n;
+            core.queue.push(k as f64, SparseShare { to, x: payload, w: st.w * w_mix });
+            for v in st.x.iter_mut() {
+                *v *= wf;
+            }
+            st.w *= w_mix;
+            core.sent += 1;
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.on_send(i, to, per_msg_bytes);
+            }
+        }
+        let compute_ns = lap_ns(&mut mark);
+
+        // Phase 2 — template deltas: a hot node whose in-neighbour is
+        // still cold receives the elided sender's share `template · ½`.
+        // Runs before phase 3 so receiver materializations this tick
+        // cannot masquerade as hot senders.
+        for &r in &core.hot {
+            let s = (r + n - h) % n;
+            if core.nodes[s].is_none() {
+                let st = core.nodes[r].as_deref_mut().expect("hot nodes are materialized");
+                for (a, t) in st.x.iter_mut().zip(&self.template.x) {
+                    *a += t * wf;
+                }
+                st.w += self.template.w * w_mix;
+            }
+        }
+        let merge_ns = lap_ns(&mut mark);
+
+        // Phase 3 — deliver queued shares, materializing cold receivers
+        // with a self-scaled template (the state the elided compute phase
+        // would have left them in).
+        while core.queue.peek_time().is_some_and(|t| t <= k as f64) {
+            let share = core.queue.pop().expect("peeked event exists").payload;
+            let j = share.to;
+            if core.nodes[j].is_none() {
+                let mut st = self.template.clone();
+                for v in st.x.iter_mut() {
+                    *v *= wf;
+                }
+                st.w *= w_mix;
+                core.nodes[j] = Some(Box::new(st));
+                core.hot.insert(j);
+            }
+            let st = core.nodes[j].as_deref_mut().expect("just ensured");
+            for (a, b) in st.x.iter_mut().zip(&share.x) {
+                *a += b;
+            }
+            st.w += share.w;
+            core.pool.push(share.x);
+        }
+        if self.biased {
+            // Cold nodes already sit at w = 1 (the template's weight), so
+            // only hot weights need the reset.
+            for &i in &core.hot {
+                core.nodes[i].as_deref_mut().expect("hot nodes are materialized").w = 1.0;
+            }
+        }
+        if let Some(o) = self.obs.as_deref_mut() {
+            let aggregate_ns = lap_ns(&mut mark);
+            let msgs = core.sent - sent0;
+            o.on_round(&RoundRecord {
+                k,
+                msgs,
+                dropped: 0,
+                rescued: 0,
+                wire_bytes: msgs * per_msg_bytes,
+                bank_l1: 0.0,
+                bank_w: 0.0,
+                compute_ns,
+                merge_ns,
+                aggregate_ns,
+                pool_wait_ns: 0,
+            });
+        }
+    }
+
+    /// Leave the fast path: materialize every node into a dense
+    /// [`PushSumEngine`] (template for cold nodes, transplanted state for
+    /// hot ones), carrying over the send counter and the recorder. The
+    /// sparse queue is empty between ticks (delay 0), so nothing is in
+    /// flight to migrate.
+    fn materialize_dense(&mut self) {
+        let core = self.sparse.take().expect("called only while sparse");
+        debug_assert!(core.queue.is_empty(), "sparse queue drains within each tick");
+        let mut weights: Vec<(usize, f64)> = Vec::with_capacity(core.hot.len());
+        let mut init: Vec<Vec<f32>> = Vec::with_capacity(self.n);
+        for (i, slot) in core.nodes.into_iter().enumerate() {
+            match slot {
+                Some(st) => {
+                    weights.push((i, st.w));
+                    init.push(st.x);
+                }
+                None => init.push(self.template.x.clone()),
+            }
+        }
+        let mut eng = PushSumEngine::new(init, self.delay, self.biased);
+        for (i, w) in weights {
+            eng.states[i].w = w;
+        }
+        eng.sent_count = core.sent;
+        eng.set_obs(self.obs.take());
+        self.dense = Some(eng);
+    }
+
+    /// Total mass `(Σᵢ xᵢ, Σᵢ wᵢ)` including in-flight mail — cold nodes
+    /// contribute `n_cold · template` in one multiply per coordinate.
+    /// Matches the dense engine's sum to f64 rounding (not bit-for-bit:
+    /// the cold side is a product, not n_cold additions).
+    pub fn total_mass(&self) -> (Vec<f64>, f64) {
+        match (&self.sparse, &self.dense) {
+            (Some(core), _) => {
+                let cold = (self.n - core.hot.len()) as f64;
+                let mut xm: Vec<f64> =
+                    self.template.x.iter().map(|&t| cold * t as f64).collect();
+                let mut wm = cold * self.template.w;
+                for &i in &core.hot {
+                    let st = core.nodes[i].as_deref().expect("hot nodes are materialized");
+                    for (a, b) in xm.iter_mut().zip(&st.x) {
+                        *a += *b as f64;
+                    }
+                    wm += st.w;
+                }
+                for ev in core.queue.iter() {
+                    for (a, b) in xm.iter_mut().zip(&ev.payload.x) {
+                        *a += *b as f64;
+                    }
+                    wm += ev.payload.w;
+                }
+                (xm, wm)
+            }
+            (None, Some(eng)) => eng.total_mass(),
+            (None, None) => unreachable!("engine is sparse or dense"),
+        }
+    }
+
+    /// Total mass including recorded drop-ledger losses and compression
+    /// banks — equal to [`Self::total_mass`] while sparse (the fast path
+    /// never drops or banks).
+    pub fn total_mass_with_losses(&self) -> (Vec<f64>, f64) {
+        match &self.dense {
+            Some(eng) => eng.total_mass_with_losses(),
+            None => self.total_mass(),
+        }
+    }
+
+    /// Mass recorded as lost to dropped messages — all zeros while sparse
+    /// (the fast path cannot drop).
+    pub fn dropped_mass(&self) -> (Vec<f64>, f64) {
+        match &self.dense {
+            Some(eng) => {
+                let (x, w) = eng.dropped_mass();
+                (x.to_vec(), w)
+            }
+            None => (vec![0.0; self.dim], 0.0),
+        }
+    }
+
+    /// In-flight messages (0 between sparse ticks — the fast path drains
+    /// its queue within every tick).
+    pub fn in_flight(&self) -> usize {
+        match (&self.sparse, &self.dense) {
+            (Some(core), _) => core.queue.len(),
+            (None, Some(eng)) => eng.in_flight(),
+            (None, None) => unreachable!("engine is sparse or dense"),
+        }
+    }
+
+    /// Maximum staleness among in-flight messages relative to iteration
+    /// `k` (0 between sparse ticks).
+    pub fn max_staleness(&self, k: u64) -> u64 {
+        match &self.dense {
+            Some(eng) => eng.max_staleness(k),
+            None => 0,
+        }
+    }
+
+    /// Flush all in-flight state (a no-op while sparse: nothing is ever
+    /// left in flight between ticks).
+    pub fn drain(&mut self) {
+        if let Some(eng) = &mut self.dense {
+            eng.drain();
+        }
+    }
+
+    /// Node-wise average of the numerators, `x̄ = (1/n) Σ xᵢ` — the cold
+    /// block contributes `n_cold · template` in one multiply.
+    pub fn mean_x(&self) -> Vec<f32> {
+        match (&self.sparse, &self.dense) {
+            (Some(core), _) => {
+                let cold = (self.n - core.hot.len()) as f64;
+                let mut m: Vec<f64> =
+                    self.template.x.iter().map(|&t| cold * t as f64).collect();
+                for &i in &core.hot {
+                    let st = core.nodes[i].as_deref().expect("hot nodes are materialized");
+                    for (a, b) in m.iter_mut().zip(&st.x) {
+                        *a += *b as f64;
+                    }
+                }
+                let inv = 1.0 / self.n as f64;
+                m.into_iter().map(|v| (v * inv) as f32).collect()
+            }
+            (None, Some(eng)) => eng.mean_x(),
+            (None, None) => unreachable!("engine is sparse or dense"),
+        }
+    }
+
+    /// Consensus statistics `(mean, min, max)` over nodes of
+    /// ‖zᵢ − x̄‖₂ — the cold block's (identical) distance is computed
+    /// once and weighted by the cold count, so the sparse form costs
+    /// O(hot · dim) instead of O(n · dim).
+    pub fn consensus_distance(&self) -> (f64, f64, f64) {
+        match (&self.sparse, &self.dense) {
+            (Some(core), _) => {
+                let mean = self.mean_x();
+                let dist = |st: &NodeState| -> f64 {
+                    let inv = (1.0 / st.w) as f32;
+                    st.x.iter()
+                        .zip(&mean)
+                        .map(|(x, m)| {
+                            let e = (x * inv - m) as f64;
+                            e * e
+                        })
+                        .sum::<f64>()
+                        .sqrt()
+                };
+                let cold = self.n - core.hot.len();
+                let (mut sum, mut min, mut max) = (0.0f64, f64::INFINITY, 0.0f64);
+                if cold > 0 {
+                    let d = dist(&self.template);
+                    sum += cold as f64 * d;
+                    min = min.min(d);
+                    max = max.max(d);
+                }
+                for &i in &core.hot {
+                    let st = core.nodes[i].as_deref().expect("hot nodes are materialized");
+                    let d = dist(st);
+                    sum += d;
+                    min = min.min(d);
+                    max = max.max(d);
+                }
+                (sum / self.n as f64, min, max)
+            }
+            (None, Some(eng)) => eng.consensus_distance(),
+            (None, None) => unreachable!("engine is sparse or dense"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyKind;
+
+    #[test]
+    fn cold_graph_is_a_fixed_point_with_zero_materialization() {
+        let n = 1 << 16;
+        let mut eng = EventEngine::with_template(vec![0.25, -3.0, 7.5], n, 0, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in 0..32 {
+            eng.step(k, &sched, None, Compression::Identity);
+        }
+        assert!(eng.is_sparse());
+        assert_eq!(eng.materialized(), 0);
+        assert_eq!(eng.sent_count(), 0);
+        let (xm, wm) = eng.total_mass();
+        assert_eq!(wm, n as f64);
+        assert_eq!(xm[0], 0.25 * n as f64);
+    }
+
+    #[test]
+    fn perturbation_spreads_one_edge_per_tick() {
+        let n = 64;
+        let mut eng = EventEngine::with_template(vec![0.0; 2], n, 0, false);
+        let sched = Schedule::new(TopologyKind::Ring, n);
+        eng.state_mut(5).x[0] = 1.0;
+        assert_eq!(eng.materialized(), 1);
+        for k in 0..4 {
+            eng.step(k, &sched, None, Compression::Identity);
+        }
+        // A ring spreads activity to exactly one new node per tick.
+        assert_eq!(eng.materialized(), 5);
+        // Mass is conserved exactly: one unit of numerator, n of weight.
+        let (xm, wm) = eng.total_mass();
+        assert!((xm[0] - 1.0).abs() < 1e-12, "{xm:?}");
+        assert!((wm - n as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subnormal_template_declines_the_fast_path() {
+        // The smallest subnormal: halving it rounds to zero (ties-to-even),
+        // so ½-split-and-recombine loses the value entirely. Note most
+        // subnormals *do* halve exactly — only the odd-mantissa ones lose a
+        // bit — which is why the gate tests the roundtrip rather than
+        // `is_normal()`.
+        let odd_subnormal = f32::from_bits(1);
+        let h = odd_subnormal * 0.5f32;
+        assert!(h + h != odd_subnormal, "test premise");
+        let mut eng = EventEngine::with_template(vec![odd_subnormal], 8, 0, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        eng.step(0, &sched, None, Compression::Identity);
+        assert!(!eng.is_sparse(), "subnormal halving is inexact — must go dense");
+    }
+
+    #[test]
+    fn non_permutation_schedule_materializes() {
+        let mut eng = EventEngine::with_template(vec![1.0; 4], 16, 0, false);
+        let sched = Schedule::new(TopologyKind::TwoPeerExp, 16);
+        eng.step(0, &sched, None, Compression::Identity);
+        assert!(!eng.is_sparse());
+        assert_eq!(eng.materialized(), 16);
+    }
+}

@@ -57,6 +57,15 @@ pub enum ExecPolicy {
         /// Number of state shards (clamped to ≥ 1 and to the node count).
         shards: usize,
     },
+    /// Event-driven arrivals: sends are scheduled on a priority queue
+    /// ([`crate::sim::EventQueue`]) keyed by delivery iteration and popped
+    /// in (time, sequence) order, and only nodes with pending arrivals do
+    /// aggregation work in a round. Runs inline on the calling thread and
+    /// produces **bit-identical** results to [`ExecPolicy::Sequential`] at
+    /// any N (the dense-identity contract of
+    /// [`crate::gossip::event_engine`], locked by
+    /// `tests/event_engine_equivalence.rs`).
+    Event,
 }
 
 impl ExecPolicy {
@@ -81,7 +90,7 @@ impl ExecPolicy {
     /// The configured shard count (1 for [`ExecPolicy::Sequential`]).
     pub fn shards(&self) -> usize {
         match self {
-            Self::Sequential => 1,
+            Self::Sequential | Self::Event => 1,
             Self::Parallel { shards } => (*shards).max(1),
         }
     }
@@ -92,8 +101,9 @@ impl ExecPolicy {
         self.shards().min(n.max(1))
     }
 
-    /// Parse a CLI engine name: `sequential`/`seq` or `parallel`/`par`.
-    /// `shards = 0` asks for the machine-sized default in parallel mode.
+    /// Parse a CLI engine name: `sequential`/`seq`, `parallel`/`par`, or
+    /// `event`/`ev`. `shards = 0` asks for the machine-sized default in
+    /// parallel mode (ignored for the other modes).
     pub fn parse(engine: &str, shards: usize) -> Option<Self> {
         match engine {
             "sequential" | "seq" => Some(Self::Sequential),
@@ -102,15 +112,17 @@ impl ExecPolicy {
             } else {
                 Self::parallel(shards)
             }),
+            "event" | "ev" => Some(Self::Event),
             _ => None,
         }
     }
 
-    /// Short human label (`"sequential"` or `"parallel×K"`).
+    /// Short human label (`"sequential"`, `"parallel×K"`, or `"event"`).
     pub fn label(&self) -> String {
         match self {
             Self::Sequential => "sequential".to_string(),
             Self::Parallel { shards } => format!("parallel×{shards}"),
+            Self::Event => "event".to_string(),
         }
     }
 }
@@ -149,7 +161,12 @@ mod tests {
             Some(ExecPolicy::Parallel { shards: 7 })
         );
         assert!(ExecPolicy::parse("parallel", 0).is_some());
+        assert_eq!(ExecPolicy::parse("event", 0), Some(ExecPolicy::Event));
+        assert_eq!(ExecPolicy::parse("ev", 4), Some(ExecPolicy::Event));
         assert_eq!(ExecPolicy::parse("nope", 2), None);
         assert_eq!(ExecPolicy::parallel(3).label(), "parallel×3");
+        assert_eq!(ExecPolicy::Event.label(), "event");
+        assert_eq!(ExecPolicy::Event.shards(), 1);
+        assert_eq!(ExecPolicy::Event.shards_for(100), 1);
     }
 }

@@ -69,9 +69,11 @@
 //! Σx *and* Σw) and the bit-identity contract across shard counts.
 
 pub mod compress;
+pub mod event_engine;
 pub mod exec;
 
 pub use compress::Compression;
+pub use event_engine::EventEngine;
 pub use exec::ExecPolicy;
 
 use std::collections::BTreeMap;
@@ -83,7 +85,7 @@ use compress::EdgeBank;
 use crate::faults::FaultClock;
 use crate::obs::{EngineObs, ObsSink, RoundRecord};
 use crate::runtime::pool::{self, Pool};
-use crate::topology::Schedule;
+use crate::topology::{PeerMemo, Schedule};
 
 /// Per-sender error-feedback banks, keyed by destination node. A
 /// `BTreeMap` so bank-mass accounting and drain walk edges in a
@@ -151,6 +153,10 @@ struct ShardScratch {
     /// Out-peer scratch: the schedule fills this in place each node, so
     /// the hot path never allocates a peer list.
     peers: Vec<usize>,
+    /// Survivor-rank memo for fault-mode peer lookup, rebuilt only when
+    /// the membership epoch changes — without it every node of every
+    /// round re-derives its rank by binary search over the alive set.
+    memo: PeerMemo,
 }
 
 impl ShardScratch {
@@ -160,6 +166,7 @@ impl ShardScratch {
             pool: Vec::new(),
             idx: Vec::new(),
             peers: Vec::new(),
+            memo: PeerMemo::new(0),
         }
     }
 }
@@ -310,6 +317,15 @@ fn compute_shard(
         }
         Some((clock, alive)) => {
             let rescue = clock.plan.rescue;
+            // Rank lookups are memoized per membership epoch: the rebuild
+            // below is a no-op except on the round after a crash, leave,
+            // or rejoin (see `memo_invalidates_on_leave_and_rejoin_events`
+            // in the topology tests).
+            scratch.memo.ensure(
+                clock.membership_epoch(k),
+                alive,
+                ctx.schedule.n,
+            );
             for (off, (st, res)) in
                 states.iter_mut().zip(residuals.iter_mut()).enumerate()
             {
@@ -318,7 +334,8 @@ fn compute_shard(
                 if clock.is_down(i, k) {
                     continue;
                 }
-                ctx.schedule.out_peers_among_into(i, k, alive, &mut scratch.peers);
+                ctx.schedule
+                    .out_peers_among_memo(i, k, &scratch.memo, &mut scratch.peers);
                 let w_mix = 1.0 / (1.0 + scratch.peers.len() as f64);
                 let wf = w_mix as f32;
                 let msg_w = st.w * w_mix;
@@ -393,6 +410,30 @@ fn compute_shard(
     }
 }
 
+/// Drain every message due at `k` from one mailbox into one node state,
+/// recycling payload buffers into `pool` — the swap-remove scan at the
+/// heart of phase 3. **This is the bit-identity anchor for aggregation**:
+/// the application order it produces (and the permutation it leaves the
+/// not-yet-due survivors in, which determines *future* application
+/// orders under τ ≥ 2) is part of the engine-equivalence contract, so
+/// every execution mode — sequential, pooled, event-driven — must drain
+/// mailboxes through this one function.
+fn drain_due(st: &mut NodeState, inbox: &mut Vec<Message>, k: u64, pool: &mut Vec<Vec<f32>>) {
+    let mut j = 0;
+    while j < inbox.len() {
+        if inbox[j].deliver_iter <= k {
+            let msg = inbox.swap_remove(j);
+            for (a, b) in st.x.iter_mut().zip(&msg.x) {
+                *a += b;
+            }
+            st.w += msg.w;
+            pool.push(msg.x);
+        } else {
+            j += 1;
+        }
+    }
+}
+
 /// Phase 3 for the contiguous node range starting at `base`: drain every
 /// message due at `k` from this shard's mailboxes into its states,
 /// recycling payload buffers into the shard pool. Touches only this
@@ -413,21 +454,7 @@ fn aggregate_shard(
                 continue;
             }
         }
-        let mut inbox = std::mem::take(slot);
-        let mut j = 0;
-        while j < inbox.len() {
-            if inbox[j].deliver_iter <= k {
-                let msg = inbox.swap_remove(j);
-                for (a, b) in st.x.iter_mut().zip(&msg.x) {
-                    *a += b;
-                }
-                st.w += msg.w;
-                pool.push(msg.x);
-            } else {
-                j += 1;
-            }
-        }
-        *slot = inbox;
+        drain_due(st, slot, k, pool);
     }
     if biased {
         for st in states.iter_mut() {
@@ -579,6 +606,12 @@ pub struct PushSumEngine {
     /// pre-allocated, so the instrumented hot path stays allocation-free
     /// (`rust/tests/alloc_regression.rs` runs with it attached).
     obs: Option<Box<EngineObs>>,
+    /// Arrival scheduler for [`ExecPolicy::Event`] rounds
+    /// ([`event_engine::ArrivalFlow`]): a priority queue of delivery
+    /// notifications so aggregation visits only nodes with due mail.
+    /// `None` until the first event-mode round; boxed so the other modes
+    /// pay one pointer.
+    arrivals: Option<Box<event_engine::ArrivalFlow>>,
 }
 
 impl PushSumEngine {
@@ -606,6 +639,7 @@ impl PushSumEngine {
             rescue_count: 0,
             sent_count: 0,
             obs: None,
+            arrivals: None,
         }
     }
 
@@ -728,6 +762,15 @@ impl PushSumEngine {
         compress: Compression,
     ) {
         let deliver_at = k + self.delay;
+        let event_mode = exec == ExecPolicy::Event;
+        if event_mode && self.arrivals.is_none() {
+            // First event-mode round: build the arrival scheduler, seeding
+            // notifications for any mail already in flight (a run may
+            // switch policies mid-stream — semantics never depend on the
+            // policy, only the work pattern does).
+            self.arrivals =
+                Some(Box::new(event_engine::ArrivalFlow::new(self.n, &self.inboxes)));
+        }
         // Survivor list: filled in place into the engine-owned buffer
         // (moved out for the borrow checker's benefit, moved back below).
         let mut alive_buf = std::mem::take(&mut self.alive_buf);
@@ -816,6 +859,13 @@ impl PushSumEngine {
                 if let Some(o) = obs.as_deref_mut() {
                     o.on_send(msg.from, msg.to, per_msg_bytes);
                 }
+                // The scheduler (if built) tracks every send so event-mode
+                // aggregation knows which mailboxes have due mail — even
+                // for sends made under another policy, keeping mid-run
+                // policy switches lossless.
+                if let Some(a) = self.arrivals.as_deref_mut() {
+                    a.note_send(msg.deliver_iter, msg.to);
+                }
                 self.inboxes[msg.to].push(msg);
             }
             for msg in self.outs[idx].dropped.drain(..) {
@@ -837,7 +887,23 @@ impl PushSumEngine {
         // Phase 3 — per-shard aggregation of deliveries due at k. The
         // shard table is rebuilt (pointers re-derived) because the merge
         // phase held fresh borrows of the same fields.
-        if used == 1 {
+        if event_mode {
+            // Arrival-driven aggregation: pop due delivery notifications
+            // off the priority queue and drain only those mailboxes (plus
+            // any parked for a crashed node that has since rejoined).
+            // Mailboxes stay the source of truth, so the drained bits are
+            // identical to `aggregate_shard`'s.
+            let mut arrivals = self.arrivals.take().expect("arrival flow built above");
+            event_engine::aggregate_event(
+                &mut arrivals,
+                &mut self.states,
+                &mut self.inboxes,
+                &mut self.scratch[0].pool,
+                ctx,
+                biased,
+            );
+            self.arrivals = Some(arrivals);
+        } else if used == 1 {
             aggregate_shard(
                 0,
                 &mut self.states,
@@ -960,6 +1026,12 @@ impl PushSumEngine {
     /// into its (frozen) state rather than left stranded. Locked in by the
     /// `drain_leaves_zero_in_flight_and_zero_staleness` test.
     pub fn drain(&mut self) {
+        // The arrival scheduler's pending notifications refer to mail that
+        // is about to be force-delivered below; forget them (and rewind
+        // the virtual clock) so a post-drain run can restart at k = 0.
+        if let Some(a) = self.arrivals.as_deref_mut() {
+            a.clear();
+        }
         for i in 0..self.n {
             for msg in std::mem::take(&mut self.inboxes[i]) {
                 let st = &mut self.states[i];

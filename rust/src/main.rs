@@ -5,6 +5,7 @@
 //!   bench <exp>  regenerate a paper table/figure (all, fig1, table1..5, …)
 //!   faults       robustness sweep under message loss / churn (offline)
 //!   engine-sweep large-N scaling sweep of the parallel execution engine
+//!   scale-sweep  event-engine scaling sweep to ~10^6 nodes (wall + peak RSS)
 //!   compress-sweep compressed-gossip sweep: byte reduction × heterogeneity
 //!   bench-check  CI perf gate: fresh BENCH_*.json vs committed baselines
 //!   coord        deployment coordinator: register workers, track liveness
@@ -38,11 +39,13 @@ USAGE:
   repro train   [--model mlp_small] [--algo <name>] [--nodes 8]
                 [--epochs 10] [--steps-per-epoch 16] [--fabric ethernet|ib]
                 [--tau 1] [--grad-delay 1] [--seed 0] [--adam]
-                [--heterogeneity 0.3] [--engine sequential|parallel]
+                [--heterogeneity 0.3] [--engine sequential|parallel|event]
                 [--shards K] [--compress none|topk:D|qsgd:B]
                 (see `repro algos` for the registered algorithm names;
-                --engine parallel shards the gossip round across K workers
-                — bit-identical to sequential at the same seed;
+                --engine parallel shards the gossip round across K workers,
+                --engine event drives aggregation off a priority queue of
+                message arrivals — both bit-identical to sequential at the
+                same seed;
                 --compress encodes gossip messages — top 1-in-D coords or
                 B-bit quantized — with per-edge error feedback, and the
                 timing charges the actual encoded bytes)
@@ -51,7 +54,7 @@ USAGE:
   repro faults  [--drop 0..0.2 | --drop 0,0.05,0.1] [--crash 3@40:80,5@60]
                 [--nodes 16] [--iters 200] [--algos ar-sgd,sgp,...]
                 [--seed 1] [--no-rescue] [--fast]
-                [--engine sequential|parallel] [--shards K]
+                [--engine sequential|parallel|event] [--shards K]
                 [--compress none|topk:D|qsgd:B]
                 offline robustness sweep: final error / consensus / makespan
                 per algorithm × fault level. --crash uses node@iter[:rejoin]
@@ -65,6 +68,16 @@ USAGE:
                 sequential vs pool-sharded wall-clock plus a bit-identity
                 check. --threads sweeps the worker-pool size (0 = the
                 machine default). Writes results/engine_sweep.csv.
+  repro scale-sweep [--max-n 1048576] [--dim 64] [--steps 64] [--active 64]
+                [--dense-cap 4096] [--seed 1] [--fast]
+                event-engine scaling sweep: wall-clock and peak-RSS curves
+                as the node count grows to ~10^6, for the sparse engine's
+                quiescent (all-cold) and active (perturbed hot set) modes
+                plus a dense reference at small N. The quiescent curve
+                asserts zero materialization — the cold-template fixed
+                point checked at full scale. Writes
+                results/BENCH_event.json (outside the bench-check gate:
+                absolute wall-clock at 10^6 nodes is machine-bound).
   repro bench-check [--results results] [--baselines benchmarks/baselines]
                 [--tol 0.25] [--update]
                 CI perf-regression gate: diff fresh results/BENCH_*.json
@@ -114,7 +127,7 @@ USAGE:
   repro inspect
 ";
 
-/// Parse `--engine sequential|parallel` + `--shards K` into an
+/// Parse `--engine sequential|parallel|event` + `--shards K` into an
 /// [`ExecPolicy`]. `--shards K` alone (K > 1) implies the parallel engine;
 /// `--engine parallel` without `--shards` sizes itself to the machine.
 fn parse_exec(args: &Args) -> Result<ExecPolicy> {
@@ -122,7 +135,9 @@ fn parse_exec(args: &Args) -> Result<ExecPolicy> {
     match args.value_of("engine")? {
         None => Ok(ExecPolicy::parallel(shards)),
         Some(name) => ExecPolicy::parse(name, shards).ok_or_else(|| {
-            anyhow::anyhow!("unknown engine `{name}` (expected sequential|parallel)")
+            anyhow::anyhow!(
+                "unknown engine `{name}` (expected sequential|parallel|event)"
+            )
         }),
     }
 }
@@ -393,6 +408,24 @@ fn cmd_engine_sweep(args: &Args) -> Result<()> {
     experiments::engine_sweep(&sweep)
 }
 
+fn cmd_scale_sweep(args: &Args) -> Result<()> {
+    let mut sweep = experiments::ScaleSweep::new(args.flag_strict("fast")?);
+    let max_n = args.usize_or("max-n", *sweep.ns.last().unwrap_or(&1024))?;
+    if max_n < 2 {
+        bail!("--max-n {max_n}: need at least 2 nodes to gossip");
+    }
+    sweep.ns.retain(|&n| n <= max_n);
+    if sweep.ns.last().is_none_or(|&top| max_n > top) {
+        sweep.ns.push(max_n);
+    }
+    sweep.dim = args.usize_or("dim", sweep.dim)?;
+    sweep.steps = args.u64_or("steps", sweep.steps)?;
+    sweep.active = args.usize_or("active", sweep.active)?;
+    sweep.dense_cap = args.usize_or("dense-cap", sweep.dense_cap)?;
+    sweep.seed = args.u64_or("seed", sweep.seed)?;
+    experiments::scale_sweep(&sweep)
+}
+
 fn cmd_bench_check(args: &Args) -> Result<()> {
     let mut cfg = benchgate::BenchCheck::default();
     if let Some(d) = args.value_of("results")? {
@@ -547,6 +580,7 @@ fn main() -> Result<()> {
         Some("bench") => cmd_bench(&args)?,
         Some("faults") => cmd_faults(&args)?,
         Some("engine-sweep") => cmd_engine_sweep(&args)?,
+        Some("scale-sweep") => cmd_scale_sweep(&args)?,
         Some("compress-sweep") => cmd_compress_sweep(&args)?,
         Some("bench-check") => cmd_bench_check(&args)?,
         Some("coord") => cmd_coord(&args)?,

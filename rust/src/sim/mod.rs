@@ -51,6 +51,20 @@ impl<T: PartialEq> EventQueue<T> {
         Self { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
     }
 
+    /// An empty queue with room for `cap` events before reallocating.
+    ///
+    /// The event engine pre-sizes its arrival queue with this so the
+    /// steady-state hot path stays allocation-free (the heap's buffer is
+    /// retained across pops).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap), seq: 0, now: 0.0 }
+    }
+
+    /// Reserve room for at least `additional` more events.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
     /// Schedule `payload` at `time` (panics if `time` is in the past).
     pub fn push(&mut self, time: f64, payload: T) {
         assert!(time >= self.now, "cannot schedule into the past");
@@ -69,6 +83,33 @@ impl<T: PartialEq> EventQueue<T> {
     /// The current simulated time (time of the last popped event).
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// Firing time of the earliest pending event, if any, without popping.
+    ///
+    /// Lets event-driven engines drain "everything due by tick `k`" with a
+    /// peek-then-pop loop instead of popping speculatively and re-pushing
+    /// (a re-push would burn a sequence number and perturb tie-breaks).
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Iterate over all pending events in arbitrary (heap) order.
+    ///
+    /// For inspection only — mass audits, staleness bounds — never for
+    /// delivery ordering, which must go through [`EventQueue::pop`].
+    pub fn iter(&self) -> impl Iterator<Item = &Event<T>> {
+        self.heap.iter()
+    }
+
+    /// Drop all pending events and rewind the clock (and sequence counter)
+    /// to 0, retaining the heap's capacity. Used when an engine drains its
+    /// in-flight state at end of run: the queue must forget its schedule
+    /// so a subsequent run can start from virtual time 0 again.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now = 0.0;
     }
 
     /// Number of pending events.
@@ -126,6 +167,19 @@ mod tests {
         assert_eq!(q.now(), 0.6);
         q.pop();
         assert_eq!(q.now(), 0.7);
+    }
+
+    #[test]
+    fn peek_does_not_advance_clock() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(2.0, 'x');
+        q.push(1.0, 'y');
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.iter().count(), 2);
+        q.pop();
+        assert_eq!(q.peek_time(), Some(2.0));
     }
 
     #[test]

@@ -224,6 +224,69 @@ impl Schedule {
         }
     }
 
+    /// [`Self::out_peers_among_into`] against a [`PeerMemo`] that has
+    /// already been built for the current membership epoch — O(1) rank
+    /// lookup instead of a per-call binary search. Produces byte-identical
+    /// output to the unmemoized form (locked by a regression test).
+    ///
+    /// The caller owns invalidation: call [`PeerMemo::ensure`] whenever the
+    /// fault clock reports a membership event (Crash/Rejoin/Leave), then
+    /// this method any number of times within the epoch.
+    pub fn out_peers_among_memo(
+        &self,
+        i: usize,
+        k: u64,
+        memo: &PeerMemo,
+        out: &mut Vec<usize>,
+    ) {
+        debug_assert_eq!(memo.rank_of.len(), self.n, "memo sized for wrong n");
+        if memo.alive.len() == self.n {
+            self.out_peers_into(i, k, out);
+            return;
+        }
+        out.clear();
+        let Some(&rank) = memo.rank_of.get(i) else {
+            return;
+        };
+        if rank < 0 || memo.alive.len() <= 1 {
+            return;
+        }
+        let virt = Schedule { kind: self.kind, n: memo.alive.len(), seed: self.seed };
+        virt.out_peers_into(rank as usize, k, out);
+        for r in out.iter_mut() {
+            *r = memo.alive[*r];
+        }
+    }
+
+    /// When the mixing at iteration `k` is a unit-shift permutation — every
+    /// node sends to exactly one peer at constant offset `h`, i.e.
+    /// `out(i, k) = {(i + h) mod n}` for all `i` — returns `Some(h)`.
+    ///
+    /// Holds for [`TopologyKind::OnePeerExp`] (h = 2^(k mod c)),
+    /// [`TopologyKind::Ring`] (h = 1) and [`TopologyKind::CompleteCycling`]
+    /// (h = 1 + k mod (n−1)); `None` for every other kind and for n ≤ 1.
+    ///
+    /// The event engine's cold fast path keys off this: under a unit
+    /// permutation every node's out-weight is exactly ½, so a graph of
+    /// all-identical (template) states is a bit-exact fixed point and a
+    /// quiescent node's in-neighbour can be found arithmetically as
+    /// `(i + n − h) mod n` without materializing anything.
+    pub fn unit_permutation_shift(&self, k: u64) -> Option<usize> {
+        let n = self.n;
+        if n <= 1 {
+            return None;
+        }
+        match self.kind {
+            TopologyKind::OnePeerExp => {
+                let c = Self::exp_offset_count(n);
+                Some(Self::exp_offset(n, (k as usize) % c) % n)
+            }
+            TopologyKind::Ring => Some(1),
+            TopologyKind::CompleteCycling => Some(1 + (k as usize) % (n - 1)),
+            _ => None,
+        }
+    }
+
     /// Column-stochastic mixing matrix over the `alive.len()` survivors
     /// (row/col order = survivor rank order), uniform out-weights with a
     /// self-loop — the fault-mode analogue of [`Self::mixing_matrix`].
@@ -330,6 +393,84 @@ impl Schedule {
             }
         }
         adj.iter().all(|row| row.iter().all(|&x| x))
+    }
+}
+
+/// Memoized survivor-rank table for [`Schedule::out_peers_among_memo`].
+///
+/// `out_peers_among_into` re-derives the survivor rank of the sender with a
+/// binary search on every call; in sparse/event mode that is one search per
+/// *arrival*, not per round, so churny long runs pay it millions of times
+/// for a membership set that only changes on Crash/Rejoin/Leave events.
+/// The memo pins the `rank_of` table to a membership *epoch* (a counter the
+/// caller bumps on every membership event) and rebuilds only when the epoch
+/// moves. `rebuilds()` exposes the rebuild count so tests can pin the
+/// invalidation contract.
+#[derive(Clone, Debug, Default)]
+pub struct PeerMemo {
+    /// Epoch the table was last built for (`None` = never built).
+    epoch: Option<u64>,
+    /// Sorted survivor set the table was built from.
+    alive: Vec<usize>,
+    /// `rank_of[i]` = survivor rank of physical node `i`, or −1 if dead.
+    rank_of: Vec<isize>,
+    /// Number of table rebuilds (diagnostics / regression tests).
+    rebuilds: u64,
+}
+
+impl PeerMemo {
+    /// An unbuilt memo sized for an `n`-node schedule (`n = 0` defers
+    /// sizing to the first [`PeerMemo::ensure`]). The first `ensure` call
+    /// builds the table; rebuild allocation only ever happens on a
+    /// membership epoch change, keeping the per-arrival path
+    /// allocation-free.
+    pub fn new(n: usize) -> Self {
+        Self {
+            epoch: None,
+            alive: Vec::with_capacity(n),
+            rank_of: vec![-1; n],
+            rebuilds: 0,
+        }
+    }
+
+    /// Rebuild the rank table from `alive` (sorted, over an `n`-node
+    /// schedule) iff `epoch` differs from the epoch the table was last
+    /// built for. Returns whether a rebuild happened.
+    pub fn ensure(&mut self, epoch: u64, alive: &[usize], n: usize) -> bool {
+        if self.epoch == Some(epoch) && self.rank_of.len() == n {
+            return false;
+        }
+        debug_assert!(alive.windows(2).all(|w| w[0] < w[1]), "alive must be sorted");
+        self.rank_of.clear();
+        self.rank_of.resize(n, -1);
+        self.alive.clear();
+        self.alive.extend_from_slice(alive);
+        for (rank, &node) in alive.iter().enumerate() {
+            self.rank_of[node] = rank as isize;
+        }
+        self.epoch = Some(epoch);
+        self.rebuilds += 1;
+        true
+    }
+
+    /// Epoch of the current table (`None` before the first build).
+    pub fn epoch(&self) -> Option<u64> {
+        self.epoch
+    }
+
+    /// How many times the table has been (re)built.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// The survivor set the table was built from.
+    pub fn alive(&self) -> &[usize] {
+        &self.alive
+    }
+
+    /// Whether physical node `i` is in the memoized survivor set.
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.rank_of.get(i).is_some_and(|&r| r >= 0)
     }
 }
 
@@ -573,6 +714,118 @@ mod tests {
     fn single_survivor_idles() {
         let s = Schedule::new(TopologyKind::OnePeerExp, 8);
         assert!(s.out_peers_among(2, 0, &[2]).is_empty());
+    }
+
+    #[test]
+    fn unit_permutation_shift_matches_out_peers() {
+        for kind in [
+            TopologyKind::OnePeerExp,
+            TopologyKind::Ring,
+            TopologyKind::CompleteCycling,
+        ] {
+            for n in [2usize, 3, 5, 8, 16] {
+                let s = Schedule::new(kind, n);
+                for k in 0..12u64 {
+                    let h = s
+                        .unit_permutation_shift(k)
+                        .expect("permutation kinds always report a shift");
+                    for i in 0..n {
+                        assert_eq!(
+                            s.out_peers(i, k),
+                            vec![(i + h) % n],
+                            "{kind:?} n={n} k={k} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+        for kind in [
+            TopologyKind::TwoPeerExp,
+            TopologyKind::Complete,
+            TopologyKind::RandomExp,
+            TopologyKind::RandomAny,
+            TopologyKind::BipartiteExp,
+        ] {
+            let s = Schedule::new(kind, 8);
+            assert_eq!(s.unit_permutation_shift(0), None, "{kind:?}");
+        }
+        assert_eq!(Schedule::new(TopologyKind::Ring, 1).unit_permutation_shift(0), None);
+    }
+
+    #[test]
+    fn memoized_peers_match_unmemoized() {
+        for kind in [
+            TopologyKind::OnePeerExp,
+            TopologyKind::TwoPeerExp,
+            TopologyKind::CompleteCycling,
+            TopologyKind::BipartiteExp,
+            TopologyKind::RandomAny,
+        ] {
+            let s = Schedule::with_seed(kind, 16, 7);
+            for alive in [
+                (0..16).collect::<Vec<_>>(),
+                (0..16).filter(|i| i % 3 != 0).collect(),
+                vec![2, 9],
+                vec![5],
+            ] {
+                let mut memo = PeerMemo::new(16);
+                assert!(memo.ensure(0, &alive, 16));
+                assert!(
+                    !memo.ensure(0, &alive, 16),
+                    "same epoch must not rebuild"
+                );
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                for k in 0..10u64 {
+                    for i in 0..16 {
+                        s.out_peers_among_into(i, k, &alive, &mut a);
+                        s.out_peers_among_memo(i, k, &memo, &mut b);
+                        assert_eq!(a, b, "{kind:?} k={k} i={i} alive={alive:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memo_invalidates_on_leave_and_rejoin_events() {
+        use crate::faults::FaultClock;
+        use crate::faults::FaultPlan;
+        let n = 8usize;
+        // Node 2 crashes at k=3 and rejoins at k=6; node 5 leaves for good
+        // at k=4. Each membership event must trigger exactly one rebuild.
+        let clock = FaultClock::new(
+            FaultPlan::lossless()
+                .with_crash(2, 3, Some(6))
+                .with_crash(5, 4, None),
+        );
+        let s = Schedule::new(TopologyKind::OnePeerExp, n);
+        let mut memo = PeerMemo::new(n);
+        let mut epoch = 0u64;
+        let mut alive = Vec::new();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        for k in 0..10u64 {
+            if clock.membership_changed_at(k) {
+                epoch += 1;
+            }
+            clock.alive_into(n, k, &mut alive);
+            let rebuilt = memo.ensure(epoch, &alive, n);
+            // The memo rebuilds exactly when membership changed (after the
+            // initial build at k=0).
+            assert_eq!(
+                rebuilt,
+                k == 0 || clock.membership_changed_at(k),
+                "k={k}"
+            );
+            assert_eq!(memo.alive(), &alive[..]);
+            for i in 0..n {
+                s.out_peers_among_into(i, k, &alive, &mut want);
+                s.out_peers_among_memo(i, k, &memo, &mut got);
+                assert_eq!(want, got, "k={k} i={i}");
+                assert_eq!(memo.is_alive(i), alive.contains(&i));
+            }
+        }
+        // Initial build + crash@3 + leave@4 + rejoin@6.
+        assert_eq!(memo.rebuilds(), 4);
     }
 
     #[test]

@@ -146,4 +146,68 @@ fn dense_gossip_round_is_allocation_free_after_warmup() {
         "compressed (topk) round allocated: {allocs} calls over {measure} \
          rounds — scratch or bank state is being reallocated"
     );
+
+    // --- event-driven arrivals on the dense engine, τ ∈ {0, 1} ----------
+    // The arrival queue (built on the first event round, heap capacity
+    // settled during warm-up), the due/parked scratch and the
+    // notification-pop → drain path must all stay allocation-free per
+    // arrival once warm.
+    for delay in [0u64, 1] {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::TwoPeerExp] {
+            let sched = Schedule::new(kind, n);
+            let mut eng = PushSumEngine::new(init(n, dim), delay, false);
+            eng.set_obs(Some(Box::new(EngineObs::new(n, 64))));
+            let mut k = 0u64;
+            for _ in 0..warm {
+                eng.step_exec(k, &sched, None, ExecPolicy::Event);
+                k += 1;
+            }
+            let allocs = allocs_during(|| {
+                for _ in 0..measure {
+                    eng.step_exec(k, &sched, None, ExecPolicy::Event);
+                    k += 1;
+                }
+            });
+            assert_eq!(
+                allocs, 0,
+                "event-mode round allocated ({kind:?}, τ={delay}): {allocs} \
+                 calls over {measure} rounds — the arrival scheduler put an \
+                 allocation back on the per-arrival path"
+            );
+        }
+    }
+
+    // --- sparse EventEngine, hot set saturated ---------------------------
+    // Every node perturbed → every node hot: the worst steady state the
+    // sparse tick has (all sends physical, all shares through the queue).
+    // After the first few ticks the share-buffer pool and the arrival
+    // heap reach capacity and a tick must allocate nothing.
+    {
+        use sgp::gossip::EventEngine;
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        let mut eng = EventEngine::with_template(vec![0.25f32; dim], n, 0, false);
+        eng.set_obs(Some(Box::new(EngineObs::new(n, 64))));
+        for i in 0..n {
+            eng.state_mut(i).x[0] = 1.0 + i as f32;
+        }
+        let mut k = 0u64;
+        for _ in 0..warm {
+            eng.step(k, &sched, None, Compression::Identity);
+            k += 1;
+        }
+        assert!(eng.is_sparse(), "saturation must not force the dense fall-off");
+        assert_eq!(eng.materialized(), n);
+        let allocs = allocs_during(|| {
+            for _ in 0..measure {
+                eng.step(k, &sched, None, Compression::Identity);
+                k += 1;
+            }
+        });
+        assert_eq!(
+            allocs, 0,
+            "sparse event tick allocated with a saturated hot set: {allocs} \
+             calls over {measure} ticks — the share pool or arrival queue is \
+             being reallocated"
+        );
+    }
 }

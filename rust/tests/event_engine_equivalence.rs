@@ -1,0 +1,411 @@
+//! The event engine's dense-identity contract, property-tested.
+//!
+//! Two layers, two batteries:
+//!
+//! 1. [`sgp::gossip::ExecPolicy::Event`] on the dense engine must be
+//!    **bit-identical** to the sequential and pooled engines — states,
+//!    mailboxes, ledger, counters, consensus — for random topologies ×
+//!    fault plans × compression specs × delays, including the τ ≥ 2
+//!    regime where the swap-remove drain permutes not-yet-due survivors
+//!    (the ordering trap that forces notifications-only queues).
+//!
+//! 2. The sparse [`sgp::gossip::EventEngine`] must match a dense engine
+//!    started from the fully-materialized initial state: bit-identical
+//!    per-node states while on the fast path, through the dense fall-off,
+//!    and across mid-run regime changes (compression switching on).
+//!
+//! Same generator style as `prop_invariants.rs`: the offline build has no
+//! proptest, so cases are drawn from seeded [`Pcg`] streams and the
+//! failing case's seed is printed in the assert message.
+
+use sgp::faults::{FaultClock, FaultPlan};
+use sgp::gossip::{Compression, EventEngine, ExecPolicy, PushSumEngine};
+use sgp::rng::Pcg;
+use sgp::topology::{Schedule, TopologyKind};
+
+const KINDS: &[TopologyKind] = &[
+    TopologyKind::OnePeerExp,
+    TopologyKind::TwoPeerExp,
+    TopologyKind::Complete,
+    TopologyKind::CompleteCycling,
+    TopologyKind::RandomExp,
+    TopologyKind::RandomAny,
+    TopologyKind::Ring,
+    TopologyKind::BipartiteExp,
+];
+
+/// Unit-permutation schedules — the sparse fast path's domain.
+const PERM_KINDS: &[TopologyKind] = &[
+    TopologyKind::OnePeerExp,
+    TopologyKind::Ring,
+    TopologyKind::CompleteCycling,
+];
+
+const SPECS: &[Compression] = &[
+    Compression::Identity,
+    Compression::TopK { den: 8 },
+    Compression::Qsgd { bits: 4 },
+];
+
+fn arb_n(rng: &mut Pcg) -> usize {
+    [2, 3, 5, 8, 13, 16, 32, 256][rng.below(8)]
+}
+
+/// Random fault plan: drop rate, maybe rescue, up to two crashes
+/// (rejoining or permanent).
+fn arb_plan(rng: &mut Pcg, n: usize, horizon: u64, seed: u64) -> FaultPlan {
+    let mut plan = FaultPlan::lossless()
+        .with_drop(rng.f64() * 0.3)
+        .with_rescue(rng.f64() < 0.5)
+        .with_seed(seed);
+    for _ in 0..rng.below(3) {
+        let node = rng.below(n);
+        let at = rng.next_u64() % horizon.max(1);
+        let rejoin = if rng.f64() < 0.5 {
+            Some(at + 1 + rng.next_u64() % horizon.max(1))
+        } else {
+            None
+        };
+        plan = plan.with_crash(node, at, rejoin);
+    }
+    plan
+}
+
+/// Assert two dense engines hold exactly the same bits everywhere the
+/// contract covers.
+fn assert_engines_identical(seq: &PushSumEngine, evt: &PushSumEngine, tag: &str) {
+    for (i, (a, b)) in seq.states.iter().zip(&evt.states).enumerate() {
+        assert_eq!(a.x, b.x, "{tag}: node {i} numerator diverged");
+        assert_eq!(
+            a.w.to_bits(),
+            b.w.to_bits(),
+            "{tag}: node {i} push-sum weight diverged"
+        );
+    }
+    assert_eq!(seq.in_flight(), evt.in_flight(), "{tag}: in-flight count");
+    assert_eq!(seq.sent_count, evt.sent_count, "{tag}: sent counter");
+    assert_eq!(seq.drop_count, evt.drop_count, "{tag}: drop counter");
+    assert_eq!(seq.rescue_count, evt.rescue_count, "{tag}: rescue counter");
+    let (dxa, dwa) = seq.dropped_mass();
+    let (dxb, dwb) = evt.dropped_mass();
+    assert_eq!(dwa.to_bits(), dwb.to_bits(), "{tag}: dropped w ledger");
+    for (a, b) in dxa.iter().zip(dxb) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: dropped x ledger");
+    }
+    let (ca, cb) = (seq.consensus_distance(), evt.consensus_distance());
+    assert_eq!(ca.0.to_bits(), cb.0.to_bits(), "{tag}: consensus mean");
+    assert_eq!(ca.1.to_bits(), cb.1.to_bits(), "{tag}: consensus min");
+    assert_eq!(ca.2.to_bits(), cb.2.to_bits(), "{tag}: consensus max");
+}
+
+/// Mass-ledger balance: states + in-flight + drop ledger + banks must
+/// still account for every unit of the initial mass (same tolerances as
+/// `prop_invariants.rs`: w is exact f64 arithmetic, x crosses f32
+/// compression rounding).
+fn assert_mass_balanced(eng: &PushSumEngine, x0: &[f64], w0: f64, tag: &str) {
+    let (xm, wm) = eng.total_mass_with_losses();
+    assert!((wm - w0).abs() < 1e-9, "{tag}: w mass drifted ({wm} vs {w0})");
+    for (d, (got, want)) in xm.iter().zip(x0).enumerate() {
+        assert!(
+            (got - want).abs() < 1e-2,
+            "{tag}: x[{d}] mass drifted ({got} vs {want})"
+        );
+    }
+}
+
+#[test]
+fn prop_event_policy_bit_identical_clean() {
+    for case in 0..40u64 {
+        let mut rng = Pcg::new(30_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(24);
+        let delay = rng.below(4) as u64;
+        let biased = rng.f64() < 0.2;
+        let spec = SPECS[rng.below(SPECS.len())];
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        let tag = format!(
+            "case {case}: {kind:?} n={n} dim={dim} delay={delay} \
+             biased={biased} {spec:?}"
+        );
+        let mut seq = PushSumEngine::new(init.clone(), delay, biased);
+        let mut evt = PushSumEngine::new(init.clone(), delay, biased);
+        let (x0, w0) = evt.total_mass_with_losses();
+        for k in 0..25 {
+            seq.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
+            evt.step_compressed(k, &sched, None, ExecPolicy::Event, spec);
+        }
+        assert_engines_identical(&seq, &evt, &tag);
+        if !biased {
+            assert_mass_balanced(&evt, &x0, w0, &tag);
+        }
+        seq.drain();
+        evt.drain();
+        assert_engines_identical(&seq, &evt, &format!("{tag} (drained)"));
+    }
+}
+
+#[test]
+fn prop_event_policy_bit_identical_under_fault_replay() {
+    for case in 0..40u64 {
+        let mut rng = Pcg::new(31_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(16);
+        let delay = rng.below(3) as u64;
+        let spec = SPECS[rng.below(SPECS.len())];
+        let plan = arb_plan(&mut rng, n, 30, case);
+        let clock = FaultClock::new(plan);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        let tag = format!(
+            "case {case}: {kind:?} n={n} dim={dim} delay={delay} {spec:?} \
+             plan={:?}",
+            clock.plan
+        );
+        let mut seq = PushSumEngine::new(init.clone(), delay, false);
+        let mut evt = PushSumEngine::new(init.clone(), delay, false);
+        let (x0, w0) = evt.total_mass_with_losses();
+        for k in 0..30 {
+            seq.step_compressed(k, &sched, Some(&clock), ExecPolicy::Sequential, spec);
+            evt.step_compressed(k, &sched, Some(&clock), ExecPolicy::Event, spec);
+        }
+        assert_engines_identical(&seq, &evt, &tag);
+        assert_mass_balanced(&evt, &x0, w0, &tag);
+        seq.drain();
+        evt.drain();
+        assert_engines_identical(&seq, &evt, &format!("{tag} (drained)"));
+        assert_mass_balanced(&evt, &x0, w0, &format!("{tag} (drained)"));
+    }
+}
+
+#[test]
+fn prop_event_policy_bit_identical_to_pooled() {
+    // Event vs pooled {2, 7}: both must agree with each other (they each
+    // agree with sequential by the other batteries, but testing the pair
+    // directly keeps the diagnosis one hop when only one battery fails).
+    for case in 0..20u64 {
+        let mut rng = Pcg::new(32_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(16);
+        let delay = rng.below(3) as u64;
+        let spec = SPECS[rng.below(SPECS.len())];
+        let faulty = case % 2 == 0;
+        let plan = if faulty {
+            arb_plan(&mut rng, n, 25, case).with_drop(0.15)
+        } else {
+            FaultPlan::lossless()
+        };
+        let clock = FaultClock::new(plan);
+        let faults = if faulty { Some(&clock) } else { None };
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        let mut evt = PushSumEngine::new(init.clone(), delay, false);
+        for k in 0..25 {
+            evt.step_compressed(k, &sched, faults, ExecPolicy::Event, spec);
+        }
+        for shards in [2usize, 7] {
+            let tag = format!(
+                "case {case}: {kind:?} n={n} dim={dim} delay={delay} \
+                 faulty={faulty} {spec:?} shards={shards}"
+            );
+            let mut par = PushSumEngine::new(init.clone(), delay, false);
+            for k in 0..25 {
+                par.step_compressed(k, &sched, faults, ExecPolicy::parallel(shards), spec);
+            }
+            assert_engines_identical(&par, &evt, &tag);
+        }
+    }
+}
+
+#[test]
+fn prop_mid_run_policy_switches_are_lossless() {
+    // Alternating sequential/pooled/event rounds within one run must not
+    // change a single bit: the arrival scheduler is seeded from the
+    // in-flight mailboxes when event mode first engages, and keeps
+    // tracking sends made under the other policies afterwards.
+    for case in 0..20u64 {
+        let mut rng = Pcg::new(33_000 + case);
+        let kind = KINDS[rng.below(KINDS.len())];
+        let n = arb_n(&mut rng);
+        let dim = 1 + rng.below(12);
+        let delay = 1 + rng.below(3) as u64; // delay ≥ 1: mail is in flight at the switch
+        let spec = SPECS[rng.below(SPECS.len())];
+        let plan = arb_plan(&mut rng, n, 30, case);
+        let clock = FaultClock::new(plan);
+        let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        let tag = format!("case {case}: {kind:?} n={n} dim={dim} delay={delay} {spec:?}");
+        let mut seq = PushSumEngine::new(init.clone(), delay, false);
+        let mut mix = PushSumEngine::new(init.clone(), delay, false);
+        for k in 0..30 {
+            seq.step_compressed(k, &sched, Some(&clock), ExecPolicy::Sequential, spec);
+            let policy = match k % 3 {
+                0 => ExecPolicy::Sequential,
+                1 => ExecPolicy::Event,
+                _ => ExecPolicy::parallel(2),
+            };
+            mix.step_compressed(k, &sched, Some(&clock), policy, spec);
+        }
+        assert_engines_identical(&seq, &mix, &tag);
+        seq.drain();
+        mix.drain();
+        assert_engines_identical(&seq, &mix, &format!("{tag} (drained)"));
+    }
+}
+
+/// Assert every logical node of the sparse engine matches the dense
+/// engine's state bit-for-bit (cold nodes compare through the template).
+fn assert_matches_dense(evt: &EventEngine, dense: &PushSumEngine, tag: &str) {
+    for i in 0..evt.n() {
+        let a = evt.node_state(i);
+        let b = &dense.states[i];
+        assert_eq!(a.x, b.x, "{tag}: node {i} numerator diverged");
+        assert_eq!(
+            a.w.to_bits(),
+            b.w.to_bits(),
+            "{tag}: node {i} push-sum weight diverged"
+        );
+    }
+}
+
+#[test]
+fn prop_sparse_engine_matches_dense_on_permutation_schedules() {
+    // The fast path itself: perturb a few nodes of the cold graph and
+    // check every tick against a dense engine started from the identical
+    // (materialized) initial state. The engine must *stay* sparse — these
+    // schedules are unit permutations and the template is halving-safe.
+    for case in 0..24u64 {
+        let mut rng = Pcg::new(34_000 + case);
+        let kind = PERM_KINDS[rng.below(PERM_KINDS.len())];
+        // ≤ 3 seeds × 20 ticks activate at most 63 nodes (one new node per
+        // hot node per tick), so even n = 64 keeps a cold remainder.
+        let n = [64, 128, 256][rng.below(3)];
+        let dim = 1 + rng.below(8);
+        let template: Vec<f32> =
+            (0..dim).map(|d| [0.0f32, 0.5, 1.25, -3.0][d % 4]).collect();
+        let sched = Schedule::with_seed(kind, n, case);
+        let tag = format!("case {case}: {kind:?} n={n} dim={dim}");
+
+        let mut evt = EventEngine::with_template(template.clone(), n, 0, false);
+        let mut init: Vec<Vec<f32>> = (0..n).map(|_| template.clone()).collect();
+        for _ in 0..1 + rng.below(3) {
+            let node = rng.below(n);
+            let d = rng.below(dim);
+            let v = rng.gaussian() as f32;
+            evt.state_mut(node).x[d] = v;
+            init[node][d] = v;
+        }
+        let mut dense = PushSumEngine::new(init, 0, false);
+        for k in 0..20 {
+            evt.step(k, &sched, None, Compression::Identity);
+            dense.step_exec(k, &sched, None, ExecPolicy::Sequential);
+            assert_matches_dense(&evt, &dense, &format!("{tag} k={k}"));
+        }
+        assert!(evt.is_sparse(), "{tag}: fast path must hold");
+        assert!(
+            evt.materialized() < n,
+            "{tag}: some of the graph should have stayed cold"
+        );
+        // The sparse mass accountant agrees with the dense one to f64
+        // rounding (the cold block is summed as one product).
+        let (xa, wa) = evt.total_mass();
+        let (xb, wb) = dense.total_mass();
+        assert!((wa - wb).abs() <= 1e-9 * (n as f64), "{tag}: w mass");
+        for (a, b) in xa.iter().zip(&xb) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{tag}: x mass");
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_fall_off_is_seamless() {
+    // Run sparse for a while, then change the regime mid-run (compression
+    // on, or a non-permutation schedule tick) — the engine materializes
+    // and every subsequent step must still match the dense reference
+    // bit-for-bit.
+    for case in 0..16u64 {
+        let mut rng = Pcg::new(35_000 + case);
+        let n = [16, 32, 64][rng.below(3)];
+        let dim = 1 + rng.below(8);
+        let spec = if case % 2 == 0 {
+            Compression::TopK { den: 8 }
+        } else {
+            Compression::Qsgd { bits: 4 }
+        };
+        let template: Vec<f32> = (0..dim).map(|d| 0.25 * d as f32).collect();
+        let sched = Schedule::with_seed(TopologyKind::OnePeerExp, n, case);
+        let tag = format!("case {case}: n={n} dim={dim} {spec:?}");
+
+        let mut evt = EventEngine::with_template(template.clone(), n, 0, false);
+        let mut init: Vec<Vec<f32>> = (0..n).map(|_| template.clone()).collect();
+        let node = rng.below(n);
+        evt.state_mut(node).x[0] = 2.5;
+        init[node][0] = 2.5;
+        let mut dense = PushSumEngine::new(init, 0, false);
+        for k in 0..10 {
+            evt.step(k, &sched, None, Compression::Identity);
+            dense.step_compressed(
+                k,
+                &sched,
+                None,
+                ExecPolicy::Sequential,
+                Compression::Identity,
+            );
+        }
+        assert!(evt.is_sparse(), "{tag}: still sparse before the switch");
+        let sent_sparse = evt.sent_count();
+        for k in 10..25 {
+            evt.step(k, &sched, None, spec);
+            dense.step_compressed(k, &sched, None, ExecPolicy::Sequential, spec);
+            assert_matches_dense(&evt, &dense, &format!("{tag} k={k}"));
+        }
+        assert!(!evt.is_sparse(), "{tag}: compression must force the fall-off");
+        assert_eq!(evt.materialized(), n, "{tag}");
+        assert!(
+            evt.sent_count() > sent_sparse,
+            "{tag}: dense rounds keep counting sends"
+        );
+        evt.drain();
+        dense.drain();
+        assert_matches_dense(&evt, &dense, &format!("{tag} (drained)"));
+    }
+}
+
+#[test]
+fn sparse_from_init_is_the_dense_engine_under_event_policy() {
+    // EventEngine::from_init is documented as exactly the dense engine
+    // stepping under ExecPolicy::Event — heterogeneous init, faults and
+    // compression included.
+    let mut rng = Pcg::new(36_000);
+    let n = 32;
+    let dim = 6;
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+    let sched = Schedule::with_seed(TopologyKind::TwoPeerExp, n, 5);
+    let clock = FaultClock::new(
+        FaultPlan::lossless()
+            .with_drop(0.1)
+            .with_crash(3, 4, Some(9))
+            .with_seed(7),
+    );
+    let spec = Compression::TopK { den: 8 };
+    let mut evt = EventEngine::from_init(init.clone(), 1, false);
+    assert!(!evt.is_sparse());
+    assert_eq!(evt.materialized(), n);
+    let mut dense = PushSumEngine::new(init, 1, false);
+    for k in 0..20 {
+        evt.step(k, &sched, Some(&clock), spec);
+        dense.step_compressed(k, &sched, Some(&clock), ExecPolicy::Sequential, spec);
+    }
+    assert_matches_dense(&evt, &dense, "from_init");
+    assert_eq!(evt.sent_count(), dense.sent_count, "from_init: sent counter");
+    assert_eq!(evt.in_flight(), dense.in_flight(), "from_init: in flight");
+    let (dxa, dwa) = evt.dropped_mass();
+    let (dxb, dwb) = dense.dropped_mass();
+    assert_eq!(dwa.to_bits(), dwb.to_bits(), "from_init: dropped w");
+    for (a, b) in dxa.iter().zip(dxb) {
+        assert_eq!(a.to_bits(), b.to_bits(), "from_init: dropped x");
+    }
+}
