@@ -1,0 +1,434 @@
+//! Comment/string/raw-string-aware Rust lexer for the audit pass.
+//!
+//! Deliberately **not** a full Rust lexer: it distinguishes exactly what
+//! the rule engine needs — code identifiers and punctuation, with 1-based
+//! line numbers — from everything a naive `grep` would trip over, so a
+//! `HashMap` mentioned in a doc comment or an `unwrap` inside a string
+//! literal can never produce a finding. Handled:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments
+//!   (`/* /* */ */`), collected separately with their line spans so the
+//!   `SAFETY:` / anchor-comment rules can reason about them;
+//! * string literals with escapes, raw strings with any number of `#`
+//!   guards (`r"…"`, `r##"…"##`), byte and raw-byte strings (`b"…"`,
+//!   `br#"…"#`), all possibly multi-line;
+//! * char literals (`'x'`, `'\n'`, `'\u{1F600}'`, `b'q'`) vs lifetimes
+//!   (`'a`, `'_`) — the classic single-quote ambiguity;
+//! * raw identifiers (`r#match` lexes as the identifier `match`);
+//! * numbers (consumed as opaque literals — their text is never matched).
+//!
+//! Literal tokens keep a placeholder text (`"str"`, `"char"`, `"num"`),
+//! never their contents: rules match identifier text and punctuation
+//! shapes only, so literal contents are unreachable by construction.
+
+/// Kinds of significant token the rule engine distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `HashMap`, `unwrap`, …).
+    Ident,
+    /// One punctuation character (`.`, `!`, `:`, `{`, …).
+    Punct,
+    /// String/char/number literal — contents deliberately opaque.
+    Literal,
+}
+
+/// One significant source token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    /// What kind of token this is.
+    pub kind: TokKind,
+    /// Identifier text / punctuation char; placeholder for literals.
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: usize,
+}
+
+/// One comment (line, doc, or block), with its text and line span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Comment {
+    /// The comment text, delimiters included.
+    pub text: String,
+    /// 1-based line the comment starts on.
+    pub line_start: usize,
+    /// 1-based line the comment ends on (= `line_start` for line comments).
+    pub line_end: usize,
+}
+
+/// Lexer output: the code-token stream plus every comment.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// Significant code tokens in source order.
+    pub tokens: Vec<Tok>,
+    /// All comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into code tokens and comments. Total: unclosed literals and
+/// comments are consumed to end-of-file rather than erroring — the audit
+/// must never abort on a file `rustc` would reject anyway.
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        cs: src.chars().collect(),
+        i: 0,
+        line: 1,
+        out: Lexed::default(),
+    }
+    .run()
+}
+
+struct Lexer {
+    cs: Vec<char>,
+    i: usize,
+    line: usize,
+    out: Lexed,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.cs.get(self.i + ahead).copied()
+    }
+
+    /// Consume one char, tracking the line counter.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.cs.get(self.i).copied();
+        if let Some(c) = c {
+            self.i += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push_tok(&mut self, kind: TokKind, text: String, line: usize) {
+        self.out.tokens.push(Tok { kind, text, line });
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '"' {
+                self.string(TokKind::Literal);
+            } else if c == '\'' {
+                self.char_or_lifetime();
+            } else if is_ident_start(c) {
+                self.ident_or_prefixed();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else {
+                let line = self.line;
+                self.bump();
+                self.push_tok(TokKind::Punct, c.to_string(), line);
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(Comment { text, line_start: line, line_end: line });
+    }
+
+    /// Nested block comment; unterminated comments swallow the rest of
+    /// the file (rustc rejects them; the audit just keeps lexing nothing).
+    fn block_comment(&mut self) {
+        let line_start = self.line;
+        let mut text = String::new();
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                text.push_str("*/");
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.out.comments.push(Comment { text, line_start, line_end: self.line });
+    }
+
+    /// A `"…"` literal with `\`-escapes (possibly multi-line).
+    fn string(&mut self, kind: TokKind) {
+        let line = self.line;
+        self.bump(); // opening quote
+        while let Some(c) = self.bump() {
+            if c == '\\' {
+                self.bump(); // whatever is escaped, including `"` and `\`
+            } else if c == '"' {
+                break;
+            }
+        }
+        self.push_tok(kind, "str".to_string(), line);
+    }
+
+    /// A raw string starting at the current `"`, closed by `"` followed by
+    /// `hashes` `#` characters.
+    fn raw_string(&mut self, hashes: usize) {
+        let line = self.line;
+        self.bump(); // opening quote
+        'scan: while let Some(c) = self.bump() {
+            if c == '"' {
+                for k in 0..hashes {
+                    if self.peek(k) != Some('#') {
+                        continue 'scan;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+        }
+        self.push_tok(TokKind::Literal, "str".to_string(), line);
+    }
+
+    /// `'x'` / `'\n'` / `'\u{…}'` char literals vs `'a` / `'_` lifetimes.
+    fn char_or_lifetime(&mut self) {
+        let line = self.line;
+        let next = self.peek(1);
+        let is_char = match next {
+            Some('\\') => true,
+            Some(c) if is_ident_continue(c) => self.peek(2) == Some('\''),
+            Some('\'') | None => false,
+            Some(_) => true, // '(' and friends: a one-symbol char literal
+        };
+        if is_char {
+            self.bump(); // opening quote
+            while let Some(c) = self.bump() {
+                if c == '\\' {
+                    self.bump();
+                } else if c == '\'' {
+                    break;
+                }
+            }
+            self.push_tok(TokKind::Literal, "char".to_string(), line);
+        } else {
+            // Lifetime (or a stray quote): consume the quote + ident run.
+            self.bump();
+            while let Some(c) = self.peek(0) {
+                if !is_ident_continue(c) {
+                    break;
+                }
+                self.bump();
+            }
+            self.push_tok(TokKind::Literal, "lifetime".to_string(), line);
+        }
+    }
+
+    /// Identifier, or one of the identifier-prefixed literal forms:
+    /// `r"…"`, `r#"…"#`, `r#ident`, `b"…"`, `b'…'`, `br#"…"#`.
+    fn ident_or_prefixed(&mut self) {
+        let line = self.line;
+        let c = self.peek(0).unwrap_or(' ');
+        if c == 'r' || c == 'b' {
+            // Longest literal prefix first: br / b / r followed by a quote
+            // or by `#…#"` opens a literal, not an identifier.
+            let after = if c == 'b' && self.peek(1) == Some('r') { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while self.peek(after + hashes) == Some('#') {
+                hashes += 1;
+            }
+            let quote = self.peek(after + hashes);
+            let is_raw = c == 'r' || after == 2;
+            if is_raw && quote == Some('"') {
+                for _ in 0..after + hashes {
+                    self.bump();
+                }
+                self.raw_string(hashes);
+                return;
+            }
+            if c == 'r' && hashes == 1 && quote.map(is_ident_start) == Some(true) {
+                // Raw identifier r#match: lex the bare identifier.
+                self.bump();
+                self.bump();
+                self.ident(line);
+                return;
+            }
+            if c == 'b' && after == 1 && hashes == 0 {
+                if self.peek(1) == Some('"') {
+                    self.bump();
+                    self.string(TokKind::Literal);
+                    return;
+                }
+                if self.peek(1) == Some('\'') {
+                    self.bump();
+                    self.char_or_lifetime();
+                    return;
+                }
+            }
+        }
+        self.ident(line);
+    }
+
+    fn ident(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if !is_ident_continue(c) {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push_tok(TokKind::Ident, text, line);
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        while let Some(c) = self.peek(0) {
+            if !is_ident_continue(c) {
+                break;
+            }
+            self.bump();
+        }
+        self.push_tok(TokKind::Literal, "num".to_string(), line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<(String, usize)> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| (t.text, t.line))
+            .collect()
+    }
+
+    #[test]
+    fn idents_carry_exact_lines() {
+        let src = "fn a() {}\n\nfn bee() {\n    call();\n}\n";
+        let got = idents(src);
+        assert_eq!(
+            got,
+            vec![
+                ("fn".to_string(), 1),
+                ("a".to_string(), 1),
+                ("fn".to_string(), 3),
+                ("bee".to_string(), 3),
+                ("call".to_string(), 4),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_hide_code_words_but_are_collected() {
+        let src = "// HashMap unwrap unsafe\nlet x = 1; /* SystemTime */\n";
+        let lexed = lex(src);
+        assert!(lexed.tokens.iter().all(|t| t.text != "HashMap"
+            && t.text != "unwrap"
+            && t.text != "unsafe"
+            && t.text != "SystemTime"));
+        assert_eq!(lexed.comments.len(), 2);
+        assert_eq!(lexed.comments[0].line_start, 1);
+        assert!(lexed.comments[0].text.contains("HashMap"));
+        assert_eq!(lexed.comments[1].line_start, 2);
+    }
+
+    #[test]
+    fn nested_block_comments_and_spans() {
+        let src = "/* outer /* inner\n */ still outer\n*/ fn after() {}\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 1);
+        assert_eq!(lexed.comments[0].line_start, 1);
+        assert_eq!(lexed.comments[0].line_end, 3);
+        let fns: Vec<_> =
+            lexed.tokens.iter().filter(|t| t.text == "fn").collect();
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].line, 3);
+    }
+
+    #[test]
+    fn strings_are_opaque_and_multiline_tracks_lines() {
+        let src = "let s = \"unsafe { HashMap::new() }\\\" still\";\nlet t = \"a\nb\";\nafter();\n";
+        let lexed = lex(src);
+        assert!(lexed.tokens.iter().all(|t| t.text != "unsafe" && t.text != "HashMap"));
+        let after: Vec<_> =
+            lexed.tokens.iter().filter(|t| t.text == "after").collect();
+        assert_eq!(after[0].line, 4, "multi-line string advanced the count");
+    }
+
+    #[test]
+    fn raw_strings_with_hash_guards() {
+        // The r##"…"## body contains a bare `"#` that must not close it.
+        let src = "let s = r##\"unwrap() \"# not the end\"##;\nnext();\n";
+        let lexed = lex(src);
+        assert!(lexed.tokens.iter().all(|t| t.text != "unwrap" && t.text != "not"));
+        let next: Vec<_> = lexed.tokens.iter().filter(|t| t.text == "next").collect();
+        assert_eq!(next[0].line, 2);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let src = "let a = b\"unsafe\"; let b2 = br#\"unwrap()\"#; let c = b'q';\nok();\n";
+        let lexed = lex(src);
+        assert!(lexed.tokens.iter().all(|t| t.text != "unsafe" && t.text != "unwrap"
+            && t.text != "q"));
+        assert!(lexed.tokens.iter().any(|t| t.text == "ok"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; let n = '\\n'; }\n";
+        let lexed = lex(src);
+        // The lifetime's `a` never leaks as a bare identifier token, and
+        // char contents stay opaque.
+        let ids: Vec<_> =
+            lexed.tokens.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect();
+        assert!(!ids.contains(&"a"), "{ids:?}");
+        assert!(ids.contains(&"str"));
+        let chars =
+            lexed.tokens.iter().filter(|t| t.text == "char").count();
+        assert_eq!(chars, 3);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_their_bare_name() {
+        let src = "let r#match = 1; let r2 = r#match;\n";
+        let lexed = lex(src);
+        let matches = lexed.tokens.iter().filter(|t| t.text == "match").count();
+        assert_eq!(matches, 2);
+    }
+
+    #[test]
+    fn doc_comment_with_code_fence_is_still_a_comment() {
+        let src = "/// ```\n/// map.unwrap();\n/// ```\nfn documented() {}\n";
+        let lexed = lex(src);
+        assert!(lexed.tokens.iter().all(|t| t.text != "unwrap"));
+        assert_eq!(lexed.comments.len(), 3);
+        assert!(lexed.comments[1].text.contains("unwrap"));
+    }
+}

@@ -1,0 +1,476 @@
+//! The audit rule catalog: five token-stream rules over one lexed file.
+//!
+//! | rule | guards | scope |
+//! |------|--------|-------|
+//! | D001 | no `HashMap`/`HashSet` in deterministic modules | `gossip/`, `topology/`, `sim/`, `faults/` |
+//! | D002 | no wall-clock (`Instant::now`/`SystemTime`) on deterministic paths | `gossip/`, `sim/`, `topology/`, `faults/`, `runtime/` |
+//! | U001 | every `unsafe` has a `// SAFETY:` / `/// # Safety` comment ending ≤ 8 lines above | all of `rust/src` |
+//! | P001 | no `.unwrap()` / `.expect()` on hot or I/O paths | `gossip/`, `runtime/`, `net/` |
+//! | A001 | no allocation-capable calls inside anchor-marked functions | all of `rust/src` |
+//!
+//! (The A001 anchor is the comment `audit:` + `zero-alloc` on the line
+//! above a `fn` — spelled out indirectly here so this very doc comment
+//! does not anchor the function below it when the audit scans itself.)
+//!
+//! Everything inside a `#[cfg(test)]` item is exempt (tests unwrap and
+//! clock freely), and the lexer guarantees comments and literals can
+//! never match. A finding is a *candidate*: the caller intersects it with
+//! the committed allowlist (`analysis/allow.toml`), where every pinned
+//! site must carry a reason string.
+
+use super::lexer::{lex, Comment, Lexed, Tok, TokKind};
+
+/// How many lines above an `unsafe` token a justifying `SAFETY` comment
+/// may end (doc-comment `# Safety` sections often carry a sentence or two
+/// between the heading and the item).
+const SAFETY_WINDOW: usize = 8;
+
+/// One rule violation candidate in one file.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id (`"D001"`, …).
+    pub rule: &'static str,
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// The trimmed source line — what allowlist patterns match against.
+    pub excerpt: String,
+    /// Human explanation of the violation.
+    pub msg: String,
+}
+
+/// Static description of one rule, for `--rule` validation and reports.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Rule id.
+    pub id: &'static str,
+    /// One-line summary.
+    pub summary: &'static str,
+}
+
+/// The rule catalog, in report order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D001",
+        summary: "nondeterministic collection (HashMap/HashSet) in a deterministic module",
+    },
+    RuleInfo {
+        id: "D002",
+        summary: "wall-clock read (Instant::now/SystemTime) on a deterministic path",
+    },
+    RuleInfo {
+        id: "U001",
+        summary: "`unsafe` without an immediately-preceding SAFETY comment",
+    },
+    RuleInfo {
+        id: "P001",
+        summary: ".unwrap()/.expect() on a gossip/pool/cluster hot path",
+    },
+    RuleInfo {
+        id: "A001",
+        summary: "allocation-capable call inside a `// audit: zero-alloc` function",
+    },
+];
+
+fn in_dirs(file: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| file.starts_with(d))
+}
+
+fn d001_scope(file: &str) -> bool {
+    in_dirs(
+        file,
+        &["rust/src/gossip/", "rust/src/topology/", "rust/src/sim/", "rust/src/faults/"],
+    )
+}
+
+fn d002_scope(file: &str) -> bool {
+    in_dirs(
+        file,
+        &[
+            "rust/src/gossip/",
+            "rust/src/sim/",
+            "rust/src/topology/",
+            "rust/src/faults/",
+            "rust/src/runtime/",
+        ],
+    )
+}
+
+fn p001_scope(file: &str) -> bool {
+    in_dirs(file, &["rust/src/gossip/", "rust/src/runtime/", "rust/src/net/"])
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn is_punct(t: &Tok, c: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1 && t.text.starts_with(c)
+}
+
+/// Line spans of `#[cfg(test)]` items: from the attribute's `#` to the
+/// closing brace of the item body that follows it. Findings inside these
+/// spans are dropped — tests unwrap, allocate and read clocks by design.
+fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let attr = is_punct(&toks[i], '#')
+            && is_punct(&toks[i + 1], '[')
+            && is_ident(&toks[i + 2], "cfg")
+            && is_punct(&toks[i + 3], '(')
+            && is_ident(&toks[i + 4], "test")
+            && is_punct(&toks[i + 5], ')')
+            && is_punct(&toks[i + 6], ']');
+        if !attr {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 7;
+        // Find the item's opening brace, then its matching close.
+        while j < toks.len() && !is_punct(&toks[j], '{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        let mut end_line = toks.last().map(|t| t.line).unwrap_or(start_line);
+        while j < toks.len() {
+            if is_punct(&toks[j], '{') {
+                depth += 1;
+            } else if is_punct(&toks[j], '}') {
+                depth -= 1;
+                if depth == 0 {
+                    end_line = toks[j].line;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        spans.push((start_line, end_line));
+        i = j.max(i + 7);
+    }
+    spans
+}
+
+/// Run every rule over one file. `file` is the repo-relative path with
+/// forward slashes (it selects each rule's scope); `src` is the file
+/// contents. Findings come back in line order, `#[cfg(test)]` regions
+/// already excluded.
+pub fn check_file(file: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let excerpt = |line: usize| -> String {
+        lines.get(line.saturating_sub(1)).map(|l| l.trim().to_string()).unwrap_or_default()
+    };
+    let mut found: Vec<Finding> = Vec::new();
+    let mut push = |rule: &'static str, line: usize, msg: String| {
+        found.push(Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            excerpt: excerpt(line),
+            msg,
+        });
+    };
+
+    let toks = &lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        // D001 — nondeterministic collections in deterministic modules.
+        if d001_scope(file) && (is_ident(t, "HashMap") || is_ident(t, "HashSet")) {
+            push(
+                "D001",
+                t.line,
+                format!(
+                    "`{}` in a deterministic module: iteration order is unseeded \
+                     process state — use BTreeMap/BTreeSet or index-keyed Vecs",
+                    t.text
+                ),
+            );
+        }
+        // D002 — wall-clock reads on deterministic paths.
+        if d002_scope(file) {
+            if is_ident(t, "Instant")
+                && toks.get(i + 1).is_some_and(|a| is_punct(a, ':'))
+                && toks.get(i + 2).is_some_and(|a| is_punct(a, ':'))
+                && toks.get(i + 3).is_some_and(|a| is_ident(a, "now"))
+            {
+                push(
+                    "D002",
+                    t.line,
+                    "`Instant::now` on a deterministic path: clock reads must sit \
+                     behind set_metered/obs gating so unobserved runs make zero \
+                     clock syscalls"
+                        .to_string(),
+                );
+            }
+            if is_ident(t, "SystemTime") {
+                push(
+                    "D002",
+                    t.line,
+                    "`SystemTime` on a deterministic path: wall-clock state must \
+                     never reach seeded computation"
+                        .to_string(),
+                );
+            }
+        }
+        // U001 — unsafe without a SAFETY comment just above.
+        if is_ident(t, "unsafe") {
+            let covered = lexed.comments.iter().any(|c: &Comment| {
+                c.line_end <= t.line
+                    && t.line - c.line_end <= SAFETY_WINDOW
+                    && (c.text.contains("SAFETY:") || c.text.contains("# Safety"))
+            });
+            if !covered {
+                push(
+                    "U001",
+                    t.line,
+                    format!(
+                        "`unsafe` without a `// SAFETY:` (or `# Safety` doc) comment \
+                         ending within {SAFETY_WINDOW} lines above — state the \
+                         aliasing/lifetime invariant it relies on"
+                    ),
+                );
+            }
+        }
+        // P001 — .unwrap()/.expect() on hot/IO paths. Matching `.name(`
+        // exactly means `unwrap_or`, `unwrap_or_else`, `expect_err` etc.
+        // are separate identifiers and never flagged.
+        if p001_scope(file)
+            && i > 0
+            && is_punct(&toks[i - 1], '.')
+            && (is_ident(t, "unwrap") || is_ident(t, "expect"))
+            && toks.get(i + 1).is_some_and(|a| is_punct(a, '('))
+        {
+            push(
+                "P001",
+                t.line,
+                format!(
+                    "`.{}()` on a gossip/pool/cluster path: fix it, return a typed \
+                     error, or allowlist it with the invariant as the reason",
+                    t.text
+                ),
+            );
+        }
+    }
+
+    // A001 — allocation-capable calls inside anchored functions.
+    for c in &lexed.comments {
+        if !c.text.contains("audit: zero-alloc") {
+            continue;
+        }
+        // The anchor applies to the next `fn` item after the comment.
+        let Some(fn_idx) = toks
+            .iter()
+            .position(|t| t.line >= c.line_end && is_ident(t, "fn"))
+        else {
+            continue;
+        };
+        let Some(open) = (fn_idx..toks.len()).find(|&j| is_punct(&toks[j], '{')) else {
+            continue;
+        };
+        let mut depth = 0usize;
+        let mut j = open;
+        while j < toks.len() {
+            if is_punct(&toks[j], '{') {
+                depth += 1;
+            } else if is_punct(&toks[j], '}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if let Some(what) = alloc_call(toks, j) {
+                push(
+                    "A001",
+                    toks[j].line,
+                    format!(
+                        "`{what}` inside a `// audit: zero-alloc` function — the \
+                         zero-allocation contract (rust/tests/alloc_regression.rs) \
+                         covers this body"
+                    ),
+                );
+            }
+            j += 1;
+        }
+    }
+
+    let spans = test_spans(toks);
+    found.retain(|f| !spans.iter().any(|&(lo, hi)| f.line >= lo && f.line <= hi));
+    found.sort_by_key(|f| (f.line, f.rule));
+    found
+}
+
+/// Allocation-capable call starting at token `j`, if any: the macro forms
+/// (`vec!`, `format!`), the method forms (`.to_vec()`, `.to_string()`,
+/// `.to_owned()`, `.collect()`), and the constructor forms (`Vec::new`,
+/// `Vec::with_capacity`, `String::new`, `String::from`, `Box::new`).
+fn alloc_call(toks: &[Tok], j: usize) -> Option<String> {
+    let t = toks.get(j)?;
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    let next = toks.get(j + 1);
+    if (t.text == "vec" || t.text == "format") && next.is_some_and(|a| is_punct(a, '!')) {
+        return Some(format!("{}!", t.text));
+    }
+    if matches!(t.text.as_str(), "to_vec" | "to_string" | "to_owned" | "collect")
+        && j > 0
+        && is_punct(&toks[j - 1], '.')
+        && next.is_some_and(|a| is_punct(a, '('))
+    {
+        return Some(format!(".{}()", t.text));
+    }
+    if matches!(t.text.as_str(), "Vec" | "String" | "Box")
+        && next.is_some_and(|a| is_punct(a, ':'))
+        && toks.get(j + 2).is_some_and(|a| is_punct(a, ':'))
+        && toks.get(j + 3).is_some_and(|a| {
+            a.kind == TokKind::Ident
+                && matches!(a.text.as_str(), "new" | "with_capacity" | "from")
+        })
+    {
+        return Some(format!("{}::{}", t.text, toks[j + 3].text));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines_of(found: &[Finding], rule: &str) -> Vec<usize> {
+        found.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+    }
+
+    #[test]
+    fn d001_flags_only_code_in_scope() {
+        let src = "use std::collections::HashMap;\n// HashMap in a comment\nlet s = \"HashSet\";\nlet m: HashMap<u32, u32> = HashMap::new();\n";
+        let found = check_file("rust/src/gossip/mod.rs", src);
+        assert_eq!(lines_of(&found, "D001"), vec![1, 4, 4]);
+        // Out of scope: same source, different module.
+        assert!(lines_of(&check_file("rust/src/cli.rs", src), "D001").is_empty());
+    }
+
+    #[test]
+    fn d002_flags_instant_now_but_not_bare_instant() {
+        let src = "use std::time::Instant;\nfn f(m: &mut Option<Instant>) {\n    let t = Instant::now();\n    let _ = t;\n}\n";
+        let found = check_file("rust/src/gossip/mod.rs", src);
+        assert_eq!(lines_of(&found, "D002"), vec![3], "the use/param lines are clean");
+        let sys = check_file("rust/src/sim/mod.rs", "let t = SystemTime::now();\n");
+        assert_eq!(lines_of(&sys, "D002"), vec![1]);
+    }
+
+    #[test]
+    fn u001_respects_the_safety_window() {
+        let bad = "fn f(p: *mut u8) {\n    unsafe { p.write(0) };\n}\n";
+        assert_eq!(lines_of(&check_file("rust/src/x.rs", bad), "U001"), vec![2]);
+        let good = "fn f(p: *mut u8) {\n    // SAFETY: p is valid for writes (caller contract).\n    unsafe { p.write(0) };\n}\n";
+        assert!(lines_of(&check_file("rust/src/x.rs", good), "U001").is_empty());
+        let doc = "/// # Safety\n/// `p` must be valid.\nunsafe fn f(p: *mut u8) {}\n";
+        assert!(lines_of(&check_file("rust/src/x.rs", doc), "U001").is_empty());
+        let far = format!(
+            "// SAFETY: too far away.\n{}unsafe fn f() {{}}\n",
+            "\n".repeat(SAFETY_WINDOW + 1)
+        );
+        assert_eq!(lines_of(&check_file("rust/src/x.rs", &far), "U001").len(), 1);
+    }
+
+    #[test]
+    fn p001_flags_unwrap_expect_but_not_unwrap_or() {
+        let src = "fn f(o: Option<u32>) -> u32 {\n    let a = o.unwrap();\n    let b = o.expect(\"msg\");\n    let c = o.unwrap_or(0);\n    let d = o.unwrap_or_else(|| 0);\n    a + b + c + d\n}\n";
+        let found = check_file("rust/src/gossip/mod.rs", src);
+        assert_eq!(lines_of(&found, "P001"), vec![2, 3]);
+        // `unwrap` in a doc comment or string never matches.
+        let quiet = "/// call .unwrap() never\nfn f() { let s = \".expect(\"; let _ = s; }\n";
+        assert!(lines_of(&check_file("rust/src/net/mod.rs", quiet), "P001").is_empty());
+        // Out of scope for, e.g., experiment drivers.
+        assert!(lines_of(&check_file("rust/src/experiments/mod.rs", src), "P001").is_empty());
+    }
+
+    #[test]
+    fn a001_only_fires_inside_anchored_bodies() {
+        let src = "fn free() -> Vec<u32> { (0..4).collect() }\n\n// audit: zero-alloc — hot path.\nfn hot(xs: &mut Vec<u32>) {\n    let v = vec![1, 2];\n    let s = format!(\"x\");\n    let w = xs.to_vec();\n    let n: Vec<u32> = Vec::new();\n    xs.push(1);\n}\n\nfn also_free() { let _ = String::new(); }\n";
+        let found = check_file("rust/src/gossip/mod.rs", src);
+        assert_eq!(lines_of(&found, "A001"), vec![5, 6, 7, 8], "push() and unanchored fns are exempt");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "fn prod(o: Option<u32>) -> u32 { o.unwrap() }\n\n#[cfg(test)]\nmod tests {\n    fn helper(o: Option<u32>) -> u32 {\n        o.unwrap()\n    }\n    use std::collections::HashMap;\n}\n";
+        let found = check_file("rust/src/gossip/mod.rs", src);
+        assert_eq!(lines_of(&found, "P001"), vec![1], "only the non-test unwrap");
+        assert!(lines_of(&found, "D001").is_empty(), "test-mod HashMap exempt");
+    }
+
+    #[test]
+    fn seeded_proptest_random_benign_noise_never_false_positives() {
+        // Assemble random files from fragments that *mention* every
+        // trigger word inside comments/strings/raw strings, interleaved
+        // with clean code; no fragment is a real violation, so any finding
+        // is a false positive. Seeded Pcg streams, failing seed printed.
+        use crate::rng::Pcg;
+        const BENIGN: &[&str] = &[
+            "// HashMap unwrap() unsafe Instant::now SystemTime vec![]\n",
+            "/// ```\n/// m.unwrap();\n/// let h: HashMap<u8, u8> = HashMap::new();\n/// ```\n",
+            "let s = \"unsafe { HashSet } .expect( Instant::now()\";\n",
+            "let r = r#\"format! to_vec() \"# ;\n",
+            "/* nested /* unsafe */ SystemTime */\n",
+            "let c = '\\u{1F600}'; let l: &'static str = \"x\";\n",
+            "fn ok(o: Option<u32>) -> u32 { o.unwrap_or_default() }\n",
+            "let b = br##\"Box::new( .collect() \"# \"##;\n",
+        ];
+        for case in 0..24u64 {
+            let mut rng = Pcg::new(9_000 + case);
+            let mut src = String::new();
+            for _ in 0..3 + rng.below(9) {
+                src.push_str(BENIGN[rng.below(BENIGN.len())]);
+            }
+            let found = check_file("rust/src/gossip/mod.rs", &src);
+            assert!(
+                found.is_empty(),
+                "seed {case}: false positives {found:?}\nsource:\n{src}"
+            );
+        }
+    }
+
+    #[test]
+    fn seeded_proptest_injected_violations_report_exact_lines() {
+        // Same generator, but with one real violation per rule spliced in
+        // at a random position; the rule must fire on exactly the line
+        // where the fragment landed.
+        use crate::rng::Pcg;
+        const NOISE: &[&str] = &[
+            "// benign HashMap unwrap()\n",
+            "let s = \"Instant::now()\";\n",
+            "fn ok() { let _ = 1; }\n",
+        ];
+        const BAD: &[(&str, &str)] = &[
+            ("D001", "let m: HashMap<u8, u8> = Default::default();\n"),
+            ("D002", "let t = Instant::now();\n"),
+            ("U001", "let u = unsafe { core::hint::unreachable_unchecked() };\n"),
+            ("P001", "let v = opt.unwrap();\n"),
+        ];
+        for case in 0..24u64 {
+            let mut rng = Pcg::new(17_000 + case);
+            let (rule, frag) = BAD[rng.below(BAD.len())];
+            let before = rng.below(6);
+            let after = rng.below(6);
+            let mut src = String::new();
+            let mut line = 1usize;
+            for _ in 0..before {
+                let n = NOISE[rng.below(NOISE.len())];
+                src.push_str(n);
+                line += n.matches('\n').count();
+            }
+            src.push_str(frag);
+            for _ in 0..after {
+                src.push_str(NOISE[rng.below(NOISE.len())]);
+            }
+            let found = check_file("rust/src/gossip/mod.rs", &src);
+            assert_eq!(
+                lines_of(&found, rule),
+                vec![line],
+                "seed {case} rule {rule}\nsource:\n{src}"
+            );
+        }
+    }
+}

@@ -86,6 +86,12 @@ impl MeanTable<'_> {
     /// `s·chunk < dim` and each shard index runs on exactly one worker.
     unsafe fn run(&self, s: usize) {
         let lo = s * self.chunk;
+        debug_assert!(
+            lo < self.dim,
+            "mean shard {s} out of range (chunk {}, dim {})",
+            self.chunk,
+            self.dim
+        );
         let len = self.chunk.min(self.dim - lo);
         let dst = std::slice::from_raw_parts_mut(self.out.add(lo), len);
         let mut acc = vec![0.0f64; len];

@@ -172,6 +172,8 @@ impl ShardScratch {
 }
 
 /// Pop a recycled payload buffer or allocate a fresh one.
+// audit: zero-alloc — the vec! refill below is the one pinned cold-path
+// allocation (see analysis/allow.toml); steady state always pops.
 fn take_buf(pool: &mut Vec<Vec<f32>>, dim: usize) -> Vec<f32> {
     pool.pop().unwrap_or_else(|| vec![0.0; dim])
 }
@@ -180,6 +182,7 @@ fn take_buf(pool: &mut Vec<Vec<f32>>, dim: usize) -> Vec<f32> {
 /// a push-sum message carries. One definition for every send/drop site so
 /// the scaling arithmetic (and with it the bit-identity contract) cannot
 /// drift between code paths.
+// audit: zero-alloc
 fn scaled_payload(pool: &mut Vec<Vec<f32>>, dim: usize, src: &[f32], wf: f32) -> Vec<f32> {
     let mut payload = take_buf(pool, dim);
     for (p, v) in payload.iter_mut().zip(src) {
@@ -238,6 +241,7 @@ fn compress_payload(
 /// node's own state by its self-loop weight. Reads and writes only this
 /// shard's states and residuals — safe to run on every shard
 /// concurrently.
+// audit: zero-alloc
 fn compute_shard(
     base: usize,
     states: &mut [NodeState],
@@ -418,6 +422,7 @@ fn compute_shard(
 /// orders under τ ≥ 2) is part of the engine-equivalence contract, so
 /// every execution mode — sequential, pooled, event-driven — must drain
 /// mailboxes through this one function.
+// audit: zero-alloc
 fn drain_due(st: &mut NodeState, inbox: &mut Vec<Message>, k: u64, pool: &mut Vec<Vec<f32>>) {
     let mut j = 0;
     while j < inbox.len() {
@@ -438,6 +443,7 @@ fn drain_due(st: &mut NodeState, inbox: &mut Vec<Message>, k: u64, pool: &mut Ve
 /// message due at `k` from this shard's mailboxes into its states,
 /// recycling payload buffers into the shard pool. Touches only this
 /// shard's states/mailboxes — safe to run on every shard concurrently.
+// audit: zero-alloc
 fn aggregate_shard(
     base: usize,
     states: &mut [NodeState],
@@ -491,6 +497,12 @@ impl ShardTable {
     /// Bounds of shard `s` (`lo`, length). `s` must satisfy `s·chunk < n`.
     fn range(&self, s: usize) -> (usize, usize) {
         let lo = s * self.chunk;
+        debug_assert!(
+            lo < self.n,
+            "shard {s} out of range (chunk {}, n {})",
+            self.chunk,
+            self.n
+        );
         (lo, self.chunk.min(self.n - lo))
     }
 
@@ -531,6 +543,7 @@ impl ShardTable {
 /// Elapsed nanoseconds since `mark`, resetting it for the next span
 /// (0 and a no-op when observability is off — `mark` is `None`).
 /// `Instant` reads are vDSO `clock_gettime` calls: no allocation.
+// audit: zero-alloc
 fn lap_ns(mark: &mut Option<Instant>) -> u64 {
     match mark {
         Some(t) => {

@@ -53,6 +53,12 @@
 //!   deployment; a versioned JSONL trace schema ([`obs::trace`]); and
 //!   the `repro trace` analyzer ([`obs::analyze`] — straggler ranking,
 //!   bytes-per-edge, mass-ledger reconciliation).
+//! * [`analysis`] — the `repro audit` static gate: a dependency-free,
+//!   comment/string-aware lexer and rule engine that lints this repo's
+//!   own source for determinism hazards (nondeterministic collections,
+//!   wall-clock reads), unannotated `unsafe`, hot-path panics, and
+//!   allocation in zero-alloc-anchored functions, against the committed
+//!   allowlist `analysis/allow.toml`.
 //!
 //! See ARCHITECTURE.md for the layer diagram and the determinism
 //! contract, DESIGN.md for the module map, the trait API contract, and
@@ -62,6 +68,7 @@
 #![warn(missing_docs)]
 
 pub mod algorithms;
+pub mod analysis;
 pub mod benchgate;
 pub mod benchkit;
 pub mod cli;

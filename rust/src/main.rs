@@ -11,6 +11,7 @@
 //!   coord        deployment coordinator: register workers, track liveness
 //!   worker       deployment gossip worker (connects to a coordinator)
 //!   trace        analyze a JSONL observability trace (any source)
+//!   audit        static determinism/unsafety lint over the repo's own source
 //!   algos        list the registered distributed algorithms
 //!   spectral     Appendix-A λ₂ analysis (no artifacts needed)
 //!   average      PushSum averaging demo through the Pallas dense-gossip HLO
@@ -120,6 +121,16 @@ USAGE:
                 bytes-per-edge matrix, round-latency histogram, and a
                 recomputed push-sum mass-ledger reconciliation (exits
                 non-zero if the trace disagrees with itself by > 1e-9).
+  repro audit   [--deny] [--rule D001|D002|U001|P001|A001] [--json]
+                [--root DIR] [--allow PATH]
+                static analysis over the repo's own source (rust/src):
+                determinism hazards (D001 HashMap/HashSet, D002
+                wall-clock), unannotated unsafe (U001), hot-path panics
+                (P001), and allocation inside zero-alloc-anchored
+                functions (A001), checked against the committed
+                allowlist analysis/allow.toml (every pin needs a reason;
+                stale pins fail). --deny exits non-zero on any
+                violation; --json emits the machine report CI archives.
   repro algos
   repro spectral
   repro average [--nodes 32] [--rounds 8]
@@ -573,6 +584,34 @@ fn cmd_trace(args: &Args) -> Result<()> {
     sgp::obs::analyze::run(std::path::Path::new(path))
 }
 
+fn cmd_audit(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.str_or("root", ".")?);
+    let mut cfg = sgp::analysis::AuditConfig::new(root);
+    if let Some(p) = args.value_of("allow")? {
+        cfg.allow = std::path::PathBuf::from(p);
+    }
+    if let Some(r) = args.value_of("rule")? {
+        cfg.rule = Some(r.to_uppercase());
+    }
+    let deny = args.flag_strict("deny")?;
+    let json = args.flag_strict("json")?;
+    let report = sgp::analysis::run(&cfg)?;
+    if json {
+        print!("{}", sgp::analysis::render_json(&report));
+    } else {
+        print!("{}", sgp::analysis::render_text(&report));
+    }
+    if deny && !report.clean() {
+        bail!(
+            "audit --deny: {} violation(s), {} stale allowlist entr{}",
+            report.violations.len(),
+            report.stale.len(),
+            if report.stale.len() == 1 { "y" } else { "ies" }
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
@@ -586,6 +625,7 @@ fn main() -> Result<()> {
         Some("coord") => cmd_coord(&args)?,
         Some("worker") => cmd_worker(&args)?,
         Some("trace") => cmd_trace(&args)?,
+        Some("audit") => cmd_audit(&args)?,
         Some("algos") => cmd_algos(),
         Some("spectral") => experiments::appendix_a()?,
         Some("average") => {

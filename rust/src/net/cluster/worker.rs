@@ -38,7 +38,7 @@
 //! the worker drains any remaining bank mass into its own state and
 //! reports a [`DoneReport`] to the coordinator.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -124,6 +124,14 @@ struct Mailbox {
 
 type Shared = Arc<(Mutex<Mailbox>, Condvar)>;
 
+/// Lock with panic-poisoning recovery. Mailbox and coordinator-stream
+/// critical sections only move plain data (a panic cannot leave an
+/// invariant half-updated), so a poisoned mutex is safe to re-enter —
+/// a panicked reader thread must degrade the run, never abort it.
+fn guard<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Lazily-connected, timeout-bounded gossip send links to peer workers.
 struct Links {
     peers: Vec<String>,
@@ -137,10 +145,19 @@ impl Links {
     }
 
     /// Write one frame to `peer`, connecting on first use. Any error
-    /// invalidates the cached connection (the next send re-dials).
+    /// invalidates the cached connection (the next send re-dials). A
+    /// peer rank outside the assignment's table (remote-controlled data)
+    /// is a typed error, never a panic — the caller's send-failure path
+    /// rescues the share's mass.
     fn send(&mut self, peer: usize, bytes: &[u8]) -> std::io::Result<()> {
         if !self.conns.contains_key(&peer) {
-            let addr: SocketAddr = self.peers[peer].parse().map_err(|_| {
+            let addr_str = self.peers.get(peer).ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "peer rank outside the assignment's peer table",
+                )
+            })?;
+            let addr: SocketAddr = addr_str.parse().map_err(|_| {
                 std::io::Error::new(std::io::ErrorKind::InvalidInput, "bad peer address")
             })?;
             let s = TcpStream::connect_timeout(&addr, self.timeout)?;
@@ -148,7 +165,15 @@ impl Links {
             s.set_write_timeout(Some(self.timeout))?;
             self.conns.insert(peer, s);
         }
-        let res = self.conns.get_mut(&peer).unwrap().write_all(bytes);
+        let res = match self.conns.get_mut(&peer) {
+            Some(conn) => conn.write_all(bytes),
+            None => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::NotConnected,
+                    "peer connection vanished between insert and write",
+                ))
+            }
+        };
         if res.is_err() {
             self.conns.remove(&peer);
         }
@@ -210,7 +235,7 @@ fn reader_loop(mut stream: TcpStream, shared: Shared, from_coord: bool) {
 
 fn notify(shared: &Shared, f: impl FnOnce(&mut Mailbox)) {
     let (lock, cv) = &**shared;
-    let mut mb = lock.lock().unwrap();
+    let mut mb = guard(lock);
     f(&mut mb);
     cv.notify_all();
 }
@@ -427,7 +452,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
                 let k = round_now.load(Ordering::Relaxed);
                 buf.clear();
                 wire::encode_frame(&Envelope::control(my_rank, k, Frame::Heartbeat), &mut buf);
-                if coord_w.lock().unwrap().write_all(&buf).is_err() {
+                if guard(&coord_w).write_all(&buf).is_err() {
                     break;
                 }
             }
@@ -444,7 +469,11 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
     let sched = Schedule::with_seed(TopologyKind::OnePeerExp, world, a.seed);
     let mut alive: Vec<usize> = (0..world).collect();
     let mut degraded = vec![false; world];
-    let mut banks: HashMap<usize, EdgeBank> = HashMap::new();
+    // BTreeMap, not HashMap: the cool-down bank flush and the final
+    // drain iterate this map, and their order decides the f64 send /
+    // absorb order — sorted keys keep the worker's arithmetic (and its
+    // ledger residual) reproducible run-to-run.
+    let mut banks: BTreeMap<usize, EdgeBank> = BTreeMap::new();
     let mut idx_scratch: Vec<u32> = Vec::new();
     let mut links = Links::new(a.peers.clone(), io_timeout);
 
@@ -473,7 +502,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
         // 1. Membership events (and control-plane state) first.
         {
             let (lock, _) = &*shared;
-            let mut mb = lock.lock().unwrap();
+            let mut mb = guard(lock);
             if mb.shutdown {
                 break 'rounds;
             }
@@ -640,7 +669,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
         let deadline = Instant::now() + round_timeout * patience;
         let complete = {
             let (lock, cv) = &*shared;
-            let mut mb = lock.lock().unwrap();
+            let mut mb = guard(lock);
             loop {
                 let all = expected.iter().all(|&p| {
                     mb.msgs.iter().any(|m| m.from as usize == p && m.round == k)
@@ -652,7 +681,9 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
                 if now >= deadline {
                     break false;
                 }
-                let (g, _) = cv.wait_timeout(mb, deadline - now).unwrap();
+                let (g, _) = cv
+                    .wait_timeout(mb, deadline - now)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 mb = g;
             }
         };
@@ -734,9 +765,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
         &Envelope::control(a.rank, rounds_run, Frame::Done(done.clone())),
         &mut frame_buf,
     );
-    coord_w
-        .lock()
-        .unwrap()
+    guard(&coord_w)
         .write_all(&frame_buf)
         .context("sending Done report")?;
 
@@ -745,13 +774,15 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
     let deadline = Instant::now() + Duration::from_secs(15);
     {
         let (lock, cv) = &*shared;
-        let mut mb = lock.lock().unwrap();
+        let mut mb = guard(lock);
         while !mb.shutdown && !mb.coord_closed {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            let (g, _) = cv.wait_timeout(mb, deadline - now).unwrap();
+            let (g, _) = cv
+                .wait_timeout(mb, deadline - now)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             mb = g;
         }
     }
@@ -776,7 +807,7 @@ fn absorb_up_to(
 ) {
     let ready: Vec<PushMsg> = {
         let (lock, _) = &**shared;
-        let mut mb = lock.lock().unwrap();
+        let mut mb = guard(lock);
         let msgs = std::mem::take(&mut mb.msgs);
         let (ready, later): (Vec<_>, Vec<_>) =
             msgs.into_iter().partition(|m| m.round <= k);

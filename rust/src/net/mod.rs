@@ -626,6 +626,12 @@ impl ArrivalTable<'_> {
     /// `s·chunk < n` and each shard index runs on exactly one worker.
     unsafe fn run(&self, s: usize) {
         let lo = s * self.chunk;
+        debug_assert!(
+            lo < self.n,
+            "arrival shard {s} out of range (chunk {}, n {})",
+            self.chunk,
+            self.n
+        );
         let hi = (lo + self.chunk).min(self.n);
         let sc = &mut *self.scratch.add(s);
         range_arrivals(

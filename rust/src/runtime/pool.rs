@@ -36,6 +36,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::rng::Pcg;
+
 thread_local! {
     /// Set while the current thread is executing a pool job. A nested
     /// [`Pool::run`] from a job would deadlock on the dispatch mutex
@@ -51,6 +53,39 @@ thread_local! {
 #[derive(Clone, Copy)]
 struct JobPtr(&'static (dyn Fn(usize) + Sync));
 
+/// Seeded wake-order permutation for the barrier — the dynamic leg of
+/// the `repro audit` determinism story (see ARCHITECTURE.md §8 and
+/// `rust/tests/pool_interleaving.rs`).
+///
+/// With a plan installed ([`Pool::set_wake_plan`]), the workers of each
+/// epoch pass a start gate in the order of a per-epoch Fisher–Yates
+/// shuffle drawn from `(seed, epoch)`: worker scan *start* order is
+/// forced through every seeded permutation while the jobs themselves
+/// still overlap freely. Shard→worker pinning claims the engine output
+/// is a pure function of the job set — a plan lets tests drive hostile
+/// wake orders through the condvar protocol and assert bit-identical
+/// results plus exactly-once dispatch under all of them. `None` (the
+/// default) leaves the barrier's production path untouched.
+#[derive(Debug, Clone, Copy)]
+pub struct WakePlan {
+    seed: u64,
+}
+
+impl WakePlan {
+    /// A plan permuting worker wake order by `seed`, re-drawn per epoch.
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// Worker `w`'s position in epoch `epoch`'s start order — a pure
+    /// function of `(seed, epoch, workers)`, identical across runs.
+    fn rank(self, epoch: u64, w: usize, workers: usize) -> usize {
+        let mut order: Vec<usize> = (0..workers).collect();
+        Pcg::with_stream(self.seed, epoch).shuffle(&mut order);
+        order.iter().position(|&c| c == w).unwrap_or(0)
+    }
+}
+
 /// Shared dispatch state, guarded by one mutex.
 struct Shared {
     /// Round counter; workers run one scan per observed increment.
@@ -61,10 +96,15 @@ struct Shared {
     jobs: usize,
     /// Workers that have finished scanning the current epoch.
     done: usize,
+    /// Workers that have passed the current epoch's start gate (only
+    /// consulted while a [`WakePlan`] is installed).
+    started: usize,
     /// Set when a job panicked inside a worker this epoch.
     panicked: bool,
     /// Set by `Drop` to terminate the workers.
     shutdown: bool,
+    /// Test-only wake-order permutation; `None` in production.
+    plan: Option<WakePlan>,
 }
 
 struct Inner {
@@ -140,8 +180,10 @@ impl Pool {
                 job: None,
                 jobs: 0,
                 done: 0,
+                started: 0,
                 panicked: false,
                 shutdown: false,
+                plan: None,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -192,6 +234,13 @@ impl Pool {
         self.metered.store(on, Ordering::Relaxed);
     }
 
+    /// Install (or clear) a [`WakePlan`]. Takes effect from the next
+    /// dispatched epoch; a test-only hook — production dispatch never
+    /// sets one, keeping the barrier's hot path free of the gate.
+    pub fn set_wake_plan(&self, plan: Option<WakePlan>) {
+        lock(&self.inner.state).plan = plan;
+    }
+
     /// Execute `f(0) … f(jobs-1)` across the pool and wait for all of them:
     /// one barrier handoff, zero heap allocations. Job `j` always runs on
     /// worker `j % workers` (shard→worker pinning). `jobs == 0` returns
@@ -207,6 +256,7 @@ impl Pool {
     /// a job panics immediately instead of hanging. Concurrent `run`
     /// calls from different threads are safe — they serialize, round by
     /// round.
+    // audit: zero-alloc
     pub fn run(&self, jobs: usize, f: &(dyn Fn(usize) + Sync)) {
         if jobs == 0 {
             return;
@@ -233,6 +283,7 @@ impl Pool {
             st.job = Some(job);
             st.jobs = jobs;
             st.done = 0;
+            st.started = 0;
             st.panicked = false;
             st.epoch += 1;
         }
@@ -274,6 +325,15 @@ impl Drop for Pool {
 
 /// One worker's life: wait for a new epoch, run the jobs pinned to this
 /// worker (`j ≡ w mod workers`, ascending), report done, repeat.
+///
+/// With a [`WakePlan`] installed, each worker additionally holds at a
+/// start gate until every worker the plan ranks before it has passed:
+/// scan *start* order follows the seeded permutation exactly, while job
+/// execution still overlaps. The gate cannot deadlock — the plan's ranks
+/// are a permutation of `0..workers`, so exactly one gated worker matches
+/// the current `started` count, and every increment (and shutdown)
+/// notifies all waiters.
+// audit: zero-alloc
 fn worker_loop(inner: &Inner, w: usize, workers: usize) {
     let mut seen = 0u64;
     loop {
@@ -292,6 +352,20 @@ fn worker_loop(inner: &Inner, w: usize, workers: usize) {
                     .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
             seen = st.epoch;
+            if let Some(plan) = st.plan {
+                let rank = plan.rank(seen, w, workers);
+                while st.started < rank && !st.shutdown {
+                    st = inner
+                        .work_cv
+                        .wait(st)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+                if st.shutdown {
+                    return;
+                }
+                st.started += 1;
+                inner.work_cv.notify_all();
+            }
             (st.job.expect("epoch published without a job"), st.jobs)
         };
         let mut panicked = false;
@@ -468,6 +542,60 @@ mod tests {
         pool.set_metered(false);
         pool.run(4, &|_| {});
         assert_eq!(pool.dispatch_stats().0, 3, "metering can be switched back off");
+    }
+
+    #[test]
+    fn wake_plan_ranks_form_a_permutation_every_epoch() {
+        for workers in [1usize, 2, 3, 5, 8] {
+            for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+                let plan = WakePlan::new(seed);
+                for epoch in [1u64, 2, 3, 100] {
+                    let mut seen = vec![false; workers];
+                    for w in 0..workers {
+                        let r = plan.rank(epoch, w, workers);
+                        assert!(r < workers, "rank in range");
+                        assert!(!seen[r], "rank {r} assigned twice (seed {seed})");
+                        seen[r] = true;
+                    }
+                    // And the rank is reproducible — same inputs, same order.
+                    for w in 0..workers {
+                        assert_eq!(
+                            plan.rank(epoch, w, workers),
+                            plan.rank(epoch, w, workers)
+                        );
+                    }
+                }
+            }
+        }
+        // Different epochs actually permute (not a fixed order): some epoch
+        // pair must disagree for a 5-worker pool.
+        let plan = WakePlan::new(7);
+        let differs = (2u64..20).any(|e| {
+            (0..5).any(|w| plan.rank(1, w, 5) != plan.rank(e, w, 5))
+        });
+        assert!(differs, "wake order must vary across epochs");
+    }
+
+    #[test]
+    fn wake_plan_gates_dispatch_and_is_clearable() {
+        let pool = Pool::new(3);
+        pool.set_wake_plan(Some(WakePlan::new(99)));
+        for _ in 0..50 {
+            let counts: Vec<AtomicUsize> =
+                (0..7).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(7, &|j| {
+                counts[j].fetch_add(1, Ordering::Relaxed);
+            });
+            for (j, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "job {j} exactly once");
+            }
+        }
+        pool.set_wake_plan(None);
+        let total = AtomicUsize::new(0);
+        pool.run(5, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 5, "plan cleared cleanly");
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! The deterministic interleaving checker — the dynamic leg of the
+//! `repro audit` determinism story (ISSUE 9, ARCHITECTURE.md §8).
+//!
+//! The pool's bit-identity argument is *structural*: shard→worker pinning
+//! (`j ≡ w mod W`) makes the engine output a pure function of the job
+//! set, never of scheduling timing. The static audit cannot check that,
+//! and the existing equivalence proptests only sample whatever wake
+//! orders the OS happens to produce. This test closes the gap the way
+//! loom would if it could be vendored: [`WakePlan`] forces the epoch
+//! barrier's worker *start* order through seeded permutations (re-drawn
+//! every epoch), and we assert (a) bit-identical engine output against
+//! the sequential reference across ≥ 5 seeds × shards {1, 2, 7}, and
+//! (b) no lost or double dispatch under any permutation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use sgp::gossip::{ExecPolicy, PushSumEngine};
+use sgp::rng::Pcg;
+use sgp::runtime::pool::{Pool, WakePlan};
+use sgp::topology::{Schedule, TopologyKind};
+
+/// ≥ 5 seeded wake-order permutations (acceptance floor), spread wide.
+const SEEDS: &[u64] = &[11, 23, 37, 51, 64, 907];
+const SHARDS: &[usize] = &[1, 2, 7];
+
+fn assert_states_identical(seq: &PushSumEngine, par: &PushSumEngine, tag: &str) {
+    for (i, (a, b)) in seq.states.iter().zip(&par.states).enumerate() {
+        assert_eq!(a.x, b.x, "{tag}: node {i} numerator diverged");
+        assert_eq!(
+            a.w.to_bits(),
+            b.w.to_bits(),
+            "{tag}: node {i} push-sum weight diverged"
+        );
+    }
+    assert_eq!(seq.in_flight(), par.in_flight(), "{tag}: in-flight count");
+}
+
+#[test]
+fn engine_bit_identical_under_permuted_wake_orders() {
+    let n = 16;
+    let dim = 32;
+    let rounds = 40u64;
+    let mut rng = Pcg::new(0xA001);
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+    let sched = Schedule::with_seed(TopologyKind::OnePeerExp, n, 5);
+
+    let mut seq = PushSumEngine::new(init.clone(), 1, false);
+    for k in 0..rounds {
+        seq.step_exec(k, &sched, None, ExecPolicy::Sequential);
+    }
+
+    for &shards in SHARDS {
+        for &seed in SEEDS {
+            for threads in [2usize, 3, 5] {
+                let tag = format!("shards={shards} wake_seed={seed} threads={threads}");
+                let pool = Arc::new(Pool::new(threads));
+                pool.set_wake_plan(Some(WakePlan::new(seed)));
+                let mut par = PushSumEngine::new(init.clone(), 1, false);
+                par.set_pool(Some(Arc::clone(&pool)));
+                for k in 0..rounds {
+                    par.step_exec(k, &sched, None, ExecPolicy::parallel(shards));
+                }
+                assert_states_identical(&seq, &par, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn no_lost_or_double_dispatch_under_any_permutation() {
+    // Exactly-once at the pool layer itself: every job of every round
+    // runs once, whatever start order the plan forces, including worker
+    // counts above and below the job count.
+    for &seed in SEEDS {
+        for threads in [1usize, 2, 3, 7] {
+            let pool = Pool::new(threads);
+            pool.set_wake_plan(Some(WakePlan::new(seed)));
+            for jobs in [2usize, 3, 7, 16] {
+                for round in 0..25 {
+                    let counts: Vec<AtomicUsize> =
+                        (0..jobs).map(|_| AtomicUsize::new(0)).collect();
+                    pool.run(jobs, &|j| {
+                        counts[j].fetch_add(1, Ordering::Relaxed);
+                    });
+                    for (j, c) in counts.iter().enumerate() {
+                        assert_eq!(
+                            c.load(Ordering::Relaxed),
+                            1,
+                            "seed {seed} threads {threads} jobs {jobs} \
+                             round {round}: job {j} not exactly-once"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn drained_engine_matches_after_permuted_runs() {
+    // τ = 2 keeps shares in flight across rounds, so the drain path (the
+    // mailbox sweep after the last round) also runs under the plan.
+    let n = 13;
+    let dim = 8;
+    let mut rng = Pcg::new(0xA002);
+    let init: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(dim)).collect();
+    let sched = Schedule::with_seed(TopologyKind::TwoPeerExp, n, 9);
+
+    let mut seq = PushSumEngine::new(init.clone(), 2, false);
+    for k in 0..30 {
+        seq.step_exec(k, &sched, None, ExecPolicy::Sequential);
+    }
+    seq.drain();
+
+    for &seed in SEEDS {
+        let pool = Arc::new(Pool::new(3));
+        pool.set_wake_plan(Some(WakePlan::new(seed)));
+        let mut par = PushSumEngine::new(init.clone(), 2, false);
+        par.set_pool(Some(Arc::clone(&pool)));
+        for k in 0..30 {
+            par.step_exec(k, &sched, None, ExecPolicy::parallel(7));
+        }
+        par.drain();
+        assert_states_identical(&seq, &par, &format!("drained wake_seed={seed}"));
+    }
+}
