@@ -229,6 +229,16 @@ pub trait DistributedAlgorithm {
     /// AD-PSGD) need to react.
     fn on_membership_change(&mut self, _event: &MembershipEvent) {}
 
+    /// Capture a durable [`crate::snapshot::Snapshot`] of the strategy's
+    /// full gossip state as of `round` (node states, in-flight mail,
+    /// error-feedback banks, mass ledger). The default is `None`: only the
+    /// engine-owning push-sum strategies can serialize their state, and
+    /// checkpointing callers (the trainer loop, the fault harness) simply
+    /// skip strategies that opt out rather than erroring.
+    fn snapshot(&self, _round: u64) -> Option<crate::snapshot::Snapshot> {
+        None
+    }
+
     /// Flush in-flight state (delayed messages, deferred gradients) at the
     /// end of a run so no mass or update is stranded.
     fn drain(&mut self);

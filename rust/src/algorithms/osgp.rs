@@ -92,6 +92,10 @@ impl DistributedAlgorithm for Osgp {
         true
     }
 
+    fn snapshot(&self, round: u64) -> Option<crate::snapshot::Snapshot> {
+        Some(self.engine.save(round))
+    }
+
     fn drain(&mut self) {
         self.engine.drain();
     }

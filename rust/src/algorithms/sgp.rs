@@ -148,6 +148,10 @@ impl DistributedAlgorithm for Sgp {
         true
     }
 
+    fn snapshot(&self, round: u64) -> Option<crate::snapshot::Snapshot> {
+        Some(self.engine.save(round))
+    }
+
     fn drain(&mut self) {
         self.engine.drain();
     }

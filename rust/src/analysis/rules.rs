@@ -5,7 +5,7 @@
 //! | D001 | no `HashMap`/`HashSet` in deterministic modules | `gossip/`, `topology/`, `sim/`, `faults/` |
 //! | D002 | no wall-clock (`Instant::now`/`SystemTime`) on deterministic paths | `gossip/`, `sim/`, `topology/`, `faults/`, `runtime/` |
 //! | U001 | every `unsafe` has a `// SAFETY:` / `/// # Safety` comment ending ≤ 8 lines above | all of `rust/src` |
-//! | P001 | no `.unwrap()` / `.expect()` on hot or I/O paths | `gossip/`, `runtime/`, `net/` |
+//! | P001 | no `.unwrap()` / `.expect()` on hot or I/O paths | `gossip/`, `runtime/`, `net/`, `snapshot/` |
 //! | A001 | no allocation-capable calls inside anchor-marked functions | all of `rust/src` |
 //!
 //! (The A001 anchor is the comment `audit:` + `zero-alloc` on the line
@@ -98,7 +98,15 @@ fn d002_scope(file: &str) -> bool {
 }
 
 fn p001_scope(file: &str) -> bool {
-    in_dirs(file, &["rust/src/gossip/", "rust/src/runtime/", "rust/src/net/"])
+    in_dirs(
+        file,
+        &[
+            "rust/src/gossip/",
+            "rust/src/runtime/",
+            "rust/src/net/",
+            "rust/src/snapshot/",
+        ],
+    )
 }
 
 fn is_ident(t: &Tok, s: &str) -> bool {

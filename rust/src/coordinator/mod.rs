@@ -38,6 +38,7 @@ use crate::metrics::{EvalRecord, IterRecord, RunResult};
 use crate::net::TimingSim;
 use crate::rng::Pcg;
 use crate::runtime::Runtime;
+use crate::snapshot::SnapshotSink;
 use crate::topology::TopologyKind;
 
 /// Fluent constructor for [`Trainer`] — replaces the old positional
@@ -63,6 +64,7 @@ pub struct TrainerBuilder<'rt> {
     faults: Option<FaultPlan>,
     exec: ExecPolicy,
     compress: Compression,
+    snapshots: Option<SnapshotSink>,
 }
 
 impl<'rt> TrainerBuilder<'rt> {
@@ -80,6 +82,7 @@ impl<'rt> TrainerBuilder<'rt> {
             faults: None,
             exec: ExecPolicy::Sequential,
             compress: Compression::Identity,
+            snapshots: None,
         }
     }
 
@@ -156,6 +159,17 @@ impl<'rt> TrainerBuilder<'rt> {
     /// default is [`Compression::Identity`].
     pub fn compressor(mut self, compress: Compression) -> Self {
         self.compress = compress;
+        self
+    }
+
+    /// Persist durable checkpoints of the strategy's gossip state through
+    /// `sink` whenever its [`crate::snapshot::SnapshotPolicy`] is due —
+    /// on the every-K cadence and/or on membership transitions of the
+    /// fault plan. Strategies that cannot serialize their state
+    /// ([`DistributedAlgorithm::snapshot`] returns `None`) are skipped
+    /// silently; the run itself is unaffected either way.
+    pub fn snapshots(mut self, sink: SnapshotSink) -> Self {
+        self.snapshots = Some(sink);
         self
     }
 
@@ -248,6 +262,7 @@ impl<'rt> TrainerBuilder<'rt> {
             faults,
             exec: self.exec,
             compress: self.compress,
+            snapshots: self.snapshots,
         })
     }
 }
@@ -269,6 +284,7 @@ pub struct Trainer<'rt> {
     faults: Option<FaultClock>,
     exec: ExecPolicy,
     compress: Compression,
+    snapshots: Option<SnapshotSink>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -365,6 +381,23 @@ impl<'rt> Trainer<'rt> {
                 self.faults.as_ref(),
             );
             last_sim = sim_now;
+
+            // Durable checkpoint: when the snapshot policy is due (every-K
+            // cadence and/or a membership transition this round), pull the
+            // strategy's state as of the *completed* round k and persist it.
+            if let Some(sink) = &self.snapshots {
+                let epoch_changed = self
+                    .faults
+                    .as_ref()
+                    .is_some_and(|fc| fc.membership_changed_at(k));
+                if sink.policy.due(k, epoch_changed) {
+                    if let Some(snap) = self.algo.snapshot(k + 1) {
+                        sink.store(&result.label, &snap).map_err(|e| {
+                            anyhow::anyhow!("snapshot store failed: {e}")
+                        })?;
+                    }
+                }
+            }
 
             result.iters.push(IterRecord {
                 iter: k,

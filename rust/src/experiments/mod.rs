@@ -693,6 +693,286 @@ pub fn faults_sweep(sweep: &FaultSweep) -> Result<()> {
 }
 
 // ===========================================================================
+// Soak: crash → durable restore → elastic join under loss (repro soak)
+// ===========================================================================
+
+/// What `repro soak` exercises: the durable-checkpoint contract end to
+/// end under simulated churn. Two push-sum engines run the same lossy,
+/// crash-afflicted, compressed schedule: the *reference* engine runs
+/// uninterrupted while the *subject* engine is checkpointed through a
+/// [`crate::snapshot::SnapshotSink`], torn down mid-run, restored from
+/// its on-disk file, and must continue **bit-identically**; then both
+/// admit a brand-new rank via the mass-conserving φ-split
+/// ([`PushSumEngine::elastic_join`]). Σw is audited against n₀ to 1e-9
+/// every round — a join divides mass, it never mints it — and the run is
+/// written as a `"soak"` JSONL trace that `repro trace` re-audits.
+#[derive(Clone, Debug)]
+pub struct SoakRun {
+    /// Nodes at the start of the run — the Σw budget for the whole soak.
+    pub n: usize,
+    /// Parameter dimension per node.
+    pub dim: usize,
+    /// Gossip rounds.
+    pub iters: u64,
+    /// Per-message drop probability of the lossy fabric (rescue is always
+    /// on, so the mass ledger must still balance exactly).
+    pub drop: f64,
+    /// Snapshot cadence: capture after every `every`-th round and on
+    /// membership transitions.
+    pub every: u64,
+    /// Node that crashes mid-run (and rejoins from its frozen state).
+    pub crash_node: usize,
+    /// Crash round.
+    pub crash_at: u64,
+    /// Rejoin round.
+    pub rejoin_at: u64,
+    /// Round after which the subject engine is dropped and restored from
+    /// its snapshot file.
+    pub restore_at: u64,
+    /// Round before which a brand-new rank joins via the φ-split.
+    pub join_at: u64,
+    /// Donor whose `(x, w)` is split with the joiner.
+    pub donor: usize,
+    /// Seed for initialization, fault replay and gradient noise.
+    pub seed: u64,
+    /// Execution policy for the state updates (bit-identical across all).
+    pub exec: ExecPolicy,
+    /// Gossip compression (the error-feedback banks ride in the snapshot).
+    pub compress: Compression,
+    /// JSONL trace output path.
+    pub trace: PathBuf,
+    /// Snapshot directory.
+    pub ckpt_dir: PathBuf,
+}
+
+impl SoakRun {
+    /// Default soak shape (`fast` = the CI smoke configuration).
+    pub fn new(fast: bool) -> Self {
+        Self {
+            n: if fast { 16 } else { 32 },
+            dim: if fast { 64 } else { 256 },
+            iters: if fast { 120 } else { 300 },
+            drop: 0.02,
+            every: if fast { 20 } else { 50 },
+            crash_node: 5,
+            crash_at: if fast { 25 } else { 60 },
+            rejoin_at: if fast { 45 } else { 120 },
+            restore_at: if fast { 59 } else { 149 },
+            join_at: if fast { 80 } else { 200 },
+            donor: 2,
+            seed: 11,
+            exec: ExecPolicy::Sequential,
+            compress: Compression::TopK { den: 8 },
+            trace: results_dir().join("soak_trace.jsonl"),
+            ckpt_dir: results_dir().join("soak_ckpt"),
+        }
+    }
+}
+
+/// Run the soak scenario; fails if the restored engine ever diverges from
+/// the reference, if Σw drifts past 1e-9, or if the post-join network
+/// fails to contract to consensus. Writes the `"soak"` trace and leaves
+/// the snapshot files under [`SoakRun::ckpt_dir`] as run artifacts.
+pub fn soak(cfg: &SoakRun) -> Result<()> {
+    use crate::faults::FaultClock;
+    use crate::obs::trace::{TraceWriter, GLOBAL_RANK};
+    use crate::rng::Pcg;
+    use crate::snapshot::{RngCursor, Snapshot, SnapshotPolicy, SnapshotSink};
+
+    const TOL: f64 = 1e-9;
+    anyhow::ensure!(
+        cfg.crash_node < cfg.n && cfg.donor < cfg.n,
+        "crash_node/donor must be < n"
+    );
+    anyhow::ensure!(
+        cfg.rejoin_at < cfg.restore_at
+            && cfg.restore_at < cfg.join_at
+            && cfg.join_at < cfg.iters,
+        "soak phases must be ordered: rejoin < restore < join < iters"
+    );
+    let n0 = cfg.n;
+    let expected_w = n0 as f64;
+    let mut rng = Pcg::new(cfg.seed);
+    let init: Vec<Vec<f32>> = (0..n0).map(|_| rng.gaussian_vec(cfg.dim)).collect();
+    let plan = FaultPlan::lossless()
+        .with_drop(cfg.drop)
+        .with_rescue(true)
+        .with_crash(cfg.crash_node, cfg.crash_at, Some(cfg.rejoin_at))
+        .with_seed(cfg.seed);
+    let clock = FaultClock::new(plan);
+    let sink = SnapshotSink::new(
+        SnapshotPolicy::every(cfg.every).and_on_membership_change(),
+        cfg.ckpt_dir.clone(),
+    );
+
+    // τ = 1 so the checkpoint always carries in-flight mail.
+    let mut a = PushSumEngine::new(init.clone(), 1, false); // reference
+    let mut b = PushSumEngine::new(init, 1, false); // subject
+    let mut pa = Pcg::new(cfg.seed ^ 0x50a4);
+    let mut pb = Pcg::new(cfg.seed ^ 0x50a4);
+    let sched0 = Schedule::with_seed(TopologyKind::OnePeerExp, n0, cfg.seed);
+    let sched1 = Schedule::with_seed(TopologyKind::OnePeerExp, n0 + 1, cfg.seed);
+    let mut tw = TraceWriter::create(&cfg.trace, "soak", n0 + 1, cfg.iters)?;
+
+    let mut restored = false;
+    let mut joined = false;
+    let mut grad = vec![0.0f32; cfg.dim];
+    for k in 0..cfg.iters {
+        // Identical gradient-noise perturbations on both engines (the
+        // quadratic-harness stand-in), stopped at the join so the tail of
+        // the run demonstrates post-join consensus contraction. Only Σx
+        // moves; Σw is untouched, so the mass audit below stays exact.
+        if k < cfg.join_at {
+            for i in 0..n0 {
+                if clock.is_down(i, k) {
+                    continue;
+                }
+                for g in grad.iter_mut() {
+                    *g = 0.01 * pa.gaussian() as f32;
+                }
+                for (x, g) in a.states[i].x.iter_mut().zip(&grad) {
+                    *x -= *g;
+                }
+                for g in grad.iter_mut() {
+                    *g = 0.01 * pb.gaussian() as f32;
+                }
+                for (x, g) in b.states[i].x.iter_mut().zip(&grad) {
+                    *x -= *g;
+                }
+            }
+        }
+        let sched = if joined { &sched1 } else { &sched0 };
+        a.step_compressed(k, sched, Some(&clock), cfg.exec, cfg.compress);
+        b.step_compressed(k, sched, Some(&clock), cfg.exec, cfg.compress);
+
+        // Checkpoint the subject on the policy cadence (and at the forced
+        // teardown round), with the perturbation-RNG cursor riding along.
+        let due = sink.policy.due(k, clock.membership_changed_at(k));
+        if due || k == cfg.restore_at {
+            let mut snap = b.save(k + 1);
+            snap.set_rngs(vec![RngCursor::of(&pb)]);
+            let path = sink.store("soak", &snap)?;
+            let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            tw.event(k, "snapshot", GLOBAL_RANK, k, &[("bytes", bytes as f64)]);
+        }
+
+        // Forced teardown: drop the subject entirely and resurrect it from
+        // the file just written. Everything after this round doubles as a
+        // bit-identity check of durable restore.
+        if k == cfg.restore_at {
+            let path = sink.path_for("soak", k + 1);
+            let snap = Snapshot::read_file(&path)?;
+            b = PushSumEngine::restore(&snap)?;
+            anyhow::ensure!(
+                snap.rngs().len() == 1,
+                "soak snapshot must carry the perturbation-RNG cursor"
+            );
+            pb = snap.rngs()[0].to_pcg();
+            restored = true;
+            tw.event(k, "restore", GLOBAL_RANK, k, &[("round", (k + 1) as f64)]);
+        }
+
+        // Elastic scale-up: a brand-new rank warm-starts from the donor's
+        // φ-split on both engines; the schedule is rebuilt over n₀ + 1.
+        if k + 1 == cfg.join_at {
+            let ja = a.elastic_join(cfg.donor);
+            let jb = b.elastic_join(cfg.donor);
+            anyhow::ensure!(ja == jb && ja == n0, "join must assign rank n₀");
+            joined = true;
+            tw.event(k, "join", ja as u32, k, &[("donor", cfg.donor as f64)]);
+        }
+
+        // Per-round audits: Σw (states + in-flight + banks + ledger) must
+        // hold at n₀ bit-for-bit-ish (1e-9), and the subject must track
+        // the reference exactly.
+        let (_, wa) = a.total_mass_with_losses();
+        let (_, wb) = b.total_mass_with_losses();
+        anyhow::ensure!(
+            (wa - expected_w).abs() <= TOL && (wb - expected_w).abs() <= TOL,
+            "round {k}: Σw drifted (ref {wa}, subject {wb}, expected {expected_w})"
+        );
+        tw.event(k, "mass", GLOBAL_RANK, k, &[
+            ("sum_w", wb),
+            ("expected_w", expected_w),
+        ]);
+        let identical = a
+            .states
+            .iter()
+            .zip(&b.states)
+            .all(|(sa, sb)| sa.x == sb.x && sa.w.to_bits() == sb.w.to_bits());
+        anyhow::ensure!(
+            identical,
+            "round {k}: subject diverged from reference (restored = {restored})"
+        );
+    }
+
+    a.drain();
+    b.drain();
+    let (_, wa) = a.total_mass_with_losses();
+    let (_, wb) = b.total_mass_with_losses();
+    anyhow::ensure!(
+        (wa - expected_w).abs() <= TOL && (wb - expected_w).abs() <= TOL,
+        "post-drain Σw drifted (ref {wa}, subject {wb})"
+    );
+    // Post-join contraction bar: top-k error-feedback gossip moves only
+    // dim/den coordinates per message, so the clean tail contracts slower
+    // than dense gossip — 1e-2 is the compressed-rate bound for the tail
+    // length; the exact contracts above (bit-identity, Σw) are the gates.
+    let (cons, _, _) = b.consensus_distance();
+    anyhow::ensure!(
+        cons < 1e-2,
+        "post-join network failed to contract: consensus {cons}"
+    );
+    anyhow::ensure!(
+        a.sent_count == b.sent_count && a.drop_count == b.drop_count,
+        "ledger counters diverged after restore"
+    );
+    tw.event(cfg.iters, "audit", GLOBAL_RANK, cfg.iters.saturating_sub(1), &[
+        ("sum_w", wb),
+        ("expected_w", expected_w),
+        ("consensus", cons),
+        ("bit_identical", 1.0),
+    ]);
+    drop(tw);
+
+    print_table(
+        &format!(
+            "Soak — crash→restore→elastic join (n₀ = {}, {} iters, drop {:.0}%, {})",
+            n0,
+            cfg.iters,
+            100.0 * cfg.drop,
+            cfg.compress.label()
+        ),
+        &["phase", "round", "check"],
+        &[
+            vec![
+                "crash/rejoin".into(),
+                format!("{}/{}", cfg.crash_at, cfg.rejoin_at),
+                "Σw held through churn".into(),
+            ],
+            vec![
+                "disk restore".into(),
+                format!("{}", cfg.restore_at + 1),
+                "bit-identical resume".into(),
+            ],
+            vec![
+                "elastic join".into(),
+                format!("{}", cfg.join_at),
+                format!("rank {} via φ-split of node {}", n0, cfg.donor),
+            ],
+            vec![
+                "final".into(),
+                format!("{}", cfg.iters),
+                format!("Σw = {wb:.9}, consensus {cons:.2e}"),
+            ],
+        ],
+    );
+    println!("soak trace written to {}", cfg.trace.display());
+    println!("snapshots under {}", cfg.ckpt_dir.display());
+    Ok(())
+}
+
+// ===========================================================================
 // Execution-engine scaling sweep: sequential vs sharded-parallel gossip
 // ===========================================================================
 
@@ -1385,6 +1665,21 @@ mod tests {
     fn results_dir_created() {
         let d = results_dir();
         assert!(d.exists());
+    }
+
+    #[test]
+    fn soak_fast_passes_end_to_end() {
+        // The CI smoke shape, routed to a temp dir so parallel test runs
+        // never contend on results/.
+        let tmp = std::env::temp_dir()
+            .join(format!("sgp_soak_test_{}", std::process::id()));
+        let mut cfg = SoakRun::new(true);
+        cfg.trace = tmp.join("trace.jsonl");
+        cfg.ckpt_dir = tmp.join("ckpt");
+        soak(&cfg).unwrap();
+        assert!(cfg.trace.exists());
+        assert!(std::fs::read_dir(&cfg.ckpt_dir).unwrap().count() >= 2);
+        let _ = std::fs::remove_dir_all(&tmp);
     }
 
     #[test]

@@ -59,6 +59,14 @@ pub struct FaultRunConfig {
     /// trace`. `None` (the default) records nothing — the numbers above
     /// are unaffected either way.
     pub trace: Option<std::path::PathBuf>,
+    /// When set, persist durable snapshots of the strategy's gossip state
+    /// through this sink whenever its [`crate::snapshot::SnapshotPolicy`]
+    /// is due (every-K cadence and/or a membership transition of the
+    /// plan). The harness stashes the cursor of its compute-jitter RNG in
+    /// each capture, so a run restored from the file resamples the
+    /// identical compute sequence. `None` (the default) checkpoints
+    /// nothing; the run's numbers are unaffected either way.
+    pub snapshots: Option<crate::snapshot::SnapshotSink>,
 }
 
 impl Default for FaultRunConfig {
@@ -76,6 +84,7 @@ impl Default for FaultRunConfig {
             compress: Compression::Identity,
             heterogeneity: 1.0,
             trace: None,
+            snapshots: None,
         }
     }
 }
@@ -177,6 +186,20 @@ pub fn run_quadratic(
             .with_compress(cfg.compress);
         let pattern = algo.communicate(&ctx);
         timing.advance_with_faults(&pattern.borrowed(), &comp, Some(&clock));
+
+        // Durable checkpoint: capture the strategy's post-round state when
+        // the sink's policy is due, with the compute-jitter RNG cursor
+        // riding along so a restored run resamples identically.
+        if let Some(sink) = &cfg.snapshots {
+            if sink.policy.due(k, clock.membership_changed_at(k)) {
+                if let Some(mut snap) = algo.snapshot(k + 1) {
+                    snap.set_rngs(vec![crate::snapshot::RngCursor::of(&comp_rng)]);
+                    sink.store(algo_name, &snap).map_err(|e| {
+                        anyhow::anyhow!("snapshot store failed: {e}")
+                    })?;
+                }
+            }
+        }
     }
     algo.drain();
 
@@ -324,6 +347,27 @@ mod tests {
             // Fewer wire bytes ⇒ strictly smaller simulated makespan.
             assert!(c.makespan < dense.makespan, "{spec:?} must be faster");
         }
+    }
+
+    #[test]
+    fn harness_writes_snapshots_on_the_policy_cadence() {
+        use crate::snapshot::{Snapshot, SnapshotPolicy, SnapshotSink};
+        let dir = std::env::temp_dir()
+            .join(format!("sgp_harness_snap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = FaultRunConfig {
+            n: 8,
+            iters: 20,
+            snapshots: Some(SnapshotSink::new(SnapshotPolicy::every(8), dir.clone())),
+            ..Default::default()
+        };
+        run_quadratic("sgp", &cfg, &FaultPlan::lossless()).unwrap();
+        // every(8) over 20 rounds fires after rounds 7 and 15.
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 2);
+        let snap = Snapshot::read_file(&dir.join("sgp.r00000008.snap")).unwrap();
+        assert_eq!(snap.n(), 8);
+        assert_eq!(snap.rngs().len(), 1, "compute-jitter cursor rides along");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -16,12 +16,18 @@
 //! mutually consistent without sharing mutable state.
 //!
 //! Crash semantics: a crashed node freezes in place — its `(x, w)` state
-//! *is* the checkpoint. While down it neither computes, sends, nor
-//! receives (messages addressed to it wait in its inbox; the schedule
+//! *is* the checkpoint (and, since PR 10, can also be persisted as a
+//! durable one: [`crate::snapshot`] captures the frozen state, the parked
+//! inbox, and the banks together). While down it neither computes, sends,
+//! nor receives (messages addressed to it wait in its inbox; the schedule
 //! re-indexes over survivors so mixing stays column-stochastic). On rejoin
 //! it resumes from the frozen state as a merely *stale* peer — exactly the
 //! situation push-sum's weight accounting tolerates. A `rejoin: None`
-//! crash is a permanent leave.
+//! crash is a permanent leave ([`FaultClock::is_permanently_down`]); at
+//! each membership-epoch boundary the engine folds error-feedback banks
+//! addressed to permanently-departed ranks back into their senders, so a
+//! checkpoint taken after the boundary reflects the survivor schedule
+//! rather than the pre-crash one.
 //!
 //! See DESIGN.md §Faults for the plan format and per-layer interactions,
 //! and [`harness`] for the offline robustness harness behind
@@ -280,6 +286,21 @@ impl FaultClock {
         })
     }
 
+    /// Is node `i` down at `k` with **no future rejoin scheduled** — i.e.
+    /// gone for the rest of the plan? Distinguishes a permanent leave
+    /// (safe to reconcile state addressed to it, e.g. orphaned
+    /// error-feedback banks) from a transient crash whose inbox and banks
+    /// must be held for the rejoin.
+    pub fn is_permanently_down(&self, node: usize, k: u64) -> bool {
+        self.is_down(node, k)
+            && self
+                .plan
+                .crashes
+                .iter()
+                .filter(|c| c.node == node)
+                .all(|c| c.rejoin.map_or(true, |r| r <= k))
+    }
+
     /// Sorted surviving members at iteration `k`.
     pub fn alive(&self, n: usize, k: u64) -> Vec<usize> {
         let mut out = Vec::new();
@@ -479,6 +500,24 @@ mod tests {
         assert_eq!(c.events_at(20), vec![MembershipEvent::Rejoin { node: 3, at: 20 }]);
         assert_eq!(c.alive(8, 16), vec![0, 1, 2, 4, 6, 7]);
         assert!(c.membership_changed_at(10) && !c.membership_changed_at(11));
+    }
+
+    #[test]
+    fn permanent_down_distinguishes_leave_from_transient_crash() {
+        let c = FaultClock::new(
+            FaultPlan::lossless()
+                .with_crash(3, 10, Some(20))
+                .with_crash(3, 30, None)
+                .with_crash(5, 15, None),
+        );
+        // Transient window: down but a rejoin is still scheduled.
+        assert!(c.is_down(3, 12) && !c.is_permanently_down(3, 12));
+        assert!(!c.is_permanently_down(3, 25), "up nodes are never 'down'");
+        // After the second (terminal) crash there is no future rejoin.
+        assert!(c.is_permanently_down(3, 30) && c.is_permanently_down(3, 1000));
+        // A plain leave is permanent from its first down iteration.
+        assert!(c.is_permanently_down(5, 15));
+        assert!(!c.is_permanently_down(5, 14));
     }
 
     #[test]

@@ -85,6 +85,9 @@ use compress::EdgeBank;
 use crate::faults::FaultClock;
 use crate::obs::{EngineObs, ObsSink, RoundRecord};
 use crate::runtime::pool::{self, Pool};
+use crate::snapshot::{
+    EngineKind, SnapBank, SnapLedger, SnapMsg, SnapNode, Snapshot, SnapshotError,
+};
 use crate::topology::{PeerMemo, Schedule};
 
 /// Per-sender error-feedback banks, keyed by destination node. A
@@ -609,6 +612,15 @@ pub struct PushSumEngine {
     /// Count of messages rescued (re-absorbed at the sender; fault mode
     /// with `FaultPlan::rescue`).
     pub rescue_count: u64,
+    /// Count of error-feedback banks folded back into their sender when a
+    /// membership-epoch change orphaned their destination (see
+    /// [`Self::save`] on the rejoin-from-checkpoint contract).
+    pub reconciled_count: u64,
+    /// Membership epoch the banks were last reconciled against. Bumped
+    /// whenever a fault-mode round crosses a [`FaultClock`] epoch
+    /// boundary; persisted by [`Self::save`] so a restore resumes the
+    /// survivor schedule instead of the pre-crash one.
+    seen_epoch: u64,
     /// Count of messages put on the wire (delivered + dropped; rescued
     /// sends never transmit). Multiply by
     /// [`Compression::encoded_bytes`] for total wire traffic.
@@ -650,6 +662,8 @@ impl PushSumEngine {
             dropped_w: 0.0,
             drop_count: 0,
             rescue_count: 0,
+            reconciled_count: 0,
+            seen_epoch: 0,
             sent_count: 0,
             obs: None,
             arrivals: None,
@@ -789,6 +803,19 @@ impl PushSumEngine {
         let mut alive_buf = std::mem::take(&mut self.alive_buf);
         if let Some(fc) = faults {
             fc.alive_into(self.n, k, &mut alive_buf);
+            // Membership-epoch boundary: fold error-feedback banks whose
+            // destination has left for good back into their senders
+            // *before* any state is read. A node restored from a
+            // checkpoint taken after this point therefore carries banks
+            // that reflect the survivor schedule, not the pre-crash one
+            // (the rejoin-from-checkpoint bugfix). Runs single-threaded
+            // ahead of both phases, so every exec policy sees it
+            // identically.
+            let epoch = fc.membership_epoch(k);
+            if epoch != self.seen_epoch {
+                self.reconcile_orphan_banks(fc, k);
+                self.seen_epoch = epoch;
+            }
         }
         let shards = exec.shards_for(self.n);
         let chunk = self.n.div_ceil(shards);
@@ -986,6 +1013,220 @@ impl PushSumEngine {
             });
         }
         self.obs = obs;
+    }
+
+    /// Fold every error-feedback bank addressed to a permanently-down
+    /// destination back into its sender's `(x, w)` state, in
+    /// deterministic `(sender, destination)` order. Mass-conserving by
+    /// construction: the bank's numerator and weight move, nothing is
+    /// created or dropped, so [`Self::total_mass_with_losses`] is
+    /// bit-unchanged.
+    fn reconcile_orphan_banks(&mut self, clock: &FaultClock, k: u64) {
+        let mut reclaimed = 0u64;
+        for (st, res) in self.states.iter_mut().zip(&mut self.residuals) {
+            res.retain(|&to, bank| {
+                if !clock.is_permanently_down(to, k) {
+                    return true;
+                }
+                for (a, b) in st.x.iter_mut().zip(&bank.x) {
+                    *a += b;
+                }
+                st.w += bank.w;
+                reclaimed += 1;
+                false
+            });
+        }
+        self.reconciled_count += reclaimed;
+    }
+
+    /// Capture a durable [`Snapshot`] of the full engine state: per-node
+    /// `(x, w)`, the mailboxes in their exact in-memory order (the
+    /// bit-identity anchor — see [`crate::snapshot`]), the per-edge
+    /// error-feedback banks, the dropped-mass ledger and counters, and
+    /// the membership epoch last reconciled. `round` is the iteration the
+    /// restored engine executes **next** (callers checkpoint after
+    /// completing round `k` and pass `k + 1`).
+    ///
+    /// The arrival scheduler of event-mode execution is *not* captured:
+    /// it is a lossless function of the mailboxes and is rebuilt on the
+    /// restored engine's first event-mode round.
+    pub fn save(&self, round: u64) -> Snapshot {
+        let nodes = self
+            .states
+            .iter()
+            .map(|st| SnapNode { x: st.x.clone(), w: st.w })
+            .collect();
+        let mail = self
+            .inboxes
+            .iter()
+            .map(|inbox| {
+                inbox
+                    .iter()
+                    .map(|m| SnapMsg {
+                        from: m.from as u64,
+                        sent_iter: m.sent_iter,
+                        deliver_iter: m.deliver_iter,
+                        x: m.x.clone(),
+                        w: m.w,
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut banks = Vec::new();
+        for (from, res) in self.residuals.iter().enumerate() {
+            for (to, bank) in res {
+                banks.push(SnapBank {
+                    from: from as u64,
+                    to: *to as u64,
+                    x: bank.x.clone(),
+                    w: bank.w,
+                });
+            }
+        }
+        Snapshot {
+            round,
+            kind: EngineKind::Dense,
+            biased: self.biased,
+            n: self.n as u64,
+            dim: self.dim as u64,
+            delay: self.delay,
+            epoch: self.seen_epoch,
+            nodes,
+            mail,
+            banks,
+            ledger: SnapLedger {
+                dropped_x: self.dropped_x.clone(),
+                dropped_w: self.dropped_w,
+                drop_count: self.drop_count,
+                rescue_count: self.rescue_count,
+                reconciled_count: self.reconciled_count,
+                sent_count: self.sent_count,
+                recv_w: 0.0,
+                sent_w: 0.0,
+                rescued_w: 0.0,
+            },
+            rngs: Vec::new(),
+            sparse: None,
+        }
+    }
+
+    /// Rebuild an engine from a dense [`Snapshot`]. The restored engine
+    /// continues **bit-identical** to the uninterrupted run under every
+    /// [`ExecPolicy`], fault plan and [`Compression`] spec — the
+    /// determinism contract pinned by `rust/tests/snapshot_resume.rs`.
+    /// Execution scaffolding (worker pool, shard scratch, observability
+    /// recorder, arrival scheduler) is rebuilt fresh; none of it affects
+    /// values.
+    pub fn restore(snap: &Snapshot) -> Result<Self, SnapshotError> {
+        if snap.kind() != EngineKind::Dense {
+            return Err(SnapshotError::EngineMismatch(
+                "PushSumEngine::restore requires a dense snapshot",
+            ));
+        }
+        Self::restore_parts(snap)
+    }
+
+    /// The kind-agnostic restore body, shared with
+    /// [`EventEngine`]'s materialized-dense path.
+    pub(crate) fn restore_parts(snap: &Snapshot) -> Result<Self, SnapshotError> {
+        let n = snap.n();
+        let dim = snap.dim();
+        if snap.nodes.len() != n || snap.mail.len() != n {
+            return Err(SnapshotError::Malformed("dense snapshot missing node state"));
+        }
+        if snap.nodes.iter().any(|nd| nd.x.len() != dim)
+            || snap.ledger.dropped_x.len() != dim
+        {
+            return Err(SnapshotError::Malformed("snapshot dimension mismatch"));
+        }
+        let mut eng = Self::new(
+            snap.nodes.iter().map(|nd| nd.x.clone()).collect(),
+            snap.delay(),
+            snap.biased(),
+        );
+        for (st, nd) in eng.states.iter_mut().zip(&snap.nodes) {
+            st.w = nd.w;
+        }
+        for (to, (inbox, mailbox)) in
+            eng.inboxes.iter_mut().zip(&snap.mail).enumerate()
+        {
+            for m in mailbox {
+                if m.from as usize >= n || m.x.len() != dim {
+                    return Err(SnapshotError::Malformed("message outside engine shape"));
+                }
+                inbox.push(Message {
+                    from: m.from as usize,
+                    to,
+                    sent_iter: m.sent_iter,
+                    deliver_iter: m.deliver_iter,
+                    x: m.x.clone(),
+                    w: m.w,
+                });
+            }
+        }
+        for b in &snap.banks {
+            let (from, to) = (b.from as usize, b.to as usize);
+            if from >= n || to >= n || b.x.len() != dim {
+                return Err(SnapshotError::Malformed("bank outside engine shape"));
+            }
+            let mut bank = EdgeBank::new(dim);
+            bank.x.copy_from_slice(&b.x);
+            bank.w = b.w;
+            eng.residuals[from].insert(to, bank);
+        }
+        eng.dropped_x.copy_from_slice(&snap.ledger.dropped_x);
+        eng.dropped_w = snap.ledger.dropped_w;
+        eng.drop_count = snap.ledger.drop_count;
+        eng.rescue_count = snap.ledger.rescue_count;
+        eng.reconciled_count = snap.ledger.reconciled_count;
+        eng.sent_count = snap.ledger.sent_count;
+        eng.seen_epoch = snap.epoch();
+        Ok(eng)
+    }
+
+    /// Mid-run **elastic join**: admit a brand-new rank that warm-starts
+    /// from `donor` with a mass-conserving φ-split (φ = ½) of the donor's
+    /// `(x, w)`. Returns the new rank's index (= old `n`); the caller
+    /// rebuilds its [`Schedule`] over `n + 1` ranks.
+    ///
+    /// Mass conservation is *bit-exact*, not merely approximate: each
+    /// numerator coordinate splits as `half = x · 0.5; x −= half`, and by
+    /// the Sterbenz lemma the subtraction is exact, so
+    /// `x_donor + x_new` reproduces the old bits even when `x · 0.5`
+    /// rounds (subnormals). The push-sum weight splits the same way:
+    /// Σw is unchanged — a join *divides* existing mass, it never mints
+    /// any, which is why a joining rank reaches consensus without
+    /// disturbing the ledger (the `repro soak` acceptance check).
+    ///
+    /// The de-biased view is also preserved: the new rank starts with
+    /// `z = (x/2)/(w/2) = x/w`, the donor's exact current estimate.
+    /// The n-indexed scaffolding (arrival scheduler, observability
+    /// recorder) is detached and rebuilt lazily at the new size.
+    pub fn elastic_join(&mut self, donor: usize) -> usize {
+        assert!(donor < self.n, "donor {donor} out of range (n = {})", self.n);
+        let id = self.n;
+        let mut x = vec![0.0f32; self.dim];
+        let new_w = {
+            let d = &mut self.states[donor];
+            for (nx, dx) in x.iter_mut().zip(d.x.iter_mut()) {
+                let half = *dx * 0.5;
+                *nx = half;
+                *dx -= half; // exact (Sterbenz): donor + joiner == old bits
+            }
+            let half_w = d.w * 0.5;
+            d.w -= half_w;
+            half_w
+        };
+        let mut st = NodeState::new(x);
+        st.w = if self.biased { 1.0 } else { new_w };
+        self.states.push(st);
+        self.inboxes.push(Vec::new());
+        self.residuals.push(EdgeResiduals::new());
+        self.n += 1;
+        // Both are sized to the old n; rebuilt on demand at the new size.
+        self.arrivals = None;
+        self.obs = None;
+        id
     }
 
     /// Mass recorded as lost to dropped messages: `(Σ dropped x, Σ dropped w)`.
@@ -1653,6 +1894,93 @@ mod tests {
                 assert_eq!(seq.drop_count, par.drop_count);
             }
         }
+    }
+
+    #[test]
+    fn save_restore_resumes_bit_identically_mid_delayed_run() {
+        // Quick form of the contract (exhaustive battery:
+        // rust/tests/snapshot_resume.rs): snapshot at an arbitrary round
+        // of a τ = 2 run with in-flight mail, restore, and continue —
+        // states, mailbox order, and counters must be bit-identical.
+        let init = random_init(9, 12, 71);
+        let mut live = PushSumEngine::new(init, 2, false);
+        let sched = Schedule::new(TopologyKind::TwoPeerExp, 9);
+        for k in 0..13 {
+            live.step(k, &sched);
+        }
+        assert!(live.in_flight() > 0, "τ=2 must leave in-flight mail");
+        let mut back = PushSumEngine::restore(&live.save(13)).unwrap();
+        for k in 13..30 {
+            live.step(k, &sched);
+            back.step(k, &sched);
+        }
+        for (a, b) in live.states.iter().zip(&back.states) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.w.to_bits(), b.w.to_bits());
+        }
+        assert_eq!(live.sent_count, back.sent_count);
+    }
+
+    #[test]
+    fn elastic_join_conserves_mass_bit_exactly_and_converges() {
+        let n = 8;
+        let init = random_init(n, 8, 72);
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n);
+        for k in 0..5 {
+            eng.step(k, &sched);
+        }
+        let (x0, w0) = eng.total_mass_with_losses();
+        let donor_z = eng.states[2].debiased();
+        let id = eng.elastic_join(2);
+        assert_eq!(id, n);
+        assert_eq!(eng.n, n + 1);
+        // φ-split: Σx reproduces the old bits, Σw is unchanged, and the
+        // joiner starts at the donor's exact de-biased estimate.
+        let (x1, w1) = eng.total_mass_with_losses();
+        for (a, b) in x1.iter().zip(&x0) {
+            assert_eq!(a.to_bits(), b.to_bits(), "join must not move Σx bits");
+        }
+        assert!((w1 - w0).abs() < 1e-12, "join mints no weight: {w1} vs {w0}");
+        assert_eq!(eng.states[id].debiased(), donor_z);
+        // The grown network still consensuses under a rebuilt schedule.
+        let sched = Schedule::new(TopologyKind::OnePeerExp, n + 1);
+        for k in 5..80 {
+            eng.step(k, &sched);
+        }
+        eng.drain();
+        assert!(eng.consensus_distance().0 < 1e-3);
+        let (_, w2) = eng.total_mass_with_losses();
+        assert!((w2 - w0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn orphan_banks_reconcile_across_a_permanent_leave() {
+        // The rejoin-from-checkpoint bugfix: banks addressed to a rank
+        // that left for good are folded back into their senders at the
+        // epoch boundary, so a snapshot taken afterwards reflects the
+        // survivor schedule — and no bank mass is stranded.
+        use crate::faults::{FaultClock, FaultPlan};
+        let init = random_init(8, 16, 73);
+        let mut eng = PushSumEngine::new(init, 0, false);
+        let (x0, w0) = eng.total_mass_with_losses();
+        let clock = FaultClock::new(FaultPlan::lossless().with_crash(5, 10, None));
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 8);
+        let spec = Compression::TopK { den: 4 };
+        for k in 0..30 {
+            eng.step_compressed(k, &sched, Some(&clock), ExecPolicy::Sequential, spec);
+        }
+        assert!(eng.reconciled_count > 0, "node 5's inbound banks must fold back");
+        assert!(
+            eng.residuals.iter().all(|r| !r.contains_key(&5)),
+            "no bank may still address the departed rank"
+        );
+        assert_eq!(eng.save(30).epoch(), clock.membership_epoch(29));
+        let (x1, w1) = eng.total_mass_with_losses();
+        for (a, b) in x1.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-2);
+        }
+        assert!((w1 - w0).abs() < 1e-9);
     }
 
     #[test]

@@ -53,6 +53,13 @@
 //!   deployment; a versioned JSONL trace schema ([`obs::trace`]); and
 //!   the `repro trace` analyzer ([`obs::analyze`] — straggler ranking,
 //!   bytes-per-edge, mass-ledger reconciliation).
+//! * [`snapshot`] — durable checkpoint/restore: a versioned, CRC'd,
+//!   length-framed binary snapshot of the full push-sum state (nodes,
+//!   mailboxes, error-feedback banks, mass ledger, RNG cursors,
+//!   membership epoch) with bit-identical resume across every
+//!   [`gossip::ExecPolicy`], a [`snapshot::SnapshotPolicy`] cadence
+//!   threaded through the trainer / fault harness / cluster worker, and
+//!   mass-conserving elastic join (`repro soak`).
 //! * [`analysis`] — the `repro audit` static gate: a dependency-free,
 //!   comment/string-aware lexer and rule engine that lints this repo's
 //!   own source for determinism hazards (nondeterministic collections,
@@ -87,6 +94,7 @@ pub mod optim;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod snapshot;
 pub mod topology;
 
 pub use algorithms::{AlgoParams, DistributedAlgorithm};

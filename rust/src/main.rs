@@ -7,6 +7,7 @@
 //!   engine-sweep large-N scaling sweep of the parallel execution engine
 //!   scale-sweep  event-engine scaling sweep to ~10^6 nodes (wall + peak RSS)
 //!   compress-sweep compressed-gossip sweep: byte reduction × heterogeneity
+//!   soak         durable checkpoint → restore → elastic-join soak (offline)
 //!   bench-check  CI perf gate: fresh BENCH_*.json vs committed baselines
 //!   coord        deployment coordinator: register workers, track liveness
 //!   worker       deployment gossip worker (connects to a coordinator)
@@ -92,12 +93,25 @@ USAGE:
                 heterogeneity for SGP vs the dense baseline, with a
                 cross-shard bit-identity check. Writes
                 results/compress_sweep.csv.
+  repro soak    [--nodes 16] [--dim 64] [--iters 120] [--drop 0.02]
+                [--seed 11] [--engine sequential|parallel|event] [--shards K]
+                [--compress none|topk:D|qsgd:B] [--trace PATH]
+                [--checkpoint-dir DIR] [--fast]
+                durable-checkpoint soak: twin push-sum engines run the same
+                lossy, crash-afflicted schedule; the subject engine is
+                checkpointed to disk on the snapshot-policy cadence, torn
+                down, restored from the file, and must continue
+                bit-identically before a brand-new rank joins mid-run via
+                the mass-conserving φ-split. Audits Σw = n₀ to 1e-9 every
+                round; writes a \"soak\" JSONL trace (re-audited by `repro
+                trace`) and leaves the snapshot files under
+                --checkpoint-dir (default results/soak_ckpt).
   repro coord   --world N [--bind 127.0.0.1:0] [--rounds 400]
                 [--cooldown rounds/4] [--dim 32] [--seed 1] [--lr 0.05]
                 [--compress none|topk:D|qsgd:B] [--round-ms 2]
                 [--round-timeout-ms 250] [--slow-ms 500] [--dead-ms 2000]
                 [--deadline-s 120] [--port-file PATH] [--log PATH]
-                [--summary PATH] [--verbose]
+                [--summary PATH] [--checkpoint-dir DIR] [--verbose]
                 deployment coordinator: waits for N `repro worker`
                 processes, assigns ranks + the peer table, tracks
                 liveness (two thresholds: slow → degraded, silent/EOF →
@@ -105,16 +119,27 @@ USAGE:
                 final reports (consensus spread + push-sum mass ledger).
                 Writes a JSONL sgp-trace membership log and a summary
                 JSON, and answers plaintext Prometheus scrapes (`GET
-                /metrics`) on its listen port while running. --verbose
-                mirrors the structured events to stderr.
+                /metrics`) on its listen port while running.
+                --checkpoint-dir writes a JSON run manifest there at start
+                (world, seed, scheme, rounds — what a restarted fleet needs
+                to resume compatibly) and logs snapshot trace events on
+                membership changes. --verbose mirrors the structured
+                events to stderr.
   repro worker  --coord HOST:PORT [--bind 127.0.0.1:0] [--hb-ms 50]
-                [--io-timeout-ms 5000] [--trace PATH] [--verbose]
+                [--io-timeout-ms 5000] [--trace PATH]
+                [--checkpoint-dir DIR] [--checkpoint-every K] [--verbose]
                 deployment gossip worker: joins the coordinator, then
                 runs the push-sum loop over TCP, sending compressed
                 shares (the `gossip::Compression` bit-packed encodings)
                 to its schedule peers. All config arrives in the
                 coordinator's Assign message. --trace writes this
                 worker's JSONL sgp-trace (per-peer traffic, ledger).
+                --checkpoint-dir persists this worker's (x, w, banks)
+                snapshot every K rounds (--checkpoint-every, default 50);
+                on startup the worker warm-restores from the latest
+                compatible snapshot for its assigned rank, so a restarted
+                process rejoins with its pre-crash state instead of the
+                cold init.
   repro trace   <FILE>
                 analyze a JSONL sgp-trace from any surface (engine, sim,
                 coord, worker): per-node summaries, straggler ranking,
@@ -490,6 +515,31 @@ fn cmd_compress_sweep(args: &Args) -> Result<()> {
     experiments::compress_sweep(&sweep)
 }
 
+fn cmd_soak(args: &Args) -> Result<()> {
+    let mut run = experiments::SoakRun::new(args.flag_strict("fast")?);
+    run.n = args.usize_or("nodes", run.n)?;
+    run.dim = args.usize_or("dim", run.dim)?;
+    run.iters = args.u64_or("iters", run.iters)?;
+    run.seed = args.u64_or("seed", run.seed)?;
+    run.drop = args.f64_or("drop", run.drop)?;
+    if !(0.0..=1.0).contains(&run.drop) {
+        bail!("--drop {}: probability must be in [0, 1]", run.drop);
+    }
+    run.exec = parse_exec(args)?;
+    // Only override the soak's compressed default when --compress was
+    // actually given (parse_compress maps "absent" to Identity).
+    if args.value_of("compress")?.is_some() {
+        run.compress = parse_compress(args)?;
+    }
+    if let Some(t) = args.value_of("trace")? {
+        run.trace = t.into();
+    }
+    if let Some(d) = args.value_of("checkpoint-dir")? {
+        run.ckpt_dir = d.into();
+    }
+    experiments::soak(&run)
+}
+
 fn cmd_coord(args: &Args) -> Result<()> {
     let world = args.usize_or("world", 4)?;
     if world < 2 {
@@ -529,6 +579,7 @@ fn cmd_coord(args: &Args) -> Result<()> {
         summary_path: std::path::PathBuf::from(
             args.str_or("summary", "results/deploy/summary.json")?,
         ),
+        checkpoint_dir: args.value_of("checkpoint-dir")?.map(std::path::PathBuf::from),
         verbose: args.flag_strict("verbose")?,
     };
     let s = coord::run_coordinator(&cfg)?;
@@ -555,6 +606,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         io_timeout_ms: args.u64_or("io-timeout-ms", 5000)?,
         verbose: args.flag_strict("verbose")?,
         trace: args.value_of("trace")?.map(std::path::PathBuf::from),
+        checkpoint_dir: args.value_of("checkpoint-dir")?.map(std::path::PathBuf::from),
+        checkpoint_every: args.u64_or("checkpoint-every", 50)?,
     };
     let rep = worker::run_worker(&cfg)?;
     println!(
@@ -621,6 +674,7 @@ fn main() -> Result<()> {
         Some("engine-sweep") => cmd_engine_sweep(&args)?,
         Some("scale-sweep") => cmd_scale_sweep(&args)?,
         Some("compress-sweep") => cmd_compress_sweep(&args)?,
+        Some("soak") => cmd_soak(&args)?,
         Some("bench-check") => cmd_bench_check(&args)?,
         Some("coord") => cmd_coord(&args)?,
         Some("worker") => cmd_worker(&args)?,

@@ -81,6 +81,16 @@ pub struct CoordConfig {
     pub log_path: PathBuf,
     /// End-of-run summary JSON.
     pub summary_path: PathBuf,
+    /// When set, the coordinator persists a durable run manifest
+    /// (`run_manifest.json`) here at assignment time and rewrites it on
+    /// every membership change: world size, seed, scheme, rounds, the
+    /// peer table and the current survivor set — everything a restarted
+    /// fleet needs to resume compatibly with the workers' own snapshot
+    /// files (see [`super::worker::WorkerConfig::checkpoint_dir`]). Each
+    /// write is logged as a `snapshot` trace event. Checkpoint I/O is
+    /// best-effort: a write failure degrades to a stderr note, it never
+    /// kills the run.
+    pub checkpoint_dir: Option<PathBuf>,
     /// Mirror structured events as human-readable stderr lines.
     pub verbose: bool,
 }
@@ -103,6 +113,7 @@ impl Default for CoordConfig {
             port_file: None,
             log_path: PathBuf::from("results/deploy/membership.jsonl"),
             summary_path: PathBuf::from("results/deploy/summary.json"),
+            checkpoint_dir: None,
             verbose: false,
         }
     }
@@ -274,6 +285,51 @@ fn classify_reg_conn(stream: &mut TcpStream, deadline: Instant) -> RegConn {
     }
 }
 
+/// Write (atomically: tmp + rename) the durable run manifest a restarted
+/// fleet resumes from: the full assignment-time configuration plus the
+/// current survivor set. Best-effort by contract — any I/O failure is
+/// reported to stderr and swallowed, because losing a bookkeeping
+/// checkpoint must never take down a live run.
+fn write_run_manifest(
+    dir: &Path,
+    cfg: &CoordConfig,
+    port: u16,
+    peers: &[String],
+    dead: &[bool],
+) {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema_version\": {SUMMARY_SCHEMA_VERSION},\n"));
+    out.push_str(&format!("  \"port\": {port},\n"));
+    out.push_str(&format!("  \"world\": {},\n", cfg.world));
+    out.push_str(&format!("  \"rounds\": {},\n", cfg.rounds));
+    out.push_str(&format!("  \"cooldown\": {},\n", cfg.cooldown.min(cfg.rounds)));
+    out.push_str(&format!("  \"dim\": {},\n", cfg.dim));
+    out.push_str(&format!("  \"seed\": {},\n", cfg.seed));
+    out.push_str(&format!("  \"lr\": {:e},\n", cfg.lr));
+    out.push_str(&format!("  \"scheme\": \"{}\",\n", cfg.scheme.label()));
+    out.push_str(&format!("  \"round_ms\": {},\n", cfg.round_ms));
+    out.push_str(&format!("  \"round_timeout_ms\": {},\n", cfg.round_timeout_ms));
+    let peer_list: Vec<String> = peers.iter().map(|p| format!("\"{p}\"")).collect();
+    out.push_str(&format!("  \"peers\": [{}],\n", peer_list.join(",")));
+    let alive: Vec<String> = (0..cfg.world)
+        .filter(|&r| !dead.get(r).copied().unwrap_or(false))
+        .map(|r| r.to_string())
+        .collect();
+    out.push_str(&format!("  \"alive\": [{}]\n", alive.join(",")));
+    out.push_str("}\n");
+    let write = || -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("run_manifest.json");
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, &out)?;
+        std::fs::rename(&tmp, &path)
+    };
+    if let Err(e) = write() {
+        eprintln!("[coord] run-manifest checkpoint failed: {e} ({})", dir.display());
+    }
+}
+
 fn write_port_file(path: &Path, port: u16) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).ok();
@@ -420,6 +476,18 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
     }
     drop(tx);
     record(&mut log, &mut events, now_ms(), "assign", GLOBAL_RANK, 0, &[]);
+    if let Some(dir) = &cfg.checkpoint_dir {
+        write_run_manifest(dir, cfg, port, &peers, &vec![false; cfg.world]);
+        record(
+            &mut log,
+            &mut events,
+            now_ms(),
+            "snapshot",
+            GLOBAL_RANK,
+            0,
+            &[("members", cfg.world as f64)],
+        );
+    }
     if cfg.verbose {
         eprintln!("[coord] all {} workers assigned; run started", cfg.world);
     }
@@ -567,6 +635,23 @@ pub fn run_coordinator(cfg: &CoordConfig) -> Result<CoordSummary> {
                         &dead,
                         WireEvent::Leave { rank: r as u32, at: last_round[r] },
                     );
+                    // Membership changed → refresh the durable run
+                    // manifest so a fleet restarted from the checkpoint
+                    // resumes over the survivor set.
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        write_run_manifest(dir, cfg, port, &peers, &dead);
+                        let members =
+                            dead.iter().filter(|&&d| !d).count() as f64;
+                        record(
+                            &mut log,
+                            &mut events,
+                            now_ms(),
+                            "snapshot",
+                            GLOBAL_RANK,
+                            last_round[r],
+                            &[("members", members)],
+                        );
+                    }
                 }
                 _ => {}
             }
@@ -932,6 +1017,25 @@ mod tests {
             RegConn::Join(port) => assert_eq!(port, 4242),
             _ => panic!("a framed Join must classify as a worker"),
         }
+    }
+
+    #[test]
+    fn run_manifest_checkpoint_roundtrips_and_tracks_survivors() {
+        let dir = std::env::temp_dir().join(format!("sgp_manifest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CoordConfig { world: 3, ..Default::default() };
+        let peers: Vec<String> =
+            (1..=3).map(|p| format!("127.0.0.1:{p}")).collect();
+        write_run_manifest(&dir, &cfg, 40000, &peers, &[false, true, false]);
+        let text = std::fs::read_to_string(dir.join("run_manifest.json")).unwrap();
+        let j = crate::model::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("world").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("seed").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("peers").and_then(|v| v.as_arr()).unwrap().len(), 3);
+        // Rank 1 is dead: the survivor set the restarted fleet resumes over.
+        assert_eq!(j.get("alive").and_then(|v| v.as_arr()).unwrap().len(), 2);
+        assert!(!dir.join("run_manifest.json.tmp").exists(), "tmp renamed away");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -41,7 +41,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -52,6 +52,9 @@ use crate::gossip::compress::EdgeBank;
 use crate::gossip::Compression;
 use crate::obs::trace::TraceWriter;
 use crate::rng::Pcg;
+use crate::snapshot::{
+    EngineKind, SnapBank, SnapLedger, SnapNode, Snapshot, SnapshotPolicy, SnapshotSink,
+};
 use crate::topology::{Schedule, TopologyKind};
 
 use super::wire::{
@@ -77,6 +80,16 @@ pub struct WorkerConfig {
     /// source `"worker"`): per-edge byte/message counters, send
     /// failures, membership observations, and the final ledger.
     pub trace: Option<PathBuf>,
+    /// Optional durable-checkpoint directory. When set, the worker
+    /// warm-restores its latest `worker{rank}.r*.snap` capture after the
+    /// coordinator's assignment (resuming its prior mass, banks, ledger
+    /// and survivor view instead of a cold `w = 1` start), and writes a
+    /// fresh capture every [`Self::checkpoint_every`] rounds and on every
+    /// observed membership change.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint cadence in rounds (`0` = only on membership changes).
+    /// Ignored unless [`Self::checkpoint_dir`] is set.
+    pub checkpoint_every: u64,
 }
 
 impl Default for WorkerConfig {
@@ -88,6 +101,8 @@ impl Default for WorkerConfig {
             io_timeout_ms: 5000,
             verbose: false,
             trace: None,
+            checkpoint_dir: None,
+            checkpoint_every: 50,
         }
     }
 }
@@ -315,6 +330,150 @@ fn in_peers(
     }
 }
 
+/// The latest `worker{rank}.r*.snap` in `dir`, by file name — the
+/// fixed-width round field in [`SnapshotSink::path_for`] names makes
+/// lexical order chronological. Unreadable directories yield `None`
+/// (cold start), never an error.
+fn latest_checkpoint(dir: &Path, rank: usize) -> Option<PathBuf> {
+    let prefix = format!("worker{rank}.r");
+    let mut best: Option<PathBuf> = None;
+    for entry in std::fs::read_dir(dir).ok()?.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with(&prefix) || !name.ends_with(".snap") {
+            continue;
+        }
+        let path = entry.path();
+        if best.as_ref().map_or(true, |b| b.as_path() < path.as_path()) {
+            best = Some(path);
+        }
+    }
+    best
+}
+
+/// Encode this worker's durable state as a world-shaped dense
+/// [`Snapshot`]: only row `rank` carries real mass; every other row is a
+/// membership hint (`w = 1` alive, `w = 0` written off) so a warm restore
+/// realigns its survivor schedule before any fresh Leave event arrives.
+/// The ledger section carries the worker's mass-flow counters, keeping
+/// `w = 1 + recv_w − sent_w` meaningful across the restart.
+#[allow(clippy::too_many_arguments)] // flat capture of the round loop's state
+fn capture_worker_snapshot(
+    round: u64,
+    rank: usize,
+    world: usize,
+    dim: usize,
+    x: &[f32],
+    w: f64,
+    banks: &BTreeMap<usize, EdgeBank>,
+    alive: &[usize],
+    recv_w: f64,
+    sent_w: f64,
+    rescued_w: f64,
+    rescues: u32,
+) -> Snapshot {
+    let mut nodes = Vec::with_capacity(world);
+    for r in 0..world {
+        if r == rank {
+            nodes.push(SnapNode { x: x.to_vec(), w });
+        } else {
+            let hint = if alive.binary_search(&r).is_ok() { 1.0 } else { 0.0 };
+            nodes.push(SnapNode { x: vec![0.0; dim], w: hint });
+        }
+    }
+    let snap_banks = banks
+        .iter()
+        .map(|(&peer, b)| SnapBank {
+            from: rank as u64,
+            to: peer as u64,
+            x: b.x.clone(),
+            w: b.w,
+        })
+        .collect();
+    Snapshot {
+        round,
+        kind: EngineKind::Dense,
+        biased: false,
+        n: world as u64,
+        dim: dim as u64,
+        delay: 0,
+        epoch: (world - alive.len()) as u64,
+        nodes,
+        mail: vec![Vec::new(); world],
+        banks: snap_banks,
+        ledger: SnapLedger {
+            dropped_x: vec![0.0; dim],
+            rescue_count: rescues as u64,
+            recv_w,
+            sent_w,
+            rescued_w,
+            ..SnapLedger::default()
+        },
+        rngs: Vec::new(),
+        sparse: None,
+    }
+}
+
+/// Warm-restore `(x, w, banks, alive, ledger)` from the latest checkpoint
+/// for `rank`, if one exists and matches the run's shape. Returns the
+/// snapshot's round on success; any mismatch or decode failure degrades
+/// to a cold start (with a stderr note), never an abort.
+#[allow(clippy::too_many_arguments)] // mirrors capture_worker_snapshot
+fn try_warm_restore(
+    dir: &Path,
+    rank: usize,
+    world: usize,
+    dim: usize,
+    x: &mut Vec<f32>,
+    w: &mut f64,
+    banks: &mut BTreeMap<usize, EdgeBank>,
+    alive: &mut Vec<usize>,
+    recv_w: &mut f64,
+    sent_w: &mut f64,
+    rescued_w: &mut f64,
+    rescues: &mut u32,
+) -> Option<u64> {
+    let path = latest_checkpoint(dir, rank)?;
+    let snap = match Snapshot::read_file(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "[worker {rank}] ignoring unreadable checkpoint {}: {e}",
+                path.display()
+            );
+            return None;
+        }
+    };
+    if snap.n() != world || snap.dim() != dim {
+        eprintln!(
+            "[worker {rank}] ignoring checkpoint {} shaped {}x{} (run is {world}x{dim})",
+            path.display(),
+            snap.n(),
+            snap.dim()
+        );
+        return None;
+    }
+    let me = snap.nodes.get(rank)?;
+    *x = me.x.clone();
+    *w = me.w;
+    banks.clear();
+    for b in &snap.banks {
+        if b.from as usize == rank && (b.to as usize) < world {
+            let bank = banks.entry(b.to as usize).or_insert_with(|| EdgeBank::new(dim));
+            bank.x.copy_from_slice(&b.x);
+            bank.w = b.w;
+        }
+    }
+    *alive = (0..world)
+        .filter(|&r| r == rank || snap.nodes[r].w != 0.0)
+        .collect();
+    *recv_w = snap.ledger.recv_w;
+    *sent_w = snap.ledger.sent_w;
+    *rescued_w = snap.ledger.rescued_w;
+    *rescues = snap.ledger.rescue_count.min(u64::from(u32::MAX)) as u32;
+    Some(snap.round())
+}
+
 /// Worker-side observability: the optional trace writer plus
 /// pre-allocated per-peer wire counters (payload bytes and message
 /// counts, both directions). One instance per run, created right after
@@ -483,6 +642,41 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
     let mut rescues = 0u32;
     let mut timeouts = 0u32;
 
+    // Durable checkpoints: warm-restore the latest capture for this rank
+    // (a restarted process resumes its prior mass instead of a cold
+    // `w = 1` start), then re-capture on the configured cadence below.
+    let ckpt = cfg.checkpoint_dir.as_ref().map(|dir| {
+        SnapshotSink::new(
+            SnapshotPolicy::every(cfg.checkpoint_every).and_on_membership_change(),
+            dir.clone(),
+        )
+    });
+    if let Some(dir) = cfg.checkpoint_dir.as_deref() {
+        if let Some(r0) = try_warm_restore(
+            dir,
+            rank,
+            world,
+            dim,
+            &mut x,
+            &mut w,
+            &mut banks,
+            &mut alive,
+            &mut recv_w,
+            &mut sent_w,
+            &mut rescued_w,
+            &mut rescues,
+        ) {
+            if tel.verbose {
+                eprintln!(
+                    "[worker {rank}] warm-restored round-{r0} checkpoint: w={w:.6} \
+                     survivors={}",
+                    alive.len()
+                );
+            }
+            tel.event("restore", a.rank, r0, &[("w", w), ("survivors", alive.len() as f64)]);
+        }
+    }
+
     let grad_rounds = a.rounds.saturating_sub(a.cooldown);
     let round_timeout = Duration::from_millis(a.round_timeout_ms.max(1) as u64);
     let round_pace = Duration::from_millis(a.round_ms as u64);
@@ -498,6 +692,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
     'rounds: for k in 0..a.rounds {
         round_now.store(k, Ordering::Relaxed);
         let round_start = Instant::now();
+        let mut membership_changed = false;
 
         // 1. Membership events (and control-plane state) first.
         {
@@ -526,6 +721,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
                             break 'rounds;
                         }
                         remove_rank(&mut alive, r);
+                        membership_changed = true;
                         if tel.verbose {
                             eprintln!(
                                 "[worker {rank}] peer {r} left; {} survivors",
@@ -691,6 +887,33 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
             timeouts += 1;
         }
         absorb_up_to(&shared, k, &alive, dim, &mut x, &mut w, &mut recv_w, rank, &mut tel);
+
+        // Durable capture: cadence rounds and every observed membership
+        // change. Best-effort — a full disk degrades durability, not the
+        // run itself.
+        if let Some(sink) = &ckpt {
+            if sink.policy.due(k, membership_changed) {
+                let snap = capture_worker_snapshot(
+                    k + 1, rank, world, dim, &x, w, &banks, &alive, recv_w, sent_w,
+                    rescued_w, rescues,
+                );
+                match sink.store(&format!("worker{rank}"), &snap) {
+                    Ok(path) => {
+                        tel.event("checkpoint", a.rank, k, &[("w", w)]);
+                        if tel.verbose {
+                            eprintln!(
+                                "[worker {rank}] checkpointed round {} to {}",
+                                k + 1,
+                                path.display()
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("[worker {rank}] checkpoint failed at round {k}: {e}");
+                    }
+                }
+            }
+        }
 
         rounds_run = k + 1;
         let elapsed = round_start.elapsed();
@@ -864,6 +1087,56 @@ mod tests {
                 assert_ne!(out[0], me);
             }
         }
+    }
+
+    #[test]
+    fn worker_checkpoint_roundtrips_state_banks_and_membership() {
+        let dir =
+            std::env::temp_dir().join(format!("sgp_worker_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (world, dim, rank) = (4usize, 6usize, 1usize);
+        let x: Vec<f32> = (0..dim).map(|i| i as f32 * 0.5).collect();
+        let w = 0.8125f64;
+        let mut banks: BTreeMap<usize, EdgeBank> = BTreeMap::new();
+        let bank = banks.entry(3).or_insert_with(|| EdgeBank::new(dim));
+        bank.x[2] = 1.5;
+        bank.w = 0.0625;
+        let alive = vec![0usize, 1, 3]; // rank 2 written off
+        let snap = capture_worker_snapshot(
+            7, rank, world, dim, &x, w, &banks, &alive, 2.5, 3.25, 0.125, 4,
+        );
+        let sink = SnapshotSink::new(SnapshotPolicy::every(1), &dir);
+        sink.store("worker1", &snap).unwrap();
+
+        let (mut x2, mut w2) = (vec![0.0f32; dim], 1.0f64);
+        let mut banks2: BTreeMap<usize, EdgeBank> = BTreeMap::new();
+        let mut alive2: Vec<usize> = (0..world).collect();
+        let (mut recv, mut sent, mut resc) = (0.0f64, 0.0f64, 0.0f64);
+        let mut n_resc = 0u32;
+        let r0 = try_warm_restore(
+            &dir, rank, world, dim, &mut x2, &mut w2, &mut banks2, &mut alive2,
+            &mut recv, &mut sent, &mut resc, &mut n_resc,
+        );
+        assert_eq!(r0, Some(7));
+        assert_eq!(x2, x);
+        assert_eq!(w2.to_bits(), w.to_bits());
+        assert_eq!(alive2, alive, "membership hint rows restore the survivor view");
+        assert_eq!(banks2.len(), 1);
+        assert_eq!(banks2.get(&3).map(|b| (b.x[2], b.w)), Some((1.5, 0.0625)));
+        assert_eq!((recv, sent, resc, n_resc), (2.5, 3.25, 0.125, 4));
+
+        // No capture for rank 0 → cold start; shape mismatch → cold start.
+        assert!(try_warm_restore(
+            &dir, 0, world, dim, &mut x2, &mut w2, &mut banks2, &mut alive2,
+            &mut recv, &mut sent, &mut resc, &mut n_resc,
+        )
+        .is_none());
+        assert!(try_warm_restore(
+            &dir, rank, world + 1, dim, &mut x2, &mut w2, &mut banks2, &mut alive2,
+            &mut recv, &mut sent, &mut resc, &mut n_resc,
+        )
+        .is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

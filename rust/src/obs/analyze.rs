@@ -1,7 +1,7 @@
 //! The `repro trace` analyzer: offline summaries over a parsed trace.
 //!
 //! Reads one JSONL trace (any source — `engine`, `sim`, `coord`,
-//! `worker`) and prints per-node summaries: a straggler ranking by
+//! `worker`, `soak`) and prints per-node summaries: a straggler ranking by
 //! phase latency or degraded-span count, a bytes-per-edge matrix,
 //! drop/rescue totals, and a round-latency histogram. For coordinator
 //! and worker traces it additionally **re-derives the push-sum mass
@@ -41,6 +41,7 @@ pub fn run(path: &Path) -> Result<()> {
         "worker" => analyze_worker(&tf),
         "engine" => analyze_engine(&tf),
         "sim" => analyze_sim(&tf),
+        "soak" => analyze_soak(&tf),
         other => {
             println!("unknown source {other:?} — listing event kinds only");
             print_kind_counts(&tf);
@@ -477,6 +478,88 @@ fn analyze_engine(tf: &TraceFile) -> Result<()> {
     Ok(())
 }
 
+/// Soak trace (`repro soak`): re-verify the durable-checkpoint run's
+/// audit trail offline — every per-round `mass` event must conserve Σw
+/// to [`TOL`], the run must contain at least one `snapshot`, one
+/// `restore` and one elastic `join`, and the final `audit` event must
+/// report a bit-identical subject with the same conserved mass. Any
+/// violation is a hard failure (non-zero CLI exit), so the trace file is
+/// a self-contained proof the crash→restore→join cycle preserved the
+/// push-sum ledger.
+fn analyze_soak(tf: &TraceFile) -> Result<()> {
+    let mut snapshots = 0u64;
+    let mut snapshot_bytes = 0u64;
+    let mut restores: Vec<u64> = Vec::new();
+    let mut joins: Vec<(u32, u64)> = Vec::new();
+    let mut mass_rounds = 0u64;
+    let mut worst_drift = 0.0f64;
+    let mut audit: Option<&TraceEvent> = None;
+    for ev in &tf.events {
+        match ev.kind.as_str() {
+            "snapshot" => {
+                snapshots += 1;
+                snapshot_bytes += ev.num("bytes").unwrap_or(0.0) as u64;
+            }
+            "restore" => restores.push(ev.num("round").unwrap_or(0.0) as u64),
+            "join" => {
+                joins.push((ev.rank.unwrap_or(0), ev.num("donor").unwrap_or(0.0) as u64))
+            }
+            "mass" => {
+                let (sum_w, expected) = match (ev.num("sum_w"), ev.num("expected_w")) {
+                    (Some(s), Some(e)) => (s, e),
+                    _ => bail!("mass event at round {:?} missing fields", ev.round),
+                };
+                let drift = (sum_w - expected).abs();
+                if drift > TOL {
+                    bail!(
+                        "round {:?}: Σw drifted by {drift:e} (sum_w {sum_w}, \
+                         expected {expected})",
+                        ev.round
+                    );
+                }
+                worst_drift = worst_drift.max(drift);
+                mass_rounds += 1;
+            }
+            "audit" => audit = Some(ev),
+            _ => {}
+        }
+    }
+    print_kind_counts(tf);
+    if mass_rounds == 0 {
+        bail!("soak trace carries no mass events — nothing was audited");
+    }
+    if snapshots == 0 {
+        bail!("soak trace carries no snapshot events — checkpointing never ran");
+    }
+    if restores.is_empty() {
+        bail!("soak trace carries no restore event — the crash path never ran");
+    }
+    if joins.is_empty() {
+        bail!("soak trace carries no join event — elastic scale-up never ran");
+    }
+    let a = audit.context("soak trace has no final audit event — run died mid-way")?;
+    let (sum_w, expected) = match (a.num("sum_w"), a.num("expected_w")) {
+        (Some(s), Some(e)) => (s, e),
+        _ => bail!("audit event is missing mass fields"),
+    };
+    if (sum_w - expected).abs() > TOL {
+        bail!("final audit: Σw {sum_w} vs expected {expected} exceeds {TOL:e}");
+    }
+    if a.num("bit_identical") != Some(1.0) {
+        bail!("final audit: subject engine was not bit-identical to the reference");
+    }
+    println!(
+        "\nchurn cycle: {snapshots} snapshots ({snapshot_bytes} bytes), restore at \
+         round(s) {restores:?}, elastic join(s) {joins:?} (rank, donor)"
+    );
+    println!(
+        "soak ledger: OK ({mass_rounds} rounds audited, worst Σw drift {worst_drift:.3e}, \
+         final consensus {:.3e})",
+        a.num("consensus").unwrap_or(f64::NAN)
+    );
+    Ok(())
+}
+
 /// Timing-simulator trace: straggler ranking by slowest-node counts and
 /// an iteration-latency histogram from consecutive makespan deltas.
 fn analyze_sim(tf: &TraceFile) -> Result<()> {
@@ -573,6 +656,47 @@ mod tests {
         let bad = coord_trace(&dir, true);
         let err = run(&bad).expect_err("corrupted ledger_residual must fail");
         assert!(err.to_string().contains("ledger residual mismatch"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn soak_trace(dir: &std::path::Path, drift: bool, complete: bool) -> std::path::PathBuf {
+        let name = format!("soak_{}_{}.jsonl", drift, complete);
+        let path = dir.join(name);
+        let mut w = TraceWriter::create(&path, "soak", 9, 20).unwrap();
+        let gr = u32::MAX; // GLOBAL_RANK
+        for k in 0..20u64 {
+            let sum_w = if drift && k == 13 { 8.0 + 1e-6 } else { 8.0 };
+            w.event(k, "mass", gr, k, &[("sum_w", sum_w), ("expected_w", 8.0)]);
+        }
+        w.event(7, "snapshot", gr, 7, &[("bytes", 4096.0)]);
+        w.event(9, "restore", gr, 9, &[("round", 10.0)]);
+        w.event(14, "join", 8, 14, &[("donor", 2.0)]);
+        if complete {
+            w.event(
+                20,
+                "audit",
+                gr,
+                19,
+                &[
+                    ("sum_w", 8.0),
+                    ("expected_w", 8.0),
+                    ("consensus", 1e-4),
+                    ("bit_identical", 1.0),
+                ],
+            );
+        }
+        path
+    }
+
+    #[test]
+    fn soak_reconciliation_accepts_clean_and_rejects_drift_or_truncation() {
+        let dir =
+            std::env::temp_dir().join(format!("sgp_analyze_soak_{}", std::process::id()));
+        run(&soak_trace(&dir, false, true)).expect("clean soak trace reconciles");
+        let err = run(&soak_trace(&dir, true, true)).expect_err("Σw drift must fail");
+        assert!(err.to_string().contains("drifted"), "got: {err}");
+        let err = run(&soak_trace(&dir, false, false)).expect_err("missing audit must fail");
+        assert!(err.to_string().contains("no final audit"), "got: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

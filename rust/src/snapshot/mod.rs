@@ -1,0 +1,1033 @@
+//! Durable checkpoint/restore for the push-sum engines: a versioned,
+//! CRC'd, length-framed binary snapshot of *everything* the
+//! mass-conservation ledger and the bit-identity contract depend on —
+//! per-node `(x, w)` states, the per-destination mailboxes in their exact
+//! in-memory order, the per-edge error-feedback banks, the dropped-mass
+//! ledger and counters, attached RNG cursors, and the membership epoch
+//! the engine last reconciled against.
+//!
+//! # File layout
+//!
+//! A snapshot file is a fixed 48-byte header, a run of length-framed
+//! sections, and a trailing CRC-32 over everything before it
+//! (the same IEEE CRC the cluster wire format carries —
+//! [`crate::net::cluster::wire::crc32`]):
+//!
+//! ```text
+//! off  size  field
+//! 0    u32   magic   = 0x5350_4753          # "SGPS" little-endian
+//! 4    u16   version = 1
+//! 6    u8    engine kind                    # 0 dense / 1 sparse / 2 event-dense
+//! 7    u8    flags                          # bit0 biased, bit1 sparse section present
+//! 8    u64   round                          # next round the restored engine executes
+//! 16   u64   n                              # logical node count
+//! 24   u64   dim                            # parameter dimension
+//! 32   u64   delay                          # overlap τ
+//! 40   u64   epoch                          # membership epoch last reconciled
+//! 48   ..    sections                       # tag u8 | len u64 | payload, ascending tag
+//! end  u32   crc                            # CRC-32 (IEEE) of bytes[..len-4]
+//! ```
+//!
+//! Sections (all integers little-endian; always written in this order):
+//!
+//! | tag | section | payload |
+//! |-----|---------|---------|
+//! | 1 | nodes   | `u64 count`, then per node `dim × f32 x`, `f64 w` |
+//! | 2 | mail    | `u64 dests`, per destination `u64 msgs`, per message `u64 from`, `u64 sent_iter`, `u64 deliver_iter`, `dim × f32 x`, `f64 w` |
+//! | 3 | banks   | `u64 count`, per bank `u64 from`, `u64 to`, `dim × f32 x`, `f64 w` |
+//! | 4 | ledger  | `dim × f64 dropped_x`, `f64 dropped_w`, `u64 drop/rescue/reconciled/sent counts`, `f64 recv_w`, `f64 sent_w`, `f64 rescued_w` |
+//! | 5 | rng     | `u64 count`, per cursor `u64 state`, `u64 inc`, `u8 has_spare`, `f64 spare` |
+//! | 6 | sparse  | `dim × f32 template_x`, `f64 template_w`, `u64 sent`, `u64 hot`, per hot node `u64 index`, `dim × f32 x`, `f64 w` |
+//!
+//! The **mailbox order is load-bearing**: the engine's `drain_due`
+//! swap-remove scan makes the per-destination message permutation part of
+//! the bit-identity contract (under τ ≥ 2 it determines *future*
+//! application orders), so messages are serialized — and restored — in
+//! their exact in-memory order, never sorted or canonicalized. The
+//! arrival scheduler of event-mode execution is deliberately *not*
+//! serialized: it is rebuilt losslessly from the restored mailboxes on
+//! the next event-mode round.
+//!
+//! # Determinism contract
+//!
+//! `restore(save(engine))` at round `r` continues **bit-identical** to
+//! the uninterrupted run, across every [`crate::gossip::ExecPolicy`],
+//! under any fault plan and compression spec — pinned by the property
+//! battery in `rust/tests/snapshot_resume.rs` and documented in
+//! DESIGN.md §6. Decoding never panics: every malformed, truncated or
+//! bit-flipped input maps to a [`SnapshotError`].
+
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::gossip::{EventEngine, PushSumEngine};
+use crate::net::cluster::wire::crc32;
+use crate::rng::Pcg;
+
+/// Snapshot magic: "SGPS" little-endian.
+pub const MAGIC: u32 = 0x5350_4753;
+/// Snapshot format version this build reads and writes.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes (everything before the first section).
+pub const HEADER_BYTES: usize = 48;
+/// Upper bound on the node count a snapshot may declare — a corrupted
+/// header errors instead of driving huge downstream allocations.
+pub const MAX_NODES: u64 = 1 << 32;
+/// Upper bound on the parameter dimension a snapshot may declare.
+pub const MAX_DIM: u64 = 1 << 28;
+
+const TAG_NODES: u8 = 1;
+const TAG_MAIL: u8 = 2;
+const TAG_BANKS: u8 = 3;
+const TAG_LEDGER: u8 = 4;
+const TAG_RNG: u8 = 5;
+const TAG_SPARSE: u8 = 6;
+
+const FLAG_BIASED: u8 = 1;
+const FLAG_SPARSE: u8 = 2;
+
+/// Errors produced by the snapshot codec and the restore path. Every
+/// malformed input maps to a variant here — decoding never panics
+/// (pinned by the corruption battery in `rust/tests/snapshot_resume.rs`).
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// Filesystem error while reading or writing a snapshot file.
+    Io(io::Error),
+    /// File did not start with [`MAGIC`].
+    BadMagic(u32),
+    /// Unknown snapshot format version.
+    BadVersion(u16),
+    /// Unknown engine-kind byte.
+    BadKind(u8),
+    /// CRC mismatch (bit corruption somewhere in the file).
+    BadCrc {
+        /// CRC computed over the received bytes.
+        computed: u32,
+        /// CRC carried by the file.
+        carried: u32,
+    },
+    /// Input ended before a field or section could be read.
+    Truncated {
+        /// Bytes the decoder needed.
+        needed: usize,
+        /// Bytes that remained.
+        have: usize,
+    },
+    /// Structurally invalid content (bad count, index out of range,
+    /// section length mismatch, …). The string names the check.
+    Malformed(&'static str),
+    /// The snapshot's engine kind does not match the restore target
+    /// (e.g. a sparse snapshot handed to [`PushSumEngine::restore`]).
+    EngineMismatch(&'static str),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "snapshot i/o error: {e}"),
+            Self::BadMagic(m) => write!(f, "bad snapshot magic {m:#010x}"),
+            Self::BadVersion(v) => write!(f, "unsupported snapshot version {v}"),
+            Self::BadKind(k) => write!(f, "unknown engine kind {k}"),
+            Self::BadCrc { computed, carried } => write!(
+                f,
+                "snapshot crc mismatch: computed {computed:#010x}, file carries {carried:#010x}"
+            ),
+            Self::Truncated { needed, have } => {
+                write!(f, "snapshot truncated: needed {needed} bytes, {have} remained")
+            }
+            Self::Malformed(what) => write!(f, "malformed snapshot: {what}"),
+            Self::EngineMismatch(what) => write!(f, "engine kind mismatch: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for SnapshotError {
+    fn from(e: io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// Which engine a snapshot was captured from (header byte 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The dense [`PushSumEngine`].
+    Dense,
+    /// The sparse fast path of the [`EventEngine`] (template + hot set).
+    Sparse,
+    /// An [`EventEngine`] that has materialized into its dense escape
+    /// hatch — restored as an event engine wrapping a dense core.
+    EventDense,
+}
+
+impl EngineKind {
+    fn to_byte(self) -> u8 {
+        match self {
+            Self::Dense => 0,
+            Self::Sparse => 1,
+            Self::EventDense => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<Self, SnapshotError> {
+        match b {
+            0 => Ok(Self::Dense),
+            1 => Ok(Self::Sparse),
+            2 => Ok(Self::EventDense),
+            other => Err(SnapshotError::BadKind(other)),
+        }
+    }
+}
+
+/// One persisted PRNG position (see [`Pcg::cursor`]) — harnesses attach
+/// the cursors of whatever streams drive the run (gradient noise,
+/// compression draws, perturbations) so a restored run continues the
+/// exact sequences.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RngCursor {
+    /// PCG state word.
+    pub state: u64,
+    /// PCG stream increment.
+    pub inc: u64,
+    /// Cached Box–Muller spare, if one was pending.
+    pub spare: Option<f64>,
+}
+
+impl RngCursor {
+    /// Capture the position of a live generator.
+    pub fn of(rng: &Pcg) -> Self {
+        let (state, inc, spare) = rng.cursor();
+        Self { state, inc, spare }
+    }
+
+    /// Rebuild the generator at this position.
+    pub fn to_pcg(&self) -> Pcg {
+        Pcg::from_cursor(self.state, self.inc, self.spare)
+    }
+}
+
+/// One node's persisted `(x, w)` state.
+#[derive(Clone, Debug)]
+pub(crate) struct SnapNode {
+    pub(crate) x: Vec<f32>,
+    pub(crate) w: f64,
+}
+
+/// One in-flight message, destination implied by its mailbox.
+#[derive(Clone, Debug)]
+pub(crate) struct SnapMsg {
+    pub(crate) from: u64,
+    pub(crate) sent_iter: u64,
+    pub(crate) deliver_iter: u64,
+    pub(crate) x: Vec<f32>,
+    pub(crate) w: f64,
+}
+
+/// One per-edge error-feedback bank.
+#[derive(Clone, Debug)]
+pub(crate) struct SnapBank {
+    pub(crate) from: u64,
+    pub(crate) to: u64,
+    pub(crate) x: Vec<f32>,
+    pub(crate) w: f64,
+}
+
+/// The dropped-mass ledger plus the engine's (and, on the deployment
+/// path, the worker's) mass-flow counters.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct SnapLedger {
+    pub(crate) dropped_x: Vec<f64>,
+    pub(crate) dropped_w: f64,
+    pub(crate) drop_count: u64,
+    pub(crate) rescue_count: u64,
+    pub(crate) reconciled_count: u64,
+    pub(crate) sent_count: u64,
+    pub(crate) recv_w: f64,
+    pub(crate) sent_w: f64,
+    pub(crate) rescued_w: f64,
+}
+
+/// The sparse fast path's state: the shared cold template, the send
+/// counter, and the materialized hot set.
+#[derive(Clone, Debug)]
+pub(crate) struct SnapSparse {
+    pub(crate) template_x: Vec<f32>,
+    pub(crate) template_w: f64,
+    pub(crate) sent: u64,
+    pub(crate) hot: Vec<(u64, Vec<f32>, f64)>,
+}
+
+/// A decoded (or freshly captured) engine snapshot.
+///
+/// Produce one with [`PushSumEngine::save`] / [`EventEngine::save`] or by
+/// decoding bytes with [`Snapshot::from_bytes`]; turn it back into a live
+/// engine with [`Snapshot::restore`]. The struct is deliberately opaque —
+/// the fields are crate-internal so every snapshot in circulation is
+/// either engine-captured or codec-validated.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub(crate) round: u64,
+    pub(crate) kind: EngineKind,
+    pub(crate) biased: bool,
+    pub(crate) n: u64,
+    pub(crate) dim: u64,
+    pub(crate) delay: u64,
+    pub(crate) epoch: u64,
+    pub(crate) nodes: Vec<SnapNode>,
+    pub(crate) mail: Vec<Vec<SnapMsg>>,
+    pub(crate) banks: Vec<SnapBank>,
+    pub(crate) ledger: SnapLedger,
+    pub(crate) rngs: Vec<RngCursor>,
+    pub(crate) sparse: Option<SnapSparse>,
+}
+
+/// The engine a [`Snapshot::restore`] call produced, matching the
+/// snapshot's [`EngineKind`].
+pub enum Restored {
+    /// A dense [`PushSumEngine`].
+    Dense(PushSumEngine),
+    /// An [`EventEngine`] (sparse fast path or materialized-dense).
+    Event(EventEngine),
+}
+
+impl Snapshot {
+    /// The round the restored engine should execute next.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Which engine captured this snapshot.
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// Logical node count.
+    pub fn n(&self) -> usize {
+        self.n as usize
+    }
+
+    /// Parameter dimension.
+    pub fn dim(&self) -> usize {
+        self.dim as usize
+    }
+
+    /// Overlap delay τ of the captured engine.
+    pub fn delay(&self) -> u64 {
+        self.delay
+    }
+
+    /// Whether the captured engine ran the biased (w ≡ 1) ablation.
+    pub fn biased(&self) -> bool {
+        self.biased
+    }
+
+    /// Membership epoch the engine had last reconciled its banks against
+    /// (see `PushSumEngine::save`) — the field that routes
+    /// rejoin-from-checkpoint through the survivor schedule.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// RNG cursors attached by the capturing harness (empty unless
+    /// [`Self::set_rngs`] was called).
+    pub fn rngs(&self) -> &[RngCursor] {
+        &self.rngs
+    }
+
+    /// Attach the PRNG cursors of the harness streams driving the run, so
+    /// a restore can continue their draw sequences bit-identically.
+    pub fn set_rngs(&mut self, rngs: Vec<RngCursor>) {
+        self.rngs = rngs;
+    }
+
+    /// Rebuild a live engine from this snapshot, dispatching on the
+    /// engine kind. The restored engine continues **bit-identical** to
+    /// the uninterrupted run — the determinism contract pinned by
+    /// `rust/tests/snapshot_resume.rs`.
+    ///
+    /// ```
+    /// use sgp::gossip::PushSumEngine;
+    /// use sgp::snapshot::{Restored, Snapshot};
+    /// use sgp::topology::{Schedule, TopologyKind};
+    ///
+    /// let init: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32]).collect();
+    /// let mut live = PushSumEngine::new(init, 0, false);
+    /// let sched = Schedule::new(TopologyKind::OnePeerExp, 4);
+    /// for k in 0..3 {
+    ///     live.step(k, &sched);
+    /// }
+    ///
+    /// // Durable roundtrip: engine → bytes → decoded snapshot → engine.
+    /// let snap = Snapshot::from_bytes(&live.save(3).to_bytes()).unwrap();
+    /// let mut back = match snap.restore().unwrap() {
+    ///     Restored::Dense(e) => e,
+    ///     Restored::Event(_) => unreachable!("dense snapshot"),
+    /// };
+    ///
+    /// // Both engines continue bit-identically from round 3.
+    /// for k in 3..8 {
+    ///     live.step(k, &sched);
+    ///     back.step(k, &sched);
+    /// }
+    /// for (a, b) in live.states.iter().zip(&back.states) {
+    ///     assert_eq!(a.w.to_bits(), b.w.to_bits());
+    ///     assert!(a.x.iter().zip(&b.x).all(|(p, q)| p.to_bits() == q.to_bits()));
+    /// }
+    /// ```
+    pub fn restore(&self) -> Result<Restored, SnapshotError> {
+        match self.kind {
+            EngineKind::Dense => Ok(Restored::Dense(PushSumEngine::restore(self)?)),
+            EngineKind::Sparse | EngineKind::EventDense => {
+                Ok(Restored::Event(EventEngine::restore(self)?))
+            }
+        }
+    }
+
+    /// Serialize to the binary file format (header, sections, CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_BYTES + 64);
+        put_u32(&mut out, MAGIC);
+        put_u16(&mut out, VERSION);
+        out.push(self.kind.to_byte());
+        let mut flags = 0u8;
+        if self.biased {
+            flags |= FLAG_BIASED;
+        }
+        if self.sparse.is_some() {
+            flags |= FLAG_SPARSE;
+        }
+        out.push(flags);
+        put_u64(&mut out, self.round);
+        put_u64(&mut out, self.n);
+        put_u64(&mut out, self.dim);
+        put_u64(&mut out, self.delay);
+        put_u64(&mut out, self.epoch);
+
+        let mut body = Vec::new();
+
+        put_u64(&mut body, self.nodes.len() as u64);
+        for nd in &self.nodes {
+            put_f32s(&mut body, &nd.x);
+            put_f64(&mut body, nd.w);
+        }
+        section(&mut out, TAG_NODES, &mut body);
+
+        put_u64(&mut body, self.mail.len() as u64);
+        for mailbox in &self.mail {
+            put_u64(&mut body, mailbox.len() as u64);
+            for m in mailbox {
+                put_u64(&mut body, m.from);
+                put_u64(&mut body, m.sent_iter);
+                put_u64(&mut body, m.deliver_iter);
+                put_f32s(&mut body, &m.x);
+                put_f64(&mut body, m.w);
+            }
+        }
+        section(&mut out, TAG_MAIL, &mut body);
+
+        put_u64(&mut body, self.banks.len() as u64);
+        for b in &self.banks {
+            put_u64(&mut body, b.from);
+            put_u64(&mut body, b.to);
+            put_f32s(&mut body, &b.x);
+            put_f64(&mut body, b.w);
+        }
+        section(&mut out, TAG_BANKS, &mut body);
+
+        for &d in &self.ledger.dropped_x {
+            put_f64(&mut body, d);
+        }
+        put_f64(&mut body, self.ledger.dropped_w);
+        put_u64(&mut body, self.ledger.drop_count);
+        put_u64(&mut body, self.ledger.rescue_count);
+        put_u64(&mut body, self.ledger.reconciled_count);
+        put_u64(&mut body, self.ledger.sent_count);
+        put_f64(&mut body, self.ledger.recv_w);
+        put_f64(&mut body, self.ledger.sent_w);
+        put_f64(&mut body, self.ledger.rescued_w);
+        section(&mut out, TAG_LEDGER, &mut body);
+
+        put_u64(&mut body, self.rngs.len() as u64);
+        for c in &self.rngs {
+            put_u64(&mut body, c.state);
+            put_u64(&mut body, c.inc);
+            body.push(u8::from(c.spare.is_some()));
+            put_f64(&mut body, c.spare.unwrap_or(0.0));
+        }
+        section(&mut out, TAG_RNG, &mut body);
+
+        if let Some(sp) = &self.sparse {
+            put_f32s(&mut body, &sp.template_x);
+            put_f64(&mut body, sp.template_w);
+            put_u64(&mut body, sp.sent);
+            put_u64(&mut body, sp.hot.len() as u64);
+            for (i, x, w) in &sp.hot {
+                put_u64(&mut body, *i);
+                put_f32s(&mut body, x);
+                put_f64(&mut body, *w);
+            }
+            section(&mut out, TAG_SPARSE, &mut body);
+        }
+
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    /// Decode a snapshot from file bytes, validating magic, version,
+    /// engine kind, the trailing CRC, every section length, and every
+    /// index bound. Malformed input returns a [`SnapshotError`] — never
+    /// a panic, never an attacker-sized allocation.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, SnapshotError> {
+        if buf.len() < HEADER_BYTES + 4 {
+            return Err(SnapshotError::Truncated {
+                needed: HEADER_BYTES + 4,
+                have: buf.len(),
+            });
+        }
+        let mut r = Reader::new(&buf[..buf.len() - 4]);
+        let magic = r.u32()?;
+        if magic != MAGIC {
+            return Err(SnapshotError::BadMagic(magic));
+        }
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let kind = EngineKind::from_byte(r.u8()?)?;
+        let flags = r.u8()?;
+        let round = r.u64()?;
+        let n = r.u64()?;
+        let dim = r.u64()?;
+        let delay = r.u64()?;
+        let epoch = r.u64()?;
+        if n == 0 || n > MAX_NODES {
+            return Err(SnapshotError::Malformed("node count out of range"));
+        }
+        if dim == 0 || dim > MAX_DIM {
+            return Err(SnapshotError::Malformed("dimension out of range"));
+        }
+        let carried = u32::from_le_bytes(match buf[buf.len() - 4..].try_into() {
+            Ok(b) => b,
+            Err(_) => return Err(SnapshotError::Malformed("crc field")),
+        });
+        let computed = crc32(&buf[..buf.len() - 4]);
+        if computed != carried {
+            return Err(SnapshotError::BadCrc { computed, carried });
+        }
+        let d = dim as usize;
+
+        let mut s = r.sub_section(TAG_NODES)?;
+        let count = s.counted(4 * d + 8)?;
+        if count != 0 && count != n as usize {
+            return Err(SnapshotError::Malformed("node section count"));
+        }
+        let mut nodes = Vec::with_capacity(count);
+        for _ in 0..count {
+            nodes.push(SnapNode { x: s.f32s(d)?, w: s.f64()? });
+        }
+        s.finish("nodes")?;
+
+        let mut s = r.sub_section(TAG_MAIL)?;
+        let dests = s.counted(8)?;
+        if dests != 0 && dests != n as usize {
+            return Err(SnapshotError::Malformed("mail section destination count"));
+        }
+        let mut mail = Vec::with_capacity(dests);
+        for _ in 0..dests {
+            let msgs = s.counted(24 + 4 * d + 8)?;
+            let mut mailbox = Vec::with_capacity(msgs);
+            for _ in 0..msgs {
+                let from = s.u64()?;
+                if from >= n {
+                    return Err(SnapshotError::Malformed("message sender out of range"));
+                }
+                mailbox.push(SnapMsg {
+                    from,
+                    sent_iter: s.u64()?,
+                    deliver_iter: s.u64()?,
+                    x: s.f32s(d)?,
+                    w: s.f64()?,
+                });
+            }
+            mail.push(mailbox);
+        }
+        s.finish("mail")?;
+
+        let mut s = r.sub_section(TAG_BANKS)?;
+        let count = s.counted(16 + 4 * d + 8)?;
+        let mut banks = Vec::with_capacity(count);
+        for _ in 0..count {
+            let from = s.u64()?;
+            let to = s.u64()?;
+            if from >= n || to >= n {
+                return Err(SnapshotError::Malformed("bank edge out of range"));
+            }
+            banks.push(SnapBank { from, to, x: s.f32s(d)?, w: s.f64()? });
+        }
+        s.finish("banks")?;
+
+        let mut s = r.sub_section(TAG_LEDGER)?;
+        let mut dropped_x = Vec::with_capacity(d);
+        for _ in 0..d {
+            dropped_x.push(s.f64()?);
+        }
+        let ledger = SnapLedger {
+            dropped_x,
+            dropped_w: s.f64()?,
+            drop_count: s.u64()?,
+            rescue_count: s.u64()?,
+            reconciled_count: s.u64()?,
+            sent_count: s.u64()?,
+            recv_w: s.f64()?,
+            sent_w: s.f64()?,
+            rescued_w: s.f64()?,
+        };
+        s.finish("ledger")?;
+
+        let mut s = r.sub_section(TAG_RNG)?;
+        let count = s.counted(25)?;
+        let mut rngs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let state = s.u64()?;
+            let inc = s.u64()?;
+            let has = s.u8()?;
+            let spare = s.f64()?;
+            rngs.push(RngCursor { state, inc, spare: (has != 0).then_some(spare) });
+        }
+        s.finish("rng")?;
+
+        let sparse = if flags & FLAG_SPARSE != 0 {
+            let mut s = r.sub_section(TAG_SPARSE)?;
+            let template_x = s.f32s(d)?;
+            let template_w = s.f64()?;
+            let sent = s.u64()?;
+            let hot_count = s.counted(8 + 4 * d + 8)?;
+            let mut hot = Vec::with_capacity(hot_count);
+            let mut prev: Option<u64> = None;
+            for _ in 0..hot_count {
+                let i = s.u64()?;
+                if i >= n {
+                    return Err(SnapshotError::Malformed("hot index out of range"));
+                }
+                if prev.is_some_and(|p| p >= i) {
+                    return Err(SnapshotError::Malformed("hot indices not ascending"));
+                }
+                prev = Some(i);
+                hot.push((i, s.f32s(d)?, s.f64()?));
+            }
+            s.finish("sparse")?;
+            Some(hot).map(|hot| SnapSparse { template_x, template_w, sent, hot })
+        } else {
+            None
+        };
+        r.finish("file")?;
+
+        // Cross-section consistency with the engine kind.
+        match kind {
+            EngineKind::Dense | EngineKind::EventDense => {
+                if nodes.len() != n as usize || mail.len() != n as usize {
+                    return Err(SnapshotError::Malformed(
+                        "dense snapshot requires n nodes and n mailboxes",
+                    ));
+                }
+                if sparse.is_some() {
+                    return Err(SnapshotError::Malformed(
+                        "dense snapshot carries a sparse section",
+                    ));
+                }
+            }
+            EngineKind::Sparse => {
+                if sparse.is_none() {
+                    return Err(SnapshotError::Malformed(
+                        "sparse snapshot missing its sparse section",
+                    ));
+                }
+                if !nodes.is_empty() || mail.iter().any(|m| !m.is_empty()) {
+                    return Err(SnapshotError::Malformed(
+                        "sparse snapshot carries dense node state",
+                    ));
+                }
+            }
+        }
+
+        Ok(Self {
+            round,
+            kind,
+            biased: flags & FLAG_BIASED != 0,
+            n,
+            dim,
+            delay,
+            epoch,
+            nodes,
+            mail,
+            banks,
+            ledger,
+            rngs,
+            sparse,
+        })
+    }
+
+    /// Write the snapshot to `path` (creating parent directories).
+    pub fn write_file(&self, path: &Path) -> Result<(), SnapshotError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read and decode a snapshot file.
+    pub fn read_file(path: &Path) -> Result<Self, SnapshotError> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// When the run should capture a snapshot: a round cadence, a
+/// membership-change trigger, or both. Threaded through
+/// [`crate::coordinator::TrainerBuilder`], the fault harness
+/// ([`crate::faults::harness::FaultRunConfig`]), and the cluster worker.
+///
+/// ```
+/// use sgp::snapshot::SnapshotPolicy;
+///
+/// // Every 5 rounds: due after rounds 4, 9, 14, … (rounds are 0-based).
+/// let p = SnapshotPolicy::every(5);
+/// assert!(!p.due(3, false) && p.due(4, false) && !p.due(5, false));
+///
+/// // Membership changes force a capture regardless of the cadence.
+/// let p = p.and_on_membership_change();
+/// assert!(p.due(7, true) && !p.due(7, false));
+///
+/// // `never()` is inert, so callers can thread it unconditionally.
+/// assert!(!SnapshotPolicy::never().due(0, true));
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapshotPolicy {
+    /// Capture after every `every_rounds`-th round (0 disables the
+    /// cadence).
+    pub every_rounds: u64,
+    /// Also capture on any round whose membership epoch changed (crash,
+    /// rejoin, permanent leave).
+    pub on_membership_change: bool,
+}
+
+impl SnapshotPolicy {
+    /// Never capture.
+    pub fn never() -> Self {
+        Self { every_rounds: 0, on_membership_change: false }
+    }
+
+    /// Capture after every `k`-th round (after rounds k−1, 2k−1, …).
+    /// `k = 0` disables the cadence (equivalent to [`Self::never`]).
+    pub fn every(k: u64) -> Self {
+        Self { every_rounds: k, on_membership_change: false }
+    }
+
+    /// Additionally capture whenever the membership epoch changes.
+    pub fn and_on_membership_change(mut self) -> Self {
+        self.on_membership_change = true;
+        self
+    }
+
+    /// Whether a snapshot is due after executing round `round`
+    /// (`epoch_changed` reports whether this round crossed a
+    /// membership-epoch boundary).
+    pub fn due(&self, round: u64, epoch_changed: bool) -> bool {
+        (self.every_rounds > 0 && (round + 1) % self.every_rounds == 0)
+            || (self.on_membership_change && epoch_changed)
+    }
+}
+
+/// A policy plus the directory its captures land in — the unit the
+/// trainer, the fault harness and the worker thread through their
+/// configs. File names are `{label}.r{round:08}.snap`, so a directory
+/// holds the full per-label history and the latest capture is the
+/// lexically greatest file.
+#[derive(Clone, Debug)]
+pub struct SnapshotSink {
+    /// When to capture.
+    pub policy: SnapshotPolicy,
+    /// Directory snapshot files are written into (created on first
+    /// store).
+    pub dir: PathBuf,
+}
+
+impl SnapshotSink {
+    /// A sink writing `policy`-triggered captures into `dir`.
+    pub fn new(policy: SnapshotPolicy, dir: impl Into<PathBuf>) -> Self {
+        Self { policy, dir: dir.into() }
+    }
+
+    /// The file path a capture of `label` at `round` is stored under.
+    pub fn path_for(&self, label: &str, round: u64) -> PathBuf {
+        self.dir.join(format!("{label}.r{round:08}.snap"))
+    }
+
+    /// Write `snap` into the sink's directory under `label`, returning
+    /// the path written.
+    pub fn store(&self, label: &str, snap: &Snapshot) -> Result<PathBuf, SnapshotError> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.path_for(label, snap.round());
+        std::fs::write(&path, snap.to_bytes())?;
+        Ok(path)
+    }
+}
+
+// --- little-endian encode helpers -----------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append one `tag | len | payload` section, draining `body` for reuse.
+fn section(out: &mut Vec<u8>, tag: u8, body: &mut Vec<u8>) {
+    out.push(tag);
+    put_u64(out, body.len() as u64);
+    out.extend_from_slice(body);
+    body.clear();
+}
+
+// --- bounded decode cursor -------------------------------------------------
+
+/// A bounds-checked cursor over snapshot bytes: every read either
+/// succeeds inside the buffer or returns [`SnapshotError::Truncated`].
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        if self.remaining() < n {
+            return Err(SnapshotError::Truncated { needed: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, SnapshotError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, SnapshotError> {
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read an element count and bound it by the bytes actually present
+    /// (`min_item_bytes` per element), so a corrupted count can never
+    /// drive a huge allocation.
+    fn counted(&mut self, min_item_bytes: usize) -> Result<usize, SnapshotError> {
+        let count = self.u64()?;
+        let cap = (self.remaining() / min_item_bytes.max(1)) as u64;
+        if count > cap {
+            return Err(SnapshotError::Malformed("count exceeds section payload"));
+        }
+        Ok(count as usize)
+    }
+
+    /// Expect the next section to carry `tag`; return a sub-reader over
+    /// exactly its payload.
+    fn sub_section(&mut self, tag: u8) -> Result<Reader<'a>, SnapshotError> {
+        let t = self.u8()?;
+        if t != tag {
+            return Err(SnapshotError::Malformed("unexpected section tag"));
+        }
+        let len = self.u64()?;
+        if len > self.remaining() as u64 {
+            return Err(SnapshotError::Truncated {
+                needed: len as usize,
+                have: self.remaining(),
+            });
+        }
+        Ok(Reader::new(self.take(len as usize)?))
+    }
+
+    /// Assert the cursor consumed its buffer exactly — a leftover byte
+    /// means a length field lied.
+    fn finish(&self, _what: &'static str) -> Result<(), SnapshotError> {
+        if self.remaining() != 0 {
+            return Err(SnapshotError::Malformed("trailing bytes in section"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Schedule, TopologyKind};
+
+    fn tiny_engine() -> PushSumEngine {
+        let init: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32, -0.5 * i as f32]).collect();
+        PushSumEngine::new(init, 1, false)
+    }
+
+    #[test]
+    fn header_roundtrip_and_accessors() {
+        let mut eng = tiny_engine();
+        let sched = Schedule::new(TopologyKind::OnePeerExp, 4);
+        for k in 0..5 {
+            eng.step(k, &sched);
+        }
+        let snap = eng.save(5);
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.round(), 5);
+        assert_eq!(back.kind(), EngineKind::Dense);
+        assert_eq!(back.n(), 4);
+        assert_eq!(back.dim(), 2);
+        assert_eq!(back.delay(), 1);
+        assert!(!back.biased());
+    }
+
+    #[test]
+    fn rng_cursors_survive_the_roundtrip() {
+        let mut rng = Pcg::new(7);
+        let _ = rng.gaussian(); // leave a cached spare in the cursor
+        let mut snap = tiny_engine().save(0);
+        snap.set_rngs(vec![RngCursor::of(&rng)]);
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.rngs().len(), 1);
+        let mut a = rng.clone();
+        let mut b = back.rngs()[0].to_pcg();
+        for _ in 0..32 {
+            assert_eq!(a.gaussian().to_bits(), b.gaussian().to_bits());
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_kind_and_crc_error_cleanly() {
+        let bytes = tiny_engine().save(0).to_bytes();
+
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(
+            Snapshot::from_bytes(&bad),
+            Err(SnapshotError::BadMagic(_))
+        ));
+
+        let mut bad = bytes.clone();
+        bad[4] = 0xEE;
+        assert!(matches!(
+            Snapshot::from_bytes(&bad),
+            Err(SnapshotError::BadVersion(_))
+        ));
+
+        let mut bad = bytes.clone();
+        bad[6] = 9;
+        assert!(matches!(Snapshot::from_bytes(&bad), Err(SnapshotError::BadKind(9))));
+
+        // A flipped payload bit is caught by the CRC, not a panic.
+        let mut bad = bytes.clone();
+        let mid = bytes.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(matches!(
+            Snapshot::from_bytes(&bad),
+            Err(SnapshotError::BadCrc { .. })
+        ));
+    }
+
+    #[test]
+    fn truncation_at_every_length_errors_never_panics() {
+        let bytes = tiny_engine().save(3).to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                Snapshot::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} must error"
+            );
+        }
+    }
+
+    #[test]
+    fn policy_cadence_and_membership_trigger() {
+        let p = SnapshotPolicy::every(4);
+        let due: Vec<u64> = (0..12).filter(|&k| p.due(k, false)).collect();
+        assert_eq!(due, vec![3, 7, 11]);
+        assert!(!p.due(5, true), "membership trigger off by default");
+        let p = p.and_on_membership_change();
+        assert!(p.due(5, true));
+        assert!(!SnapshotPolicy::never().due(9, false));
+    }
+
+    #[test]
+    fn sink_store_and_read_back() {
+        let dir = std::env::temp_dir().join(format!("sgp_snap_sink_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = SnapshotSink::new(SnapshotPolicy::every(2), &dir);
+        let snap = tiny_engine().save(7);
+        let path = sink.store("unit", &snap).unwrap();
+        assert_eq!(path, sink.path_for("unit", 7));
+        let back = Snapshot::read_file(&path).unwrap();
+        assert_eq!(back.round(), 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kind_mismatch_is_a_typed_error() {
+        let snap = tiny_engine().save(0);
+        assert!(matches!(
+            EventEngine::restore(&snap),
+            Err(SnapshotError::EngineMismatch(_))
+        ));
+    }
+}

@@ -1,0 +1,311 @@
+//! Property battery for the durable snapshot format (the proptest
+//! idiom, hand-rolled on the repo's seeded `Pcg` since the offline
+//! build vendors no fuzzing crate):
+//!
+//! * `restore(save(e))` at round r continues **bit-identical** to the
+//!   uninterrupted run — across exec policies × fault plans ×
+//!   compression specs, through a full bytes roundtrip;
+//! * a snapshot taken under one [`ExecPolicy`] resumes under another
+//!   with the same bits (the policy-equivalence contract survives the
+//!   disk);
+//! * elastic join after a durable restore conserves Σw and leaves the
+//!   joiner converging with everyone else;
+//! * the sparse event engine roundtrips its template/hot-set form;
+//! * RNG cursors resume their draw sequences exactly;
+//! * corrupted bytes (truncation at every length, every single-bit
+//!   flip, bad magic/version/kind) are *detected* — typed errors, never
+//!   panics — and kind-mismatched restores are typed errors too.
+
+use sgp::faults::{FaultClock, FaultPlan};
+use sgp::gossip::event_engine::EventEngine;
+use sgp::gossip::{Compression, ExecPolicy, PushSumEngine};
+use sgp::rng::Pcg;
+use sgp::snapshot::{EngineKind, Restored, RngCursor, Snapshot, SnapshotError};
+use sgp::topology::{Schedule, TopologyKind};
+
+fn random_init(rng: &mut Pcg, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| (rng.f32() - 0.5) * 4.0).collect())
+        .collect()
+}
+
+/// Every value-bearing bit of the engine's node state.
+fn state_bits(e: &PushSumEngine) -> Vec<(Vec<u32>, u64)> {
+    e.states
+        .iter()
+        .map(|s| (s.x.iter().map(|v| v.to_bits()).collect(), s.w.to_bits()))
+        .collect()
+}
+
+#[test]
+fn save_restore_resumes_bit_identically_across_policies_faults_and_compression() {
+    let policies = [
+        ExecPolicy::Sequential,
+        ExecPolicy::Parallel { shards: 3 },
+        ExecPolicy::Event,
+    ];
+    let schemes = [
+        Compression::Identity,
+        Compression::TopK { den: 8 },
+        Compression::Qsgd { bits: 4 },
+    ];
+    for case in 0..18u64 {
+        let mut rng = Pcg::with_stream(0x5eed_0001, case);
+        let n = 5 + rng.below(8);
+        let dim = 3 + rng.below(21);
+        let delay = rng.below(3) as u64;
+        let seed = 0x900d + case;
+        let exec = policies[(case % 3) as usize];
+        let compress = schemes[((case / 3) % 3) as usize];
+        // Odd cases run a churny plan whose crash window straddles the
+        // save point, so restores cross a membership-epoch boundary.
+        let plan = if case % 2 == 1 {
+            FaultPlan::lossless()
+                .with_drop(0.05)
+                .with_rescue(true)
+                .with_crash(1 % n, 4, Some(9))
+                .with_seed(seed)
+        } else {
+            FaultPlan::lossless()
+        };
+        let clock = FaultClock::new(plan);
+        let sched = Schedule::with_seed(TopologyKind::OnePeerExp, n, seed);
+
+        let init = random_init(&mut rng, n, dim);
+        let mut live = PushSumEngine::new(init.clone(), delay, false);
+        let mut subject = PushSumEngine::new(init, delay, false);
+        let cut = 3 + rng.below(9) as u64; // may land mid-crash
+        for k in 0..cut {
+            live.step_compressed(k, &sched, Some(&clock), exec, compress);
+            subject.step_compressed(k, &sched, Some(&clock), exec, compress);
+        }
+
+        // Durable roundtrip: engine → bytes → decoded snapshot → engine.
+        let bytes = subject.save(cut).to_bytes();
+        let snap = Snapshot::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("case {case}: clean bytes must decode: {e}"));
+        assert_eq!(snap.kind(), EngineKind::Dense);
+        assert_eq!((snap.round(), snap.n(), snap.dim()), (cut, n, dim));
+        let mut restored = PushSumEngine::restore(&snap)
+            .unwrap_or_else(|e| panic!("case {case}: restore failed: {e}"));
+
+        for k in cut..cut + 8 {
+            live.step_compressed(k, &sched, Some(&clock), exec, compress);
+            restored.step_compressed(k, &sched, Some(&clock), exec, compress);
+        }
+        assert_eq!(
+            state_bits(&live),
+            state_bits(&restored),
+            "case {case}: n={n} dim={dim} τ={delay} {exec:?} {compress:?}"
+        );
+        let (_, wl) = live.total_mass_with_losses();
+        let (_, wr) = restored.total_mass_with_losses();
+        assert_eq!(wl.to_bits(), wr.to_bits(), "case {case}: conserved mass differs");
+        assert_eq!(live.sent_count, restored.sent_count, "case {case}");
+        assert_eq!(live.drop_count, restored.drop_count, "case {case}");
+    }
+}
+
+#[test]
+fn a_snapshot_taken_under_one_policy_resumes_identically_under_another() {
+    let (n, dim, seed) = (9usize, 12usize, 0x0c0ffee_u64);
+    let sched = Schedule::with_seed(TopologyKind::OnePeerExp, n, seed);
+    let mut rng = Pcg::new(seed);
+    let init = random_init(&mut rng, n, dim);
+    let mut live = PushSumEngine::new(init.clone(), 1, false);
+    let mut subject = PushSumEngine::new(init, 1, false);
+    for k in 0..10 {
+        live.step_exec(k, &sched, None, ExecPolicy::Sequential);
+        subject.step_exec(k, &sched, None, ExecPolicy::Sequential);
+    }
+    let snap = Snapshot::from_bytes(&subject.save(10).to_bytes()).unwrap();
+    let mut restored = PushSumEngine::restore(&snap).unwrap();
+    // The live run stays sequential; the restored run switches to the
+    // event policy. Bit-identity must hold anyway.
+    for k in 10..20 {
+        live.step_exec(k, &sched, None, ExecPolicy::Sequential);
+        restored.step_exec(k, &sched, None, ExecPolicy::Event);
+    }
+    assert_eq!(state_bits(&live), state_bits(&restored));
+}
+
+#[test]
+fn elastic_join_after_durable_restore_conserves_mass() {
+    let (n0, dim, seed) = (8usize, 16usize, 0xe1a5_u64);
+    let sched0 = Schedule::with_seed(TopologyKind::OnePeerExp, n0, seed);
+    let sched1 = Schedule::with_seed(TopologyKind::OnePeerExp, n0 + 1, seed);
+    let mut rng = Pcg::new(seed);
+    let mut eng = PushSumEngine::new(random_init(&mut rng, n0, dim), 1, false);
+    for k in 0..12 {
+        eng.step(k, &sched0);
+    }
+    let snap = Snapshot::from_bytes(&eng.save(12).to_bytes()).unwrap();
+    let mut eng = PushSumEngine::restore(&snap).unwrap();
+
+    // Pre-join totals: the φ-split must reproduce Σx and Σw exactly.
+    let (x_before, w_before) = eng.total_mass_with_losses();
+    let joiner = eng.elastic_join(3);
+    assert_eq!(joiner, n0, "join assigns the next rank");
+    let (x_after, w_after) = eng.total_mass_with_losses();
+    assert_eq!(w_before.to_bits(), w_after.to_bits(), "Σw must not move on join");
+    for (a, b) in x_before.iter().zip(&x_after) {
+        assert_eq!(a.to_bits(), b.to_bits(), "Σx must not move on join");
+    }
+
+    for k in 12..60 {
+        eng.step(k, &sched1);
+    }
+    eng.drain();
+    let (_, w_final) = eng.total_mass_with_losses();
+    assert!(
+        (w_final - n0 as f64).abs() <= 1e-9,
+        "Σw after join + consensus tail drifted: {w_final} vs {n0}"
+    );
+    // The joiner holds real weight and tracks the group's estimate.
+    let (mean_d, _, max_d) = eng.consensus_distance();
+    assert!(eng.states[joiner].w > 0.0);
+    assert!(
+        max_d <= 10.0 * mean_d + 1e-6,
+        "joiner (or anyone) is an outlier: mean {mean_d:e}, max {max_d:e}"
+    );
+}
+
+#[test]
+fn sparse_event_engine_roundtrips_and_resumes_bit_identically() {
+    let (n, dim, seed) = (64usize, 5usize, 7u64);
+    let sched = Schedule::with_seed(TopologyKind::OnePeerExp, n, seed);
+    let mut live = EventEngine::with_template(vec![1.0; dim], n, 0, false);
+    live.state_mut(3).x[0] += 2.0; // seed a hot set
+    for k in 0..6 {
+        live.step(k, &sched, None, Compression::Identity);
+    }
+    let snap = live.save(6);
+    assert_eq!(snap.kind(), EngineKind::Sparse, "fast path must persist sparsely");
+    let snap = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+    let mut restored = match snap.restore().unwrap() {
+        Restored::Event(e) => e,
+        Restored::Dense(_) => panic!("sparse snapshot restored dense"),
+    };
+    for k in 6..14 {
+        live.step(k, &sched, None, Compression::Identity);
+        restored.step(k, &sched, None, Compression::Identity);
+    }
+    assert_eq!(live.materialized(), restored.materialized());
+    for i in 0..n {
+        let (a, b) = (live.node_state(i), restored.node_state(i));
+        assert_eq!(a.w.to_bits(), b.w.to_bits(), "node {i} weight");
+        assert!(
+            a.x.iter().zip(&b.x).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "node {i} numerator"
+        );
+    }
+    let (_, wl) = live.total_mass_with_losses();
+    let (_, wr) = restored.total_mass_with_losses();
+    assert_eq!(wl.to_bits(), wr.to_bits());
+}
+
+#[test]
+fn rng_cursors_resume_the_draw_sequence_exactly() {
+    let mut harness_rng = Pcg::with_stream(0xabcd, 17);
+    for _ in 0..23 {
+        harness_rng.next_u64();
+    }
+    harness_rng.gaussian(); // arm the Box–Muller spare so it must survive too
+
+    let mut eng = PushSumEngine::new(vec![vec![1.0f32; 3]; 4], 0, false);
+    let sched = Schedule::with_seed(TopologyKind::OnePeerExp, 4, 1);
+    eng.step(0, &sched);
+    let mut snap = eng.save(1);
+    snap.set_rngs(vec![RngCursor::of(&harness_rng)]);
+    let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+    assert_eq!(back.rngs().len(), 1);
+    let mut resumed = back.rngs()[0].to_pcg();
+    for i in 0..40 {
+        assert_eq!(
+            harness_rng.next_u64(),
+            resumed.next_u64(),
+            "draw {i} diverged after the cursor roundtrip"
+        );
+    }
+}
+
+#[test]
+fn corrupted_snapshots_error_out_cleanly_and_never_panic() {
+    // A snapshot with every section populated: mail in flight (τ = 1),
+    // error-feedback banks (top-k), drop ledger (faulty plan), RNG cursor.
+    let mut rng = Pcg::with_stream(0xdead_0001, 0);
+    let clock = FaultClock::new(
+        FaultPlan::lossless().with_drop(0.2).with_rescue(false).with_seed(5),
+    );
+    let sched = Schedule::with_seed(TopologyKind::OnePeerExp, 6, 5);
+    let mut eng = PushSumEngine::new(random_init(&mut rng, 6, 7), 1, false);
+    for k in 0..8 {
+        eng.step_compressed(
+            k,
+            &sched,
+            Some(&clock),
+            ExecPolicy::Sequential,
+            Compression::TopK { den: 4 },
+        );
+    }
+    let mut snap = eng.save(8);
+    snap.set_rngs(vec![RngCursor::of(&rng)]);
+    let bytes = snap.to_bytes();
+    assert!(Snapshot::from_bytes(&bytes).is_ok(), "baseline must decode");
+
+    // Truncation at every length: typed error, never a panic.
+    for cut in 0..bytes.len() {
+        assert!(
+            Snapshot::from_bytes(&bytes[..cut]).is_err(),
+            "truncation to {cut} of {} bytes went undetected",
+            bytes.len()
+        );
+    }
+    // Every single-bit flip: the CRC (or an earlier structural check)
+    // must catch it — CRC-32 detects all single-bit errors by design.
+    for (i, _) in bytes.iter().enumerate() {
+        for bit in 0..8 {
+            let mut bad = bytes.clone();
+            bad[i] ^= 1 << bit;
+            assert!(
+                Snapshot::from_bytes(&bad).is_err(),
+                "flipping bit {bit} of byte {i} went undetected"
+            );
+        }
+    }
+    // Header fields are rejected with their specific typed errors
+    // (checked before the CRC, so a mangled header never decodes far).
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    assert!(matches!(Snapshot::from_bytes(&bad), Err(SnapshotError::BadMagic(_))));
+    let mut bad = bytes.clone();
+    bad[4] = 0xff; // version u16 LE at offset 4
+    assert!(matches!(Snapshot::from_bytes(&bad), Err(SnapshotError::BadVersion(_))));
+    let mut bad = bytes.clone();
+    bad[6] = 0x7f; // engine-kind byte
+    assert!(Snapshot::from_bytes(&bad).is_err());
+}
+
+#[test]
+fn restoring_into_the_wrong_engine_kind_is_a_typed_error() {
+    let mut eng = PushSumEngine::new(vec![vec![1.0f32; 2]; 4], 0, false);
+    let sched = Schedule::with_seed(TopologyKind::OnePeerExp, 4, 1);
+    eng.step(0, &sched);
+    let dense = Snapshot::from_bytes(&eng.save(1).to_bytes()).unwrap();
+    assert!(matches!(
+        EventEngine::restore(&dense),
+        Err(SnapshotError::EngineMismatch(_))
+    ));
+
+    let mut ev = EventEngine::with_template(vec![1.0; 2], 8, 0, false);
+    ev.step(0, &sched_for(8), None, Compression::Identity);
+    let sparse = Snapshot::from_bytes(&ev.save(1).to_bytes()).unwrap();
+    assert!(matches!(
+        PushSumEngine::restore(&sparse),
+        Err(SnapshotError::EngineMismatch(_))
+    ));
+}
+
+fn sched_for(n: usize) -> Schedule {
+    Schedule::with_seed(TopologyKind::OnePeerExp, n, 1)
+}
